@@ -1,0 +1,73 @@
+//! IoT streaming scenario (the workload class the paper's introduction
+//! motivates): RIoTBench pipelines arriving at a high rate onto a small
+//! edge cluster.  Compares responsiveness (mean makespan), fairness
+//! (mean flowtime) and throughput proxy (total makespan) across the
+//! preemption axis for HEFT and MinMin.
+//!
+//! ```sh
+//! cargo run --release --example iot_pipeline
+//! ```
+
+use dts::coordinator::{Coordinator, DynamicProblem, Policy};
+use dts::network::Network;
+use dts::prng::Xoshiro256pp;
+use dts::report;
+use dts::schedulers::SchedulerKind;
+use dts::stats::TruncatedGaussian;
+use dts::workloads::{arrivals_for, riotbench};
+
+fn main() {
+    let mut rng = Xoshiro256pp::seed_from_u64(42);
+
+    // edge cluster: 4 constrained nodes, one beefier gateway
+    let speed_dist = TruncatedGaussian::new(0.8, 0.2, 0.4, 1.2);
+    let link_dist = TruncatedGaussian::new(0.8, 0.3, 0.3, 1.5);
+    let mut net = Network::generate(5, &speed_dist, &link_dist, &mut rng);
+    // hand the gateway more speed by regenerating until node 0 is fastest
+    while (1..5).any(|v| net.speed(v) > net.speed(0)) {
+        net = Network::generate(5, &speed_dist, &link_dist, &mut rng);
+    }
+
+    // 80 pipelines at high arrival rate (load 0.3 → heavy overlap)
+    let pipelines = riotbench::generate(80, &mut rng);
+    let arrivals = arrivals_for(&pipelines, &net, &mut rng, 0.3);
+    let problem = DynamicProblem::new(net, arrivals.into_iter().zip(pipelines).collect());
+    println!(
+        "IoT trace: {} pipelines / {} operators on {} edge nodes (gateway speed {:.2})\n",
+        problem.graphs.len(),
+        problem.total_tasks(),
+        problem.network.n_nodes(),
+        problem.network.speed(0),
+    );
+
+    println!(
+        "{:<12} {:>10} {:>14} {:>12} {:>8} {:>10}",
+        "variant", "makespan", "mean-makespan", "flowtime", "util", "sched-ms"
+    );
+    for kind in [SchedulerKind::Heft, SchedulerKind::MinMin] {
+        for policy in [
+            Policy::NonPreemptive,
+            Policy::LastK(2),
+            Policy::LastK(5),
+            Policy::LastK(10),
+            Policy::Preemptive,
+        ] {
+            let mut c = Coordinator::new(policy, kind.make(0));
+            let res = c.run(&problem);
+            let m = res.metrics(&problem);
+            println!(
+                "{:<12} {:>10} {:>14} {:>12} {:>8} {:>10.1}",
+                c.label(),
+                report::fmt(m.total_makespan),
+                report::fmt(m.mean_makespan),
+                report::fmt(m.mean_flowtime),
+                report::fmt(m.mean_utilization),
+                m.runtime_s * 1e3,
+            );
+        }
+        println!();
+    }
+
+    println!("reading: NP keeps pipelines compact (low flowtime);");
+    println!("         moderate K recovers most of P's makespan without P's flowtime cost.");
+}

@@ -1,0 +1,72 @@
+//! Scientific-workflow campaign (§VI.C workloads): a 50-workflow
+//! WFCommons mix on a mid-size cluster, focusing on CPOP — the paper's
+//! second list heuristic — across the preemption axis, with per-workflow
+//! response statistics.
+//!
+//! ```sh
+//! cargo run --release --example wfcommons_campaign
+//! ```
+
+use dts::coordinator::{Coordinator, Policy};
+use dts::graph::Gid;
+use dts::report;
+use dts::schedulers::SchedulerKind;
+use dts::stats::{mean, median, std_dev};
+use dts::workloads::Dataset;
+
+fn main() {
+    let problem = Dataset::WfCommons.instance(50, 11);
+    println!(
+        "campaign: {} workflows / {} tasks on {} nodes\n",
+        problem.graphs.len(),
+        problem.total_tasks(),
+        problem.network.n_nodes()
+    );
+
+    for policy in [
+        Policy::NonPreemptive,
+        Policy::LastK(5),
+        Policy::LastK(20),
+        Policy::Preemptive,
+    ] {
+        let mut c = Coordinator::new(policy, SchedulerKind::Cpop.make(0));
+        let res = c.run(&problem);
+        let m = res.metrics(&problem);
+
+        // per-workflow response times (finish - arrival)
+        let responses: Vec<f64> = problem
+            .graphs
+            .iter()
+            .enumerate()
+            .map(|(gi, (arrival, g))| {
+                (0..g.n_tasks())
+                    .map(|t| res.schedule.get(Gid::new(gi, t)).unwrap().finish)
+                    .fold(f64::NEG_INFINITY, f64::max)
+                    - arrival
+            })
+            .collect();
+
+        println!("=== {} ===", c.label());
+        println!(
+            "  campaign makespan {:>9}   utilization {:>6}   sched runtime {:>8.1} ms",
+            report::fmt(m.total_makespan),
+            report::fmt(m.mean_utilization),
+            m.runtime_s * 1e3
+        );
+        println!(
+            "  workflow response: mean {:>9}  median {:>9}  std {:>9}  worst {:>9}",
+            report::fmt(mean(&responses)),
+            report::fmt(median(&responses)),
+            report::fmt(std_dev(&responses)),
+            report::fmt(responses.iter().cloned().fold(f64::NEG_INFINITY, f64::max)),
+        );
+
+        // fairness tail: how many workflows waited > 2× median?
+        let med = median(&responses);
+        let tail = responses.iter().filter(|&&r| r > 2.0 * med).count();
+        println!("  workflows delayed >2× median: {tail}/{}\n", responses.len());
+    }
+
+    println!("reading: WFCommons' long critical paths shrink the NP↔P gap (cf. §VII.A),");
+    println!("         and moderate preemption trims the response-time tail.");
+}

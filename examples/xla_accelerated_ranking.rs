@@ -1,0 +1,106 @@
+//! The three-layer path in isolation: load the AOT-compiled JAX+Pallas
+//! rank artifact (L1 kernel → L2 fixed point → HLO text), execute it via
+//! the PJRT CPU client from Rust (L3), check parity against the native
+//! provider, and time both.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example xla_accelerated_ranking
+//! ```
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use dts::coordinator::{Coordinator, Policy};
+use dts::network::Network;
+use dts::prng::Xoshiro256pp;
+use dts::runtime::{XlaRanks, XlaRuntime};
+use dts::schedulers::{Heft, NativeRanks, RankProvider, SchedulerKind};
+use dts::workloads::Dataset;
+
+fn main() {
+    let rt = match XlaRuntime::load("artifacts") {
+        Ok(rt) => Rc::new(rt),
+        Err(e) => {
+            eprintln!("artifacts not built ({e}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "loaded {} with rank buckets {:?}\n",
+        rt.artifacts_dir().display(),
+        rt.rank_buckets()
+    );
+
+    // ---- parity on a real composite problem ----------------------------
+    let prob = Dataset::Synthetic.instance(20, 5);
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let net = Network::default_eval(&mut rng);
+
+    // build one large composite via a preemptive run's biggest event
+    let mut c = Coordinator::new(Policy::Preemptive, SchedulerKind::Heft.make(0));
+    let res = c.run(&prob);
+    let peak = res.events.iter().map(|e| e.n_pending).max().unwrap();
+    println!("peak composite size in a P-HEFT run over 20 graphs: {peak} tasks");
+
+    // parity + timing on random problems across bucket sizes
+    for &n in &[24usize, 60, 120, 250] {
+        let mut tasks = Vec::new();
+        for i in 0..n {
+            tasks.push(dts::schedulers::PTask {
+                gid: dts::graph::Gid::new(0, i),
+                cost: rng.uniform(1.0, 40.0),
+                ready: 0.0,
+                preds: Vec::new(),
+                succs: Vec::new(),
+            });
+        }
+        for i in 0..n {
+            for j in (i + 1)..n.min(i + 16) {
+                if rng.next_f64() < 0.2 {
+                    let d = rng.uniform(0.5, 10.0);
+                    tasks[i].succs.push((j, d));
+                    tasks[j].preds.push(dts::schedulers::Pred::Pending { idx: i, data: d });
+                }
+            }
+        }
+        let problem = dts::schedulers::Problem { tasks };
+
+        let t0 = Instant::now();
+        let native = NativeRanks.ranks(&problem, &net);
+        let dt_native = t0.elapsed();
+
+        let mut xr = XlaRanks::new(rt.clone());
+        let t0 = Instant::now();
+        let xla = xr.ranks(&problem, &net);
+        let dt_xla = t0.elapsed();
+
+        let max_rel = (0..n)
+            .map(|i| (native.up[i] - xla.up[i]).abs() / (1.0 + native.up[i].abs()))
+            .fold(0.0f64, f64::max);
+        println!(
+            "n={n:>4}: native {:>9.1?}  xla {:>9.1?}  max rel err {:.2e}  (bucket {})",
+            dt_native,
+            dt_xla,
+            max_rel,
+            rt.rank_bucket(n).unwrap()
+        );
+        assert!(max_rel < 1e-4);
+    }
+
+    // ---- full coordinator with the XLA provider -------------------------
+    let mut c = Coordinator::new(
+        Policy::LastK(5),
+        Box::new(Heft::new(XlaRanks::new(rt.clone()))),
+    );
+    let t0 = Instant::now();
+    let res = c.run(&prob);
+    let m = res.metrics(&prob);
+    println!(
+        "\n5P-HEFT[xla] over 20 graphs: makespan {:.1}, {} events in {:.2?}",
+        m.total_makespan,
+        res.events.len(),
+        t0.elapsed()
+    );
+    println!("note: on this CPU testbed the PJRT dispatch dominates small problems —");
+    println!("      see EXPERIMENTS.md §Perf for the measured crossover analysis.");
+}

@@ -1,0 +1,126 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO *text* artifacts for the Rust runtime.
+
+HLO text — NOT ``lowered.compile()`` output and NOT a serialized
+``HloModuleProto`` — is the interchange format: jax >= 0.5 emits protos
+with 64-bit instruction ids which the published ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the HLO text
+parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Artifacts (one per size bucket; the Rust runtime pads to the smallest
+fitting bucket):
+
+  ranks_n{N}.hlo.txt   (m: f32[N,N], w: f32[N], depth: i32) -> (up, down)
+  eft_p{P}_v{V}.hlo.txt (finish: f32[P], comm: f32[P,V], exec: f32[V],
+                         avail: f32[V], arrival: f32[1]) -> f32[V]
+
+Run via ``make artifacts`` (no-op when outputs are newer than inputs);
+Python never runs after this point.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.appairs import allpairs_longest
+
+RANK_BUCKETS = (32, 64, 128, 256)
+EFT_BUCKETS = ((64, 8), (64, 16), (64, 32))
+ALLPAIRS_BUCKETS = (32, 64, 128)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_ranks(n: int) -> str:
+    spec_m = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    spec_w = jax.ShapeDtypeStruct((n,), jnp.float32)
+    spec_d = jax.ShapeDtypeStruct((), jnp.int32)
+    lowered = jax.jit(model.ranks_combined).lower(spec_m, spec_w, spec_d)
+    return to_hlo_text(lowered)
+
+
+def lower_allpairs(n: int) -> str:
+    import math
+
+    spec_m = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    squarings = int(math.ceil(math.log2(n)))
+    lowered = jax.jit(
+        lambda m: allpairs_longest(m, squarings)
+    ).lower(spec_m)
+    return to_hlo_text(lowered)
+
+
+def lower_eft(p: int, v: int) -> str:
+    sf = jax.ShapeDtypeStruct((p,), jnp.float32)
+    sc = jax.ShapeDtypeStruct((p, v), jnp.float32)
+    sv = jax.ShapeDtypeStruct((v,), jnp.float32)
+    sa = jax.ShapeDtypeStruct((1,), jnp.float32)
+    lowered = jax.jit(model.batch_eft).lower(sf, sc, sv, sv, sa)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="also touch this sentinel path")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "ranks": [],
+        "eft": [],
+        "allpairs": [],
+        "format": "hlo-text",
+        "neg": -1e30,
+    }
+
+    for n in RANK_BUCKETS:
+        path = os.path.join(args.out_dir, f"ranks_n{n}.hlo.txt")
+        text = lower_ranks(n)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["ranks"].append({"n": n, "file": os.path.basename(path)})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for p, v in EFT_BUCKETS:
+        path = os.path.join(args.out_dir, f"eft_p{p}_v{v}.hlo.txt")
+        text = lower_eft(p, v)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["eft"].append({"p": p, "v": v, "file": os.path.basename(path)})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for n in ALLPAIRS_BUCKETS:
+        path = os.path.join(args.out_dir, f"allpairs_n{n}.hlo.txt")
+        text = lower_allpairs(n)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["allpairs"].append({"n": n, "file": os.path.basename(path)})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+    if args.out:
+        # Makefile sentinel compatibility: ensure the named target exists.
+        if not os.path.exists(args.out):
+            with open(args.out, "w") as f:
+                f.write("see manifest.json\n")
+
+
+if __name__ == "__main__":
+    main()

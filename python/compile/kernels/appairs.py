@@ -1,0 +1,77 @@
+"""Layer-1 Pallas kernel: tiled max-plus matrix-matrix product, used for
+the all-pairs longest-path (critical-path) matrix.
+
+``D[i, j]`` = length of the longest weighted path from task i to task j
+(edge weight = mean comm cost + target's mean exec cost), computed by
+repeated tropical squaring: ``D_{2k} = D_k (max,+) D_k``.  ``log2(N)``
+squarings close any DAG of ≤ N vertices.  The coordinator's *slack
+analysis* tool consumes this matrix (distance to every sink vs the
+critical path pins each task's scheduling slack).
+
+Tiling mirrors a TPU matmul: grid (i-tile, j-tile, k-tile) with the
+k-axis innermost, accumulating a running max into the output tile in
+VMEM.  ``interpret=True`` as everywhere (CPU PJRT cannot run Mosaic).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .maxplus import NEG
+
+DEFAULT_BLOCK = 64
+
+
+def _maxplus_matmul_kernel(a_ref, b_ref, o_ref):
+    """One (BI, BJ) output tile: o = max(o, max_k(a[:, k] + b[k, :]))."""
+    k = pl.program_id(2)
+    # (BI, BK) + (BK, BJ) → (BI, BK, BJ) reduced over K
+    partial = jnp.max(a_ref[...][:, :, None] + b_ref[...][None, :, :], axis=1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] = jnp.maximum(o_ref[...], partial)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def maxplus_matmul(a, b, *, block: int = DEFAULT_BLOCK):
+    """Tropical matmul ``c[i,j] = max_k (a[i,k] + b[k,j])`` via Pallas."""
+    n = a.shape[0]
+    blk = min(block, n)
+    assert n % blk == 0, f"N={n} not a multiple of block={blk}"
+    g = n // blk
+    return pl.pallas_call(
+        _maxplus_matmul_kernel,
+        grid=(g, g, g),
+        in_specs=[
+            pl.BlockSpec((blk, blk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((blk, blk), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((blk, blk), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def allpairs_longest(m, n_squarings):
+    """All-pairs longest path by repeated tropical squaring.
+
+    ``m``: (N, N) edge-weight matrix, NEG where no edge; the result has
+    0 on the diagonal (empty path) and NEG where unreachable.
+    """
+    n = m.shape[0]
+    eye = jnp.where(
+        jnp.eye(n, dtype=bool), 0.0, jnp.float32(NEG)
+    )
+    d = jnp.maximum(m, eye)  # paths of length <= 1
+
+    def body(_, d):
+        return maxplus_matmul(d, d)
+
+    return jax.lax.fori_loop(0, n_squarings, body, d)

@@ -1,0 +1,57 @@
+"""Layer-1 Pallas kernel: batched earliest-finish-time (EFT) evaluation.
+
+For one ready task ``t`` the list schedulers evaluate, over every node
+``v`` of the heterogeneous network:
+
+    ready[v] = max( arrival, avail[v], max_p( finish[p] + comm[p, v] ) )
+    eft[v]   = ready[v] + exec[v]
+
+where ``p`` ranges over the scheduled parents of ``t``, ``comm[p, v]`` is
+the data-transfer time from parent ``p``'s node to ``v`` (0 on the same
+node), ``avail[v]`` is when node ``v`` becomes free, and ``exec[v] =
+c(t)/s(v)``.  This is the *append-at-end* EFT used by the MCT inner loop of
+MinMin/MaxMin (the insertion-based variant needs a gap search and stays on
+the Rust side).
+
+Layout is (parents x nodes) so the node axis sits on the minor dimension —
+on a TPU that is the 128-wide VPU lane axis; the parent reduction runs
+in-register.  ``interpret=True`` for CPU-PJRT executability (see
+``maxplus.py``).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .maxplus import NEG
+
+
+def _eft_kernel(finish_ref, comm_ref, exec_ref, avail_ref, arrival_ref, o_ref):
+    # data-ready time per node: max over parents of finish[p] + comm[p, v].
+    # Padded parent slots carry finish = NEG, so they lose every max.
+    ready_data = jnp.max(finish_ref[...][:, None] + comm_ref[...], axis=0)
+    start = jnp.maximum(
+        jnp.maximum(ready_data, avail_ref[...]), arrival_ref[0]
+    )
+    o_ref[...] = start + exec_ref[...]
+
+
+@jax.jit
+def batch_eft(parent_finish, comm, exec_time, avail, arrival):
+    """EFT of one task on every node, vectorized over the node axis.
+
+    parent_finish: (P,) f32, ``NEG`` in padded slots.
+    comm:          (P, V) f32 transfer times (anything in padded rows).
+    exec_time:     (V,) f32 execution times c(t)/s(v).
+    avail:         (V,) f32 node-free times.
+    arrival:       (1,) f32 the owning graph's arrival time.
+    Returns (V,) f32 earliest finish times.
+    """
+    p, v = comm.shape
+    return pl.pallas_call(
+        _eft_kernel,
+        out_shape=jax.ShapeDtypeStruct((v,), jnp.float32),
+        interpret=True,
+    )(parent_finish, comm, exec_time, avail, arrival)

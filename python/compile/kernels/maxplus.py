@@ -1,0 +1,74 @@
+"""Layer-1 Pallas kernel: tiled max-plus (tropical) matrix-vector product.
+
+The upward/downward rank computation used by every list scheduler in the
+paper (HEFT's ``rank_u``, CPOP's ``rank_u + rank_d``) is a fixed point of
+
+    y[t] = max_c ( M[t, c] + x[c] )
+
+over the DAG's average-cost matrix ``M`` (``-BIG`` where no edge).  This is
+structurally a matmul with ``(+, x)`` replaced by ``(max, +)``, so we tile
+it exactly like a TPU matmul: the grid walks ``(task-tile, child-tile)``
+blocks, each ``(BLK_T, BLK_C)`` tile of ``M`` is streamed into VMEM once,
+and a running maximum accumulates into the output tile.  On a real TPU the
+``(max, +)`` contraction runs on the VPU (the MXU is ``(+, x)``-only); the
+HBM<->VMEM schedule expressed by the BlockSpecs is unchanged.
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO that
+any backend (including the Rust PJRT CPU client) runs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# "minus infinity" for tropical algebra.  A true -inf poisons the padding
+# lanes through (-inf + x) arithmetic; -1e30 survives additions with any
+# realistic cost and still loses every max().
+NEG = -1e30
+
+# Default VMEM tile.  128 matches the TPU lane width; a (128, 128) f32 tile
+# is 64 KiB, far under the ~16 MiB VMEM budget even with double-buffering.
+DEFAULT_BLOCK = 128
+
+
+def _maxplus_matvec_kernel(m_ref, x_ref, o_ref):
+    """One (BLK_T, BLK_C) tile: o[t] = max(o[t], max_c(m[t,c] + x[c]))."""
+    j = pl.program_id(1)
+    partial = jnp.max(m_ref[...] + x_ref[...][None, :], axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] = jnp.maximum(o_ref[...], partial)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def maxplus_matvec(m, x, *, block: int = DEFAULT_BLOCK):
+    """Tropical matvec ``y[t] = max_c (m[t, c] + x[c])`` via Pallas.
+
+    ``m``: (N, N) f32 cost matrix, ``NEG`` where no edge.
+    ``x``: (N,) f32.
+    Returns (N,) f32; rows with no finite entry yield ``<= NEG/2`` (caller
+    clamps).  N must be a multiple of ``block`` or smaller than it.
+    """
+    n = m.shape[0]
+    blk = min(block, n)
+    assert n % blk == 0, f"N={n} not a multiple of block={blk}"
+    grid = (n // blk, n // blk)
+    return pl.pallas_call(
+        _maxplus_matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, blk), lambda i, j: (i, j)),
+            pl.BlockSpec((blk,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(m, x)

@@ -1,0 +1,121 @@
+"""Pure-jnp/numpy oracles for the Pallas kernels and the L2 model.
+
+Everything here is written in the most obvious way possible (loops where
+loops are clearest) — this file is the correctness ground truth that both
+the Pallas kernels (pytest, build time) and the Rust native implementations
+(parity fixtures) are checked against.
+"""
+
+import numpy as np
+
+NEG = -1e30
+
+
+def maxplus_matvec_ref(m: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """y[t] = max_c (m[t, c] + x[c]) — dense tropical matvec."""
+    return np.max(m + x[None, :], axis=1)
+
+
+def upward_rank_ref(m: np.ndarray, w: np.ndarray, depth: int) -> np.ndarray:
+    """Fixed-point upward rank: r = w + max(0, maxplus(m, r)), iterated.
+
+    ``m[t, c]`` is the (average) communication cost of edge t->c, ``NEG``
+    where no edge; ``w`` the average execution cost.  ``depth`` iterations
+    suffice for any DAG of height <= depth.
+    """
+    r = w.astype(np.float64).copy()
+    for _ in range(depth):
+        r = w + np.maximum(maxplus_matvec_ref(m, r), 0.0)
+    return r
+
+
+def downward_rank_ref(m: np.ndarray, w: np.ndarray, depth: int) -> np.ndarray:
+    """Fixed-point downward rank over the transposed matrix.
+
+    rank_d(t) = max_p ( rank_d(p) + w(p) + m[p, t] ), 0 for roots.
+    """
+    d = np.zeros_like(w, dtype=np.float64)
+    mt = m.T
+    for _ in range(depth):
+        d = np.maximum(maxplus_matvec_ref(mt, d + w), 0.0)
+    return d
+
+
+def upward_rank_topo_ref(edges, w) -> np.ndarray:
+    """Independent oracle: recursive-topological upward rank (no matrices).
+
+    ``edges``: list of (u, v, cost).  Validates the fixed-point formulation
+    itself, not just the kernel.
+    """
+    n = len(w)
+    children = [[] for _ in range(n)]
+    for u, v, c in edges:
+        children[u].append((v, c))
+    rank = [None] * n
+
+    def rec(t):
+        if rank[t] is not None:
+            return rank[t]
+        best = 0.0
+        for c, cost in children[t]:
+            best = max(best, cost + rec(c))
+        rank[t] = w[t] + best
+        return rank[t]
+
+    for t in range(n):
+        rec(t)
+    return np.array(rank)
+
+
+def downward_rank_topo_ref(edges, w) -> np.ndarray:
+    """Independent oracle for the downward rank."""
+    n = len(w)
+    parents = [[] for _ in range(n)]
+    for u, v, c in edges:
+        parents[v].append((u, c))
+    rank = [None] * n
+
+    def rec(t):
+        if rank[t] is not None:
+            return rank[t]
+        best = 0.0
+        for p, cost in parents[t]:
+            best = max(best, rec(p) + w[p] + cost)
+        rank[t] = best
+        return rank[t]
+
+    for t in range(n):
+        rec(t)
+    return np.array(rank)
+
+
+def batch_eft_ref(parent_finish, comm, exec_time, avail, arrival) -> np.ndarray:
+    """Loop-form EFT oracle (see kernels/eft.py for the semantics)."""
+    p, v = comm.shape
+    out = np.zeros(v)
+    for j in range(v):
+        ready = arrival
+        ready = max(ready, avail[j])
+        for i in range(p):
+            ready = max(ready, parent_finish[i] + comm[i, j])
+        out[j] = ready + exec_time[j]
+    return out
+
+
+def allpairs_longest_ref(m: np.ndarray) -> np.ndarray:
+    """All-pairs longest path oracle (repeated relaxation, O(N^4) worst).
+
+    ``m[i, j]``: edge weight or NEG.  Diagonal of the result is 0.
+    """
+    n = m.shape[0]
+    d = m.copy().astype(np.float64)
+    for i in range(n):
+        d[i, i] = max(d[i, i], 0.0)
+    for _ in range(n):
+        nd = d.copy()
+        for i in range(n):
+            nd[i] = np.maximum(nd[i], np.max(d[i][:, None] + d, axis=0))
+        if np.allclose(nd, d):
+            break
+        d = nd
+    return d

@@ -1,0 +1,61 @@
+"""Layer-2 JAX model: the schedulers' numeric hot-spot as one compute graph.
+
+The paper's list schedulers (HEFT, CPOP) spend their priority phase on the
+upward/downward *rank* fixed point over the DAG's average-cost matrix, and
+their assignment phase on batched EFT evaluations.  This module expresses
+both as jitted JAX functions calling the Layer-1 Pallas kernels, so that
+``aot.py`` can lower a single HLO program per size bucket for the Rust
+coordinator to execute via PJRT.
+
+Conventions (shared with the Rust runtime — see rust/src/runtime/):
+  * All matrices are padded to the bucket size N.  Padded tasks have
+    ``w = 0`` and no edges (`M` rows/cols = NEG), which makes their ranks
+    exactly 0 and leaves real ranks untouched.
+  * ``depth`` is passed as an i32 operand so the while-loop runs only as
+    many max-plus sweeps as the DAG's height (not N) — the caller knows the
+    height from its own topological sort.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.maxplus import maxplus_matvec, NEG
+from .kernels.eft import batch_eft  # noqa: F401  (re-exported entry point)
+
+
+def upward_rank(m, w, depth):
+    """HEFT priority: r(t) = w(t) + max_c ( m[t,c] + r(c) ), sinks r = w.
+
+    Fixed point from ``r0 = w`` — after k sweeps every task of height <= k
+    holds its final value, so ``depth`` sweeps converge any padded DAG.
+    """
+
+    def body(_, r):
+        return w + jnp.maximum(maxplus_matvec(m, r), 0.0)
+
+    return jax.lax.fori_loop(0, depth, body, w)
+
+
+def downward_rank(m, w, depth):
+    """CPOP's second component: d(t) = max_p ( d(p) + w(p) + m[p,t] ).
+
+    Roots have d = 0.  Runs the same max-plus kernel on the transposed
+    matrix; the transpose is materialized once outside the loop so XLA
+    hoists it out of the while body.
+    """
+    mt = m.T
+
+    def body(_, d):
+        return jnp.maximum(maxplus_matvec(mt, d + w), 0.0)
+
+    return jax.lax.fori_loop(0, depth, body, jnp.zeros_like(w))
+
+
+def ranks_combined(m, w, depth):
+    """One artifact serving both HEFT (up) and CPOP (up + down).
+
+    Returns ``(rank_up, rank_down)``; CPOP's priority is their sum, and its
+    critical-path value is ``max_t rank_up(t)`` over entry tasks — both are
+    cheap reductions the Rust side performs on the returned vectors.
+    """
+    return upward_rank(m, w, depth), downward_rank(m, w, depth)

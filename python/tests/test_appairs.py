@@ -1,0 +1,78 @@
+"""L1 correctness: all-pairs max-plus matmul / longest-path kernel vs the
+numpy oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.appairs import allpairs_longest, maxplus_matmul
+from compile.kernels import ref
+from compile.kernels.maxplus import NEG
+
+
+@pytest.mark.parametrize("n", [4, 16, 64, 128])
+def test_matmul_matches_bruteforce(n):
+    rng = np.random.default_rng(n)
+    a = rng.uniform(-10, 10, (n, n)).astype(np.float32)
+    b = rng.uniform(-10, 10, (n, n)).astype(np.float32)
+    got = np.asarray(maxplus_matmul(jnp.array(a), jnp.array(b)))
+    want = np.array([[np.max(a[i, :] + b[:, j]) for j in range(n)] for i in range(n)])
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("block", [16, 32, 64])
+def test_matmul_block_invariance(block):
+    n = 64
+    rng = np.random.default_rng(7)
+    a = rng.uniform(-5, 5, (n, n)).astype(np.float32)
+    b = rng.uniform(-5, 5, (n, n)).astype(np.float32)
+    base = np.asarray(maxplus_matmul(jnp.array(a), jnp.array(b), block=n))
+    got = np.asarray(maxplus_matmul(jnp.array(a), jnp.array(b), block=block))
+    np.testing.assert_allclose(got, base, rtol=1e-6)
+
+
+def random_dag_matrix(rng, n_real, n_pad, p_edge=0.3):
+    m = np.full((n_pad, n_pad), NEG, dtype=np.float32)
+    for i in range(n_real):
+        for j in range(i + 1, n_real):
+            if rng.random() < p_edge:
+                m[i, j] = rng.uniform(0.1, 10.0)
+    return m
+
+
+@pytest.mark.parametrize("n_real,bucket", [(6, 16), (20, 32), (40, 64)])
+def test_allpairs_matches_oracle(n_real, bucket):
+    rng = np.random.default_rng(n_real)
+    m = random_dag_matrix(rng, n_real, bucket)
+    squarings = int(np.ceil(np.log2(bucket)))
+    got = np.asarray(allpairs_longest(jnp.array(m), squarings))
+    want = ref.allpairs_longest_ref(m.astype(np.float64))
+    # compare only finite (reachable) entries; unreachable stay hugely neg
+    finite = want > NEG / 2
+    np.testing.assert_allclose(got[finite], want[finite], rtol=1e-5)
+    assert np.all(got[~finite] <= NEG / 4)
+
+
+def test_allpairs_chain_exact():
+    n = 32
+    m = np.full((n, n), NEG, dtype=np.float32)
+    for i in range(n - 1):
+        m[i, i + 1] = 2.0
+    d = np.asarray(allpairs_longest(jnp.array(m), 5))
+    for i in range(n):
+        for j in range(i, n):
+            assert abs(d[i, j] - 2.0 * (j - i)) < 1e-4
+    assert np.all(np.diag(d) == 0.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([8, 12, 16]))
+def test_allpairs_hypothesis(seed, n):
+    rng = np.random.default_rng(seed)
+    m = random_dag_matrix(rng, n, 16, p_edge=0.4)
+    got = np.asarray(allpairs_longest(jnp.array(m), 4))
+    want = ref.allpairs_longest_ref(m.astype(np.float64))
+    finite = want > NEG / 2
+    np.testing.assert_allclose(got[finite], want[finite], rtol=1e-4, atol=1e-3)

@@ -1,0 +1,146 @@
+"""L1 correctness: Pallas kernels vs pure-numpy oracles.
+
+This is the core correctness signal for the compiled artifacts: everything
+the Rust runtime executes lowers through these kernels.  Hypothesis sweeps
+shapes and values; fixed seeds keep the suite deterministic.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.maxplus import maxplus_matvec, NEG
+from compile.kernels.eft import batch_eft
+from compile.kernels import ref
+
+
+def rand_cost_matrix(rng, n, p_edge=0.3, lo=0.1, hi=100.0):
+    """Random DAG-ish cost matrix: finite entries with prob p, else NEG."""
+    m = np.full((n, n), NEG, dtype=np.float32)
+    mask = rng.random((n, n)) < p_edge
+    m[mask] = rng.uniform(lo, hi, mask.sum()).astype(np.float32)
+    return m
+
+
+# ---------------------------------------------------------------- max-plus
+
+
+@pytest.mark.parametrize("n", [4, 16, 32, 64, 128, 256])
+def test_maxplus_matches_ref_dense(n):
+    rng = np.random.default_rng(n)
+    m = rng.uniform(-50, 50, (n, n)).astype(np.float32)
+    x = rng.uniform(-50, 50, n).astype(np.float32)
+    got = np.asarray(maxplus_matvec(jnp.array(m), jnp.array(x)))
+    want = ref.maxplus_matvec_ref(m, x)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("n", [32, 128, 256])
+def test_maxplus_matches_ref_sparse(n):
+    rng = np.random.default_rng(1000 + n)
+    m = rand_cost_matrix(rng, n, p_edge=0.1)
+    x = rng.uniform(0, 100, n).astype(np.float32)
+    got = np.asarray(maxplus_matvec(jnp.array(m), jnp.array(x)))
+    want = ref.maxplus_matvec_ref(m, x)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_maxplus_empty_row_yields_neg():
+    """A row with no finite entry must lose to the 0-clamp downstream."""
+    n = 32
+    m = np.full((n, n), NEG, dtype=np.float32)
+    x = np.zeros(n, dtype=np.float32)
+    got = np.asarray(maxplus_matvec(jnp.array(m), jnp.array(x)))
+    assert np.all(got <= NEG / 2)
+
+
+@pytest.mark.parametrize("block", [16, 32, 64, 128])
+def test_maxplus_block_size_invariance(block):
+    """Tiling must not change the result."""
+    n = 128
+    rng = np.random.default_rng(7)
+    m = rand_cost_matrix(rng, n)
+    x = rng.uniform(0, 10, n).astype(np.float32)
+    want = ref.maxplus_matvec_ref(m, x)
+    got = np.asarray(maxplus_matvec(jnp.array(m), jnp.array(x), block=block))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([8, 16, 32, 64]),
+    p=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxplus_hypothesis_sweep(n, p, seed):
+    rng = np.random.default_rng(seed)
+    m = rand_cost_matrix(rng, n, p_edge=p)
+    x = rng.uniform(-1e3, 1e3, n).astype(np.float32)
+    got = np.asarray(maxplus_matvec(jnp.array(m), jnp.array(x)))
+    want = ref.maxplus_matvec_ref(m, x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+# -------------------------------------------------------------------- EFT
+
+
+@pytest.mark.parametrize("p,v", [(1, 4), (4, 8), (64, 8), (64, 16), (64, 32)])
+def test_batch_eft_matches_ref(p, v):
+    rng = np.random.default_rng(p * 100 + v)
+    finish = rng.uniform(0, 50, p).astype(np.float32)
+    comm = rng.uniform(0, 20, (p, v)).astype(np.float32)
+    exec_t = rng.uniform(0.1, 30, v).astype(np.float32)
+    avail = rng.uniform(0, 60, v).astype(np.float32)
+    arrival = np.array([rng.uniform(0, 40)], dtype=np.float32)
+    got = np.asarray(
+        batch_eft(
+            jnp.array(finish), jnp.array(comm), jnp.array(exec_t),
+            jnp.array(avail), jnp.array(arrival),
+        )
+    )
+    want = ref.batch_eft_ref(finish, comm, exec_t, avail, float(arrival[0]))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_batch_eft_padded_parents_ignored():
+    """Padded parent slots (finish = NEG) must not influence the result."""
+    rng = np.random.default_rng(0)
+    v = 8
+    finish_real = rng.uniform(0, 50, 3).astype(np.float32)
+    comm_real = rng.uniform(0, 20, (3, v)).astype(np.float32)
+    exec_t = rng.uniform(0.1, 30, v).astype(np.float32)
+    avail = rng.uniform(0, 60, v).astype(np.float32)
+    arrival = np.array([5.0], dtype=np.float32)
+
+    finish_pad = np.full(64, NEG, dtype=np.float32)
+    finish_pad[:3] = finish_real
+    comm_pad = np.zeros((64, v), dtype=np.float32)
+    comm_pad[:3] = comm_real
+
+    got = np.asarray(
+        batch_eft(
+            jnp.array(finish_pad), jnp.array(comm_pad), jnp.array(exec_t),
+            jnp.array(avail), jnp.array(arrival),
+        )
+    )
+    want = ref.batch_eft_ref(finish_real, comm_real, exec_t, avail, 5.0)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_batch_eft_no_parents_uses_arrival_and_avail():
+    v = 8
+    finish = np.full(64, NEG, dtype=np.float32)
+    comm = np.zeros((64, v), dtype=np.float32)
+    exec_t = np.ones(v, dtype=np.float32)
+    avail = np.arange(v, dtype=np.float32)
+    arrival = np.array([3.0], dtype=np.float32)
+    got = np.asarray(
+        batch_eft(
+            jnp.array(finish), jnp.array(comm), jnp.array(exec_t),
+            jnp.array(avail), jnp.array(arrival),
+        )
+    )
+    want = np.maximum(avail, 3.0) + 1.0
+    np.testing.assert_allclose(got, want, rtol=1e-6)

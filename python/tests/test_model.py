@@ -1,0 +1,138 @@
+"""L2 correctness: rank fixed points vs an independent topological oracle.
+
+Validates both the kernel *and* the fixed-point formulation on random DAGs,
+including padding semantics (exactly what the Rust runtime feeds the
+compiled artifact).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.maxplus import NEG
+
+
+def random_dag(rng, n_real, p_edge=0.3, wmax=50.0, cmax=20.0):
+    """Random DAG on [0, n_real): edges only i -> j with i < j (acyclic)."""
+    edges = []
+    for i in range(n_real):
+        for j in range(i + 1, n_real):
+            if rng.random() < p_edge:
+                edges.append((i, j, float(rng.uniform(0.1, cmax))))
+    w = rng.uniform(0.1, wmax, n_real)
+    return edges, w
+
+
+def pad_problem(edges, w, n_pad):
+    """Pad to bucket size: w = 0, no edges for padded tasks."""
+    m = np.full((n_pad, n_pad), NEG, dtype=np.float32)
+    for u, v, c in edges:
+        m[u, v] = c
+    wp = np.zeros(n_pad, dtype=np.float32)
+    wp[: len(w)] = w
+    return m, wp
+
+
+def dag_height(edges, n):
+    children = [[] for _ in range(n)]
+    for u, v, _ in edges:
+        children[u].append(v)
+    memo = {}
+
+    def h(t):
+        if t in memo:
+            return memo[t]
+        memo[t] = 1 + max((h(c) for c in children[t]), default=0)
+        return memo[t]
+
+    return max((h(t) for t in range(n)), default=1)
+
+
+@pytest.mark.parametrize("n_real,bucket", [(5, 32), (20, 32), (30, 32), (50, 64), (100, 128)])
+def test_upward_rank_matches_topo_oracle(n_real, bucket):
+    rng = np.random.default_rng(n_real)
+    edges, w = random_dag(rng, n_real)
+    m, wp = pad_problem(edges, w, bucket)
+    depth = dag_height(edges, n_real)
+    got = np.asarray(model.upward_rank(jnp.array(m), jnp.array(wp), depth))
+    want = ref.upward_rank_topo_ref(edges, w)
+    np.testing.assert_allclose(got[:n_real], want, rtol=1e-4)
+    # padded tasks: rank exactly 0 (w = 0, no edges)
+    np.testing.assert_allclose(got[n_real:], 0.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("n_real,bucket", [(5, 32), (30, 32), (50, 64)])
+def test_downward_rank_matches_topo_oracle(n_real, bucket):
+    rng = np.random.default_rng(500 + n_real)
+    edges, w = random_dag(rng, n_real)
+    m, wp = pad_problem(edges, w, bucket)
+    depth = dag_height(edges, n_real)
+    got = np.asarray(model.downward_rank(jnp.array(m), jnp.array(wp), depth))
+    want = ref.downward_rank_topo_ref(edges, w)
+    np.testing.assert_allclose(got[:n_real], want, rtol=1e-4)
+
+
+def test_ranks_combined_consistent_with_parts():
+    rng = np.random.default_rng(42)
+    edges, w = random_dag(rng, 24)
+    m, wp = pad_problem(edges, w, 32)
+    depth = 32  # over-iterate: fixed point must be stable
+    up, down = model.ranks_combined(jnp.array(m), jnp.array(wp), depth)
+    up1 = model.upward_rank(jnp.array(m), jnp.array(wp), depth)
+    down1 = model.downward_rank(jnp.array(m), jnp.array(wp), depth)
+    np.testing.assert_allclose(np.asarray(up), np.asarray(up1))
+    np.testing.assert_allclose(np.asarray(down), np.asarray(down1))
+
+
+def test_over_iteration_is_stable():
+    """Iterating past the DAG height must not change the fixed point."""
+    rng = np.random.default_rng(3)
+    edges, w = random_dag(rng, 20)
+    m, wp = pad_problem(edges, w, 32)
+    h = dag_height(edges, 20)
+    r_h = np.asarray(model.upward_rank(jnp.array(m), jnp.array(wp), h))
+    r_2h = np.asarray(model.upward_rank(jnp.array(m), jnp.array(wp), 2 * h + 3))
+    np.testing.assert_allclose(r_h, r_2h, rtol=1e-6)
+
+
+def test_chain_rank_is_suffix_sum():
+    """Chain DAG: rank_u(i) = sum_{j>=i} w(j) + sum of comm costs after i."""
+    n = 10
+    w = np.arange(1.0, n + 1.0)
+    edges = [(i, i + 1, 2.0) for i in range(n - 1)]
+    m, wp = pad_problem(edges, w, 32)
+    got = np.asarray(model.upward_rank(jnp.array(m), jnp.array(wp), n))
+    want = np.array(
+        [w[i:].sum() + 2.0 * (n - 1 - i) for i in range(n)]
+    )
+    np.testing.assert_allclose(got[:n], want, rtol=1e-5)
+
+
+def test_cpop_priority_constant_on_critical_path():
+    """up(t) + down(t) is constant along the critical path of a chain."""
+    n = 6
+    w = np.full(n, 3.0)
+    edges = [(i, i + 1, 1.0) for i in range(n - 1)]
+    m, wp = pad_problem(edges, w, 32)
+    up, down = model.ranks_combined(jnp.array(m), jnp.array(wp), n)
+    pri = np.asarray(up)[:n] + np.asarray(down)[:n]
+    np.testing.assert_allclose(pri, pri[0], rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 28),
+    p=st.floats(0.05, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_upward_rank_hypothesis(n, p, seed):
+    rng = np.random.default_rng(seed)
+    edges, w = random_dag(rng, n, p_edge=p)
+    m, wp = pad_problem(edges, w, 32)
+    got = np.asarray(model.upward_rank(jnp.array(m), jnp.array(wp), 32))
+    want = ref.upward_rank_topo_ref(edges, w)
+    np.testing.assert_allclose(got[:n], want, rtol=1e-4, atol=1e-3)

@@ -1,0 +1,17 @@
+//! Fig 4 — Normalized Mean Makespan (synthetic / RIoTBench / WFCommons).
+//!
+//! Regenerates the paper's figure as a sorted table per dataset.  Scale
+//! via DTS_BENCH_SCALE=paper for the full §VI instance sizes.
+
+#[path = "util/mod.rs"]
+mod util;
+
+use dts::metrics::Metric;
+use dts::workloads::Dataset;
+
+fn main() {
+    for dataset in [Dataset::Synthetic, Dataset::RiotBench, Dataset::WfCommons] {
+        let r = util::sweep(dataset);
+        util::print_figure("Fig 4 — Normalized Mean Makespan", &r, Metric::MeanMakespan);
+    }
+}

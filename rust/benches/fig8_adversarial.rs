@@ -1,0 +1,28 @@
+//! Fig 8 — the adversarial instance, all five metrics (a–e).
+//!
+//! Checks and prints the paper's §VII headline: NP-HEFT's total makespan
+//! is ≈1.6× P-HEFT's, while partially preemptive variants sit near P on
+//! makespan/utilization and near NP on flowtime/runtime.
+
+#[path = "util/mod.rs"]
+mod util;
+
+use dts::metrics::Metric;
+use dts::workloads::Dataset;
+
+fn main() {
+    let r = util::sweep(Dataset::Adversarial);
+    util::print_figure("Fig 8a — Normalized Total Makespan", &r, Metric::TotalMakespan);
+    util::print_figure("Fig 8b — Normalized Mean Makespan", &r, Metric::MeanMakespan);
+    util::print_figure("Fig 8c — Normalized Mean Flowtime", &r, Metric::MeanFlowtime);
+    util::print_figure("Fig 8d — Normalized Runtime", &r, Metric::Runtime);
+    util::print_figure("Fig 8e — Utilization", &r, Metric::Utilization);
+
+    // headline ratio of §VII.A
+    let p = r.value_of("P-HEFT", Metric::TotalMakespan).unwrap();
+    let np = r.value_of("NP-HEFT", Metric::TotalMakespan).unwrap();
+    println!(
+        "\nheadline: NP-HEFT / P-HEFT total makespan = {:.2}× (paper: ≈1.6×)",
+        np / p
+    );
+}

@@ -1,0 +1,57 @@
+//! §Perf micro-benchmarks of the L3 scheduling hot paths: full dynamic
+//! runs per heuristic/policy, one-shot composite scheduling, and the
+//! insertion gap-finder.  These are the numbers tracked in
+//! EXPERIMENTS.md §Perf.
+
+#[path = "util/mod.rs"]
+mod util;
+
+use dts::coordinator::{Coordinator, Policy};
+use dts::graph::Gid;
+use dts::schedule::{Slot, Timelines};
+use dts::schedulers::SchedulerKind;
+use dts::workloads::Dataset;
+
+fn main() {
+    // 1. end-to-end dynamic runs, 100-graph synthetic (the paper's size)
+    let prob = Dataset::Synthetic.instance(100, 1);
+    for kind in SchedulerKind::ALL {
+        for policy in [Policy::NonPreemptive, Policy::LastK(5), Policy::Preemptive] {
+            let (mean, min, max) = util::time_it(1, 3, || {
+                let mut c = Coordinator::new(policy, kind.make(0));
+                std::hint::black_box(c.run(&prob));
+            });
+            util::report(
+                &format!("dynamic {}-{} synthetic×100", policy.label(), kind.name()),
+                mean,
+                min,
+                max,
+            );
+        }
+    }
+
+    // 2. the biggest single composite problem a preemptive run sees
+    let (mean, min, max) = util::time_it(1, 5, || {
+        let mut c = Coordinator::new(Policy::Preemptive, SchedulerKind::Heft.make(0));
+        let res = c.run(&prob);
+        std::hint::black_box(res.events.iter().map(|e| e.n_pending).max());
+    });
+    util::report("peak-composite probe (P-HEFT)", mean, min, max);
+
+    // 3. insertion gap-finder on a long timeline
+    let mut tl = Timelines::new(1);
+    for i in 0..2000 {
+        let t = i as f64 * 10.0;
+        tl.insert(0, Slot { start: t, finish: t + 6.0, gid: Gid::new(0, i) });
+    }
+    let (mean, min, max) = util::time_it(10, 50, || {
+        // worst case: a task too big for every interior gap
+        std::hint::black_box(tl.earliest_start(0, 0.0, 7.0));
+    });
+    util::report("earliest_start scan (2000 slots, no fit)", mean, min, max);
+
+    let (mean, min, max) = util::time_it(10, 50, || {
+        std::hint::black_box(tl.earliest_start(0, 9500.0, 3.0));
+    });
+    util::report("earliest_start scan (ready mid-timeline)", mean, min, max);
+}

@@ -1,0 +1,70 @@
+//! §Perf: XLA-compiled Pallas rank fixed point vs the native Rust DP,
+//! across bucket sizes — quantifies the PJRT dispatch overhead and the
+//! crossover (if any) on this CPU testbed.
+//!
+//! Requires `make artifacts`; prints SKIP when absent.
+
+#[path = "util/mod.rs"]
+mod util;
+
+use std::rc::Rc;
+
+use dts::network::Network;
+use dts::prng::Xoshiro256pp;
+use dts::runtime::{XlaRanks, XlaRuntime};
+use dts::schedulers::{NativeRanks, PTask, Pred, Problem, RankProvider};
+
+fn random_problem(n: usize, seed: u64) -> Problem {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut tasks: Vec<PTask> = (0..n)
+        .map(|i| PTask {
+            gid: dts::graph::Gid::new(0, i),
+            cost: rng.uniform(1.0, 50.0),
+            ready: 0.0,
+            preds: Vec::new(),
+            succs: Vec::new(),
+        })
+        .collect();
+    for i in 0..n {
+        for j in (i + 1)..(n.min(i + 24)) {
+            if rng.next_f64() < 0.2 {
+                let d = rng.uniform(0.5, 10.0);
+                tasks[i].succs.push((j, d));
+                tasks[j].preds.push(Pred::Pending { idx: i, data: d });
+            }
+        }
+    }
+    Problem { tasks }
+}
+
+fn main() {
+    let rt = match XlaRuntime::load("artifacts") {
+        Ok(rt) => Rc::new(rt),
+        Err(e) => {
+            eprintln!("SKIP perf_rank_xla: {e}");
+            return;
+        }
+    };
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let net = Network::default_eval(&mut rng);
+
+    for &n in &[16usize, 32, 64, 128, 200, 256] {
+        let prob = random_problem(n, n as u64);
+
+        let (mean_n, min_n, max_n) = util::time_it(3, 20, || {
+            std::hint::black_box(NativeRanks.ranks(&prob, &net));
+        });
+        util::report(&format!("native ranks n={n}"), mean_n, min_n, max_n);
+
+        let mut xr = XlaRanks::new(rt.clone());
+        let (mean_x, min_x, max_x) = util::time_it(3, 20, || {
+            std::hint::black_box(xr.ranks(&prob, &net));
+        });
+        util::report(&format!("xla    ranks n={n}"), mean_x, min_x, max_x);
+        println!(
+            "{:<44} xla/native = {:.1}×\n",
+            format!("ratio n={n}"),
+            mean_x / mean_n
+        );
+    }
+}

@@ -1,0 +1,87 @@
+//! Shared mini-bench harness for the figure benches (criterion is not in
+//! the offline vendored set).  Provides timed repetition with warmup and
+//! the standard header/footer the figure benches print.
+
+use std::time::Instant;
+
+use dts::config::ExperimentConfig;
+use dts::experiments::{run_sweep, SweepResult};
+use dts::metrics::Metric;
+use dts::workloads::Dataset;
+
+/// Scale of a bench run, controlled by env:
+/// * `DTS_BENCH_SCALE=quick` — reduced instances (CI-speed, default)
+/// * `DTS_BENCH_SCALE=paper` — the paper's §VI instance sizes
+pub fn scale() -> &'static str {
+    match std::env::var("DTS_BENCH_SCALE").as_deref() {
+        Ok("paper") => "paper",
+        _ => "quick",
+    }
+}
+
+/// Sweep config at the requested scale with the full 30-variant grid.
+pub fn figure_config(dataset: Dataset) -> ExperimentConfig {
+    if scale() == "paper" {
+        ExperimentConfig::paper_default(dataset)
+    } else {
+        ExperimentConfig {
+            n_graphs: match dataset {
+                Dataset::WfCommons => 20,
+                _ => 30,
+            },
+            trials: 3,
+            ..ExperimentConfig::paper_default(dataset)
+        }
+    }
+}
+
+/// Run a sweep with a progress line per trial.
+pub fn sweep(dataset: Dataset) -> SweepResult {
+    let cfg = figure_config(dataset);
+    eprintln!(
+        "[bench] {} sweep: {} graphs × {} variants × {} trials ({} scale)",
+        dataset.name(),
+        cfg.n_graphs,
+        cfg.variants.len(),
+        cfg.trials,
+        scale()
+    );
+    let t0 = Instant::now();
+    let r = run_sweep(&cfg);
+    eprintln!("[bench] {} done in {:.1}s", dataset.name(), t0.elapsed().as_secs_f64());
+    r
+}
+
+/// Print the figure table for one metric.
+pub fn print_figure(title: &str, r: &SweepResult, metric: Metric) {
+    println!("\n### {title} — {} ({})\n", r.config.dataset.name(), scale());
+    println!("{}", r.figure_table(metric));
+}
+
+/// Timed micro-benchmark: `iters` timed runs after `warmup` runs.
+/// Returns (mean_s, min_s, max_s).
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    (mean, min, max)
+}
+
+/// Standard per-bench report line.
+pub fn report(name: &str, mean_s: f64, min_s: f64, max_s: f64) {
+    println!(
+        "{name:<44} mean {:>10.3} ms   min {:>10.3} ms   max {:>10.3} ms",
+        mean_s * 1e3,
+        min_s * 1e3,
+        max_s * 1e3
+    );
+}

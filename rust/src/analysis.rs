@@ -1,0 +1,200 @@
+//! Critical-path / slack analysis of composite problems — the analysis
+//! tool behind `dts analyze`, and the consumer of the `allpairs_n{N}`
+//! XLA artifact (all-pairs tropical longest path; native DP here is the
+//! reference implementation the artifact is parity-tested against).
+//!
+//! Definitions over mean costs (`w̄`, `c̄`, as in the rank computations):
+//! * `to(t)`   — longest path ending at t (excluding t's own cost)
+//! * `from(t)` — longest path starting at t (including t's own cost)
+//! * `cp`      — the component's critical-path length `max_t to(t)+from(t)`
+//! * `slack(t)`— `cp − (to(t) + from(t))`: 0 ⇔ t is on the critical path
+
+use crate::network::Network;
+use crate::schedulers::common::{mean_costs, topo_order};
+use crate::schedulers::Problem;
+
+/// Per-task slack report.
+#[derive(Clone, Debug)]
+pub struct SlackReport {
+    /// longest path into each task (mean-cost weighted, excl. own cost)
+    pub to: Vec<f64>,
+    /// longest path out of each task (incl. own cost)
+    pub from: Vec<f64>,
+    /// critical path length of each task's component
+    pub cp_of: Vec<f64>,
+    /// slack per task (0 = critical)
+    pub slack: Vec<f64>,
+}
+
+impl SlackReport {
+    /// Indices of critical tasks (slack ≤ tol), most critical first by
+    /// descending `from`.
+    pub fn critical_tasks(&self, tol: f64) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.slack.len())
+            .filter(|&i| self.slack[i] <= tol)
+            .collect();
+        idx.sort_by(|&a, &b| self.from[b].partial_cmp(&self.from[a]).unwrap());
+        idx
+    }
+}
+
+/// Native O(E) slack analysis over the pending composite graph.
+pub fn slack_analysis(prob: &Problem, net: &Network) -> SlackReport {
+    let n = prob.n_tasks();
+    let (w, succ_costs) = mean_costs(prob, net);
+    let order = topo_order(prob);
+
+    // from(t): DP over reverse topological order
+    let mut from = vec![0.0f64; n];
+    for &t in order.iter().rev() {
+        let mut best = 0.0f64;
+        for &(c, cbar) in &succ_costs[t] {
+            best = best.max(cbar + from[c]);
+        }
+        from[t] = w[t] + best;
+    }
+    // to(t): DP over topological order
+    let mut to = vec![0.0f64; n];
+    for &t in order.iter() {
+        for &(c, cbar) in &succ_costs[t] {
+            to[c] = to[c].max(to[t] + w[t] + cbar);
+        }
+    }
+    // per-component critical path
+    let comp = crate::schedulers::common::components(prob);
+    let n_comp = comp.iter().copied().max().map_or(0, |m| m + 1);
+    let mut cp = vec![0.0f64; n_comp];
+    for t in 0..n {
+        cp[comp[t]] = cp[comp[t]].max(to[t] + from[t]);
+    }
+    let cp_of: Vec<f64> = (0..n).map(|t| cp[comp[t]]).collect();
+    let slack: Vec<f64> = (0..n).map(|t| cp_of[t] - (to[t] + from[t])).collect();
+    SlackReport {
+        to,
+        from,
+        cp_of,
+        slack,
+    }
+}
+
+/// Native all-pairs longest path over the pending composite graph, with
+/// edge weight `c̄(u,v) + w̄(v)` (so `d[u][v]` is the extra completion
+/// depth v adds after u).  `NEG_D` marks unreachable pairs.  This is the
+/// semantic the `allpairs_n{N}` artifact computes (parity-tested in
+/// `integration_runtime`).
+pub const NEG_D: f64 = -1e30;
+
+pub fn allpairs_longest_native(prob: &Problem, net: &Network) -> Vec<Vec<f64>> {
+    let n = prob.n_tasks();
+    let (w, succ_costs) = mean_costs(prob, net);
+    let order = topo_order(prob);
+    let mut d = vec![vec![NEG_D; n]; n];
+    for t in 0..n {
+        d[t][t] = 0.0;
+    }
+    // process in reverse topo: d[u] = max over edges (u,c) of
+    // edge + d[c] (shifted by c's own cost on entry)
+    for &u in order.iter().rev() {
+        for &(c, cbar) in &succ_costs[u] {
+            let edge = cbar + w[c];
+            for v in 0..n {
+                if d[c][v] > NEG_D / 2.0 {
+                    let cand = edge + d[c][v];
+                    if cand > d[u][v] {
+                        d[u][v] = cand;
+                    }
+                }
+            }
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::schedulers::testutil::problem_from_graph;
+
+    fn chain_prob() -> Problem {
+        let mut b = GraphBuilder::new("chain");
+        let t0 = b.task(2.0);
+        let t1 = b.task(4.0);
+        let t2 = b.task(6.0);
+        b.edge(t0, t1, 0.0).edge(t1, t2, 0.0);
+        problem_from_graph(&b.build().unwrap(), 0, 0.0)
+    }
+
+    #[test]
+    fn chain_is_fully_critical() {
+        let net = Network::homogeneous(2);
+        let r = slack_analysis(&chain_prob(), &net);
+        for s in &r.slack {
+            assert!(s.abs() < 1e-9, "{:?}", r.slack);
+        }
+        assert_eq!(r.critical_tasks(1e-9).len(), 3);
+        assert!((r.cp_of[0] - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn diamond_light_branch_has_slack() {
+        let mut b = GraphBuilder::new("d");
+        let t0 = b.task(1.0);
+        let heavy = b.task(10.0);
+        let light = b.task(2.0);
+        let t3 = b.task(1.0);
+        b.edge(t0, heavy, 0.0)
+            .edge(t0, light, 0.0)
+            .edge(heavy, t3, 0.0)
+            .edge(light, t3, 0.0);
+        let prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        let net = Network::homogeneous(1);
+        let r = slack_analysis(&prob, &net);
+        assert!(r.slack[2] > 7.9, "light branch slack {:?}", r.slack);
+        assert!(r.slack[1].abs() < 1e-9);
+        let crit = r.critical_tasks(1e-9);
+        assert_eq!(crit, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn allpairs_native_chain_values() {
+        let net = Network::homogeneous(1);
+        let d = allpairs_longest_native(&chain_prob(), &net);
+        // d[0][1] = w(1) = 4 (no comm on homogeneous single? comm 0 data)
+        assert!((d[0][1] - 4.0).abs() < 1e-9);
+        assert!((d[0][2] - 10.0).abs() < 1e-9);
+        assert!(d[2][0] <= NEG_D / 2.0);
+        assert_eq!(d[1][1], 0.0);
+    }
+
+    #[test]
+    fn slack_consistent_with_allpairs() {
+        // from(t) − w(t) must equal max_v d[t][v]
+        use crate::prng::Xoshiro256pp;
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let mut b = GraphBuilder::new("rand");
+        let n = 18;
+        let ids: Vec<_> = (0..n).map(|_| b.task(rng.uniform(1.0, 9.0))).collect();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if rng.next_f64() < 0.25 {
+                    b.edge(ids[i], ids[j], rng.uniform(0.0, 5.0));
+                }
+            }
+        }
+        let prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        let net = Network::homogeneous(3);
+        let r = slack_analysis(&prob, &net);
+        let d = allpairs_longest_native(&prob, &net);
+        let (w, _) = crate::schedulers::common::mean_costs(&prob, &net);
+        for t in 0..n {
+            let reach_max = d[t].iter().cloned().fold(NEG_D, f64::max).max(0.0);
+            assert!(
+                ((r.from[t] - w[t]) - reach_max).abs() < 1e-9,
+                "task {t}: from-w {} vs allpairs {}",
+                r.from[t] - w[t],
+                reach_max
+            );
+        }
+    }
+}

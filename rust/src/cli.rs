@@ -1,0 +1,389 @@
+//! `dts` command-line launcher (hand-rolled arg parsing — no clap in the
+//! offline vendored set).
+//!
+//! Subcommands:
+//! * `run`        — run one scheduler variant on one dataset instance
+//! * `experiment` — full sweep, printing every figure table
+//! * `generate`   — emit workload statistics (and optional DOT dumps)
+//! * `validate`   — run + §II-validate + discrete-event replay
+//! * `info`       — version, artifact/bucket status
+
+use std::collections::HashMap;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{Coordinator, Variant};
+use crate::experiments::run_sweep;
+use crate::metrics::Metric;
+use crate::schedule::validate;
+use crate::schedulers::{Cpop, Heft};
+use crate::sim::replay;
+use crate::workloads::Dataset;
+use crate::{report, runtime};
+
+/// Parsed flags: `--key value` pairs plus positional words.
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+pub fn parse_args(argv: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if let Some((k, v)) = key.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), argv[i + 1].clone());
+                i += 1;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+            }
+        } else {
+            positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+    pub fn usize_flag(&self, key: &str, default: usize) -> usize {
+        self.flag(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+    pub fn u64_flag(&self, key: &str, default: u64) -> u64 {
+        self.flag(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+    pub fn bool_flag(&self, key: &str) -> bool {
+        matches!(self.flag(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+const USAGE: &str = "\
+dts — dynamic task-graph scheduling with controlled preemption
+
+USAGE:
+  dts run        --dataset <d> [--graphs N] [--seed S] [--variant 5P-HEFT] [--xla]
+  dts experiment [--config cfg.json | --dataset <d>] [--quick] [--csv out.csv]
+  dts generate   --dataset <d> [--graphs N] [--seed S] [--dot]
+  dts validate   --dataset <d> [--graphs N] [--seed S] [--variant V]
+  dts analyze    --dataset <d> [--graphs N] [--seed S] [--variant V]
+                 [--svg out.svg] [--trace out.json] [--width 100]
+  dts info       [--artifacts DIR]
+
+datasets: synthetic | riotbench | wfcommons | adversarial
+variants: {P,NP,<k>P}-{HEFT,CPOP,MinMin,MaxMin,Random,MET,OLB,ETF}
+";
+
+/// CLI entry point; returns the process exit code.
+pub fn main_with(argv: &[String]) -> i32 {
+    let args = parse_args(argv);
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("analyze") => cmd_analyze(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprint!("{USAGE}");
+            2
+        }
+    }
+}
+
+fn dataset_of(args: &Args) -> Result<Dataset, i32> {
+    match args.flag("dataset").and_then(Dataset::parse) {
+        Some(d) => Ok(d),
+        None => {
+            eprintln!("error: --dataset required (synthetic|riotbench|wfcommons|adversarial)");
+            Err(2)
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let Ok(dataset) = dataset_of(args) else { return 2 };
+    let n = args.usize_flag("graphs", dataset.default_n_graphs());
+    let seed = args.u64_flag("seed", 0);
+    let label = args.flag("variant").unwrap_or("5P-HEFT");
+    let Some(variant) = Variant::parse(label) else {
+        eprintln!("error: bad --variant '{label}'");
+        return 2;
+    };
+    let prob = dataset.instance(n, seed);
+
+    let res = if args.bool_flag("xla") {
+        let rt = match runtime::XlaRuntime::load(args.flag("artifacts").unwrap_or("artifacts")) {
+            Ok(rt) => std::rc::Rc::new(rt),
+            Err(e) => {
+                eprintln!("error: cannot load artifacts: {e}");
+                return 1;
+            }
+        };
+        let ranks = runtime::XlaRanks::new(rt);
+        use crate::schedulers::SchedulerKind as K;
+        let sched: Box<dyn crate::schedulers::Scheduler> = match variant.kind {
+            K::Heft => Box::new(Heft::new(ranks)),
+            K::Cpop => Box::new(Cpop::new(ranks)),
+            other => {
+                eprintln!("note: --xla only affects HEFT/CPOP; using native {other:?}");
+                other.make(seed)
+            }
+        };
+        Coordinator::new(variant.policy, sched).run(&prob)
+    } else {
+        variant.coordinator(seed).run(&prob)
+    };
+
+    let m = res.metrics(&prob);
+    println!("dataset           : {} ({} graphs, seed {seed})", dataset.name(), n);
+    println!("variant           : {}", variant.label());
+    println!("total makespan    : {}", report::fmt(m.total_makespan));
+    println!("mean makespan     : {}", report::fmt(m.mean_makespan));
+    println!("mean flowtime     : {}", report::fmt(m.mean_flowtime));
+    println!("mean utilization  : {}", report::fmt(m.mean_utilization));
+    println!("scheduler runtime : {:.6} s over {} events", m.runtime_s, res.events.len());
+    0
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    let cfg = if let Some(path) = args.flag("config") {
+        match ExperimentConfig::from_file(path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        }
+    } else {
+        let Ok(dataset) = dataset_of(args) else { return 2 };
+        let mut c = if args.bool_flag("quick") {
+            ExperimentConfig::quick(dataset)
+        } else {
+            ExperimentConfig::paper_default(dataset)
+        };
+        c.n_graphs = args.usize_flag("graphs", c.n_graphs);
+        c.trials = args.usize_flag("trials", c.trials);
+        c.seed = args.u64_flag("seed", c.seed);
+        c
+    };
+
+    eprintln!(
+        "sweep: {} × {} variants × {} trials ({} graphs)",
+        cfg.dataset.name(),
+        cfg.variants.len(),
+        cfg.trials,
+        cfg.n_graphs
+    );
+    let result = run_sweep(&cfg);
+    for metric in Metric::ALL {
+        println!("\n## {} — {}\n", cfg.dataset.name(), metric.name());
+        println!("{}", result.figure_table(metric));
+    }
+    if let Some(path) = args.flag("csv") {
+        if let Err(e) = std::fs::write(path, result.to_csv()) {
+            eprintln!("error writing {path}: {e}");
+            return 1;
+        }
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = args.flag("json") {
+        if let Err(e) = std::fs::write(path, result.to_json().to_string()) {
+            eprintln!("error writing {path}: {e}");
+            return 1;
+        }
+        eprintln!("wrote {path}");
+    }
+    0
+}
+
+fn cmd_generate(args: &Args) -> i32 {
+    let Ok(dataset) = dataset_of(args) else { return 2 };
+    let n = args.usize_flag("graphs", dataset.default_n_graphs());
+    let seed = args.u64_flag("seed", 0);
+    let prob = dataset.instance(n, seed);
+    println!("dataset  : {}", dataset.name());
+    println!("graphs   : {}", prob.graphs.len());
+    println!("tasks    : {}", prob.total_tasks());
+    println!("nodes    : {}", prob.network.n_nodes());
+    let span = prob.graphs.last().map(|(a, _)| *a).unwrap_or(0.0);
+    println!("arrivals : 0.0 .. {:.2}", span);
+    if args.bool_flag("dot") {
+        for (i, (_, g)) in prob.graphs.iter().take(3).enumerate() {
+            println!("# graph {i}: {}\n{}", g.name(), g.to_dot());
+        }
+    }
+    0
+}
+
+fn cmd_validate(args: &Args) -> i32 {
+    let Ok(dataset) = dataset_of(args) else { return 2 };
+    let n = args.usize_flag("graphs", 30);
+    let seed = args.u64_flag("seed", 0);
+    let label = args.flag("variant").unwrap_or("5P-HEFT");
+    let Some(variant) = Variant::parse(label) else {
+        eprintln!("error: bad --variant '{label}'");
+        return 2;
+    };
+    let prob = dataset.instance(n, seed);
+    let res = variant.coordinator(seed).run(&prob);
+    let viol = validate(&res.schedule, &prob.graphs, &prob.network);
+    let rep = replay(&res.schedule, &prob.graphs, &prob.network);
+    println!("variant {} on {} ({n} graphs):", variant.label(), dataset.name());
+    println!("  §II validator : {} violations", viol.len());
+    println!("  replay        : {} errors", rep.errors.len());
+    println!("  busy fraction : {:.4}", rep.avg_busy_fraction);
+    for v in viol.iter().take(5) {
+        println!("    {}", v.0);
+    }
+    for e in rep.errors.iter().take(5) {
+        println!("    {e}");
+    }
+    if viol.is_empty() && rep.errors.is_empty() {
+        println!("  OK");
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_analyze(args: &Args) -> i32 {
+    let Ok(dataset) = dataset_of(args) else { return 2 };
+    let n = args.usize_flag("graphs", 12);
+    let seed = args.u64_flag("seed", 0);
+    let label = args.flag("variant").unwrap_or("5P-HEFT");
+    let Some(variant) = Variant::parse(label) else {
+        eprintln!("error: bad --variant '{label}'");
+        return 2;
+    };
+    let prob = dataset.instance(n, seed);
+    let res = variant.coordinator(seed).run(&prob);
+    let m = res.metrics(&prob);
+
+    println!("{} on {} ({n} graphs, seed {seed}):\n", variant.label(), dataset.name());
+    print!("{}", crate::gantt::ascii(&res.schedule, &prob, args.usize_flag("width", 100)));
+    println!(
+        "\nmakespan {}  mean-makespan {}  flowtime {}  util {}  sched {:.3} ms",
+        report::fmt(m.total_makespan),
+        report::fmt(m.mean_makespan),
+        report::fmt(m.mean_flowtime),
+        report::fmt(m.mean_utilization),
+        m.runtime_s * 1e3
+    );
+    // preemption activity summary
+    let reverted: usize = res.events.iter().map(|e| e.n_reverted).sum();
+    let peak = res.events.iter().map(|e| e.n_pending).max().unwrap_or(0);
+    println!("reverted tasks total: {reverted}   peak composite: {peak} tasks");
+
+    // slack analysis of the whole workload as one composite (what-if view)
+    let all: Vec<crate::graph::Gid> = prob
+        .graphs
+        .iter()
+        .enumerate()
+        .flat_map(|(gi, (_, g))| (0..g.n_tasks()).map(move |t| crate::graph::Gid::new(gi, t)))
+        .collect();
+    let composite = crate::coordinator::composite_of(&all, &prob);
+    let slack = crate::analysis::slack_analysis(&composite, &prob.network);
+    let crit = slack.critical_tasks(1e-9);
+    println!("critical tasks (top 5 by remaining work):");
+    for &i in crit.iter().take(5) {
+        println!(
+            "  {}  cp {:.1}  from {:.1}",
+            composite.tasks[i].gid, slack.cp_of[i], slack.from[i]
+        );
+    }
+
+    if let Some(path) = args.flag("svg") {
+        let svg = crate::gantt::svg(&res.schedule, &prob, 1000);
+        if let Err(e) = std::fs::write(path, svg) {
+            eprintln!("error writing {path}: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.flag("trace") {
+        let v = crate::trace::to_json(&prob, &res);
+        if let Err(e) = std::fs::write(path, v.to_string()) {
+            eprintln!("error writing {path}: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    0
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    println!("dts {}", crate::version());
+    let dir = args.flag("artifacts").unwrap_or("artifacts");
+    match runtime::XlaRuntime::load(dir) {
+        Ok(rt) => {
+            println!("artifacts: {dir} (loaded)");
+            println!("rank buckets: {:?}", rt.rank_buckets());
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_and_positionals() {
+        let a = parse_args(&argv("run --dataset synthetic --graphs 10 --xla"));
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.flag("dataset"), Some("synthetic"));
+        assert_eq!(a.usize_flag("graphs", 0), 10);
+        assert!(a.bool_flag("xla"));
+        assert!(!a.bool_flag("other"));
+    }
+
+    #[test]
+    fn parse_key_equals_value() {
+        let a = parse_args(&argv("experiment --dataset=adv --trials=2"));
+        assert_eq!(a.flag("dataset"), Some("adv"));
+        assert_eq!(a.usize_flag("trials", 0), 2);
+    }
+
+    #[test]
+    fn unknown_subcommand_usage() {
+        assert_eq!(main_with(&argv("bogus")), 2);
+        assert_eq!(main_with(&[]), 2);
+    }
+
+    #[test]
+    fn run_and_validate_smoke() {
+        assert_eq!(
+            main_with(&argv(
+                "run --dataset synthetic --graphs 6 --seed 1 --variant 2P-HEFT"
+            )),
+            0
+        );
+        assert_eq!(
+            main_with(&argv(
+                "validate --dataset adversarial --graphs 6 --seed 1 --variant P-CPOP"
+            )),
+            0
+        );
+        assert_eq!(main_with(&argv("generate --dataset riotbench --graphs 5")), 0);
+    }
+
+    #[test]
+    fn run_rejects_bad_variant() {
+        assert_eq!(
+            main_with(&argv("run --dataset synthetic --variant WAT")),
+            2
+        );
+    }
+}

@@ -1,0 +1,146 @@
+//! Experiment configuration: JSON-serializable descriptions of a
+//! (dataset × variants × trials) sweep, the unit the CLI and the figure
+//! benches operate on.
+
+use crate::coordinator::Variant;
+use crate::json::{self, Value};
+use crate::workloads::Dataset;
+
+/// One experiment sweep: `trials` seeded instances of `dataset`, each run
+/// under every variant in `variants`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentConfig {
+    pub dataset: Dataset,
+    /// graphs per instance (paper defaults per dataset when None in JSON)
+    pub n_graphs: usize,
+    /// independent seeded instances to average over
+    pub trials: usize,
+    /// base seed; trial `t` uses `seed + t`
+    pub seed: u64,
+    /// offered-load factor (see workloads::DEFAULT_LOAD)
+    pub load: f64,
+    pub variants: Vec<Variant>,
+}
+
+impl ExperimentConfig {
+    /// Paper-shaped default: full 30-variant grid, 5 trials.
+    pub fn paper_default(dataset: Dataset) -> Self {
+        Self {
+            dataset,
+            n_graphs: dataset.default_n_graphs(),
+            trials: 5,
+            seed: 0xD75,
+            load: crate::workloads::DEFAULT_LOAD,
+            variants: crate::coordinator::paper_grid(),
+        }
+    }
+
+    /// Smaller sweep for tests / smoke runs.
+    pub fn quick(dataset: Dataset) -> Self {
+        Self {
+            dataset,
+            n_graphs: 16,
+            trials: 2,
+            seed: 7,
+            load: crate::workloads::DEFAULT_LOAD,
+            variants: crate::coordinator::paper_grid(),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("dataset", json::s(self.dataset.name())),
+            ("n_graphs", json::num(self.n_graphs as f64)),
+            ("trials", json::num(self.trials as f64)),
+            ("seed", json::num(self.seed as f64)),
+            ("load", json::num(self.load)),
+            (
+                "variants",
+                json::arr(self.variants.iter().map(|v| json::s(&v.label())).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self, String> {
+        let dataset = v
+            .get("dataset")
+            .and_then(|d| d.as_str())
+            .and_then(Dataset::parse)
+            .ok_or("missing/bad 'dataset'")?;
+        let n_graphs = v
+            .get("n_graphs")
+            .and_then(|x| x.as_usize())
+            .unwrap_or_else(|| dataset.default_n_graphs());
+        let trials = v.get("trials").and_then(|x| x.as_usize()).unwrap_or(5);
+        let seed = v.get("seed").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
+        let load = v
+            .get("load")
+            .and_then(|x| x.as_f64())
+            .unwrap_or(crate::workloads::DEFAULT_LOAD);
+        let variants = match v.get("variants") {
+            None => crate::coordinator::paper_grid(),
+            Some(arr) => {
+                let items = arr.as_array().ok_or("'variants' must be an array")?;
+                let mut out = Vec::new();
+                for it in items {
+                    let s = it.as_str().ok_or("variant must be a string")?;
+                    out.push(Variant::parse(s).ok_or_else(|| format!("bad variant '{s}'"))?);
+                }
+                out
+            }
+        };
+        Ok(Self {
+            dataset,
+            n_graphs,
+            trials,
+            seed,
+            load,
+            variants,
+        })
+    }
+
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let v = Value::from_str(&text).map_err(|e| e.to_string())?;
+        Self::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_json() {
+        let cfg = ExperimentConfig::paper_default(Dataset::RiotBench);
+        let v = cfg.to_json();
+        let back = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let v = Value::from_str(r#"{"dataset": "synthetic"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.n_graphs, 100);
+        assert_eq!(cfg.variants.len(), 30);
+    }
+
+    #[test]
+    fn bad_variant_is_an_error() {
+        let v = Value::from_str(r#"{"dataset": "synthetic", "variants": ["XQ-HEFT"]}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn explicit_variants_parse() {
+        let v = Value::from_str(
+            r#"{"dataset": "adv", "variants": ["P-HEFT", "NP-HEFT", "5P-CPOP"], "trials": 2}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.variants.len(), 3);
+        assert_eq!(cfg.variants[2].label(), "5P-CPOP");
+        assert_eq!(cfg.dataset, Dataset::Adversarial);
+    }
+}

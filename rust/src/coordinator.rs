@@ -1,0 +1,536 @@
+//! The dynamic scheduling coordinator — the paper's contribution (§IV).
+//!
+//! Task graphs arrive over (virtual) time.  On each arrival the
+//! coordinator decides, per the configured [`Policy`], which previously
+//! *Scheduled* (but not yet started) tasks are reverted to *Unscheduled*,
+//! merges them with the new graph into a composite [`Problem`], and hands
+//! it to the configured base heuristic.  Tasks whose start time precedes
+//! the arrival are *Executing/Completed* and are never moved (Fig. 2 of
+//! the paper: only `Scheduled -> Unscheduled` transitions exist).
+//!
+//! * [`Policy::Preemptive`] — revert every pending task (P-NAME).
+//! * [`Policy::NonPreemptive`] — revert nothing (NP-NAME).
+//! * [`Policy::LastK`] — revert pending tasks of the K most recently
+//!   arrived graphs only (KP-NAME, the paper's Last-K model).
+
+use std::time::Instant;
+
+use crate::graph::{Gid, TaskGraph};
+use crate::metrics::MetricRow;
+use crate::network::Network;
+use crate::schedule::{Schedule, EPS};
+use crate::schedulers::{PTask, Pred, Problem, Scheduler, SchedulerKind};
+
+/// Preemption policy (§IV).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Policy {
+    NonPreemptive,
+    Preemptive,
+    /// Revert pending tasks of the `K` most recent earlier graphs.
+    LastK(usize),
+}
+
+impl Policy {
+    /// Paper notation: `NP`, `P`, `5P`, ...
+    pub fn label(&self) -> String {
+        match self {
+            Policy::NonPreemptive => "NP".to_string(),
+            Policy::Preemptive => "P".to_string(),
+            Policy::LastK(k) => format!("{k}P"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "NP" | "np" => Some(Policy::NonPreemptive),
+            "P" | "p" => Some(Policy::Preemptive),
+            _ => {
+                let t = s.strip_suffix(['P', 'p'])?;
+                t.parse::<usize>().ok().map(Policy::LastK)
+            }
+        }
+    }
+
+    /// How many of the most recent earlier graphs are revertible on the
+    /// arrival of graph `i` (0-based).
+    fn window(&self, i: usize) -> usize {
+        match self {
+            Policy::NonPreemptive => 0,
+            Policy::Preemptive => i,
+            Policy::LastK(k) => (*k).min(i),
+        }
+    }
+}
+
+/// Observable lifecycle state of a task at a given instant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskState {
+    Unscheduled,
+    Scheduled,
+    Executing,
+    Completed,
+}
+
+/// State of `gid` at time `now` under the current global schedule.
+pub fn task_state(schedule: &Schedule, gid: Gid, now: f64) -> TaskState {
+    match schedule.get(gid) {
+        None => TaskState::Unscheduled,
+        Some(a) if a.finish <= now + EPS => TaskState::Completed,
+        Some(a) if a.start < now - EPS => TaskState::Executing,
+        Some(_) => TaskState::Scheduled,
+    }
+}
+
+/// A dynamic instance: graphs with sorted arrival times on a network.
+#[derive(Clone, Debug)]
+pub struct DynamicProblem {
+    pub network: Network,
+    pub graphs: Vec<(f64, TaskGraph)>,
+}
+
+impl DynamicProblem {
+    pub fn new(network: Network, mut graphs: Vec<(f64, TaskGraph)>) -> Self {
+        graphs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        Self { network, graphs }
+    }
+
+    pub fn total_tasks(&self) -> usize {
+        self.graphs.iter().map(|(_, g)| g.n_tasks()).sum()
+    }
+}
+
+/// Per-arrival trace record.
+#[derive(Clone, Copy, Debug)]
+pub struct EventLog {
+    pub graph_idx: usize,
+    pub time: f64,
+    /// tasks handed to the base heuristic at this event
+    pub n_pending: usize,
+    /// how many previously scheduled tasks were reverted
+    pub n_reverted: usize,
+    /// wall-clock seconds spent inside the base heuristic
+    pub sched_runtime_s: f64,
+}
+
+/// Outcome of a full dynamic run.
+#[derive(Clone, Debug)]
+pub struct DynamicResult {
+    pub schedule: Schedule,
+    pub events: Vec<EventLog>,
+    /// §V.E runtime: total scheduler wall time across all arrivals.
+    pub sched_runtime_s: f64,
+}
+
+impl DynamicResult {
+    pub fn metrics(&self, prob: &DynamicProblem) -> MetricRow {
+        MetricRow::compute(
+            &self.schedule,
+            &prob.graphs,
+            &prob.network,
+            self.sched_runtime_s,
+        )
+    }
+}
+
+/// The dynamic coordinator: a policy wrapped around a base heuristic.
+pub struct Coordinator {
+    pub policy: Policy,
+    scheduler: Box<dyn Scheduler>,
+}
+
+impl Coordinator {
+    pub fn new(policy: Policy, scheduler: Box<dyn Scheduler>) -> Self {
+        Self { policy, scheduler }
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}-{}", self.policy.label(), self.scheduler.name())
+    }
+
+    /// Run the arrival loop over the whole problem.
+    pub fn run(&mut self, prob: &DynamicProblem) -> DynamicResult {
+        let n_nodes = prob.network.n_nodes();
+        let mut schedule = Schedule::new(n_nodes);
+        let mut events = Vec::with_capacity(prob.graphs.len());
+        let mut total_rt = 0.0;
+
+        for i in 0..prob.graphs.len() {
+            let (arrival, _) = prob.graphs[i];
+
+            // 1. revert pending tasks of graphs inside the policy window
+            let window = self.policy.window(i);
+            let mut pending: Vec<Gid> = Vec::new();
+            for j in (i - window)..i {
+                let g = &prob.graphs[j].1;
+                for t in 0..g.n_tasks() {
+                    let gid = Gid::new(j, t);
+                    if let Some(a) = schedule.get(gid) {
+                        // strictly-started tasks are committed
+                        if a.start >= arrival - EPS {
+                            schedule.unassign(gid);
+                            pending.push(gid);
+                        }
+                    }
+                }
+            }
+            let n_reverted = pending.len();
+
+            // 2. the new graph's tasks are all pending
+            let g_new = &prob.graphs[i].1;
+            for t in 0..g_new.n_tasks() {
+                pending.push(Gid::new(i, t));
+            }
+
+            // 3. build the composite problem + a scratch timeline copy
+            let problem = build_composite(&pending, prob, &schedule);
+            let mut scratch = schedule.timelines().clone();
+
+            // 4. run the base heuristic, timed (§V.E)
+            let t0 = Instant::now();
+            let assignments = self.scheduler.schedule(&problem, &prob.network, &mut scratch);
+            let dt = t0.elapsed().as_secs_f64();
+            total_rt += dt;
+
+            // 5. merge back into the global schedule
+            for (idx, a) in assignments.iter().enumerate() {
+                schedule.assign(problem.tasks[idx].gid, *a);
+            }
+
+            events.push(EventLog {
+                graph_idx: i,
+                time: arrival,
+                n_pending: problem.n_tasks(),
+                n_reverted,
+                sched_runtime_s: dt,
+            });
+        }
+
+        DynamicResult {
+            schedule,
+            events,
+            sched_runtime_s: total_rt,
+        }
+    }
+}
+
+/// Public variant of [`build_composite`] for analysis tools: treat the
+/// given task set as entirely pending (no committed placements).
+pub fn composite_of(pending: &[Gid], prob: &DynamicProblem) -> Problem {
+    let empty = Schedule::new(prob.network.n_nodes());
+    build_composite(pending, prob, &empty)
+}
+
+/// Assemble the composite [`Problem`] for the given pending set: pending
+/// parents become [`Pred::Pending`], committed parents become
+/// [`Pred::Fixed`] constraints carrying their placement.
+fn build_composite(pending: &[Gid], prob: &DynamicProblem, schedule: &Schedule) -> Problem {
+    let index: crate::fasthash::FxHashMap<Gid, usize> =
+        pending.iter().enumerate().map(|(i, &g)| (g, i)).collect();
+
+    let mut tasks: Vec<PTask> = pending
+        .iter()
+        .map(|&gid| {
+            let (arrival, g) = &prob.graphs[gid.graph as usize];
+            PTask {
+                gid,
+                cost: g.cost(gid.task as usize),
+                ready: *arrival,
+                preds: Vec::new(),
+                succs: Vec::new(),
+            }
+        })
+        .collect();
+
+    for ci in 0..pending.len() {
+        let gid = pending[ci];
+        let g = &prob.graphs[gid.graph as usize].1;
+        let preds: Vec<(usize, f64)> = g.predecessors(gid.task as usize).to_vec();
+        for (p, data) in preds {
+            let pgid = Gid::new(gid.graph as usize, p);
+            if let Some(&pidx) = index.get(&pgid) {
+                tasks[ci].preds.push(Pred::Pending { idx: pidx, data });
+                tasks[pidx].succs.push((ci, data));
+            } else {
+                let a = schedule
+                    .get(pgid)
+                    .expect("parent neither pending nor committed");
+                tasks[ci].preds.push(Pred::Fixed {
+                    node: a.node,
+                    finish: a.finish,
+                    data,
+                });
+            }
+        }
+    }
+
+    Problem { tasks }
+}
+
+// --------------------------------------------------------------- variants
+
+/// One cell of the paper's scheduler grid, e.g. `5P-HEFT`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Variant {
+    pub policy: Policy,
+    pub kind: SchedulerKind,
+}
+
+impl Variant {
+    pub fn label(&self) -> String {
+        format!("{}-{}", self.policy.label(), self.kind.name())
+    }
+
+    /// Parse labels like `NP-HEFT`, `P-CPOP`, `5P-MinMin`.
+    pub fn parse(s: &str) -> Option<Variant> {
+        let (pol, kind) = s.split_once('-')?;
+        Some(Variant {
+            policy: Policy::parse(pol)?,
+            kind: SchedulerKind::parse(kind)?,
+        })
+    }
+
+    pub fn coordinator(&self, seed: u64) -> Coordinator {
+        Coordinator::new(self.policy, self.kind.make(seed))
+    }
+}
+
+/// The grid evaluated throughout §VII: {NP, 2P, 5P, 10P, 20P, P} × the
+/// five base heuristics.
+pub fn paper_grid() -> Vec<Variant> {
+    let policies = [
+        Policy::NonPreemptive,
+        Policy::LastK(2),
+        Policy::LastK(5),
+        Policy::LastK(10),
+        Policy::LastK(20),
+        Policy::Preemptive,
+    ];
+    let mut out = Vec::new();
+    for kind in SchedulerKind::ALL {
+        for p in policies {
+            out.push(Variant { policy: p, kind });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::schedule::{validate, Assignment};
+
+    fn chain_graph(name: &str, costs: &[f64], data: f64) -> TaskGraph {
+        let mut b = GraphBuilder::new(name);
+        let ids: Vec<_> = costs.iter().map(|&c| b.task(c)).collect();
+        for w in ids.windows(2) {
+            b.edge(w[0], w[1], data);
+        }
+        b.build().unwrap()
+    }
+
+    fn two_graph_problem() -> DynamicProblem {
+        DynamicProblem::new(
+            Network::homogeneous(2),
+            vec![
+                (0.0, chain_graph("g0", &[4.0, 4.0, 4.0], 0.0)),
+                (2.0, chain_graph("g1", &[1.0, 1.0], 0.0)),
+            ],
+        )
+    }
+
+    fn run(policy: Policy, prob: &DynamicProblem) -> DynamicResult {
+        let mut c = Coordinator::new(policy, SchedulerKind::Heft.make(0));
+        c.run(prob)
+    }
+
+    #[test]
+    fn all_policies_produce_valid_schedules() {
+        let prob = two_graph_problem();
+        for policy in [
+            Policy::NonPreemptive,
+            Policy::Preemptive,
+            Policy::LastK(1),
+            Policy::LastK(5),
+        ] {
+            let res = run(policy, &prob);
+            assert_eq!(res.schedule.n_assigned(), prob.total_tasks());
+            let viol = validate(&res.schedule, &prob.graphs, &prob.network);
+            assert!(viol.is_empty(), "{policy:?}: {viol:?}");
+        }
+    }
+
+    #[test]
+    fn np_never_moves_earlier_assignments() {
+        let prob = two_graph_problem();
+        // run g0 alone to know its undisturbed placement
+        let solo = run(
+            Policy::NonPreemptive,
+            &DynamicProblem::new(prob.network.clone(), vec![prob.graphs[0].clone()]),
+        );
+        let both = run(Policy::NonPreemptive, &prob);
+        for t in 0..prob.graphs[0].1.n_tasks() {
+            let gid = Gid::new(0, t);
+            assert_eq!(
+                solo.schedule.get(gid),
+                both.schedule.get(gid),
+                "NP must keep g0's placement"
+            );
+        }
+    }
+
+    #[test]
+    fn preemptive_reverts_unstarted_only() {
+        // g0: 3-task chain on 2 nodes; second arrival at t=2 means g0's
+        // first task (start 0) is executing, the rest are revertible.
+        let prob = two_graph_problem();
+        let res = run(Policy::Preemptive, &prob);
+        assert_eq!(res.events.len(), 2);
+        let e1 = res.events[1];
+        assert!(e1.n_reverted <= 2, "only unstarted tasks revert: {e1:?}");
+        // g0 t0 must still start at 0 (it was executing)
+        assert_eq!(res.schedule.get(Gid::new(0, 0)).unwrap().start, 0.0);
+    }
+
+    #[test]
+    fn last0_equals_np_and_large_k_equals_p() {
+        // exhaustive equality of final schedules across several workloads
+        for seed in 0..5u64 {
+            let mut rng = crate::prng::Xoshiro256pp::seed_from_u64(seed);
+            let graphs: Vec<(f64, TaskGraph)> = (0..6)
+                .map(|i| {
+                    let costs: Vec<f64> =
+                        (0..4).map(|_| rng.uniform(1.0, 8.0)).collect();
+                    (i as f64 * 1.5, chain_graph(&format!("g{i}"), &costs, 1.0))
+                })
+                .collect();
+            let prob = DynamicProblem::new(Network::homogeneous(3), graphs);
+
+            let sig = |r: &DynamicResult| {
+                let mut v: Vec<(Gid, usize, u64)> = r
+                    .schedule
+                    .iter()
+                    .map(|(g, a)| (*g, a.node, a.start.to_bits()))
+                    .collect();
+                v.sort();
+                v
+            };
+            let np = run(Policy::NonPreemptive, &prob);
+            let k0 = run(Policy::LastK(0), &prob);
+            assert_eq!(sig(&np), sig(&k0), "K=0 ≡ NP (seed {seed})");
+
+            let p = run(Policy::Preemptive, &prob);
+            let kbig = run(Policy::LastK(100), &prob);
+            assert_eq!(sig(&p), sig(&kbig), "K≥i ≡ P (seed {seed})");
+        }
+    }
+
+    #[test]
+    fn dependencies_hold_under_every_policy() {
+        let prob = two_graph_problem();
+        for policy in [Policy::Preemptive, Policy::LastK(1), Policy::NonPreemptive] {
+            let res = run(policy, &prob);
+            for (gi, (_, g)) in prob.graphs.iter().enumerate() {
+                for t in 0..g.n_tasks() {
+                    for &(c, _) in g.successors(t) {
+                        let at = res.schedule.get(Gid::new(gi, t)).unwrap();
+                        let ac = res.schedule.get(Gid::new(gi, c)).unwrap();
+                        assert!(at.finish <= ac.start + EPS);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tasks_never_start_before_arrival() {
+        let prob = two_graph_problem();
+        for policy in [Policy::NonPreemptive, Policy::Preemptive, Policy::LastK(1)] {
+            let res = run(policy, &prob);
+            for (gi, (arrival, g)) in prob.graphs.iter().enumerate() {
+                for t in 0..g.n_tasks() {
+                    let a = res.schedule.get(Gid::new(gi, t)).unwrap();
+                    assert!(a.start >= arrival - EPS);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn policy_parse_and_labels() {
+        assert_eq!(Policy::parse("NP"), Some(Policy::NonPreemptive));
+        assert_eq!(Policy::parse("P"), Some(Policy::Preemptive));
+        assert_eq!(Policy::parse("5P"), Some(Policy::LastK(5)));
+        assert_eq!(Policy::parse("20p"), Some(Policy::LastK(20)));
+        assert_eq!(Policy::parse("xP"), None);
+        assert_eq!(Policy::LastK(5).label(), "5P");
+        let v = Variant::parse("5P-MinMin").unwrap();
+        assert_eq!(v.label(), "5P-MinMin");
+        assert_eq!(Variant::parse("NP-HEFT").unwrap().label(), "NP-HEFT");
+        assert_eq!(Variant::parse("banana"), None);
+    }
+
+    #[test]
+    fn paper_grid_is_30_variants() {
+        let grid = paper_grid();
+        assert_eq!(grid.len(), 30);
+        let labels: std::collections::HashSet<String> =
+            grid.iter().map(|v| v.label()).collect();
+        assert_eq!(labels.len(), 30);
+        assert!(labels.contains("5P-HEFT"));
+        assert!(labels.contains("NP-Random"));
+    }
+
+    #[test]
+    fn task_state_transitions() {
+        let mut s = Schedule::new(1);
+        let gid = Gid::new(0, 0);
+        assert_eq!(task_state(&s, gid, 0.0), TaskState::Unscheduled);
+        s.assign(gid, Assignment { node: 0, start: 5.0, finish: 8.0 });
+        assert_eq!(task_state(&s, gid, 1.0), TaskState::Scheduled);
+        assert_eq!(task_state(&s, gid, 6.0), TaskState::Executing);
+        assert_eq!(task_state(&s, gid, 9.0), TaskState::Completed);
+    }
+
+    #[test]
+    fn runtime_accounting_accumulates() {
+        let prob = two_graph_problem();
+        let res = run(Policy::Preemptive, &prob);
+        let sum: f64 = res.events.iter().map(|e| e.sched_runtime_s).sum();
+        assert!((res.sched_runtime_s - sum).abs() < 1e-12);
+        assert!(res.sched_runtime_s > 0.0);
+    }
+
+    #[test]
+    fn preemption_can_improve_makespan_on_blocking_pattern() {
+        // The paper's Fig. 1 story: small tasks from an earlier graph
+        // block a later graph's huge root under NP.
+        let mut rng = crate::prng::Xoshiro256pp::seed_from_u64(3);
+        // g0: many small independent tasks
+        let mut b = GraphBuilder::new("small");
+        for _ in 0..12 {
+            b.task(rng.uniform(0.5, 1.5));
+        }
+        let g0 = b.build().unwrap();
+        // g1: huge root then small successors
+        let mut b = GraphBuilder::new("spiky");
+        let root = b.task(30.0);
+        for _ in 0..8 {
+            let t = b.task(0.5);
+            b.edge(root, t, 0.1);
+        }
+        let g1 = b.build().unwrap();
+        let prob = DynamicProblem::new(
+            Network::homogeneous(3),
+            vec![(0.0, g0), (0.5, g1)],
+        );
+        let p = run(Policy::Preemptive, &prob).metrics(&prob);
+        let np = run(Policy::NonPreemptive, &prob).metrics(&prob);
+        assert!(
+            p.total_makespan <= np.total_makespan + 1e-9,
+            "P ({}) should not lose to NP ({}) here",
+            p.total_makespan,
+            np.total_makespan
+        );
+    }
+}

@@ -1,0 +1,103 @@
+//! Small fast non-cryptographic hasher (FxHash construction, as used by
+//! rustc) for the hot-path `Gid`-keyed maps.  The default SipHash showed
+//! up in the §Perf pass on `Schedule::get`/`assign` and the composite
+//! builder; scheduling workloads are not adversarial, so DoS hardening
+//! buys nothing here.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// FxHash: multiply-xor over 8-byte chunks.
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            self.add(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.add(i as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add(i);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add(i as u64);
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+/// `HashMap` with the fast hasher.
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Gid;
+
+    #[test]
+    fn distinct_gids_hash_distinctly_enough() {
+        let mut set = std::collections::HashSet::new();
+        for g in 0..200u32 {
+            for t in 0..50u32 {
+                let mut h = FxHasher::default();
+                std::hash::Hash::hash(&Gid { graph: g, task: t }, &mut h);
+                set.insert(h.finish());
+            }
+        }
+        // 10_000 keys: no catastrophic collision collapse
+        assert!(set.len() > 9_990, "{}", set.len());
+    }
+
+    #[test]
+    fn map_roundtrip() {
+        let mut m: FxHashMap<Gid, usize> = FxHashMap::default();
+        for i in 0..1000 {
+            m.insert(Gid::new(i % 7, i), i);
+        }
+        assert_eq!(m.len(), 1000);
+        assert_eq!(m.get(&Gid::new(3, 10)), Some(&10));
+    }
+
+    #[test]
+    fn hasher_handles_unaligned_bytes() {
+        let mut h = FxHasher::default();
+        h.write(&[1, 2, 3]);
+        let a = h.finish();
+        let mut h = FxHasher::default();
+        h.write(&[1, 2, 4]);
+        assert_ne!(a, h.finish());
+    }
+}

@@ -1,0 +1,168 @@
+//! Schedule visualization: ASCII Gantt charts for terminals and SVG
+//! export for reports — the Fig 1-style pictures of the paper.
+//!
+//! Colors/letters encode the owning *graph*, making preemption effects
+//! (interleaving, displaced blocks, idle gaps) visible at a glance.
+
+use std::fmt::Write as _;
+
+use crate::coordinator::DynamicProblem;
+use crate::schedule::Schedule;
+
+/// ASCII Gantt: one row per node, `width` characters across the span.
+/// Graphs are labelled A–Z (cycling), idle time is `.`.
+pub fn ascii(schedule: &Schedule, problem: &DynamicProblem, width: usize) -> String {
+    let span = schedule
+        .iter()
+        .map(|(_, a)| a.finish)
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    let mut out = String::new();
+    for v in 0..problem.network.n_nodes() {
+        let mut row = vec![b'.'; width];
+        for (gid, a) in schedule.iter() {
+            if a.node != v {
+                continue;
+            }
+            let s = ((a.start / span) * width as f64) as usize;
+            let e = (((a.finish / span) * width as f64).ceil() as usize).min(width);
+            let ch = b'A' + (gid.graph as u8 % 26);
+            for c in row.iter_mut().take(e).skip(s.min(width)) {
+                *c = ch;
+            }
+        }
+        let _ = writeln!(
+            out,
+            "node {v:>2} |{}| busy {:>5.1}%",
+            String::from_utf8_lossy(&row),
+            100.0 * schedule.timelines().busy_time(v) / span
+        );
+    }
+    let _ = writeln!(out, "span: 0 .. {span:.2}");
+    out
+}
+
+/// Distinct fill colors for up to 16 graphs (cycling).
+const PALETTE: [&str; 16] = [
+    "#4e79a7", "#f28e2b", "#e15759", "#76b7b2", "#59a14f", "#edc948",
+    "#b07aa1", "#ff9da7", "#9c755f", "#bab0ac", "#1f77b4", "#ff7f0e",
+    "#2ca02c", "#d62728", "#9467bd", "#8c564b",
+];
+
+/// SVG Gantt chart (self-contained, no external CSS).
+pub fn svg(schedule: &Schedule, problem: &DynamicProblem, width_px: usize) -> String {
+    let n_nodes = problem.network.n_nodes();
+    let row_h = 28usize;
+    let label_w = 64usize;
+    let height = n_nodes * row_h + 40;
+    let span = schedule
+        .iter()
+        .map(|(_, a)| a.finish)
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    let scale = (width_px - label_w - 10) as f64 / span;
+
+    let mut s = String::new();
+    let _ = write!(
+        s,
+        r##"<svg xmlns="http://www.w3.org/2000/svg" width="{width_px}" height="{height}" font-family="monospace" font-size="11">"##
+    );
+    let _ = write!(
+        s,
+        r##"<rect width="{width_px}" height="{height}" fill="white"/>"##
+    );
+    for v in 0..n_nodes {
+        let y = 20 + v * row_h;
+        let _ = write!(
+            s,
+            r##"<text x="4" y="{}" fill="#333">node {v}</text>"##,
+            y + row_h / 2 + 4
+        );
+        let _ = write!(
+            s,
+            r##"<rect x="{label_w}" y="{y}" width="{}" height="{}" fill="#f4f4f4"/>"##,
+            width_px - label_w - 10,
+            row_h - 4
+        );
+    }
+    // slots, sorted for deterministic output
+    let mut slots: Vec<_> = schedule.iter().collect();
+    slots.sort_by_key(|(g, _)| **g);
+    for (gid, a) in slots {
+        let x = label_w as f64 + a.start * scale;
+        let w = ((a.finish - a.start) * scale).max(1.0);
+        let y = 20 + a.node * row_h;
+        let color = PALETTE[(gid.graph as usize) % PALETTE.len()];
+        let _ = write!(
+            s,
+            r##"<rect x="{x:.1}" y="{y}" width="{w:.1}" height="{}" fill="{color}" stroke="#333" stroke-width="0.4"><title>{gid} [{:.2}, {:.2}]</title></rect>"##,
+            row_h - 4,
+            a.start,
+            a.finish
+        );
+    }
+    // time axis
+    let _ = write!(
+        s,
+        r##"<text x="{label_w}" y="{}" fill="#333">0</text><text x="{}" y="{}" fill="#333" text-anchor="end">{span:.1}</text>"##,
+        height - 8,
+        width_px - 10,
+        height - 8
+    );
+    s.push_str("</svg>");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Coordinator, Policy};
+    use crate::schedulers::SchedulerKind;
+    use crate::workloads::Dataset;
+
+    fn run() -> (DynamicProblem, Schedule) {
+        let prob = Dataset::Synthetic.instance(4, 3);
+        let mut c = Coordinator::new(Policy::LastK(2), SchedulerKind::Heft.make(0));
+        let res = c.run(&prob);
+        (prob, res.schedule)
+    }
+
+    #[test]
+    fn ascii_rows_match_nodes_and_width() {
+        let (prob, sched) = run();
+        let a = ascii(&sched, &prob, 80);
+        let rows: Vec<&str> = a.lines().collect();
+        assert_eq!(rows.len(), prob.network.n_nodes() + 1);
+        for r in &rows[..prob.network.n_nodes()] {
+            assert!(r.contains('|'));
+            let bar = r.split('|').nth(1).unwrap();
+            assert_eq!(bar.len(), 80);
+        }
+        assert!(rows.last().unwrap().starts_with("span:"));
+    }
+
+    #[test]
+    fn ascii_shows_multiple_graphs() {
+        let (prob, sched) = run();
+        let a = ascii(&sched, &prob, 120);
+        assert!(a.contains('A') && a.contains('B'));
+    }
+
+    #[test]
+    fn svg_is_well_formed_and_complete() {
+        let (prob, sched) = run();
+        let s = svg(&sched, &prob, 900);
+        assert!(s.starts_with("<svg") && s.ends_with("</svg>"));
+        // one rect per slot + one background per node + canvas
+        let n_rects = s.matches("<rect").count();
+        assert_eq!(n_rects, 1 + prob.network.n_nodes() + sched.n_assigned());
+        // every task's tooltip present
+        assert_eq!(s.matches("<title>").count(), sched.n_assigned());
+    }
+
+    #[test]
+    fn svg_deterministic() {
+        let (prob, sched) = run();
+        assert_eq!(svg(&sched, &prob, 640), svg(&sched, &prob, 640));
+    }
+}

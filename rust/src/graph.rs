@@ -1,0 +1,367 @@
+//! Task graphs: the `G_i = (T_i, D_i)` of the paper's problem definition.
+//!
+//! A [`TaskGraph`] is a DAG whose vertices carry compute costs `c(t)` and
+//! whose edges carry data sizes `c(t, t')`.  Graphs are immutable after
+//! construction via [`GraphBuilder`], which validates acyclicity.  In the
+//! dynamic problem many graphs coexist; a task is globally identified by a
+//! [`Gid`] (graph index, task index).
+
+use std::fmt;
+
+/// Task index within one graph.
+pub type TaskId = usize;
+
+/// Global task identity across the dynamic problem's graph collection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Gid {
+    pub graph: u32,
+    pub task: u32,
+}
+
+impl Gid {
+    pub fn new(graph: usize, task: usize) -> Self {
+        Self {
+            graph: graph as u32,
+            task: task as u32,
+        }
+    }
+}
+
+impl fmt::Display for Gid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "g{}t{}", self.graph, self.task)
+    }
+}
+
+/// An immutable weighted DAG.
+#[derive(Clone, Debug)]
+pub struct TaskGraph {
+    name: String,
+    cost: Vec<f64>,
+    /// successor adjacency: `succ[t] = [(child, data_size), ...]`
+    succ: Vec<Vec<(TaskId, f64)>>,
+    /// predecessor adjacency (mirror of `succ`)
+    pred: Vec<Vec<(TaskId, f64)>>,
+    /// cached topological order (tasks were validated acyclic at build)
+    topo: Vec<TaskId>,
+}
+
+impl TaskGraph {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+    pub fn n_tasks(&self) -> usize {
+        self.cost.len()
+    }
+    pub fn n_edges(&self) -> usize {
+        self.succ.iter().map(Vec::len).sum()
+    }
+    /// Compute cost `c(t)`.
+    pub fn cost(&self, t: TaskId) -> f64 {
+        self.cost[t]
+    }
+    pub fn successors(&self, t: TaskId) -> &[(TaskId, f64)] {
+        &self.succ[t]
+    }
+    pub fn predecessors(&self, t: TaskId) -> &[(TaskId, f64)] {
+        &self.pred[t]
+    }
+    pub fn is_source(&self, t: TaskId) -> bool {
+        self.pred[t].is_empty()
+    }
+    pub fn is_sink(&self, t: TaskId) -> bool {
+        self.succ[t].is_empty()
+    }
+    /// A valid topological order (cached at construction).
+    pub fn topo_order(&self) -> &[TaskId] {
+        &self.topo
+    }
+    /// Sum of all task compute costs.
+    pub fn total_cost(&self) -> f64 {
+        self.cost.iter().sum()
+    }
+    /// Sum of all edge data sizes.
+    pub fn total_data(&self) -> f64 {
+        self.succ
+            .iter()
+            .flat_map(|es| es.iter().map(|&(_, d)| d))
+            .sum()
+    }
+
+    /// Length (in vertices) of the longest path — bounds the rank
+    /// fixed-point iteration count.
+    pub fn height(&self) -> usize {
+        let mut h = vec![1usize; self.n_tasks()];
+        for &t in self.topo.iter().rev() {
+            for &(c, _) in &self.succ[t] {
+                h[t] = h[t].max(1 + h[c]);
+            }
+        }
+        h.into_iter().max().unwrap_or(0)
+    }
+
+    /// Scale every edge's data size by `factor` (used for CCR control).
+    pub fn scale_edges(&mut self, factor: f64) {
+        for es in &mut self.succ {
+            for e in es.iter_mut() {
+                e.1 *= factor;
+            }
+        }
+        for es in &mut self.pred {
+            for e in es.iter_mut() {
+                e.1 *= factor;
+            }
+        }
+    }
+
+    /// Graphviz DOT rendering (debugging / docs).
+    pub fn to_dot(&self) -> String {
+        let mut out = format!("digraph \"{}\" {{\n", self.name);
+        for t in 0..self.n_tasks() {
+            out.push_str(&format!("  t{} [label=\"t{} ({:.1})\"];\n", t, t, self.cost[t]));
+        }
+        for t in 0..self.n_tasks() {
+            for &(c, d) in &self.succ[t] {
+                out.push_str(&format!("  t{} -> t{} [label=\"{:.1}\"];\n", t, c, d));
+            }
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+/// Builder enforcing DAG validity.
+#[derive(Clone, Debug)]
+pub struct GraphBuilder {
+    name: String,
+    cost: Vec<f64>,
+    edges: Vec<(TaskId, TaskId, f64)>,
+}
+
+/// Errors surfaced while assembling a graph.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GraphError {
+    Cycle,
+    BadTask(TaskId),
+    NonPositiveCost(f64),
+    NegativeData(f64),
+    SelfLoop(TaskId),
+    DuplicateEdge(TaskId, TaskId),
+}
+
+impl fmt::Display for GraphError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GraphError::Cycle => write!(f, "graph contains a cycle"),
+            GraphError::BadTask(t) => write!(f, "unknown task id {t}"),
+            GraphError::NonPositiveCost(c) => write!(f, "non-positive task cost {c}"),
+            GraphError::NegativeData(d) => write!(f, "negative edge data size {d}"),
+            GraphError::SelfLoop(t) => write!(f, "self-loop on task {t}"),
+            GraphError::DuplicateEdge(u, v) => write!(f, "duplicate edge {u}->{v}"),
+        }
+    }
+}
+impl std::error::Error for GraphError {}
+
+impl GraphBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            cost: Vec::new(),
+            edges: Vec::new(),
+        }
+    }
+
+    /// Add a task with compute cost `c(t) > 0`; returns its id.
+    pub fn task(&mut self, cost: f64) -> TaskId {
+        self.cost.push(cost);
+        self.cost.len() - 1
+    }
+
+    /// Add a dependency `(u, v)` with data size `data >= 0`.
+    pub fn edge(&mut self, u: TaskId, v: TaskId, data: f64) -> &mut Self {
+        self.edges.push((u, v, data));
+        self
+    }
+
+    pub fn build(self) -> Result<TaskGraph, GraphError> {
+        let n = self.cost.len();
+        for &c in &self.cost {
+            if !(c > 0.0) {
+                return Err(GraphError::NonPositiveCost(c));
+            }
+        }
+        let mut succ: Vec<Vec<(TaskId, f64)>> = vec![Vec::new(); n];
+        let mut pred: Vec<Vec<(TaskId, f64)>> = vec![Vec::new(); n];
+        let mut seen = std::collections::HashSet::new();
+        for (u, v, d) in self.edges {
+            if u >= n {
+                return Err(GraphError::BadTask(u));
+            }
+            if v >= n {
+                return Err(GraphError::BadTask(v));
+            }
+            if u == v {
+                return Err(GraphError::SelfLoop(u));
+            }
+            if d < 0.0 || d.is_nan() {
+                return Err(GraphError::NegativeData(d));
+            }
+            if !seen.insert((u, v)) {
+                return Err(GraphError::DuplicateEdge(u, v));
+            }
+            succ[u].push((v, d));
+            pred[v].push((u, d));
+        }
+        // Kahn's algorithm: topological order + cycle detection.
+        let mut indeg: Vec<usize> = pred.iter().map(Vec::len).collect();
+        let mut queue: Vec<TaskId> = (0..n).filter(|&t| indeg[t] == 0).collect();
+        let mut topo = Vec::with_capacity(n);
+        let mut head = 0;
+        while head < queue.len() {
+            let t = queue[head];
+            head += 1;
+            topo.push(t);
+            for &(c, _) in &succ[t] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    queue.push(c);
+                }
+            }
+        }
+        if topo.len() != n {
+            return Err(GraphError::Cycle);
+        }
+        Ok(TaskGraph {
+            name: self.name,
+            cost: self.cost,
+            succ,
+            pred,
+            topo,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> TaskGraph {
+        // 0 -> {1, 2} -> 3
+        let mut b = GraphBuilder::new("diamond");
+        let t0 = b.task(10.0);
+        let t1 = b.task(5.0);
+        let t2 = b.task(7.0);
+        let t3 = b.task(3.0);
+        b.edge(t0, t1, 2.0)
+            .edge(t0, t2, 4.0)
+            .edge(t1, t3, 1.0)
+            .edge(t2, t3, 1.5);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn builds_and_queries() {
+        let g = diamond();
+        assert_eq!(g.n_tasks(), 4);
+        assert_eq!(g.n_edges(), 4);
+        assert_eq!(g.cost(0), 10.0);
+        assert!(g.is_source(0) && !g.is_source(1));
+        assert!(g.is_sink(3) && !g.is_sink(2));
+        assert_eq!(g.successors(0).len(), 2);
+        assert_eq!(g.predecessors(3).len(), 2);
+        assert_eq!(g.total_cost(), 25.0);
+        assert_eq!(g.total_data(), 8.5);
+        assert_eq!(g.height(), 3);
+    }
+
+    #[test]
+    fn topo_order_is_valid() {
+        let g = diamond();
+        let topo = g.topo_order();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; 4];
+            for (i, &t) in topo.iter().enumerate() {
+                p[t] = i;
+            }
+            p
+        };
+        for t in 0..4 {
+            for &(c, _) in g.successors(t) {
+                assert!(pos[t] < pos[c]);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_cycle() {
+        let mut b = GraphBuilder::new("cyc");
+        let a = b.task(1.0);
+        let c = b.task(1.0);
+        b.edge(a, c, 0.0).edge(c, a, 0.0);
+        assert_eq!(b.build().unwrap_err(), GraphError::Cycle);
+    }
+
+    #[test]
+    fn rejects_self_loop_bad_ids_bad_weights() {
+        let mut b = GraphBuilder::new("x");
+        let a = b.task(1.0);
+        b.edge(a, a, 0.0);
+        assert_eq!(b.build().unwrap_err(), GraphError::SelfLoop(a));
+
+        let mut b = GraphBuilder::new("x");
+        let a = b.task(1.0);
+        b.edge(a, 7, 0.0);
+        assert_eq!(b.build().unwrap_err(), GraphError::BadTask(7));
+
+        let mut b = GraphBuilder::new("x");
+        b.task(-1.0);
+        assert!(matches!(b.build(), Err(GraphError::NonPositiveCost(_))));
+
+        let mut b = GraphBuilder::new("x");
+        let a = b.task(1.0);
+        let c = b.task(1.0);
+        b.edge(a, c, -2.0);
+        assert!(matches!(b.build(), Err(GraphError::NegativeData(_))));
+    }
+
+    #[test]
+    fn rejects_duplicate_edge() {
+        let mut b = GraphBuilder::new("dup");
+        let a = b.task(1.0);
+        let c = b.task(1.0);
+        b.edge(a, c, 1.0).edge(a, c, 2.0);
+        assert_eq!(b.build().unwrap_err(), GraphError::DuplicateEdge(a, c));
+    }
+
+    #[test]
+    fn scale_edges_scales_both_adjacencies() {
+        let mut g = diamond();
+        g.scale_edges(2.0);
+        assert_eq!(g.total_data(), 17.0);
+        assert_eq!(g.predecessors(3)[0].1, 2.0);
+    }
+
+    #[test]
+    fn empty_graph_is_fine() {
+        let g = GraphBuilder::new("empty").build().unwrap();
+        assert_eq!(g.n_tasks(), 0);
+        assert_eq!(g.height(), 0);
+    }
+
+    #[test]
+    fn dot_export_mentions_everything() {
+        let d = diamond().to_dot();
+        assert!(d.contains("t0 -> t1"));
+        assert!(d.contains("digraph"));
+    }
+
+    #[test]
+    fn gid_ordering_and_display() {
+        let a = Gid::new(1, 2);
+        let b = Gid::new(1, 3);
+        let c = Gid::new(2, 0);
+        assert!(a < b && b < c);
+        assert_eq!(a.to_string(), "g1t2");
+    }
+}

@@ -1,0 +1,53 @@
+//! # dts — Dynamic Task-graph Scheduling with controlled preemption
+//!
+//! Reproduction of *"Studying the Effect of Schedule Preemption on Dynamic
+//! Task Graph Scheduling"* (Khodabandehlou, Coleman, Suri, Krishnamachari —
+//! MILCOM 2025, DOI 10.1109/MILCOM64451.2025.11310446).
+//!
+//! The library implements the paper's full evaluation stack:
+//!
+//! * the **problem model** — weighted task DAGs ([`graph`]) arriving over
+//!   time onto a heterogeneous related-machines network ([`network`]);
+//! * **schedules** with per-node timelines, insertion-based gap finding
+//!   and an independent validity checker ([`schedule`]);
+//! * the five **base heuristics** HEFT / CPOP / MinMin / MaxMin / Random
+//!   over composite multi-DAG problems ([`schedulers`]);
+//! * the paper's contribution, the **dynamic coordinator** with
+//!   preemptive, non-preemptive and Last-K-preemptive policies
+//!   ([`coordinator`]);
+//! * the §V **metric suite** ([`metrics`]) and the §VI **workload
+//!   generators** ([`workloads`]);
+//! * an **XLA/PJRT runtime** that executes the AOT-compiled JAX+Pallas
+//!   rank kernels from `artifacts/` on the scheduling hot path
+//!   ([`runtime`]);
+//! * the **experiment harness** regenerating every figure of the paper
+//!   ([`experiments`]).
+//!
+//! Start with `examples/quickstart.rs`; the figure pipeline lives behind
+//! `cargo bench` and the `dts` CLI.
+
+pub mod analysis;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod fasthash;
+pub mod gantt;
+pub mod graph;
+pub mod json;
+pub mod metrics;
+pub mod network;
+pub mod prng;
+pub mod report;
+pub mod robustness;
+pub mod runtime;
+pub mod schedule;
+pub mod schedulers;
+pub mod sim;
+pub mod stats;
+pub mod trace;
+pub mod workloads;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,6 @@
+//! `dts` binary: see usage (any unknown subcommand prints it).
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(dts::cli::main_with(&argv));
+}

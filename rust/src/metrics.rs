@@ -1,0 +1,293 @@
+//! The paper's §V evaluation metrics.
+//!
+//! All metrics are computed from a finished global [`Schedule`] plus the
+//! graph collection with arrival times; scheduler *runtime* is measured by
+//! the dynamic coordinator and carried in its result struct.
+
+use crate::graph::{Gid, TaskGraph};
+use crate::network::Network;
+use crate::schedule::Schedule;
+
+/// §V.A — time from the first graph's arrival to the last task's finish:
+/// `max e(t) - min a_i`.
+pub fn total_makespan(schedule: &Schedule, problem: &[(f64, TaskGraph)]) -> f64 {
+    let first_arrival = problem
+        .iter()
+        .map(|(a, _)| *a)
+        .fold(f64::INFINITY, f64::min);
+    let max_finish = schedule
+        .iter()
+        .map(|(_, a)| a.finish)
+        .fold(f64::NEG_INFINITY, f64::max);
+    if max_finish.is_finite() && first_arrival.is_finite() {
+        max_finish - first_arrival
+    } else {
+        0.0
+    }
+}
+
+/// §V.B — per-graph responsiveness:
+/// `(1/K) Σ_i ( max_{t∈T_i} e(t) − a_i )`.
+pub fn mean_makespan(schedule: &Schedule, problem: &[(f64, TaskGraph)]) -> f64 {
+    if problem.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    for (gi, (arrival, g)) in problem.iter().enumerate() {
+        let finish = (0..g.n_tasks())
+            .filter_map(|t| schedule.get(Gid::new(gi, t)))
+            .map(|a| a.finish)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if finish.is_finite() {
+            acc += finish - arrival;
+        }
+    }
+    acc / problem.len() as f64
+}
+
+/// §V.C — fairness / compactness:
+/// `(1/K) Σ_i ( max_{t∈T_i} e(t) − min_{t'∈T_i} r(t') )`.
+pub fn mean_flowtime(schedule: &Schedule, problem: &[(f64, TaskGraph)]) -> f64 {
+    if problem.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    for (gi, (_, g)) in problem.iter().enumerate() {
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for t in 0..g.n_tasks() {
+            if let Some(a) = schedule.get(Gid::new(gi, t)) {
+                lo = lo.min(a.start);
+                hi = hi.max(a.finish);
+            }
+        }
+        if hi.is_finite() && lo.is_finite() {
+            acc += hi - lo;
+        }
+    }
+    acc / problem.len() as f64
+}
+
+/// §V.D — per-node utilization `u(v) = busy(v) / max e(t)` (the paper
+/// normalizes by the latest completion over all tasks).
+pub fn node_utilization(
+    schedule: &Schedule,
+    problem: &[(f64, TaskGraph)],
+    network: &Network,
+) -> Vec<f64> {
+    let span = schedule
+        .iter()
+        .map(|(_, a)| a.finish)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let mut out = vec![0.0; network.n_nodes()];
+    if !span.is_finite() || span <= 0.0 {
+        return out;
+    }
+    let _ = problem; // node busy time already lives in the timelines
+    for v in 0..network.n_nodes() {
+        out[v] = schedule.timelines().busy_time(v) / span;
+    }
+    out
+}
+
+/// Mean of [`node_utilization`] across nodes — the Figure 7/8e quantity.
+pub fn mean_utilization(
+    schedule: &Schedule,
+    problem: &[(f64, TaskGraph)],
+    network: &Network,
+) -> f64 {
+    let u = node_utilization(schedule, problem, network);
+    if u.is_empty() {
+        0.0
+    } else {
+        u.iter().sum::<f64>() / u.len() as f64
+    }
+}
+
+/// A full metric row for one (workload, scheduler) run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MetricRow {
+    pub total_makespan: f64,
+    pub mean_makespan: f64,
+    pub mean_flowtime: f64,
+    pub mean_utilization: f64,
+    /// scheduler wall-clock runtime in seconds (§V.E), filled by the
+    /// dynamic coordinator.
+    pub runtime_s: f64,
+}
+
+impl MetricRow {
+    pub fn compute(
+        schedule: &Schedule,
+        problem: &[(f64, TaskGraph)],
+        network: &Network,
+        runtime_s: f64,
+    ) -> Self {
+        Self {
+            total_makespan: total_makespan(schedule, problem),
+            mean_makespan: mean_makespan(schedule, problem),
+            mean_flowtime: mean_flowtime(schedule, problem),
+            mean_utilization: mean_utilization(schedule, problem, network),
+            runtime_s,
+        }
+    }
+
+    pub fn get(&self, metric: Metric) -> f64 {
+        match metric {
+            Metric::TotalMakespan => self.total_makespan,
+            Metric::MeanMakespan => self.mean_makespan,
+            Metric::MeanFlowtime => self.mean_flowtime,
+            Metric::Utilization => self.mean_utilization,
+            Metric::Runtime => self.runtime_s,
+        }
+    }
+}
+
+/// Metric selector used by the experiment harness / normalization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Metric {
+    TotalMakespan,
+    MeanMakespan,
+    MeanFlowtime,
+    Utilization,
+    Runtime,
+}
+
+impl Metric {
+    pub const ALL: [Metric; 5] = [
+        Metric::TotalMakespan,
+        Metric::MeanMakespan,
+        Metric::MeanFlowtime,
+        Metric::Utilization,
+        Metric::Runtime,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::TotalMakespan => "total_makespan",
+            Metric::MeanMakespan => "mean_makespan",
+            Metric::MeanFlowtime => "mean_flowtime",
+            Metric::Utilization => "utilization",
+            Metric::Runtime => "runtime",
+        }
+    }
+
+    /// Whether *smaller* is better (normalization divides by the best).
+    pub fn lower_is_better(&self) -> bool {
+        !matches!(self, Metric::Utilization)
+    }
+}
+
+/// Normalize a set of values for one metric: divide by the best value
+/// (min for lower-is-better, max for utilization), so the best variant
+/// reads 1.0 — the convention of the paper's "Normalized ..." figures.
+pub fn normalize(metric: Metric, values: &[f64]) -> Vec<f64> {
+    if values.is_empty() {
+        return Vec::new();
+    }
+    let best = if metric.lower_is_better() {
+        values.iter().copied().fold(f64::INFINITY, f64::min)
+    } else {
+        values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    };
+    if best == 0.0 || !best.is_finite() {
+        return values.to_vec();
+    }
+    if metric.lower_is_better() {
+        values.iter().map(|v| v / best).collect()
+    } else {
+        values.iter().map(|v| v / best).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::schedule::Assignment;
+
+    /// Two single-task graphs arriving at 0 and 10, on a 2-node
+    /// homogeneous network.
+    fn setup() -> (Schedule, Vec<(f64, TaskGraph)>, Network) {
+        let g1 = {
+            let mut b = GraphBuilder::new("g1");
+            b.task(4.0);
+            b.build().unwrap()
+        };
+        let g2 = {
+            let mut b = GraphBuilder::new("g2");
+            let a = b.task(2.0);
+            let c = b.task(2.0);
+            b.edge(a, c, 0.0);
+            b.build().unwrap()
+        };
+        let net = Network::homogeneous(2);
+        let mut s = Schedule::new(2);
+        // g1 t0 on node 0: [0, 4]
+        s.assign(Gid::new(0, 0), Assignment { node: 0, start: 0.0, finish: 4.0 });
+        // g2 t0 on node 1: [10, 12], t1 on node 1: [14, 16] (gap of 2)
+        s.assign(Gid::new(1, 0), Assignment { node: 1, start: 10.0, finish: 12.0 });
+        s.assign(Gid::new(1, 1), Assignment { node: 1, start: 14.0, finish: 16.0 });
+        (s, vec![(0.0, g1), (10.0, g2)], net)
+    }
+
+    #[test]
+    fn total_makespan_spans_first_arrival_to_last_finish() {
+        let (s, p, _) = setup();
+        assert_eq!(total_makespan(&s, &p), 16.0);
+    }
+
+    #[test]
+    fn mean_makespan_is_arrival_relative() {
+        let (s, p, _) = setup();
+        // g1: 4 - 0 = 4; g2: 16 - 10 = 6 → mean 5
+        assert_eq!(mean_makespan(&s, &p), 5.0);
+    }
+
+    #[test]
+    fn mean_flowtime_is_start_relative() {
+        let (s, p, _) = setup();
+        // g1: 4 - 0 = 4; g2: 16 - 10 = 6 → 5 (same here because g2's first
+        // start equals its arrival)
+        assert_eq!(mean_flowtime(&s, &p), 5.0);
+    }
+
+    #[test]
+    fn utilization_counts_busy_over_span() {
+        let (s, p, net) = setup();
+        let u = node_utilization(&s, &p, &net);
+        // span = 16; node0 busy 4, node1 busy 4
+        assert!((u[0] - 0.25).abs() < 1e-12);
+        assert!((u[1] - 0.25).abs() < 1e-12);
+        assert!((mean_utilization(&s, &p, &net) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_schedule_yields_zeroes() {
+        let s = Schedule::new(2);
+        let p: Vec<(f64, TaskGraph)> = Vec::new();
+        assert_eq!(total_makespan(&s, &p), 0.0);
+        assert_eq!(mean_makespan(&s, &p), 0.0);
+        assert_eq!(mean_flowtime(&s, &p), 0.0);
+    }
+
+    #[test]
+    fn metric_row_and_selectors() {
+        let (s, p, net) = setup();
+        let row = MetricRow::compute(&s, &p, &net, 0.5);
+        assert_eq!(row.get(Metric::TotalMakespan), 16.0);
+        assert_eq!(row.get(Metric::Runtime), 0.5);
+        assert_eq!(Metric::Utilization.lower_is_better(), false);
+        assert_eq!(Metric::TotalMakespan.lower_is_better(), true);
+        assert_eq!(Metric::ALL.len(), 5);
+    }
+
+    #[test]
+    fn normalization_best_is_one() {
+        let vals = vec![10.0, 20.0, 15.0];
+        let n = normalize(Metric::TotalMakespan, &vals);
+        assert_eq!(n, vec![1.0, 2.0, 1.5]);
+        // utilization: higher is better → max maps to 1, others < 1
+        let u = normalize(Metric::Utilization, &[0.5, 0.25]);
+        assert_eq!(u, vec![1.0, 0.5]);
+    }
+}

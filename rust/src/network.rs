@@ -1,0 +1,227 @@
+//! The compute-node network `N = (V, E)`: a complete undirected graph with
+//! node speeds `s(v)` and link communication strengths `s(v, v')`
+//! (related-machines model, §II of the paper).
+//!
+//! Execution time of task `t` on node `v` is `c(t) / s(v)`; transfer time
+//! of dependency `(t, t')` placed on `(v, v')` is `c(t,t') / s(v,v')`,
+//! and **zero** when `v == v'` (local data movement is free, as in SAGA /
+//! HEFT conventions).
+
+use crate::prng::Xoshiro256pp;
+use crate::stats::TruncatedGaussian;
+
+/// Immutable heterogeneous network.
+#[derive(Clone, Debug)]
+pub struct Network {
+    speed: Vec<f64>,
+    /// flattened `n x n` link strength matrix; diagonal unused.
+    link: Vec<f64>,
+}
+
+impl Network {
+    /// Build from explicit speeds and a symmetric link matrix.
+    pub fn new(speed: Vec<f64>, link: Vec<f64>) -> Self {
+        let n = speed.len();
+        assert_eq!(link.len(), n * n, "link matrix must be n*n");
+        for &s in &speed {
+            assert!(s > 0.0, "node speed must be positive");
+        }
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    let (a, b) = (link[i * n + j], link[j * n + i]);
+                    assert!(a > 0.0, "link strength must be positive");
+                    assert!((a - b).abs() < 1e-12, "link matrix must be symmetric");
+                }
+            }
+        }
+        Self { speed, link }
+    }
+
+    /// Homogeneous network: every node speed 1, every link strength 1.
+    pub fn homogeneous(n: usize) -> Self {
+        Self {
+            speed: vec![1.0; n],
+            link: vec![1.0; n * n],
+        }
+    }
+
+    /// The paper's generator: speeds and link rates from single truncated
+    /// Gaussians (§VI.A).
+    pub fn generate(
+        n: usize,
+        speed_dist: &TruncatedGaussian,
+        link_dist: &TruncatedGaussian,
+        rng: &mut Xoshiro256pp,
+    ) -> Self {
+        let speed: Vec<f64> = (0..n).map(|_| speed_dist.sample(rng)).collect();
+        let mut link = vec![0.0; n * n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let s = link_dist.sample(rng);
+                link[i * n + j] = s;
+                link[j * n + i] = s;
+            }
+        }
+        Self { speed, link }
+    }
+
+    /// Default evaluation network: 6 nodes, speeds ~ TG(1.0, 0.3 | 0.4..2)
+    /// and links ~ TG(1.0, 0.3 | 0.4..2), seeded.
+    pub fn default_eval(rng: &mut Xoshiro256pp) -> Self {
+        let d = TruncatedGaussian::new(1.0, 0.3, 0.4, 2.0);
+        Self::generate(6, &d, &d, rng)
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.speed.len()
+    }
+
+    pub fn speed(&self, v: usize) -> f64 {
+        self.speed[v]
+    }
+
+    pub fn link(&self, u: usize, v: usize) -> f64 {
+        self.link[u * self.n_nodes() + v]
+    }
+
+    /// Execution time `c(t) / s(v)`.
+    #[inline]
+    pub fn exec_time(&self, cost: f64, v: usize) -> f64 {
+        cost / self.speed[v]
+    }
+
+    /// Transfer time `c(t,t') / s(v,v')`; 0 if co-located.
+    #[inline]
+    pub fn comm_time(&self, data: f64, u: usize, v: usize) -> f64 {
+        if u == v {
+            0.0
+        } else {
+            data / self.link[u * self.speed.len() + v]
+        }
+    }
+
+    /// Mean execution time of a `cost` across all nodes — the `w̄(t)` used
+    /// by rank computations.
+    pub fn mean_exec_time(&self, cost: f64) -> f64 {
+        let inv: f64 = self.speed.iter().map(|s| 1.0 / s).sum();
+        cost * inv / self.speed.len() as f64
+    }
+
+    /// Mean transfer time of `data` across all ordered distinct pairs —
+    /// the `c̄(e)` used by rank computations.
+    pub fn mean_comm_time(&self, data: f64) -> f64 {
+        let n = self.n_nodes();
+        if n < 2 {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        for u in 0..n {
+            for v in 0..n {
+                if u != v {
+                    acc += data / self.link(u, v);
+                }
+            }
+        }
+        acc / (n * (n - 1)) as f64
+    }
+
+    /// Mean of 1/s(v) — cached by hot paths to avoid recomputation.
+    pub fn mean_inv_speed(&self) -> f64 {
+        self.speed.iter().map(|s| 1.0 / s).sum::<f64>() / self.speed.len() as f64
+    }
+
+    /// Mean of 1/s(u,v) over ordered distinct pairs.
+    pub fn mean_inv_link(&self) -> f64 {
+        let n = self.n_nodes();
+        if n < 2 {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        for u in 0..n {
+            for v in 0..n {
+                if u != v {
+                    acc += 1.0 / self.link(u, v);
+                }
+            }
+        }
+        acc / (n * (n - 1)) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Network {
+        // 2 nodes: speeds 1 and 2; link strength 4.
+        Network::new(vec![1.0, 2.0], vec![0.0, 4.0, 4.0, 0.0])
+    }
+
+    #[test]
+    fn exec_and_comm_times() {
+        let n = tiny();
+        assert_eq!(n.exec_time(8.0, 0), 8.0);
+        assert_eq!(n.exec_time(8.0, 1), 4.0);
+        assert_eq!(n.comm_time(8.0, 0, 1), 2.0);
+        assert_eq!(n.comm_time(8.0, 1, 0), 2.0);
+        assert_eq!(n.comm_time(8.0, 1, 1), 0.0, "co-located transfer is free");
+    }
+
+    #[test]
+    fn mean_times() {
+        let n = tiny();
+        // mean exec of cost 8: (8/1 + 8/2)/2 = 6
+        assert!((n.mean_exec_time(8.0) - 6.0).abs() < 1e-12);
+        // mean comm of data 8 over both ordered pairs: 2
+        assert!((n.mean_comm_time(8.0) - 2.0).abs() < 1e-12);
+        assert!((n.mean_inv_speed() - 0.75).abs() < 1e-12);
+        assert!((n.mean_inv_link() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn homogeneous_network() {
+        let n = Network::homogeneous(4);
+        assert_eq!(n.n_nodes(), 4);
+        assert_eq!(n.exec_time(3.0, 2), 3.0);
+        assert_eq!(n.comm_time(3.0, 0, 3), 3.0);
+    }
+
+    #[test]
+    fn generate_respects_bounds_and_symmetry() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let d = TruncatedGaussian::new(1.0, 0.5, 0.2, 3.0);
+        let n = Network::generate(8, &d, &d, &mut rng);
+        assert_eq!(n.n_nodes(), 8);
+        for v in 0..8 {
+            assert!((0.2..=3.0).contains(&n.speed(v)));
+        }
+        for u in 0..8 {
+            for v in 0..8 {
+                if u != v {
+                    assert_eq!(n.link(u, v), n.link(v, u));
+                    assert!((0.2..=3.0).contains(&n.link(u, v)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "symmetric")]
+    fn rejects_asymmetric_links() {
+        Network::new(vec![1.0, 1.0], vec![0.0, 2.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn rejects_zero_speed() {
+        Network::new(vec![0.0], vec![0.0]);
+    }
+
+    #[test]
+    fn single_node_network_mean_comm_zero() {
+        let n = Network::new(vec![2.0], vec![0.0]);
+        assert_eq!(n.mean_comm_time(10.0), 0.0);
+        assert_eq!(n.mean_inv_link(), 0.0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Table/CSV emitters for the experiment harness: the figures of the
+//! paper are bar charts; we print them as sorted markdown tables (one row
+//! per scheduler variant) plus machine-readable CSV.
+
+use std::fmt::Write as _;
+
+/// Render a GitHub-markdown table.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut width: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            width[i] = width[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], width: &[usize]| {
+        let mut line = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            let _ = write!(line, " {:<w$} |", c, w = width[i]);
+        }
+        line.push('\n');
+        line
+    };
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &width,
+    ));
+    let mut sep = String::from("|");
+    for w in &width {
+        let _ = write!(sep, "{:-<w$}|", "", w = w + 2);
+    }
+    sep.push('\n');
+    out.push_str(&sep);
+    for row in rows {
+        out.push_str(&fmt_row(row, &width));
+    }
+    out
+}
+
+/// Render CSV (minimal quoting: fields containing comma/quote/newline are
+/// double-quoted).
+pub fn csv(headers: &[&str], rows: &[Vec<String>]) -> String {
+    fn field(s: &str) -> String {
+        if s.contains([',', '"', '\n']) {
+            format!("\"{}\"", s.replace('"', "\"\""))
+        } else {
+            s.to_string()
+        }
+    }
+    let mut out = String::new();
+    out.push_str(
+        &headers
+            .iter()
+            .map(|h| field(h))
+            .collect::<Vec<_>>()
+            .join(","),
+    );
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.iter().map(|c| field(c)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Format a float with sensible figure precision.
+pub fn fmt(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if x.abs() >= 1000.0 {
+        format!("{x:.0}")
+    } else if x.abs() >= 1.0 {
+        format!("{x:.3}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_alignment() {
+        let t = markdown_table(
+            &["name", "value"],
+            &[
+                vec!["a".into(), "1.0".into()],
+                vec!["longer-name".into(), "2".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // all rows same width
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(lines[0].contains("name"));
+        assert!(lines[1].starts_with("|--"));
+    }
+
+    #[test]
+    fn csv_quoting() {
+        let c = csv(
+            &["a", "b"],
+            &[vec!["x,y".into(), "he said \"hi\"".into()]],
+        );
+        assert_eq!(c, "a,b\n\"x,y\",\"he said \"\"hi\"\"\"\n");
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt(0.0), "0");
+        assert_eq!(fmt(1234.4), "1234");
+        assert_eq!(fmt(1.23456), "1.235");
+        assert_eq!(fmt(0.012345), "0.0123");
+    }
+}

@@ -1,0 +1,343 @@
+//! PJRT runtime: loads the AOT-compiled JAX+Pallas artifacts
+//! (`artifacts/*.hlo.txt`, built once by `make artifacts`) and executes
+//! them from the Rust scheduling hot path.  Python never runs here.
+//!
+//! Two artifact families (see `python/compile/aot.py`):
+//! * `ranks_n{N}` — the max-plus fixed point producing HEFT's upward and
+//!   CPOP's downward ranks in one call, at size buckets N ∈ {32..256};
+//! * `eft_p{P}_v{V}` — batched append-at-end EFT of one task across all
+//!   nodes.
+//!
+//! [`XlaRanks`] adapts the rank artifact to the [`RankProvider`] strategy
+//! interface, padding each composite problem into the smallest fitting
+//! bucket (larger problems fall back to the native provider — correctness
+//! never depends on the artifacts).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::json::Value;
+use crate::network::Network;
+use crate::schedulers::common::topo_order;
+use crate::schedulers::{NativeRanks, Problem, RankProvider, Ranks};
+
+/// Tropical "minus infinity" — must match `python/compile/kernels/maxplus.py`.
+pub const NEG: f32 = -1e30;
+
+/// A compiled rank executable for one size bucket.
+struct RankExe {
+    n: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// A compiled EFT executable for one (parents, nodes) bucket.
+struct EftExe {
+    p: usize,
+    v: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT CPU client plus every compiled artifact.
+pub struct XlaRuntime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    ranks: BTreeMap<usize, RankExe>,
+    efts: BTreeMap<usize, EftExe>,
+    allpairs: BTreeMap<usize, RankExe>,
+    dir: PathBuf,
+}
+
+impl XlaRuntime {
+    /// Load and compile every artifact listed in `artifacts/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let manifest =
+            Value::from_str(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+
+        let client = xla::PjRtClient::cpu()?;
+        let mut ranks = BTreeMap::new();
+        for entry in manifest
+            .get("ranks")
+            .and_then(|v| v.as_array())
+            .ok_or_else(|| anyhow!("manifest missing 'ranks'"))?
+        {
+            let n = entry
+                .get("n")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("rank entry missing n"))?;
+            let file = entry
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("rank entry missing file"))?;
+            let exe = compile_hlo(&client, &dir.join(file))?;
+            ranks.insert(n, RankExe { n, exe });
+        }
+
+        let mut efts = BTreeMap::new();
+        for entry in manifest
+            .get("eft")
+            .and_then(|v| v.as_array())
+            .ok_or_else(|| anyhow!("manifest missing 'eft'"))?
+        {
+            let p = entry.get("p").and_then(|v| v.as_usize()).unwrap_or(0);
+            let v = entry.get("v").and_then(|v| v.as_usize()).unwrap_or(0);
+            let file = entry
+                .get("file")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| anyhow!("eft entry missing file"))?;
+            let exe = compile_hlo(&client, &dir.join(file))?;
+            efts.insert(v, EftExe { p, v, exe });
+        }
+
+        let mut allpairs = BTreeMap::new();
+        if let Some(entries) = manifest.get("allpairs").and_then(|v| v.as_array()) {
+            for entry in entries {
+                let n = entry
+                    .get("n")
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow!("allpairs entry missing n"))?;
+                let file = entry
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("allpairs entry missing file"))?;
+                let exe = compile_hlo(&client, &dir.join(file))?;
+                allpairs.insert(n, RankExe { n, exe });
+            }
+        }
+
+        Ok(Self {
+            client,
+            ranks,
+            efts,
+            allpairs,
+            dir,
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn rank_buckets(&self) -> Vec<usize> {
+        self.ranks.keys().copied().collect()
+    }
+
+    /// Smallest rank bucket that fits `n` tasks.
+    pub fn rank_bucket(&self, n: usize) -> Option<usize> {
+        self.ranks.range(n..).next().map(|(k, _)| *k)
+    }
+
+    /// Execute the rank artifact: `m` is the bucket-padded row-major
+    /// max-plus cost matrix, `w` the padded mean execution costs, `depth`
+    /// the fixed-point iteration count.  Returns (up, down), still padded.
+    pub fn ranks_padded(
+        &self,
+        bucket: usize,
+        m: &[f32],
+        w: &[f32],
+        depth: i32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let rexe = self
+            .ranks
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("no rank bucket {bucket}"))?;
+        let n = rexe.n as i64;
+        debug_assert_eq!(m.len(), (n * n) as usize);
+        debug_assert_eq!(w.len(), n as usize);
+        let m_lit = xla::Literal::vec1(m).reshape(&[n, n])?;
+        let w_lit = xla::Literal::vec1(w);
+        let d_lit = xla::Literal::scalar(depth);
+        let result = rexe.exe.execute::<xla::Literal>(&[m_lit, w_lit, d_lit])?[0][0]
+            .to_literal_sync()?;
+        let (up, down) = result.to_tuple2()?;
+        Ok((up.to_vec::<f32>()?, down.to_vec::<f32>()?))
+    }
+
+    /// Smallest all-pairs bucket that fits `n` tasks.
+    pub fn allpairs_bucket(&self, n: usize) -> Option<usize> {
+        self.allpairs.range(n..).next().map(|(k, _)| *k)
+    }
+
+    /// Execute the all-pairs longest-path artifact on a bucket-padded
+    /// edge-weight matrix; returns the padded distance matrix (row-major).
+    pub fn allpairs_padded(&self, bucket: usize, m: &[f32]) -> Result<Vec<f32>> {
+        let exe = self
+            .allpairs
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("no allpairs bucket {bucket}"))?;
+        let n = exe.n as i64;
+        debug_assert_eq!(m.len(), (n * n) as usize);
+        let m_lit = xla::Literal::vec1(m).reshape(&[n, n])?;
+        let result = exe.exe.execute::<xla::Literal>(&[m_lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Smallest EFT node-bucket that fits `v` nodes; returns (p, v).
+    pub fn eft_bucket(&self, v: usize) -> Option<(usize, usize)> {
+        self.efts.range(v..).next().map(|(_, e)| (e.p, e.v))
+    }
+
+    /// Execute the batched-EFT artifact (padded shapes).
+    pub fn batch_eft_padded(
+        &self,
+        v_bucket: usize,
+        parent_finish: &[f32],
+        comm: &[f32],
+        exec_time: &[f32],
+        avail: &[f32],
+        arrival: f32,
+    ) -> Result<Vec<f32>> {
+        let e = self
+            .efts
+            .get(&v_bucket)
+            .ok_or_else(|| anyhow!("no eft bucket v={v_bucket}"))?;
+        let (p, v) = (e.p as i64, e.v as i64);
+        debug_assert_eq!(parent_finish.len(), p as usize);
+        debug_assert_eq!(comm.len(), (p * v) as usize);
+        let f_lit = xla::Literal::vec1(parent_finish);
+        let c_lit = xla::Literal::vec1(comm).reshape(&[p, v])?;
+        let x_lit = xla::Literal::vec1(exec_time);
+        let a_lit = xla::Literal::vec1(avail);
+        let r_lit = xla::Literal::vec1(&[arrival]);
+        let result = e
+            .exe
+            .execute::<xla::Literal>(&[f_lit, c_lit, x_lit, a_lit, r_lit])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+fn compile_hlo(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .with_context(|| format!("parsing HLO text {path:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+/// [`RankProvider`] backed by the compiled artifact, with transparent
+/// fallback to [`NativeRanks`] for problems larger than every bucket.
+///
+/// Holds the runtime behind an `Rc` so schedulers built around it satisfy
+/// the `'static` bound of `Box<dyn Scheduler>` while sharing one compiled
+/// artifact set.
+pub struct XlaRanks {
+    rt: std::rc::Rc<XlaRuntime>,
+    /// statistics: how many calls went through XLA vs native fallback
+    pub xla_calls: usize,
+    pub native_calls: usize,
+}
+
+impl XlaRanks {
+    pub fn new(rt: std::rc::Rc<XlaRuntime>) -> Self {
+        Self {
+            rt,
+            xla_calls: 0,
+            native_calls: 0,
+        }
+    }
+}
+
+impl RankProvider for XlaRanks {
+    fn provider_name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn ranks(&mut self, prob: &Problem, net: &Network) -> Ranks {
+        let n = prob.n_tasks();
+        let Some(bucket) = self.rt.rank_bucket(n) else {
+            self.native_calls += 1;
+            return NativeRanks.ranks(prob, net);
+        };
+
+        // Pad the composite problem into the bucket: padded tasks carry
+        // w = 0 and no edges, so their ranks are exactly 0 (tested on the
+        // Python side in test_model.py) and real ranks are untouched.
+        let inv_speed = net.mean_inv_speed() as f32;
+        let inv_link = net.mean_inv_link() as f32;
+        let mut m = vec![NEG; bucket * bucket];
+        let mut w = vec![0f32; bucket];
+        for (i, t) in prob.tasks.iter().enumerate() {
+            w[i] = t.cost as f32 * inv_speed;
+            for &(c, data) in &t.succs {
+                m[i * bucket + c] = data as f32 * inv_link;
+            }
+        }
+        // fixed-point iteration count = composite height
+        let depth = composite_height(prob) as i32;
+
+        match self.rt.ranks_padded(bucket, &m, &w, depth) {
+            Ok((up, down)) => {
+                self.xla_calls += 1;
+                Ranks {
+                    up: up[..n].iter().map(|&x| x as f64).collect(),
+                    down: down[..n].iter().map(|&x| x as f64).collect(),
+                }
+            }
+            Err(_) => {
+                self.native_calls += 1;
+                NativeRanks.ranks(prob, net)
+            }
+        }
+    }
+}
+
+/// Height (longest path, in vertices) of the pending composite graph.
+pub fn composite_height(prob: &Problem) -> usize {
+    let order = topo_order(prob);
+    let mut h = vec![1usize; prob.n_tasks()];
+    for &t in order.iter().rev() {
+        for &(c, _) in &prob.tasks[t].succs {
+            h[t] = h[t].max(1 + h[c]);
+        }
+    }
+    h.into_iter().max().unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::schedulers::testutil::problem_from_graph;
+
+    // Full PJRT round-trip tests live in rust/tests/integration_runtime.rs
+    // (they require `make artifacts` to have run); here we cover the pure
+    // helpers.
+
+    #[test]
+    fn composite_height_of_chain_and_fan() {
+        let mut b = GraphBuilder::new("chain");
+        let t0 = b.task(1.0);
+        let t1 = b.task(1.0);
+        let t2 = b.task(1.0);
+        b.edge(t0, t1, 0.0).edge(t1, t2, 0.0);
+        let p = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        assert_eq!(composite_height(&p), 3);
+
+        let mut b = GraphBuilder::new("fan");
+        let r = b.task(1.0);
+        for _ in 0..5 {
+            let t = b.task(1.0);
+            b.edge(r, t, 0.0);
+        }
+        let p = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        assert_eq!(composite_height(&p), 2);
+    }
+
+    #[test]
+    fn load_missing_dir_is_a_clean_error() {
+        let err = match XlaRuntime::load("/nonexistent/artifacts") {
+            Err(e) => e,
+            Ok(_) => panic!("load of missing dir must fail"),
+        };
+        assert!(err.to_string().contains("manifest.json"));
+    }
+}

@@ -1,0 +1,291 @@
+//! Extension baselines beyond the paper's five: three more classics from
+//! Braun et al. (2001) / the ETF literature, lifted to DAGs the same way
+//! Min-Min is.  They are not part of `paper_grid()` (the paper's §VII
+//! grid) but are available to the CLI/config system for ablations.
+//!
+//! * **MET** — Minimum Execution Time: each ready task goes to the node
+//!   executing it fastest, ignoring availability (classic pathological
+//!   load-collapse baseline).
+//! * **OLB** — Opportunistic Load Balancing: each ready task goes to the
+//!   node that becomes *available* earliest, ignoring execution time.
+//! * **ETF** — Earliest Time First: among all (ready task, node) pairs,
+//!   schedule the pair with the earliest possible *start* time.
+
+use crate::network::Network;
+use crate::schedule::{Assignment, Slot, Timelines};
+
+use super::common::eft_on_node;
+use super::{Pred, Problem, Scheduler};
+
+/// Shared ready-queue driver: `place` picks the (task, assignment) to
+/// commit from the current ready set.
+fn drive(
+    prob: &Problem,
+    net: &Network,
+    timelines: &mut Timelines,
+    mut place: impl FnMut(
+        &[usize],
+        &Problem,
+        &Network,
+        &Timelines,
+        &[Option<Assignment>],
+    ) -> (usize, Assignment),
+) -> Vec<Assignment> {
+    let n = prob.n_tasks();
+    let mut partial: Vec<Option<Assignment>> = vec![None; n];
+    let mut missing: Vec<usize> = prob
+        .tasks
+        .iter()
+        .map(|t| {
+            t.preds
+                .iter()
+                .filter(|p| matches!(p, Pred::Pending { .. }))
+                .count()
+        })
+        .collect();
+    let mut ready: Vec<usize> = (0..n).filter(|&i| missing[i] == 0).collect();
+    let mut placed = 0;
+    while !ready.is_empty() {
+        let (i, a) = place(&ready, prob, net, timelines, &partial);
+        timelines.insert(
+            a.node,
+            Slot {
+                start: a.start,
+                finish: a.finish,
+                gid: prob.tasks[i].gid,
+            },
+        );
+        partial[i] = Some(a);
+        placed += 1;
+        ready.retain(|&x| x != i);
+        for &(c, _) in &prob.tasks[i].succs {
+            missing[c] -= 1;
+            if missing[c] == 0 {
+                ready.push(c);
+            }
+        }
+    }
+    assert_eq!(placed, n, "baseline failed to place every task");
+    partial.into_iter().map(Option::unwrap).collect()
+}
+
+/// Minimum Execution Time.
+pub struct Met;
+
+impl Scheduler for Met {
+    fn name(&self) -> String {
+        "MET".to_string()
+    }
+
+    fn schedule(
+        &mut self,
+        prob: &Problem,
+        net: &Network,
+        timelines: &mut Timelines,
+    ) -> Vec<Assignment> {
+        drive(prob, net, timelines, |ready, prob, net, tl, partial| {
+            // first ready task (FIFO by gid for determinism), fastest node
+            let &i = ready
+                .iter()
+                .min_by_key(|&&i| prob.tasks[i].gid)
+                .unwrap();
+            let v = (0..net.n_nodes())
+                .min_by(|&a, &b| {
+                    net.exec_time(prob.tasks[i].cost, a)
+                        .partial_cmp(&net.exec_time(prob.tasks[i].cost, b))
+                        .unwrap()
+                        .then(a.cmp(&b))
+                })
+                .unwrap();
+            (i, eft_on_node(prob, i, v, net, tl, partial))
+        })
+    }
+}
+
+/// Opportunistic Load Balancing.
+pub struct Olb;
+
+impl Scheduler for Olb {
+    fn name(&self) -> String {
+        "OLB".to_string()
+    }
+
+    fn schedule(
+        &mut self,
+        prob: &Problem,
+        net: &Network,
+        timelines: &mut Timelines,
+    ) -> Vec<Assignment> {
+        drive(prob, net, timelines, |ready, prob, net, tl, partial| {
+            let &i = ready
+                .iter()
+                .min_by_key(|&&i| prob.tasks[i].gid)
+                .unwrap();
+            // node where the task can *start* soonest (availability only —
+            // execution speed deliberately ignored when choosing)
+            let a = (0..net.n_nodes())
+                .map(|v| eft_on_node(prob, i, v, net, tl, partial))
+                .min_by(|x, y| {
+                    x.start
+                        .partial_cmp(&y.start)
+                        .unwrap()
+                        .then(x.node.cmp(&y.node))
+                })
+                .unwrap();
+            (i, a)
+        })
+    }
+}
+
+/// Earliest Time First: globally earliest start among ready × nodes.
+pub struct Etf;
+
+impl Scheduler for Etf {
+    fn name(&self) -> String {
+        "ETF".to_string()
+    }
+
+    fn schedule(
+        &mut self,
+        prob: &Problem,
+        net: &Network,
+        timelines: &mut Timelines,
+    ) -> Vec<Assignment> {
+        drive(prob, net, timelines, |ready, prob, net, tl, partial| {
+            let mut best: Option<(usize, Assignment)> = None;
+            for &i in ready {
+                for v in 0..net.n_nodes() {
+                    let a = eft_on_node(prob, i, v, net, tl, partial);
+                    let better = match &best {
+                        None => true,
+                        Some((bi, ba)) => {
+                            a.start < ba.start
+                                || (a.start == ba.start
+                                    && prob.tasks[i].gid < prob.tasks[*bi].gid)
+                        }
+                    };
+                    if better {
+                        best = Some((i, a));
+                    }
+                }
+            }
+            best.unwrap()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::schedulers::testutil::problem_from_graph;
+
+    fn two_node_net() -> Network {
+        Network::new(vec![1.0, 4.0], vec![0.0, 1.0, 1.0, 0.0])
+    }
+
+    #[test]
+    fn met_always_picks_fastest_node_even_when_busy() {
+        let mut b = GraphBuilder::new("bag");
+        b.task(8.0);
+        b.task(8.0);
+        b.task(8.0);
+        let prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        let net = two_node_net();
+        let mut tl = Timelines::new(2);
+        let out = Met.schedule(&prob, &net, &mut tl);
+        // all three queue on node 1 (4× faster): 2, 4, 6
+        assert!(out.iter().all(|a| a.node == 1));
+        let mut finishes: Vec<f64> = out.iter().map(|a| a.finish).collect();
+        finishes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(finishes, vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn olb_spreads_regardless_of_speed() {
+        let mut b = GraphBuilder::new("bag");
+        b.task(8.0);
+        b.task(8.0);
+        let prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        let net = two_node_net();
+        let mut tl = Timelines::new(2);
+        let out = Olb.schedule(&prob, &net, &mut tl);
+        // both nodes idle at t=0 → tie broken to node 0 for the first
+        // task, node 1 for the second
+        let nodes: std::collections::HashSet<usize> = out.iter().map(|a| a.node).collect();
+        assert_eq!(nodes.len(), 2, "OLB must load-balance: {out:?}");
+    }
+
+    #[test]
+    fn etf_schedules_earliest_start_pair_first() {
+        let mut b = GraphBuilder::new("bag");
+        b.task(2.0);
+        b.task(50.0);
+        let prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        let net = two_node_net();
+        let mut tl = Timelines::new(2);
+        let out = Etf.schedule(&prob, &net, &mut tl);
+        // both can start at 0; gid tie-break gives task 0 first, node 0
+        assert_eq!(out[0].start, 0.0);
+        assert_eq!(out[1].start, 0.0);
+        assert_ne!(out[0].node, out[1].node);
+    }
+
+    #[test]
+    fn all_baselines_respect_dependencies() {
+        use crate::prng::Xoshiro256pp;
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let mut b = GraphBuilder::new("rand");
+        let n = 20;
+        let ids: Vec<_> = (0..n).map(|_| b.task(rng.uniform(1.0, 9.0))).collect();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if rng.next_f64() < 0.2 {
+                    b.edge(ids[i], ids[j], rng.uniform(0.0, 4.0));
+                }
+            }
+        }
+        let g = b.build().unwrap();
+        let prob = problem_from_graph(&g, 0, 0.0);
+        let net = two_node_net();
+        let scheds: Vec<Box<dyn Scheduler>> =
+            vec![Box::new(Met), Box::new(Olb), Box::new(Etf)];
+        for mut s in scheds {
+            let mut tl = Timelines::new(2);
+            let out = s.schedule(&prob, &net, &mut tl);
+            for (i, t) in prob.tasks.iter().enumerate() {
+                for p in &t.preds {
+                    if let Pred::Pending { idx, data } = *p {
+                        let comm = net.comm_time(data, out[idx].node, out[i].node);
+                        assert!(
+                            out[idx].finish + comm <= out[i].start + 1e-9,
+                            "{} violates dependency",
+                            s.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn met_is_worse_than_etf_under_contention() {
+        // the classic result: MET collapses load onto the fast machine.
+        // With only a 2× speed gap, hogging the fast node (8×4 = 32)
+        // loses to spreading (ETF ≈ 24).
+        let mut b = GraphBuilder::new("bag");
+        for _ in 0..8 {
+            b.task(8.0);
+        }
+        let prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        let net = Network::new(vec![1.0, 2.0], vec![0.0, 1.0, 1.0, 0.0]);
+        let mut tl1 = Timelines::new(2);
+        let met = Met.schedule(&prob, &net, &mut tl1);
+        let mut tl2 = Timelines::new(2);
+        let etf = Etf.schedule(&prob, &net, &mut tl2);
+        let mk = |out: &[Assignment]| {
+            out.iter().map(|a| a.finish).fold(0.0f64, f64::max)
+        };
+        assert!(mk(&met) > mk(&etf));
+    }
+}

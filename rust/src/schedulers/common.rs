@@ -1,0 +1,292 @@
+//! Machinery shared by all list-scheduling heuristics: topological order
+//! over composite problems, connected-component labelling, the
+//! insertion-based EFT evaluation, and a total-order f64 wrapper.
+
+use crate::network::Network;
+use crate::schedule::{Assignment, Timelines};
+
+use super::{Pred, Problem};
+
+/// f64 with a total order (no NaNs expected in schedule arithmetic) for
+/// use in heaps and sorts.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OrdF64(pub f64);
+
+impl Eq for OrdF64 {}
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("NaN in scheduler ordering")
+    }
+}
+
+/// Kahn topological order over the *pending* dependency structure.
+pub fn topo_order(prob: &Problem) -> Vec<usize> {
+    let n = prob.n_tasks();
+    let mut indeg = vec![0usize; n];
+    for t in &prob.tasks {
+        for p in &t.preds {
+            if let Pred::Pending { .. } = p {
+                // counted below per-task
+            }
+        }
+    }
+    for (_i, t) in prob.tasks.iter().enumerate() {
+        let d = t
+            .preds
+            .iter()
+            .filter(|p| matches!(p, Pred::Pending { .. }))
+            .count();
+        indeg[_i] = d;
+    }
+    let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut out = Vec::with_capacity(n);
+    let mut head = 0;
+    while head < queue.len() {
+        let i = queue[head];
+        head += 1;
+        out.push(i);
+        for &(c, _) in &prob.tasks[i].succs {
+            indeg[c] -= 1;
+            if indeg[c] == 0 {
+                queue.push(c);
+            }
+        }
+    }
+    debug_assert_eq!(out.len(), n, "composite problem contains a cycle");
+    out
+}
+
+/// Label weakly-connected components of the pending graph (CPOP computes
+/// one critical path per component).
+pub fn components(prob: &Problem) -> Vec<usize> {
+    let n = prob.n_tasks();
+    let mut label = vec![usize::MAX; n];
+    let mut next = 0;
+    let mut stack = Vec::new();
+    for s in 0..n {
+        if label[s] != usize::MAX {
+            continue;
+        }
+        label[s] = next;
+        stack.push(s);
+        while let Some(i) = stack.pop() {
+            for &(c, _) in &prob.tasks[i].succs {
+                if label[c] == usize::MAX {
+                    label[c] = next;
+                    stack.push(c);
+                }
+            }
+            for p in &prob.tasks[i].preds {
+                if let Pred::Pending { idx, .. } = p {
+                    if label[*idx] == usize::MAX {
+                        label[*idx] = next;
+                        stack.push(*idx);
+                    }
+                }
+            }
+        }
+        next += 1;
+    }
+    label
+}
+
+/// Data-ready time of pending task `i` on node `v`, given the partial
+/// assignment vector (pending parents must already be placed).
+pub fn ready_time(
+    prob: &Problem,
+    i: usize,
+    v: usize,
+    net: &Network,
+    partial: &[Option<Assignment>],
+) -> f64 {
+    let t = &prob.tasks[i];
+    let mut ready = t.ready;
+    for p in &t.preds {
+        let arrival = match *p {
+            Pred::Pending { idx, data } => {
+                let a = partial[idx].expect("pending parent not yet placed");
+                a.finish + net.comm_time(data, a.node, v)
+            }
+            Pred::Fixed { node, finish, data } => finish + net.comm_time(data, node, v),
+        };
+        ready = ready.max(arrival);
+    }
+    ready
+}
+
+/// Insertion-based EFT of pending task `i` on node `v`.
+pub fn eft_on_node(
+    prob: &Problem,
+    i: usize,
+    v: usize,
+    net: &Network,
+    timelines: &Timelines,
+    partial: &[Option<Assignment>],
+) -> Assignment {
+    let ready = ready_time(prob, i, v, net, partial);
+    let dur = net.exec_time(prob.tasks[i].cost, v);
+    let start = timelines.earliest_start(v, ready, dur);
+    Assignment {
+        node: v,
+        start,
+        finish: start + dur,
+    }
+}
+
+/// Minimum-EFT placement of task `i` across all nodes (ties: lowest node
+/// id, for determinism).
+pub fn min_eft(
+    prob: &Problem,
+    i: usize,
+    net: &Network,
+    timelines: &Timelines,
+    partial: &[Option<Assignment>],
+) -> Assignment {
+    let mut best: Option<Assignment> = None;
+    for v in 0..net.n_nodes() {
+        let a = eft_on_node(prob, i, v, net, timelines, partial);
+        if best.map_or(true, |b| a.finish < b.finish) {
+            best = Some(a);
+        }
+    }
+    best.expect("network has no nodes")
+}
+
+/// Mean execution cost `w̄(t)` and mean communication cost `c̄(e)` vectors
+/// used by the rank computations (HEFT Eq. definitions).
+pub fn mean_costs(prob: &Problem, net: &Network) -> (Vec<f64>, Vec<Vec<(usize, f64)>>) {
+    let inv_speed = net.mean_inv_speed();
+    let inv_link = net.mean_inv_link();
+    let w: Vec<f64> = prob.tasks.iter().map(|t| t.cost * inv_speed).collect();
+    let succ_costs: Vec<Vec<(usize, f64)>> = prob
+        .tasks
+        .iter()
+        .map(|t| {
+            t.succs
+                .iter()
+                .map(|&(c, data)| (c, data * inv_link))
+                .collect()
+        })
+        .collect();
+    (w, succ_costs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::schedulers::testutil::problem_from_graph;
+
+    fn diamond_prob() -> Problem {
+        let mut b = GraphBuilder::new("d");
+        let t0 = b.task(10.0);
+        let t1 = b.task(5.0);
+        let t2 = b.task(7.0);
+        let t3 = b.task(3.0);
+        b.edge(t0, t1, 2.0)
+            .edge(t0, t2, 4.0)
+            .edge(t1, t3, 1.0)
+            .edge(t2, t3, 1.5);
+        problem_from_graph(&b.build().unwrap(), 0, 0.0)
+    }
+
+    #[test]
+    fn topo_order_respects_pending_deps() {
+        let p = diamond_prob();
+        let order = topo_order(&p);
+        let pos: Vec<usize> = {
+            let mut v = vec![0; 4];
+            for (i, &t) in order.iter().enumerate() {
+                v[t] = i;
+            }
+            v
+        };
+        assert!(pos[0] < pos[1] && pos[0] < pos[2]);
+        assert!(pos[1] < pos[3] && pos[2] < pos[3]);
+    }
+
+    #[test]
+    fn components_label_connected_parts() {
+        let mut p = diamond_prob();
+        let q = diamond_prob();
+        let off = p.tasks.len();
+        // merge q as a second component with shifted indices
+        for mut t in q.tasks {
+            t.succs = t.succs.iter().map(|&(c, d)| (c + off, d)).collect();
+            t.preds = t
+                .preds
+                .iter()
+                .map(|pr| match *pr {
+                    Pred::Pending { idx, data } => Pred::Pending { idx: idx + off, data },
+                    f => f,
+                })
+                .collect();
+            p.tasks.push(t);
+        }
+        let labels = components(&p);
+        assert_eq!(labels[0], labels[3]);
+        assert_eq!(labels[4], labels[7]);
+        assert_ne!(labels[0], labels[4]);
+    }
+
+    #[test]
+    fn ready_time_includes_fixed_and_pending_parents() {
+        use crate::network::Network;
+        let mut p = diamond_prob();
+        // give t3 an extra fixed parent finishing at 100 on node 0, data 6
+        p.tasks[3].preds.push(Pred::Fixed {
+            node: 0,
+            finish: 100.0,
+            data: 6.0,
+        });
+        let net = Network::new(vec![1.0, 2.0], vec![0.0, 3.0, 3.0, 0.0]);
+        let mut partial = vec![None; 4];
+        partial[0] = Some(Assignment { node: 0, start: 0.0, finish: 10.0 });
+        partial[1] = Some(Assignment { node: 0, start: 10.0, finish: 15.0 });
+        partial[2] = Some(Assignment { node: 1, start: 12.0, finish: 15.5 });
+        // on node 1: pending t1 from node0: 15 + 2/3; t2 local: 15.5;
+        // fixed parent: 100 + 6/3 = 102 → dominates
+        let r = ready_time(&p, 3, 1, &net, &partial);
+        assert!((r - 102.0).abs() < 1e-12);
+        // on node 0 fixed parent is local: 100
+        let r0 = ready_time(&p, 3, 0, &net, &partial);
+        assert!((r0 - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_eft_prefers_faster_node_when_free() {
+        use crate::network::Network;
+        let p = {
+            let mut b = GraphBuilder::new("single");
+            b.task(8.0);
+            problem_from_graph(&b.build().unwrap(), 0, 0.0)
+        };
+        let net = Network::new(vec![1.0, 4.0], vec![0.0, 1.0, 1.0, 0.0]);
+        let tl = Timelines::new(2);
+        let a = min_eft(&p, 0, &net, &tl, &[None]);
+        assert_eq!(a.node, 1);
+        assert_eq!(a.finish, 2.0);
+    }
+
+    #[test]
+    fn mean_costs_match_network_means() {
+        use crate::network::Network;
+        let p = diamond_prob();
+        let net = Network::new(vec![1.0, 2.0], vec![0.0, 4.0, 4.0, 0.0]);
+        let (w, sc) = mean_costs(&p, &net);
+        assert!((w[0] - 10.0 * 0.75).abs() < 1e-12);
+        assert!((sc[0][0].1 - 2.0 * 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ordf64_total_order() {
+        let mut v = vec![OrdF64(3.0), OrdF64(1.0), OrdF64(2.0)];
+        v.sort();
+        assert_eq!(v, vec![OrdF64(1.0), OrdF64(2.0), OrdF64(3.0)]);
+    }
+}

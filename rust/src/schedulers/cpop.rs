@@ -1,0 +1,307 @@
+//! CPOP — Critical Path On a Processor (Topcuoglu et al., 2002).
+//!
+//! Priority is `rank_u + rank_d`; the tasks whose priority equals the
+//! entry task's (the critical path) are all pinned to the single node
+//! minimizing the CP's total execution time; every other task takes its
+//! min-EFT node.  On composite (multi-component) problems each component
+//! gets its own critical path and its own CP node — the natural
+//! generalization used here (documented in DESIGN.md §6).
+
+use std::collections::BinaryHeap;
+
+use crate::network::Network;
+use crate::schedule::{Assignment, Slot, Timelines};
+
+use super::common::{components, eft_on_node, min_eft, OrdF64};
+use super::rank::RankProvider;
+use super::{Pred, Problem, Scheduler};
+
+/// Relative tolerance when testing priority equality along the CP.
+/// Wide enough to absorb the f32 round-trip of the XLA rank provider
+/// (ranks are bit-exact in f64 native mode, ~1e-7 relative in f32).
+const CP_TOL: f64 = 1e-4;
+
+pub struct Cpop<R: RankProvider> {
+    ranks: R,
+}
+
+impl<R: RankProvider> Cpop<R> {
+    pub fn new(ranks: R) -> Self {
+        Self { ranks }
+    }
+
+    /// Mark the critical path of every component; returns (is_cp, cp_node
+    /// per component).
+    ///
+    /// CP-node choice is load-aware across components: classic CPOP is a
+    /// single-DAG algorithm, and naively taking the per-component argmin
+    /// would pin *every* component's CP to the same node on homogeneous
+    /// networks.  We process components by descending CP value and charge
+    /// each chosen node with the CP's execution load (seeded with the
+    /// committed busy time already on the timelines).
+    fn critical_paths(
+        &self,
+        prob: &Problem,
+        net: &Network,
+        timelines: &Timelines,
+        priority: &[f64],
+        comp: &[usize],
+    ) -> (Vec<bool>, Vec<usize>) {
+        let n = prob.n_tasks();
+        let n_comp = comp.iter().copied().max().map_or(0, |m| m + 1);
+        let mut is_cp = vec![false; n];
+
+        for c in 0..n_comp {
+            // entry task of the component with the max priority
+            let mut entry: Option<usize> = None;
+            for i in 0..n {
+                if comp[i] != c {
+                    continue;
+                }
+                let has_pending_pred = prob.tasks[i]
+                    .preds
+                    .iter()
+                    .any(|p| matches!(p, Pred::Pending { .. }));
+                if !has_pending_pred {
+                    if entry.map_or(true, |e| priority[i] > priority[e]) {
+                        entry = Some(i);
+                    }
+                }
+            }
+            let Some(mut cur) = entry else { continue };
+            let cp_val = priority[cur];
+            is_cp[cur] = true;
+            // walk down through successors whose priority equals cp_val
+            loop {
+                let mut next: Option<usize> = None;
+                for &(s, _) in &prob.tasks[cur].succs {
+                    if (priority[s] - cp_val).abs() <= CP_TOL * (1.0 + cp_val.abs()) {
+                        next = Some(s);
+                        break;
+                    }
+                }
+                match next {
+                    Some(s) => {
+                        is_cp[s] = true;
+                        cur = s;
+                    }
+                    None => break,
+                }
+            }
+        }
+
+        // CP node per component: argmin of summed exec time of CP tasks,
+        // load-aware across components (largest CP first).
+        //
+        // §Perf: group CP tasks and cache per-component CP values/costs up
+        // front — the earlier formulation rescanned all n tasks inside the
+        // sort comparator and per (component × node), which dominated
+        // P-CPOP runs on many-component composites.
+        let mut cp_tasks: Vec<Vec<usize>> = vec![Vec::new(); n_comp];
+        let mut cp_value = vec![0.0f64; n_comp];
+        let mut cp_cost = vec![0.0f64; n_comp];
+        for i in 0..n {
+            if is_cp[i] {
+                cp_tasks[comp[i]].push(i);
+                cp_value[comp[i]] = cp_value[comp[i]].max(priority[i]);
+                cp_cost[comp[i]] += prob.tasks[i].cost;
+            }
+        }
+        let mut cp_node = vec![0usize; n_comp];
+        let mut load: Vec<f64> = (0..net.n_nodes()).map(|v| timelines.busy_time(v)).collect();
+        let mut comp_order: Vec<usize> = (0..n_comp).collect();
+        comp_order.sort_by(|&a, &b| {
+            cp_value[b].partial_cmp(&cp_value[a]).unwrap().then(a.cmp(&b))
+        });
+        for &c in &comp_order {
+            let mut best = (f64::INFINITY, 0usize, 0.0f64);
+            for v in 0..net.n_nodes() {
+                // related machines: sum of c(t)/s(v) = cp_cost / s(v)
+                let total = cp_cost[c] / net.speed(v);
+                if load[v] + total < best.0 {
+                    best = (load[v] + total, v, total);
+                }
+            }
+            cp_node[c] = best.1;
+            load[best.1] += best.2;
+        }
+        (is_cp, cp_node)
+    }
+}
+
+impl<R: RankProvider> Scheduler for Cpop<R> {
+    fn name(&self) -> String {
+        if self.ranks.provider_name() == "native" {
+            "CPOP".to_string()
+        } else {
+            format!("CPOP[{}]", self.ranks.provider_name())
+        }
+    }
+
+    fn schedule(
+        &mut self,
+        prob: &Problem,
+        net: &Network,
+        timelines: &mut Timelines,
+    ) -> Vec<Assignment> {
+        let n = prob.n_tasks();
+        let ranks = self.ranks.ranks(prob, net);
+        let priority: Vec<f64> = (0..n).map(|i| ranks.up[i] + ranks.down[i]).collect();
+        let comp = components(prob);
+        let (is_cp, cp_node) = self.critical_paths(prob, net, timelines, &priority, &comp);
+
+        let mut partial: Vec<Option<Assignment>> = vec![None; n];
+        let mut missing: Vec<usize> = prob
+            .tasks
+            .iter()
+            .map(|t| {
+                t.preds
+                    .iter()
+                    .filter(|p| matches!(p, Pred::Pending { .. }))
+                    .count()
+            })
+            .collect();
+        let mut heap: BinaryHeap<(OrdF64, std::cmp::Reverse<crate::graph::Gid>, usize)> =
+            BinaryHeap::new();
+        for i in 0..n {
+            if missing[i] == 0 {
+                heap.push((OrdF64(priority[i]), std::cmp::Reverse(prob.tasks[i].gid), i));
+            }
+        }
+
+        let mut placed = 0;
+        while let Some((_, _, i)) = heap.pop() {
+            let a = if is_cp[i] {
+                eft_on_node(prob, i, cp_node[comp[i]], net, timelines, &partial)
+            } else {
+                min_eft(prob, i, net, timelines, &partial)
+            };
+            timelines.insert(
+                a.node,
+                Slot {
+                    start: a.start,
+                    finish: a.finish,
+                    gid: prob.tasks[i].gid,
+                },
+            );
+            partial[i] = Some(a);
+            placed += 1;
+            for &(c, _) in &prob.tasks[i].succs {
+                missing[c] -= 1;
+                if missing[c] == 0 {
+                    heap.push((OrdF64(priority[c]), std::cmp::Reverse(prob.tasks[c].gid), c));
+                }
+            }
+        }
+        assert_eq!(placed, n, "CPOP failed to place every task");
+        partial.into_iter().map(Option::unwrap).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::schedulers::rank::NativeRanks;
+    use crate::schedulers::testutil::problem_from_graph;
+
+    fn cpop() -> Cpop<NativeRanks> {
+        Cpop::new(NativeRanks)
+    }
+
+    #[test]
+    fn chain_is_fully_critical_and_pinned() {
+        // A pure chain IS the critical path → every task lands on the
+        // node minimizing total chain execution (the fast one), with zero
+        // communication delay.
+        let mut b = GraphBuilder::new("chain");
+        let t0 = b.task(4.0);
+        let t1 = b.task(6.0);
+        let t2 = b.task(2.0);
+        b.edge(t0, t1, 5.0).edge(t1, t2, 5.0);
+        let prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        let net = Network::new(vec![1.0, 2.0], vec![0.0, 1.0, 1.0, 0.0]);
+        let mut tl = Timelines::new(2);
+        let out = cpop().schedule(&prob, &net, &mut tl);
+        assert!(out.iter().all(|a| a.node == 1));
+        assert_eq!(out[2].finish, 6.0); // (4+6+2)/2
+    }
+
+    #[test]
+    fn off_path_tasks_use_min_eft() {
+        // Diamond with one heavy branch: the light branch is off-CP and
+        // should be placed by min-EFT (possibly another node).
+        let mut b = GraphBuilder::new("d");
+        let t0 = b.task(2.0);
+        let heavy = b.task(20.0);
+        let light = b.task(1.0);
+        let t3 = b.task(2.0);
+        b.edge(t0, heavy, 0.0)
+            .edge(t0, light, 0.0)
+            .edge(heavy, t3, 0.0)
+            .edge(light, t3, 0.0);
+        let prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        let net = Network::homogeneous(2);
+        let mut tl = Timelines::new(2);
+        let out = cpop().schedule(&prob, &net, &mut tl);
+        // CP = {t0, heavy, t3} all on one node; light elsewhere (its EFT
+        // there is earlier than queueing behind heavy).
+        assert_eq!(out[0].node, out[1].node);
+        assert_eq!(out[1].node, out[3].node);
+        assert_ne!(out[2].node, out[1].node);
+    }
+
+    #[test]
+    fn per_component_critical_paths() {
+        // Two disconnected chains: each gets its own CP node; with a
+        // 2-node network both chains can run in parallel.
+        let mut b = GraphBuilder::new("two");
+        let a0 = b.task(4.0);
+        let a1 = b.task(4.0);
+        b.edge(a0, a1, 10.0);
+        let b0 = b.task(4.0);
+        let b1 = b.task(4.0);
+        b.edge(b0, b1, 10.0);
+        let prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        let net = Network::homogeneous(2);
+        let mut tl = Timelines::new(2);
+        let out = cpop().schedule(&prob, &net, &mut tl);
+        assert_eq!(out[0].node, out[1].node);
+        assert_eq!(out[2].node, out[3].node);
+        // both chains finish at 8 — truly parallel
+        assert!((out[1].finish - 8.0).abs() < 1e-9);
+        assert!((out[3].finish - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dependencies_hold_on_random_dag() {
+        use crate::prng::Xoshiro256pp;
+        let mut rng = Xoshiro256pp::seed_from_u64(77);
+        let mut b = GraphBuilder::new("rand");
+        let n = 24;
+        let ids: Vec<_> = (0..n).map(|_| b.task(rng.uniform(1.0, 10.0))).collect();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if rng.next_f64() < 0.15 {
+                    b.edge(ids[i], ids[j], rng.uniform(0.0, 5.0));
+                }
+            }
+        }
+        let prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        let net = Network::new(
+            vec![1.0, 2.0, 0.5],
+            vec![0.0, 2.0, 1.0, 2.0, 0.0, 3.0, 1.0, 3.0, 0.0],
+        );
+        let mut tl = Timelines::new(3);
+        let out = cpop().schedule(&prob, &net, &mut tl);
+        for (i, t) in prob.tasks.iter().enumerate() {
+            for p in &t.preds {
+                if let Pred::Pending { idx, data } = *p {
+                    let pa = out[idx];
+                    let comm = net.comm_time(data, pa.node, out[i].node);
+                    assert!(pa.finish + comm <= out[i].start + 1e-9);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! HEFT — Heterogeneous Earliest Finish Time (Topcuoglu et al., 2002).
+//!
+//! Phase 1: priority = upward rank over mean costs (via the pluggable
+//! [`RankProvider`], so the XLA-compiled Pallas fixed point can stand in).
+//! Phase 2: in priority order, place each task on the node minimizing its
+//! **insertion-based** EFT.
+//!
+//! On composite problems the priority queue naturally interleaves the
+//! components; dependency safety does not rely on rank strict monotonicity
+//! — a task only enters the queue once all its pending parents are placed.
+
+use std::collections::BinaryHeap;
+
+use crate::network::Network;
+use crate::schedule::{Assignment, Slot, Timelines};
+
+use super::common::{min_eft, OrdF64};
+use super::rank::RankProvider;
+use super::{Pred, Problem, Scheduler};
+
+pub struct Heft<R: RankProvider> {
+    ranks: R,
+}
+
+impl<R: RankProvider> Heft<R> {
+    pub fn new(ranks: R) -> Self {
+        Self { ranks }
+    }
+}
+
+impl<R: RankProvider> Scheduler for Heft<R> {
+    fn name(&self) -> String {
+        if self.ranks.provider_name() == "native" {
+            "HEFT".to_string()
+        } else {
+            format!("HEFT[{}]", self.ranks.provider_name())
+        }
+    }
+
+    fn schedule(
+        &mut self,
+        prob: &Problem,
+        net: &Network,
+        timelines: &mut Timelines,
+    ) -> Vec<Assignment> {
+        let n = prob.n_tasks();
+        let ranks = self.ranks.ranks(prob, net);
+        let mut partial: Vec<Option<Assignment>> = vec![None; n];
+
+        // pending-parent counters; ready tasks enter the priority heap.
+        let mut missing: Vec<usize> = prob
+            .tasks
+            .iter()
+            .map(|t| {
+                t.preds
+                    .iter()
+                    .filter(|p| matches!(p, Pred::Pending { .. }))
+                    .count()
+            })
+            .collect();
+        // max-heap on (rank, reversed gid) → deterministic tie-break.
+        let mut heap: BinaryHeap<(OrdF64, std::cmp::Reverse<crate::graph::Gid>, usize)> =
+            BinaryHeap::new();
+        for i in 0..n {
+            if missing[i] == 0 {
+                heap.push((OrdF64(ranks.up[i]), std::cmp::Reverse(prob.tasks[i].gid), i));
+            }
+        }
+
+        let mut placed = 0;
+        while let Some((_, _, i)) = heap.pop() {
+            let a = min_eft(prob, i, net, timelines, &partial);
+            timelines.insert(
+                a.node,
+                Slot {
+                    start: a.start,
+                    finish: a.finish,
+                    gid: prob.tasks[i].gid,
+                },
+            );
+            partial[i] = Some(a);
+            placed += 1;
+            for &(c, _) in &prob.tasks[i].succs {
+                missing[c] -= 1;
+                if missing[c] == 0 {
+                    heap.push((OrdF64(ranks.up[c]), std::cmp::Reverse(prob.tasks[c].gid), c));
+                }
+            }
+        }
+        assert_eq!(placed, n, "HEFT failed to place every task");
+        partial.into_iter().map(Option::unwrap).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Gid, GraphBuilder};
+    use crate::schedulers::rank::NativeRanks;
+    use crate::schedulers::testutil::problem_from_graph;
+
+    fn heft() -> Heft<NativeRanks> {
+        Heft::new(NativeRanks)
+    }
+
+    #[test]
+    fn single_task_picks_fastest_node() {
+        let mut b = GraphBuilder::new("one");
+        b.task(12.0);
+        let prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        let net = Network::new(vec![1.0, 3.0], vec![0.0, 1.0, 1.0, 0.0]);
+        let mut tl = Timelines::new(2);
+        let out = heft().schedule(&prob, &net, &mut tl);
+        assert_eq!(out[0].node, 1);
+        assert_eq!(out[0].finish, 4.0);
+    }
+
+    #[test]
+    fn chain_local_placement_avoids_comm() {
+        // Heavy comm: HEFT should co-locate the chain on the fast node.
+        let mut b = GraphBuilder::new("chain");
+        let t0 = b.task(4.0);
+        let t1 = b.task(4.0);
+        b.edge(t0, t1, 100.0);
+        let prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        let net = Network::new(vec![1.0, 2.0], vec![0.0, 1.0, 1.0, 0.0]);
+        let mut tl = Timelines::new(2);
+        let out = heft().schedule(&prob, &net, &mut tl);
+        assert_eq!(out[0].node, out[1].node);
+        assert_eq!(out[1].node, 1);
+        assert_eq!(out[1].finish, 4.0);
+    }
+
+    #[test]
+    fn parallel_tasks_spread_across_nodes() {
+        let mut b = GraphBuilder::new("par");
+        for _ in 0..4 {
+            b.task(10.0);
+        }
+        let prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        let net = Network::homogeneous(4);
+        let mut tl = Timelines::new(4);
+        let out = heft().schedule(&prob, &net, &mut tl);
+        let mut nodes: Vec<usize> = out.iter().map(|a| a.node).collect();
+        nodes.sort_unstable();
+        assert_eq!(nodes, vec![0, 1, 2, 3], "independent equal tasks spread");
+    }
+
+    #[test]
+    fn respects_ready_time_and_fixed_parent() {
+        let mut b = GraphBuilder::new("g");
+        b.task(2.0);
+        let mut prob = problem_from_graph(&b.build().unwrap(), 0, 5.0);
+        prob.tasks[0].preds.push(Pred::Fixed {
+            node: 0,
+            finish: 9.0,
+            data: 0.0,
+        });
+        let net = Network::homogeneous(2);
+        let mut tl = Timelines::new(2);
+        let out = heft().schedule(&prob, &net, &mut tl);
+        assert!(out[0].start >= 9.0);
+    }
+
+    #[test]
+    fn insertion_fills_gap_left_by_committed_slot() {
+        let mut b = GraphBuilder::new("g");
+        b.task(2.0);
+        let prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        let net = Network::homogeneous(1);
+        let mut tl = Timelines::new(1);
+        // committed slots [0,1] and [4,9]: a 2-long task fits at 1.
+        tl.insert(0, Slot { start: 0.0, finish: 1.0, gid: Gid::new(9, 0) });
+        tl.insert(0, Slot { start: 4.0, finish: 9.0, gid: Gid::new(9, 1) });
+        let out = heft().schedule(&prob, &net, &mut tl);
+        assert_eq!(out[0].start, 1.0);
+        assert_eq!(out[0].finish, 3.0);
+    }
+
+    #[test]
+    fn diamond_produces_valid_schedule() {
+        let mut b = GraphBuilder::new("d");
+        let t0 = b.task(10.0);
+        let t1 = b.task(5.0);
+        let t2 = b.task(7.0);
+        let t3 = b.task(3.0);
+        b.edge(t0, t1, 2.0)
+            .edge(t0, t2, 4.0)
+            .edge(t1, t3, 1.0)
+            .edge(t2, t3, 1.5);
+        let g = b.build().unwrap();
+        let prob = problem_from_graph(&g, 0, 0.0);
+        let net = Network::new(
+            vec![1.0, 2.0, 0.5],
+            vec![0.0, 2.0, 1.0, 2.0, 0.0, 3.0, 1.0, 3.0, 0.0],
+        );
+        let mut tl = Timelines::new(3);
+        let out = heft().schedule(&prob, &net, &mut tl);
+        // root first, sink last; all dependency constraints hold
+        for (i, t) in prob.tasks.iter().enumerate() {
+            for p in &t.preds {
+                if let Pred::Pending { idx, data } = *p {
+                    let pa = out[idx];
+                    let comm = net.comm_time(data, pa.node, out[i].node);
+                    assert!(pa.finish + comm <= out[i].start + 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut b = GraphBuilder::new("d");
+        let mut prev = None;
+        for _ in 0..3 {
+            b = GraphBuilder::new("d");
+            let t0 = b.task(3.0);
+            let t1 = b.task(3.0);
+            let t2 = b.task(3.0);
+            b.edge(t0, t2, 1.0).edge(t1, t2, 1.0);
+            let prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+            let net = Network::homogeneous(2);
+            let mut tl = Timelines::new(2);
+            let out = heft().schedule(&prob, &net, &mut tl);
+            let sig: Vec<(usize, u64)> = out
+                .iter()
+                .map(|a| (a.node, a.start.to_bits()))
+                .collect();
+            if let Some(p) = &prev {
+                assert_eq!(*p, sig);
+            }
+            prev = Some(sig);
+        }
+    }
+}

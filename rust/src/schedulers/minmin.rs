@@ -1,0 +1,293 @@
+//! Min-Min (Braun et al., 2001), lifted to DAGs the way SAGA does:
+//! among *ready* tasks (all pending parents placed), compute each task's
+//! best completion time across nodes; schedule the task whose best
+//! completion time is **smallest**; repeat.
+
+use crate::network::Network;
+use crate::schedule::{Assignment, Slot, Timelines};
+
+use super::common::{eft_on_node, min_eft};
+use super::{Pred, Problem, Scheduler};
+
+pub struct MinMin;
+
+impl Scheduler for MinMin {
+    fn name(&self) -> String {
+        "MinMin".to_string()
+    }
+
+    fn schedule(
+        &mut self,
+        prob: &Problem,
+        net: &Network,
+        timelines: &mut Timelines,
+    ) -> Vec<Assignment> {
+        schedule_mct(prob, net, timelines, /*pick_max=*/ false)
+    }
+}
+
+/// Shared Min-Min / Max-Min engine (they differ only in the argmin/argmax
+/// over ready tasks' best completion times).
+///
+/// EFT caching (§Perf): `EFT(t, v)` of a ready task depends only on node
+/// `v`'s timeline (its pending parents are already placed when it becomes
+/// ready, and fixed parents never move), so after each assignment to node
+/// `v*` only the `v*` column of the ready×node EFT matrix can change.
+/// The cache preserves exact semantics — verified by the
+/// `cached_engine_matches_naive` test below — and drops the inner loop
+/// from O(R·V·insertion) to O(R·insertion) per placement.
+pub(super) fn schedule_mct(
+    prob: &Problem,
+    net: &Network,
+    timelines: &mut Timelines,
+    pick_max: bool,
+) -> Vec<Assignment> {
+    let n = prob.n_tasks();
+    let n_nodes = net.n_nodes();
+    let mut partial: Vec<Option<Assignment>> = vec![None; n];
+    let mut missing: Vec<usize> = prob
+        .tasks
+        .iter()
+        .map(|t| {
+            t.preds
+                .iter()
+                .filter(|p| matches!(p, Pred::Pending { .. }))
+                .count()
+        })
+        .collect();
+
+    // flattened ready×node EFT cache + per-task best placement
+    let mut eft: Vec<Assignment> = vec![
+        Assignment { node: 0, start: 0.0, finish: 0.0 };
+        n * n_nodes
+    ];
+    let mut best: Vec<Assignment> = vec![Assignment { node: 0, start: 0.0, finish: 0.0 }; n];
+
+    let fill_row = |i: usize,
+                    timelines: &Timelines,
+                    partial: &[Option<Assignment>],
+                    eft: &mut [Assignment],
+                    best: &mut [Assignment]| {
+        let mut b: Option<Assignment> = None;
+        for v in 0..n_nodes {
+            let a = eft_on_node(prob, i, v, net, timelines, partial);
+            eft[i * n_nodes + v] = a;
+            if b.map_or(true, |x| a.finish < x.finish) {
+                b = Some(a);
+            }
+        }
+        best[i] = b.expect("network has no nodes");
+    };
+
+    let mut ready: Vec<usize> = (0..n).filter(|&i| missing[i] == 0).collect();
+    for &i in &ready {
+        fill_row(i, timelines, &partial, &mut eft, &mut best);
+    }
+
+    let mut placed = 0;
+    while !ready.is_empty() {
+        // pick the ready task with the min (Min-Min) / max (Max-Min)
+        // best completion time; ties broken by Gid for determinism
+        let mut pick = 0usize;
+        for (k, &i) in ready.iter().enumerate() {
+            let (a, c) = (best[i], best[ready[pick]]);
+            let better = if pick_max {
+                a.finish > c.finish
+                    || (a.finish == c.finish && prob.tasks[i].gid < prob.tasks[ready[pick]].gid)
+            } else {
+                a.finish < c.finish
+                    || (a.finish == c.finish && prob.tasks[i].gid < prob.tasks[ready[pick]].gid)
+            };
+            if better {
+                pick = k;
+            }
+        }
+        let i = ready.swap_remove(pick);
+        let a = best[i];
+        timelines.insert(
+            a.node,
+            Slot {
+                start: a.start,
+                finish: a.finish,
+                gid: prob.tasks[i].gid,
+            },
+        );
+        partial[i] = Some(a);
+        placed += 1;
+
+        // newly ready successors get full rows
+        for &(c, _) in &prob.tasks[i].succs {
+            missing[c] -= 1;
+            if missing[c] == 0 {
+                ready.push(c);
+                fill_row(c, timelines, &partial, &mut eft, &mut best);
+            }
+        }
+
+        // only the column of the assigned node is stale for the rest
+        let vstar = a.node;
+        for &j in &ready {
+            let fresh = eft_on_node(prob, j, vstar, net, timelines, &partial);
+            eft[j * n_nodes + vstar] = fresh;
+            if best[j].node == vstar {
+                // previous best may have been displaced: re-min the row
+                let row = &eft[j * n_nodes..(j + 1) * n_nodes];
+                let mut b = row[0];
+                for &x in &row[1..] {
+                    if x.finish < b.finish {
+                        b = x;
+                    }
+                }
+                best[j] = b;
+            } else if fresh.finish < best[j].finish {
+                best[j] = fresh;
+            }
+        }
+    }
+    assert_eq!(placed, n, "MCT scheduler failed to place every task");
+    partial.into_iter().map(Option::unwrap).collect()
+}
+
+/// Reference (uncached) engine kept for differential testing.
+#[cfg(test)]
+pub(super) fn schedule_mct_naive(
+    prob: &Problem,
+    net: &Network,
+    timelines: &mut Timelines,
+    pick_max: bool,
+) -> Vec<Assignment> {
+    let n = prob.n_tasks();
+    let mut partial: Vec<Option<Assignment>> = vec![None; n];
+    let mut missing: Vec<usize> = prob
+        .tasks
+        .iter()
+        .map(|t| {
+            t.preds
+                .iter()
+                .filter(|p| matches!(p, Pred::Pending { .. }))
+                .count()
+        })
+        .collect();
+    let mut ready: Vec<usize> = (0..n).filter(|&i| missing[i] == 0).collect();
+
+    while !ready.is_empty() {
+        let mut chosen: Option<(usize, Assignment)> = None;
+        for &i in &ready {
+            let a = min_eft(prob, i, net, timelines, &partial);
+            let better = match &chosen {
+                None => true,
+                Some((ci, ca)) => {
+                    if pick_max {
+                        a.finish > ca.finish
+                            || (a.finish == ca.finish && prob.tasks[i].gid < prob.tasks[*ci].gid)
+                    } else {
+                        a.finish < ca.finish
+                            || (a.finish == ca.finish && prob.tasks[i].gid < prob.tasks[*ci].gid)
+                    }
+                }
+            };
+            if better {
+                chosen = Some((i, a));
+            }
+        }
+        let (i, a) = chosen.unwrap();
+        timelines.insert(
+            a.node,
+            Slot {
+                start: a.start,
+                finish: a.finish,
+                gid: prob.tasks[i].gid,
+            },
+        );
+        partial[i] = Some(a);
+        ready.retain(|&x| x != i);
+        for &(c, _) in &prob.tasks[i].succs {
+            missing[c] -= 1;
+            if missing[c] == 0 {
+                ready.push(c);
+            }
+        }
+    }
+    partial.into_iter().map(Option::unwrap).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::schedulers::testutil::problem_from_graph;
+
+    #[test]
+    fn minmin_places_short_task_first() {
+        // Two independent tasks, one node: the short one must be first.
+        let mut b = GraphBuilder::new("two");
+        b.task(10.0);
+        b.task(2.0);
+        let prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        let net = Network::homogeneous(1);
+        let mut tl = Timelines::new(1);
+        let out = MinMin.schedule(&prob, &net, &mut tl);
+        assert_eq!(out[1].start, 0.0, "short task scheduled first");
+        assert_eq!(out[0].start, 2.0);
+    }
+
+    #[test]
+    fn respects_dependencies() {
+        let mut b = GraphBuilder::new("chain");
+        let t0 = b.task(5.0);
+        let t1 = b.task(1.0);
+        b.edge(t0, t1, 2.0);
+        let prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        let net = Network::homogeneous(2);
+        let mut tl = Timelines::new(2);
+        let out = MinMin.schedule(&prob, &net, &mut tl);
+        // t1 can only run after t0 (+comm if cross-node)
+        let comm = net.comm_time(2.0, out[0].node, out[1].node);
+        assert!(out[0].finish + comm <= out[1].start + 1e-9);
+    }
+
+    #[test]
+    fn cached_engine_matches_naive() {
+        use crate::prng::Xoshiro256pp;
+        let mut rng = Xoshiro256pp::seed_from_u64(99);
+        for case in 0..30 {
+            let n = rng.int_range(2, 30);
+            let mut b = GraphBuilder::new("rand");
+            let ids: Vec<_> = (0..n).map(|_| b.task(rng.uniform(0.5, 20.0))).collect();
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    if rng.next_f64() < 0.2 {
+                        b.edge(ids[i], ids[j], rng.uniform(0.0, 8.0));
+                    }
+                }
+            }
+            let prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+            let net = Network::new(
+                vec![1.0, 2.0, 0.5],
+                vec![0.0, 2.0, 1.0, 2.0, 0.0, 3.0, 1.0, 3.0, 0.0],
+            );
+            for pick_max in [false, true] {
+                let mut tl1 = Timelines::new(3);
+                let fast = schedule_mct(&prob, &net, &mut tl1, pick_max);
+                let mut tl2 = Timelines::new(3);
+                let slow = schedule_mct_naive(&prob, &net, &mut tl2, pick_max);
+                assert_eq!(fast, slow, "case {case} pick_max={pick_max}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_tasks_placed_on_wide_fanout() {
+        let mut b = GraphBuilder::new("fan");
+        let root = b.task(1.0);
+        for _ in 0..20 {
+            let t = b.task(2.0);
+            b.edge(root, t, 1.0);
+        }
+        let prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        let net = Network::homogeneous(4);
+        let mut tl = Timelines::new(4);
+        let out = MinMin.schedule(&prob, &net, &mut tl);
+        assert_eq!(out.len(), 21);
+    }
+}

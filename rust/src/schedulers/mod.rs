@@ -1,0 +1,184 @@
+//! Static scheduling heuristics over *composite* problems.
+//!
+//! The dynamic coordinator (§IV of the paper) repeatedly builds a
+//! [`Problem`] — the merged multi-component graph of every task that is
+//! currently *Unscheduled* — and hands it to one of the base heuristics
+//! (HEFT, CPOP, MinMin, MaxMin, Random).  Committed placements appear in
+//! two ways: as occupied intervals inside the [`Timelines`] the scheduler
+//! packs around, and as [`Pred::Fixed`] dependency constraints carrying
+//! the committed parent's node and finish time.
+
+use crate::graph::Gid;
+use crate::network::Network;
+use crate::schedule::{Assignment, Timelines};
+
+pub mod baselines;
+pub mod common;
+pub mod cpop;
+pub mod heft;
+pub mod maxmin;
+pub mod minmin;
+pub mod random;
+pub mod rank;
+
+pub use baselines::{Etf, Met, Olb};
+pub use cpop::Cpop;
+pub use heft::Heft;
+pub use maxmin::MaxMin;
+pub use minmin::MinMin;
+pub use random::RandomScheduler;
+pub use rank::{NativeRanks, RankProvider, Ranks};
+
+/// A dependency of a pending task.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Pred {
+    /// Parent is also pending: `idx` into [`Problem::tasks`].
+    Pending { idx: usize, data: f64 },
+    /// Parent is committed (Executing/Completed or frozen Scheduled):
+    /// its placement is a constant of the problem.
+    Fixed { node: usize, finish: f64, data: f64 },
+}
+
+/// One pending task of a composite problem.
+#[derive(Clone, Debug)]
+pub struct PTask {
+    pub gid: Gid,
+    /// compute cost `c(t)`
+    pub cost: f64,
+    /// earliest permissible start (its graph's arrival time `a_i`)
+    pub ready: f64,
+    pub preds: Vec<Pred>,
+    /// pending successors: (idx into tasks, data size)
+    pub succs: Vec<(usize, f64)>,
+}
+
+/// The merged multi-component instance handed to a heuristic.
+#[derive(Clone, Debug, Default)]
+pub struct Problem {
+    pub tasks: Vec<PTask>,
+}
+
+impl Problem {
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+}
+
+/// A base scheduling heuristic.  Must place **every** pending task,
+/// inserting the corresponding slots into `timelines` and returning the
+/// assignment vector parallel to `prob.tasks`.
+pub trait Scheduler {
+    fn name(&self) -> String;
+    fn schedule(
+        &mut self,
+        prob: &Problem,
+        net: &Network,
+        timelines: &mut Timelines,
+    ) -> Vec<Assignment>;
+}
+
+/// Base heuristic selector (the paper's five).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SchedulerKind {
+    Heft,
+    Cpop,
+    MinMin,
+    MaxMin,
+    Random,
+    /// extension baseline (not in the paper's grid): Minimum Execution Time
+    Met,
+    /// extension baseline: Opportunistic Load Balancing
+    Olb,
+    /// extension baseline: Earliest Time First
+    Etf,
+}
+
+impl SchedulerKind {
+    /// The paper's five heuristics (§VI).
+    pub const ALL: [SchedulerKind; 5] = [
+        SchedulerKind::Heft,
+        SchedulerKind::Cpop,
+        SchedulerKind::MinMin,
+        SchedulerKind::MaxMin,
+        SchedulerKind::Random,
+    ];
+
+    /// Paper heuristics + extension baselines (MET/OLB/ETF).
+    pub const EXTENDED: [SchedulerKind; 8] = [
+        SchedulerKind::Heft,
+        SchedulerKind::Cpop,
+        SchedulerKind::MinMin,
+        SchedulerKind::MaxMin,
+        SchedulerKind::Random,
+        SchedulerKind::Met,
+        SchedulerKind::Olb,
+        SchedulerKind::Etf,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::Heft => "HEFT",
+            SchedulerKind::Cpop => "CPOP",
+            SchedulerKind::MinMin => "MinMin",
+            SchedulerKind::MaxMin => "MaxMin",
+            SchedulerKind::Random => "Random",
+            SchedulerKind::Met => "MET",
+            SchedulerKind::Olb => "OLB",
+            SchedulerKind::Etf => "ETF",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "heft" => Some(SchedulerKind::Heft),
+            "cpop" => Some(SchedulerKind::Cpop),
+            "minmin" | "min-min" => Some(SchedulerKind::MinMin),
+            "maxmin" | "max-min" => Some(SchedulerKind::MaxMin),
+            "random" => Some(SchedulerKind::Random),
+            "met" => Some(SchedulerKind::Met),
+            "olb" => Some(SchedulerKind::Olb),
+            "etf" => Some(SchedulerKind::Etf),
+            _ => None,
+        }
+    }
+
+    /// Instantiate with the default (native) rank provider.
+    pub fn make(&self, seed: u64) -> Box<dyn Scheduler> {
+        match self {
+            SchedulerKind::Heft => Box::new(Heft::new(NativeRanks)),
+            SchedulerKind::Cpop => Box::new(Cpop::new(NativeRanks)),
+            SchedulerKind::MinMin => Box::new(MinMin),
+            SchedulerKind::MaxMin => Box::new(MaxMin),
+            SchedulerKind::Random => Box::new(RandomScheduler::new(seed)),
+            SchedulerKind::Met => Box::new(Met),
+            SchedulerKind::Olb => Box::new(Olb),
+            SchedulerKind::Etf => Box::new(Etf),
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::graph::TaskGraph;
+
+    /// Build a single-graph problem (no fixed preds) with arrival time 0.
+    pub fn problem_from_graph(g: &TaskGraph, graph_idx: usize, arrival: f64) -> Problem {
+        let mut tasks: Vec<PTask> = (0..g.n_tasks())
+            .map(|t| PTask {
+                gid: Gid::new(graph_idx, t),
+                cost: g.cost(t),
+                ready: arrival,
+                preds: Vec::new(),
+                succs: Vec::new(),
+            })
+            .collect();
+        for t in 0..g.n_tasks() {
+            for &(c, d) in g.successors(t) {
+                tasks[t].succs.push((c, d));
+                tasks[c].preds.push(Pred::Pending { idx: t, data: d });
+            }
+        }
+        Problem { tasks }
+    }
+}

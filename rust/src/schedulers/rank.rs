@@ -1,0 +1,156 @@
+//! Upward/downward rank computation with a pluggable provider.
+//!
+//! [`NativeRanks`] is the pure-Rust topological DP; the XLA-accelerated
+//! provider (`runtime::XlaRanks`) executes the AOT-compiled Pallas
+//! max-plus fixed point instead, and is parity-tested against this one.
+
+use crate::network::Network;
+
+use super::common::{mean_costs, topo_order};
+use super::Problem;
+
+/// Rank vectors for a composite problem (indexed like `Problem::tasks`).
+#[derive(Clone, Debug, Default)]
+pub struct Ranks {
+    /// HEFT's `rank_u`: critical-path-to-exit length including self.
+    pub up: Vec<f64>,
+    /// CPOP's `rank_d`: critical-path-from-entry length excluding self.
+    pub down: Vec<f64>,
+}
+
+/// Strategy interface: how HEFT/CPOP obtain their priority ranks.
+pub trait RankProvider {
+    fn ranks(&mut self, prob: &Problem, net: &Network) -> Ranks;
+    fn provider_name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Pure-Rust topological dynamic program (the reference provider).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeRanks;
+
+impl RankProvider for NativeRanks {
+    fn ranks(&mut self, prob: &Problem, net: &Network) -> Ranks {
+        let n = prob.n_tasks();
+        let (w, succ_costs) = mean_costs(prob, net);
+        let order = topo_order(prob);
+
+        let mut up = vec![0.0f64; n];
+        for &t in order.iter().rev() {
+            let mut best = 0.0f64;
+            for &(c, cbar) in &succ_costs[t] {
+                best = best.max(cbar + up[c]);
+            }
+            up[t] = w[t] + best;
+        }
+
+        let mut down = vec![0.0f64; n];
+        for &t in order.iter() {
+            for &(c, cbar) in &succ_costs[t] {
+                down[c] = down[c].max(down[t] + w[t] + cbar);
+            }
+        }
+        // Note: Fixed (committed) parents deliberately do not contribute
+        // to ranks — only the remaining-work subgraph is re-prioritized.
+        Ranks { up, down }
+    }
+}
+
+/// Convenience: upward rank only (used by tests and the Random baseline's
+/// sanity checks).
+pub fn upward_rank(prob: &Problem, net: &Network) -> Vec<f64> {
+    NativeRanks.ranks(prob, net).up
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::network::Network;
+    use crate::schedulers::testutil::problem_from_graph;
+    use crate::schedulers::Pred;
+
+    /// The classic HEFT paper example would be overkill; a chain and a
+    /// diamond pin the arithmetic.
+    #[test]
+    fn chain_ranks() {
+        let mut b = GraphBuilder::new("chain");
+        let t0 = b.task(2.0);
+        let t1 = b.task(4.0);
+        let t2 = b.task(6.0);
+        b.edge(t0, t1, 3.0).edge(t1, t2, 9.0);
+        let prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        // 2 nodes speeds 1,2 → mean inv speed 0.75; one link strength 3 →
+        // mean inv link 1/3.
+        let net = Network::new(vec![1.0, 2.0], vec![0.0, 3.0, 3.0, 0.0]);
+        let r = NativeRanks.ranks(&prob, &net);
+        let w = [1.5, 3.0, 4.5];
+        let c = [1.0, 3.0];
+        assert!((r.up[2] - w[2]).abs() < 1e-12);
+        assert!((r.up[1] - (w[1] + c[1] + w[2])).abs() < 1e-12);
+        assert!((r.up[0] - (w[0] + c[0] + w[1] + c[1] + w[2])).abs() < 1e-12);
+        assert!((r.down[0] - 0.0).abs() < 1e-12);
+        assert!((r.down[1] - (w[0] + c[0])).abs() < 1e-12);
+        assert!((r.down[2] - (w[0] + c[0] + w[1] + c[1])).abs() < 1e-12);
+        // up + down constant along a chain (it IS the critical path)
+        let pri: Vec<f64> = (0..3).map(|i| r.up[i] + r.down[i]).collect();
+        assert!((pri[0] - pri[1]).abs() < 1e-12 && (pri[1] - pri[2]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diamond_up_rank_takes_max_branch() {
+        let mut b = GraphBuilder::new("d");
+        let t0 = b.task(1.0);
+        let t1 = b.task(10.0); // heavy branch
+        let t2 = b.task(1.0);
+        let t3 = b.task(1.0);
+        b.edge(t0, t1, 0.0)
+            .edge(t0, t2, 0.0)
+            .edge(t1, t3, 0.0)
+            .edge(t2, t3, 0.0);
+        let prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        let net = Network::homogeneous(2);
+        let r = NativeRanks.ranks(&prob, &net);
+        assert!((r.up[0] - 12.0).abs() < 1e-12); // 1 + 10 + 1 through t1
+        assert!(r.up[1] > r.up[2]);
+        assert!((r.down[3] - 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_component_ranks_are_independent() {
+        let mut b1 = GraphBuilder::new("a");
+        let x = b1.task(5.0);
+        let y = b1.task(5.0);
+        b1.edge(x, y, 0.0);
+        let g1 = b1.build().unwrap();
+        let mut prob = problem_from_graph(&g1, 0, 0.0);
+        // second, disconnected component
+        let mut b2 = GraphBuilder::new("b");
+        b2.task(7.0);
+        let g2 = b2.build().unwrap();
+        let p2 = problem_from_graph(&g2, 1, 0.0);
+        prob.tasks.extend(p2.tasks);
+        let net = Network::homogeneous(1);
+        let r = NativeRanks.ranks(&prob, &net);
+        assert!((r.up[0] - 10.0).abs() < 1e-12);
+        assert!((r.up[2] - 7.0).abs() < 1e-12);
+        assert_eq!(r.down[2], 0.0);
+    }
+
+    #[test]
+    fn fixed_preds_do_not_inflate_ranks() {
+        let mut b = GraphBuilder::new("s");
+        b.task(3.0);
+        let mut prob = problem_from_graph(&b.build().unwrap(), 0, 0.0);
+        prob.tasks[0].preds.push(Pred::Fixed {
+            node: 0,
+            finish: 1000.0,
+            data: 50.0,
+        });
+        let net = Network::homogeneous(2);
+        let r = NativeRanks.ranks(&prob, &net);
+        assert!((r.up[0] - 3.0).abs() < 1e-12);
+        assert_eq!(r.down[0], 0.0);
+    }
+}

@@ -1,0 +1,221 @@
+//! Discrete-event replay of a finished schedule — an *independent*
+//! cross-check of the analytic timeline arithmetic, plus
+//! utilization-over-time traces for reporting.
+//!
+//! The replay walks (start, finish) events in time order, maintaining the
+//! set of running tasks per node and asserting the §II invariants as they
+//! unfold (at most one task per node; dependencies satisfied with
+//! communication delays; starts after arrivals).  Where
+//! [`crate::schedule::validate`] checks constraints pairwise, the replay
+//! checks them *operationally*, so a bug in the shared interval math
+//! cannot hide in both.
+
+use crate::graph::{Gid, TaskGraph};
+use crate::network::Network;
+use crate::schedule::{Schedule, EPS};
+
+/// One replay event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Ev {
+    Start(Gid),
+    Finish(Gid),
+}
+
+/// Replay outcome.
+#[derive(Clone, Debug, Default)]
+pub struct Replay {
+    /// errors discovered during the replay (empty = consistent)
+    pub errors: Vec<String>,
+    /// (time, #busy nodes) step trace, one point per event
+    pub busy_trace: Vec<(f64, usize)>,
+    /// integral of busy-node-fraction over the event span
+    pub avg_busy_fraction: f64,
+}
+
+/// Replay `schedule` against the problem it solves.
+pub fn replay(schedule: &Schedule, problem: &[(f64, TaskGraph)], network: &Network) -> Replay {
+    let mut out = Replay::default();
+    let n_nodes = network.n_nodes();
+
+    // gather events; finishes sort before starts at equal times so a node
+    // can hand over at an instant.
+    let mut events: Vec<(f64, u8, Ev)> = Vec::new();
+    for (gid, a) in schedule.iter() {
+        events.push((a.start, 1, Ev::Start(*gid)));
+        events.push((a.finish, 0, Ev::Finish(*gid)));
+    }
+    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+
+    let mut running: Vec<Option<Gid>> = vec![None; n_nodes];
+    let mut finished: std::collections::HashMap<Gid, (usize, f64)> =
+        std::collections::HashMap::new();
+
+    let span_start = events.first().map(|e| e.0).unwrap_or(0.0);
+    let span_end = events.last().map(|e| e.0).unwrap_or(0.0);
+    let mut busy_integral = 0.0;
+    let mut last_t = span_start;
+    let mut busy = 0usize;
+
+    for (t, _, ev) in events {
+        busy_integral += busy as f64 * (t - last_t);
+        last_t = t;
+        match ev {
+            Ev::Start(gid) => {
+                let a = schedule.get(gid).unwrap();
+                // node must be free
+                if let Some(prev) = running[a.node] {
+                    out.errors.push(format!(
+                        "node {} already running {prev} when {gid} starts at {t}",
+                        a.node
+                    ));
+                }
+                running[a.node] = Some(gid);
+                busy += 1;
+                // arrival bound
+                let (arrival, g) = &problem[gid.graph as usize];
+                if t + EPS < *arrival {
+                    out.errors
+                        .push(format!("{gid} starts {t} before arrival {arrival}"));
+                }
+                // every predecessor must have finished early enough for
+                // its data to be here
+                for &(p, data) in g.predecessors(gid.task as usize) {
+                    let pgid = Gid::new(gid.graph as usize, p);
+                    match finished.get(&pgid) {
+                        None => out
+                            .errors
+                            .push(format!("{gid} starts before parent {pgid} finished")),
+                        Some(&(pnode, pfin)) => {
+                            let comm = network.comm_time(data, pnode, a.node);
+                            if pfin + comm > t + EPS * (1.0 + comm) {
+                                out.errors.push(format!(
+                                    "{gid} starts at {t} < parent {pgid} finish {pfin} + comm {comm}"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ev::Finish(gid) => {
+                let a = schedule.get(gid).unwrap();
+                if running[a.node] != Some(gid) {
+                    out.errors.push(format!(
+                        "{gid} finishes on node {} it wasn't running on",
+                        a.node
+                    ));
+                } else {
+                    running[a.node] = None;
+                    busy -= 1;
+                }
+                finished.insert(gid, (a.node, a.finish));
+            }
+        }
+        out.busy_trace.push((t, busy));
+    }
+
+    let span = span_end - span_start;
+    out.avg_busy_fraction = if span > 0.0 {
+        busy_integral / (span * n_nodes as f64)
+    } else {
+        0.0
+    };
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Coordinator, Policy};
+    use crate::graph::GraphBuilder;
+    use crate::schedule::Assignment;
+    use crate::schedulers::SchedulerKind;
+    use crate::workloads::Dataset;
+
+    #[test]
+    fn replay_accepts_real_coordinator_output() {
+        let prob = Dataset::Synthetic.instance(12, 42);
+        for policy in [Policy::Preemptive, Policy::NonPreemptive, Policy::LastK(3)] {
+            let mut c = Coordinator::new(policy, SchedulerKind::Heft.make(0));
+            let res = c.run(&prob);
+            let r = replay(&res.schedule, &prob.graphs, &prob.network);
+            assert!(
+                r.errors.is_empty(),
+                "{policy:?}: {:?}",
+                &r.errors[..3.min(r.errors.len())]
+            );
+            assert!(r.avg_busy_fraction > 0.0 && r.avg_busy_fraction <= 1.0);
+        }
+    }
+
+    #[test]
+    fn replay_catches_dependency_violation() {
+        let mut b = GraphBuilder::new("chain");
+        let t0 = b.task(2.0);
+        let t1 = b.task(2.0);
+        b.edge(t0, t1, 4.0);
+        let g = b.build().unwrap();
+        let net = Network::new(vec![1.0, 1.0], vec![0.0, 2.0, 2.0, 0.0]);
+        let mut s = Schedule::new(2);
+        s.assign(Gid::new(0, 0), Assignment { node: 0, start: 0.0, finish: 2.0 });
+        // comm time = 4/2 = 2, so earliest legal start on node 1 is 4.0
+        s.assign(Gid::new(0, 1), Assignment { node: 1, start: 3.0, finish: 5.0 });
+        let r = replay(&s, &[(0.0, g)], &net);
+        assert!(r.errors.iter().any(|e| e.contains("comm")), "{:?}", r.errors);
+    }
+
+    #[test]
+    fn replay_catches_missing_parent() {
+        let mut b = GraphBuilder::new("chain");
+        let t0 = b.task(2.0);
+        let t1 = b.task(2.0);
+        b.edge(t0, t1, 0.0);
+        let g = b.build().unwrap();
+        let net = Network::homogeneous(2);
+        let mut s = Schedule::new(2);
+        // only the child is scheduled
+        s.assign(Gid::new(0, 1), Assignment { node: 1, start: 3.0, finish: 5.0 });
+        let r = replay(&s, &[(0.0, g)], &net);
+        assert!(r.errors.iter().any(|e| e.contains("parent")));
+    }
+
+    #[test]
+    fn replay_catches_start_before_arrival() {
+        let mut b = GraphBuilder::new("one");
+        b.task(1.0);
+        let g = b.build().unwrap();
+        let net = Network::homogeneous(1);
+        let mut s = Schedule::new(1);
+        s.assign(Gid::new(0, 0), Assignment { node: 0, start: 0.0, finish: 1.0 });
+        let r = replay(&s, &[(5.0, g)], &net);
+        assert!(r.errors.iter().any(|e| e.contains("arrival")));
+    }
+
+    #[test]
+    fn same_instant_handover_is_legal() {
+        let mut b = GraphBuilder::new("two");
+        b.task(2.0);
+        b.task(2.0);
+        let g = b.build().unwrap();
+        let net = Network::homogeneous(1);
+        let mut s = Schedule::new(1);
+        s.assign(Gid::new(0, 0), Assignment { node: 0, start: 0.0, finish: 2.0 });
+        s.assign(Gid::new(0, 1), Assignment { node: 0, start: 2.0, finish: 4.0 });
+        let r = replay(&s, &[(0.0, g)], &net);
+        assert!(r.errors.is_empty(), "{:?}", r.errors);
+        // single node busy from 0 to 4 → fraction 1
+        assert!((r.avg_busy_fraction - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn busy_fraction_matches_hand_example() {
+        let mut b = GraphBuilder::new("one");
+        b.task(1.0);
+        let g = b.build().unwrap();
+        let net = Network::homogeneous(2);
+        let mut s = Schedule::new(2);
+        s.assign(Gid::new(0, 0), Assignment { node: 0, start: 0.0, finish: 1.0 });
+        let r = replay(&s, &[(0.0, g)], &net);
+        // one of two nodes busy over the whole event span → 0.5
+        assert!((r.avg_busy_fraction - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,228 @@
+//! Statistical distributions and summaries used by the workload and
+//! network generators (§VI of the paper) and the experiment harness.
+//!
+//! The paper samples task/edge weights from a **5-component truncated
+//! Gaussian mixture** and node speeds / link rates from **single truncated
+//! Gaussians**; both are implemented here on top of [`crate::prng`].
+
+use crate::prng::Xoshiro256pp;
+
+/// Gaussian truncated to `[lo, hi]`, sampled by rejection with a
+/// clamp fallback after a bounded number of attempts (keeps worst-case
+/// draws O(1) even for pathological bounds).
+#[derive(Clone, Debug)]
+pub struct TruncatedGaussian {
+    pub mean: f64,
+    pub std: f64,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl TruncatedGaussian {
+    pub fn new(mean: f64, std: f64, lo: f64, hi: f64) -> Self {
+        assert!(lo < hi, "empty truncation interval [{lo}, {hi}]");
+        assert!(std >= 0.0);
+        Self { mean, std, lo, hi }
+    }
+
+    pub fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
+        if self.std == 0.0 {
+            return self.mean.clamp(self.lo, self.hi);
+        }
+        for _ in 0..64 {
+            let x = self.mean + self.std * rng.normal();
+            if x >= self.lo && x <= self.hi {
+                return x;
+            }
+        }
+        // Pathological truncation (mass far outside [lo, hi]): fall back
+        // to a uniform draw inside the interval rather than spinning.
+        rng.uniform(self.lo, self.hi)
+    }
+}
+
+/// Mixture of truncated Gaussians with arbitrary component weights.
+#[derive(Clone, Debug)]
+pub struct GaussianMixture {
+    pub weights: Vec<f64>,
+    pub components: Vec<TruncatedGaussian>,
+}
+
+impl GaussianMixture {
+    pub fn new(weights: Vec<f64>, components: Vec<TruncatedGaussian>) -> Self {
+        assert_eq!(weights.len(), components.len());
+        assert!(!weights.is_empty());
+        Self { weights, components }
+    }
+
+    /// The paper's workload prior: 5 components spread over `[lo, hi]`,
+    /// equal weights, per-component std = span / 10.
+    pub fn five_component(lo: f64, hi: f64) -> Self {
+        let span = hi - lo;
+        let comps = (0..5)
+            .map(|i| {
+                let mean = lo + span * (0.1 + 0.2 * i as f64);
+                TruncatedGaussian::new(mean, span / 10.0, lo, hi)
+            })
+            .collect();
+        Self::new(vec![1.0; 5], comps)
+    }
+
+    pub fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
+        let k = rng.weighted_index(&self.weights);
+        self.components[k].sample(rng)
+    }
+}
+
+/// Poisson arrival process: returns `n` sorted arrival times starting at 0
+/// with exponential inter-arrival times of the given `rate`.
+pub fn poisson_arrivals(rng: &mut Xoshiro256pp, n: usize, rate: f64) -> Vec<f64> {
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        if i > 0 {
+            t += rng.exponential(rate);
+        }
+        out.push(t);
+    }
+    out
+}
+
+// ------------------------------------------------------------- summaries
+
+/// Arithmetic mean (0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation (0 for n < 2).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Median (0 for empty input).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// min/max over a slice (NaN-free inputs assumed).
+pub fn min_max(xs: &[f64]) -> (f64, f64) {
+    xs.iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &x| {
+            (lo.min(x), hi.max(x))
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Xoshiro256pp {
+        Xoshiro256pp::seed_from_u64(42)
+    }
+
+    #[test]
+    fn truncated_gaussian_respects_bounds() {
+        let d = TruncatedGaussian::new(5.0, 3.0, 1.0, 8.0);
+        let mut r = rng();
+        for _ in 0..10_000 {
+            let x = d.sample(&mut r);
+            assert!((1.0..=8.0).contains(&x), "{x}");
+        }
+    }
+
+    #[test]
+    fn truncated_gaussian_mean_close_when_untruncated() {
+        let d = TruncatedGaussian::new(10.0, 1.0, 0.0, 20.0);
+        let mut r = rng();
+        let xs: Vec<f64> = (0..50_000).map(|_| d.sample(&mut r)).collect();
+        assert!((mean(&xs) - 10.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn truncated_gaussian_pathological_bounds_terminate() {
+        // Mean 12 sigma away from the window: rejection will fail; the
+        // clamp fallback must still return something inside.
+        let d = TruncatedGaussian::new(100.0, 1.0, 0.0, 1.0);
+        let mut r = rng();
+        for _ in 0..100 {
+            let x = d.sample(&mut r);
+            assert!((0.0..=1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn zero_std_is_clamped_mean() {
+        let d = TruncatedGaussian::new(50.0, 0.0, 0.0, 10.0);
+        assert_eq!(d.sample(&mut rng()), 10.0);
+    }
+
+    #[test]
+    fn mixture_five_component_covers_interval() {
+        let m = GaussianMixture::five_component(0.0, 100.0);
+        let mut r = rng();
+        let xs: Vec<f64> = (0..20_000).map(|_| m.sample(&mut r)).collect();
+        let (lo, hi) = min_max(&xs);
+        assert!(lo >= 0.0 && hi <= 100.0);
+        // all five modes visited: bucket into 5 and check occupancy
+        let mut buckets = [0usize; 5];
+        for x in &xs {
+            buckets[(x / 20.0).min(4.0) as usize] += 1;
+        }
+        for b in buckets {
+            assert!(b > 1000, "bucket underpopulated: {buckets:?}");
+        }
+    }
+
+    #[test]
+    fn mixture_weights_respected() {
+        let comps = vec![
+            TruncatedGaussian::new(0.0, 0.01, -1.0, 1.0),
+            TruncatedGaussian::new(10.0, 0.01, 9.0, 11.0),
+        ];
+        let m = GaussianMixture::new(vec![1.0, 4.0], comps);
+        let mut r = rng();
+        let far = (0..50_000)
+            .filter(|_| m.sample(&mut r) > 5.0)
+            .count() as f64;
+        assert!((far / 50_000.0 - 0.8).abs() < 0.02);
+    }
+
+    #[test]
+    fn poisson_arrivals_sorted_and_mean_gap() {
+        let mut r = rng();
+        let arr = poisson_arrivals(&mut r, 10_000, 0.5);
+        assert_eq!(arr[0], 0.0);
+        assert!(arr.windows(2).all(|w| w[0] <= w[1]));
+        let gaps: Vec<f64> = arr.windows(2).map(|w| w[1] - w[0]).collect();
+        assert!((mean(&gaps) - 2.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn summary_stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert!((std_dev(&xs) - 1.2909944487358056).abs() < 1e-12);
+        assert_eq!(min_max(&xs), (1.0, 4.0));
+    }
+}

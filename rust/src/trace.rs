@@ -1,0 +1,185 @@
+//! Run traces: lossless JSON export/import of a dynamic run — the
+//! problem's arrival trace, every event's preemption record, and the
+//! final schedule.  Enables offline analysis, regression pinning
+//! ("golden traces"), and sharing runs between machines.
+
+use crate::coordinator::{DynamicProblem, DynamicResult, EventLog};
+use crate::graph::Gid;
+use crate::json::{self, Value};
+use crate::schedule::{Assignment, Schedule};
+
+/// Serialize a finished run (problem shape + events + schedule).
+pub fn to_json(problem: &DynamicProblem, result: &DynamicResult) -> Value {
+    let graphs = problem
+        .graphs
+        .iter()
+        .map(|(arrival, g)| {
+            json::obj(vec![
+                ("name", json::s(g.name())),
+                ("arrival", json::num(*arrival)),
+                ("n_tasks", json::num(g.n_tasks() as f64)),
+            ])
+        })
+        .collect();
+    let events = result
+        .events
+        .iter()
+        .map(|e| {
+            json::obj(vec![
+                ("graph", json::num(e.graph_idx as f64)),
+                ("time", json::num(e.time)),
+                ("pending", json::num(e.n_pending as f64)),
+                ("reverted", json::num(e.n_reverted as f64)),
+                ("runtime_s", json::num(e.sched_runtime_s)),
+            ])
+        })
+        .collect();
+    let mut slots: Vec<(Gid, Assignment)> =
+        result.schedule.iter().map(|(g, a)| (*g, *a)).collect();
+    slots.sort_by_key(|(g, _)| *g);
+    let assignments = slots
+        .into_iter()
+        .map(|(gid, a)| {
+            json::obj(vec![
+                ("graph", json::num(gid.graph as f64)),
+                ("task", json::num(gid.task as f64)),
+                ("node", json::num(a.node as f64)),
+                ("start", json::num(a.start)),
+                ("finish", json::num(a.finish)),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("format", json::s("dts-trace-v1")),
+        ("n_nodes", json::num(problem.network.n_nodes() as f64)),
+        ("graphs", json::arr(graphs)),
+        ("events", json::arr(events)),
+        ("assignments", json::arr(assignments)),
+        ("sched_runtime_s", json::num(result.sched_runtime_s)),
+    ])
+}
+
+/// A parsed trace (schedule + events; graph summaries only — weights are
+/// regenerable from the seed, so traces stay compact).
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub n_nodes: usize,
+    pub schedule: Schedule,
+    pub events: Vec<EventLog>,
+    pub sched_runtime_s: f64,
+    pub graph_names: Vec<String>,
+}
+
+/// Parse a trace back from JSON.
+pub fn from_json(v: &Value) -> Result<Trace, String> {
+    if v.get("format").and_then(|f| f.as_str()) != Some("dts-trace-v1") {
+        return Err("not a dts-trace-v1 document".into());
+    }
+    let n_nodes = v
+        .get("n_nodes")
+        .and_then(|x| x.as_usize())
+        .ok_or("missing n_nodes")?;
+    let mut schedule = Schedule::new(n_nodes);
+    for a in v
+        .get("assignments")
+        .and_then(|x| x.as_array())
+        .ok_or("missing assignments")?
+    {
+        let get = |k: &str| a.get(k).and_then(|x| x.as_f64()).ok_or(format!("bad {k}"));
+        schedule.assign(
+            Gid::new(get("graph")? as usize, get("task")? as usize),
+            Assignment {
+                node: get("node")? as usize,
+                start: get("start")?,
+                finish: get("finish")?,
+            },
+        );
+    }
+    let mut events = Vec::new();
+    for e in v
+        .get("events")
+        .and_then(|x| x.as_array())
+        .ok_or("missing events")?
+    {
+        let get = |k: &str| e.get(k).and_then(|x| x.as_f64()).ok_or(format!("bad {k}"));
+        events.push(EventLog {
+            graph_idx: get("graph")? as usize,
+            time: get("time")?,
+            n_pending: get("pending")? as usize,
+            n_reverted: get("reverted")? as usize,
+            sched_runtime_s: get("runtime_s")?,
+        });
+    }
+    let graph_names = v
+        .get("graphs")
+        .and_then(|x| x.as_array())
+        .ok_or("missing graphs")?
+        .iter()
+        .map(|g| {
+            g.get("name")
+                .and_then(|n| n.as_str())
+                .unwrap_or("?")
+                .to_string()
+        })
+        .collect();
+    Ok(Trace {
+        n_nodes,
+        schedule,
+        events,
+        sched_runtime_s: v
+            .get("sched_runtime_s")
+            .and_then(|x| x.as_f64())
+            .unwrap_or(0.0),
+        graph_names,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Coordinator, Policy};
+    use crate::schedulers::SchedulerKind;
+    use crate::workloads::Dataset;
+
+    fn run() -> (DynamicProblem, DynamicResult) {
+        let prob = Dataset::RiotBench.instance(5, 9);
+        let mut c = Coordinator::new(Policy::LastK(2), SchedulerKind::Cpop.make(0));
+        let res = c.run(&prob);
+        (prob, res)
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let (prob, res) = run();
+        let v = to_json(&prob, &res);
+        // through text and back
+        let text = v.to_string();
+        let parsed = Value::from_str(&text).unwrap();
+        let trace = from_json(&parsed).unwrap();
+
+        assert_eq!(trace.n_nodes, prob.network.n_nodes());
+        assert_eq!(trace.events.len(), res.events.len());
+        assert_eq!(trace.schedule.n_assigned(), res.schedule.n_assigned());
+        assert_eq!(trace.graph_names.len(), prob.graphs.len());
+        for (gid, a) in res.schedule.iter() {
+            assert_eq!(trace.schedule.get(*gid), Some(a));
+        }
+        assert!((trace.sched_runtime_s - res.sched_runtime_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let v = Value::from_str(r#"{"format": "something-else"}"#).unwrap();
+        assert!(from_json(&v).is_err());
+    }
+
+    #[test]
+    fn trace_metrics_match_original() {
+        use crate::metrics;
+        let (prob, res) = run();
+        let trace = from_json(&to_json(&prob, &res)).unwrap();
+        let a = metrics::total_makespan(&res.schedule, &prob.graphs);
+        let b = metrics::total_makespan(&trace.schedule, &prob.graphs);
+        assert_eq!(a, b);
+    }
+}

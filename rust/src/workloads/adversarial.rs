@@ -1,0 +1,74 @@
+//! §VI.D adversarial instances: out-trees whose root carries a huge
+//! computation followed by many shallow, lightweight successors.
+//!
+//! The root must finish before any successor can run, so a non-preemptive
+//! scheduler that has packed small tasks from earlier graphs around it
+//! cannot clear machines for the successors — the Fig. 1 blocking
+//! pathology.  The caller pins CCR to 0.2 (communication negligible)
+//! via [`super::set_ccr`], as the paper does.
+
+use crate::graph::{GraphBuilder, TaskGraph};
+use crate::prng::Xoshiro256pp;
+use crate::stats::TruncatedGaussian;
+
+/// Ratio between the root's cost and the mean successor cost.
+pub const ROOT_FACTOR: f64 = 30.0;
+
+/// One adversarial out-tree: heavy root, `width` light leaves.
+pub fn instance(idx: usize, rng: &mut Xoshiro256pp) -> TaskGraph {
+    let width = rng.int_range(8, 16);
+    let leaf_dist = TruncatedGaussian::new(1.0, 0.3, 0.3, 2.0);
+    let mut b = GraphBuilder::new(format!("adversarial_{idx}"));
+    let root_cost = ROOT_FACTOR * 1.0 * rng.uniform(0.8, 1.2);
+    let root = b.task(root_cost);
+    for _ in 0..width {
+        let t = b.task(leaf_dist.sample(rng));
+        // data sizes are placeholders — set_ccr rescales them to CCR 0.2
+        b.edge(root, t, 1.0);
+    }
+    b.build().expect("adversarial instance is a DAG")
+}
+
+/// Generate `n` adversarial instances.
+pub fn generate(n: usize, rng: &mut Xoshiro256pp) -> Vec<TaskGraph> {
+    (0..n).map(|i| instance(i, rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::Network;
+    use crate::workloads::{measure_ccr, set_ccr};
+
+    #[test]
+    fn root_dominates_leaves() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let g = instance(0, &mut rng);
+        let root_cost = g.cost(0);
+        for t in 1..g.n_tasks() {
+            assert!(root_cost > 10.0 * g.cost(t));
+            assert_eq!(g.predecessors(t).len(), 1);
+            assert!(g.is_sink(t));
+        }
+        assert!(g.is_source(0));
+        assert_eq!(g.height(), 2);
+    }
+
+    #[test]
+    fn ccr_pins_to_0_2() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let net = Network::default_eval(&mut rng);
+        let mut g = instance(0, &mut rng);
+        set_ccr(&mut g, &net, 0.2);
+        assert!((measure_ccr(&g, &net) - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn widths_vary_across_instances() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let gs = generate(20, &mut rng);
+        let widths: std::collections::HashSet<usize> =
+            gs.iter().map(|g| g.n_tasks()).collect();
+        assert!(widths.len() > 3);
+    }
+}

@@ -1,0 +1,272 @@
+//! §VI.B RIoTBench IoT streaming pipelines (Shukla, Chaturvedi & Simmhan,
+//! 2017): ETL, Predict (PRED), Statistical summarization (STATS) and
+//! model Training (TRAIN).
+//!
+//! The paper instantiates the original dataflow topologies; we encode
+//! those operator graphs directly (operator list + wiring + a relative
+//! cost class per operator, reflecting the benchmark's published
+//! heterogeneity: parsing/filtering is cheap, ML scoring/training and
+//! I/O-heavy sinks are expensive).  Edge data sizes model the SenML tuple
+//! streams flowing between operators.
+
+use crate::graph::{GraphBuilder, TaskGraph};
+use crate::prng::Xoshiro256pp;
+use crate::stats::TruncatedGaussian;
+
+/// The four pipelines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pipeline {
+    Etl,
+    Pred,
+    Stats,
+    Train,
+}
+
+impl Pipeline {
+    pub const ALL: [Pipeline; 4] = [
+        Pipeline::Etl,
+        Pipeline::Pred,
+        Pipeline::Stats,
+        Pipeline::Train,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pipeline::Etl => "riot_etl",
+            Pipeline::Pred => "riot_pred",
+            Pipeline::Stats => "riot_stats",
+            Pipeline::Train => "riot_train",
+        }
+    }
+}
+
+/// Operator cost classes (relative compute weight of one window of
+/// tuples).  Sampled around the class mean with 25% spread.
+#[derive(Clone, Copy, Debug)]
+enum Class {
+    Light,  // parse, filter, annotate
+    Medium, // interpolate, join, aggregate, window regression
+    Heavy,  // ML train/score, batched I/O sinks
+}
+
+impl Class {
+    fn mean(&self) -> f64 {
+        match self {
+            Class::Light => 4.0,
+            Class::Medium => 12.0,
+            Class::Heavy => 40.0,
+        }
+    }
+}
+
+struct Gen<'a> {
+    b: GraphBuilder,
+    rng: &'a mut Xoshiro256pp,
+}
+
+impl<'a> Gen<'a> {
+    fn new(name: &str, rng: &'a mut Xoshiro256pp) -> Self {
+        Self {
+            b: GraphBuilder::new(name),
+            rng,
+        }
+    }
+
+    fn op(&mut self, class: Class) -> usize {
+        let m = class.mean();
+        let d = TruncatedGaussian::new(m, 0.25 * m, 0.3 * m, 3.0 * m);
+        self.b.task(d.sample(self.rng))
+    }
+
+    /// Tuple-stream edge: data size around 5 with mild spread.
+    fn wire(&mut self, u: usize, v: usize) {
+        let d = TruncatedGaussian::new(5.0, 1.5, 0.5, 12.0);
+        let data = d.sample(self.rng);
+        self.b.edge(u, v, data);
+    }
+
+    fn finish(self) -> TaskGraph {
+        self.b.build().expect("riotbench pipelines are DAGs")
+    }
+}
+
+/// ETL: SenMLParse → RangeFilter → BloomFilter → Interpolate → Join →
+/// Annotate → CsvToSenML → {MQTTPublish, AzureTableInsert}.
+pub fn etl(rng: &mut Xoshiro256pp) -> TaskGraph {
+    let mut g = Gen::new("riot_etl", rng);
+    let parse = g.op(Class::Light);
+    let range = g.op(Class::Light);
+    let bloom = g.op(Class::Light);
+    let interp = g.op(Class::Medium);
+    let join = g.op(Class::Medium);
+    let annotate = g.op(Class::Light);
+    let csv = g.op(Class::Light);
+    let mqtt = g.op(Class::Heavy);
+    let azure = g.op(Class::Heavy);
+    for w in [
+        (parse, range),
+        (range, bloom),
+        (bloom, interp),
+        (interp, join),
+        (join, annotate),
+        (annotate, csv),
+        (csv, mqtt),
+        (csv, azure),
+    ] {
+        g.wire(w.0, w.1);
+    }
+    g.finish()
+}
+
+/// PRED: {SenMLParse, BlobModelRead} → {DecisionTreeClassify,
+/// MultiVarLinearReg} → ErrorEstimate → MQTTPublish.
+pub fn pred(rng: &mut Xoshiro256pp) -> TaskGraph {
+    let mut g = Gen::new("riot_pred", rng);
+    let parse = g.op(Class::Light);
+    let blob = g.op(Class::Heavy); // model fetch
+    let dtree = g.op(Class::Heavy);
+    let mlr = g.op(Class::Heavy);
+    let avg = g.op(Class::Medium); // error estimation / average
+    let mqtt = g.op(Class::Heavy);
+    for w in [
+        (parse, dtree),
+        (parse, mlr),
+        (blob, dtree),
+        (blob, mlr),
+        (dtree, avg),
+        (mlr, avg),
+        (avg, mqtt),
+    ] {
+        g.wire(w.0, w.1);
+    }
+    g.finish()
+}
+
+/// STATS: SenMLParse fans into {Average, KalmanFilter→SlidingWindowReg,
+/// DistinctApproxCount}, all joining at GroupViz.
+pub fn stats(rng: &mut Xoshiro256pp) -> TaskGraph {
+    let mut g = Gen::new("riot_stats", rng);
+    let parse = g.op(Class::Light);
+    let avg = g.op(Class::Medium);
+    let kalman = g.op(Class::Medium);
+    let swlr = g.op(Class::Medium);
+    let count = g.op(Class::Medium);
+    let viz = g.op(Class::Heavy);
+    for w in [
+        (parse, avg),
+        (parse, kalman),
+        (kalman, swlr),
+        (parse, count),
+        (avg, viz),
+        (swlr, viz),
+        (count, viz),
+    ] {
+        g.wire(w.0, w.1);
+    }
+    g.finish()
+}
+
+/// TRAIN: AzureTableRead → {MultiVarLinearRegTrain, DecisionTreeTrain} →
+/// BlobWrite → MQTTPublish, with an Annotate stage feeding the trainers.
+pub fn train(rng: &mut Xoshiro256pp) -> TaskGraph {
+    let mut g = Gen::new("riot_train", rng);
+    let read = g.op(Class::Heavy);
+    let annotate = g.op(Class::Light);
+    let mlr = g.op(Class::Heavy);
+    let dtree = g.op(Class::Heavy);
+    let blob = g.op(Class::Heavy);
+    let mqtt = g.op(Class::Medium);
+    for w in [
+        (read, annotate),
+        (annotate, mlr),
+        (annotate, dtree),
+        (mlr, blob),
+        (dtree, blob),
+        (blob, mqtt),
+    ] {
+        g.wire(w.0, w.1);
+    }
+    g.finish()
+}
+
+/// Generate `n` pipeline instances with equal type probability (§VI.B).
+pub fn generate(n: usize, rng: &mut Xoshiro256pp) -> Vec<TaskGraph> {
+    (0..n)
+        .map(|_| match Pipeline::ALL[rng.below(4)] {
+            Pipeline::Etl => etl(rng),
+            Pipeline::Pred => pred(rng),
+            Pipeline::Stats => stats(rng),
+            Pipeline::Train => train(rng),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Xoshiro256pp {
+        Xoshiro256pp::seed_from_u64(21)
+    }
+
+    #[test]
+    fn etl_topology() {
+        let g = etl(&mut rng());
+        assert_eq!(g.n_tasks(), 9);
+        assert_eq!(g.n_edges(), 8);
+        // single source (parse), two sinks (mqtt, azure)
+        let sources: Vec<_> = (0..9).filter(|&t| g.is_source(t)).collect();
+        let sinks: Vec<_> = (0..9).filter(|&t| g.is_sink(t)).collect();
+        assert_eq!(sources.len(), 1);
+        assert_eq!(sinks.len(), 2);
+        assert_eq!(g.height(), 8);
+    }
+
+    #[test]
+    fn pred_topology() {
+        let g = pred(&mut rng());
+        assert_eq!(g.n_tasks(), 6);
+        // two sources (parse + model read), one sink
+        assert_eq!((0..6).filter(|&t| g.is_source(t)).count(), 2);
+        assert_eq!((0..6).filter(|&t| g.is_sink(t)).count(), 1);
+    }
+
+    #[test]
+    fn stats_topology_has_three_branches() {
+        let g = stats(&mut rng());
+        assert_eq!(g.n_tasks(), 6);
+        assert_eq!(g.successors(0).len(), 3);
+        // viz joins three branches
+        assert_eq!(g.predecessors(5).len(), 3);
+    }
+
+    #[test]
+    fn train_topology() {
+        let g = train(&mut rng());
+        assert_eq!(g.n_tasks(), 6);
+        assert_eq!(g.height(), 5);
+    }
+
+    #[test]
+    fn heavy_ops_cost_more_than_light_on_average() {
+        let mut r = rng();
+        let mut light = 0.0;
+        let mut heavy = 0.0;
+        for _ in 0..200 {
+            let g = pred(&mut r);
+            light += g.cost(0); // parse
+            heavy += g.cost(2); // dtree
+        }
+        assert!(heavy > 3.0 * light, "heavy {heavy} vs light {light}");
+    }
+
+    #[test]
+    fn generate_mixes_all_pipelines() {
+        let gs = generate(100, &mut rng());
+        let mut seen = std::collections::HashSet::new();
+        for g in &gs {
+            seen.insert(g.name().to_string());
+        }
+        assert_eq!(seen.len(), 4, "{seen:?}");
+    }
+}

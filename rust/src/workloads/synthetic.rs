@@ -1,0 +1,264 @@
+//! §VI.A synthetic task graphs: OutTree, InTree, ForkJoin, Chain, with
+//! task/edge weights from the 5-component truncated Gaussian mixture and
+//! structure parameters drawn per instance.
+
+use crate::graph::{GraphBuilder, TaskGraph};
+use crate::prng::Xoshiro256pp;
+use crate::stats::GaussianMixture;
+
+/// The four §VI.A structures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Structure {
+    OutTree,
+    InTree,
+    ForkJoin,
+    Chain,
+}
+
+impl Structure {
+    pub const ALL: [Structure; 4] = [
+        Structure::OutTree,
+        Structure::InTree,
+        Structure::ForkJoin,
+        Structure::Chain,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Structure::OutTree => "out_tree",
+            Structure::InTree => "in_tree",
+            Structure::ForkJoin => "fork_join",
+            Structure::Chain => "chain",
+        }
+    }
+}
+
+/// Weight priors of the paper: 5-component truncated GMM over [1, 100]
+/// for task costs, [1, 50] for edge data.
+pub fn cost_mixture() -> GaussianMixture {
+    GaussianMixture::five_component(1.0, 100.0)
+}
+
+pub fn data_mixture() -> GaussianMixture {
+    GaussianMixture::five_component(1.0, 50.0)
+}
+
+/// Generate `n` graphs evenly split among the four structures
+/// (round-robin so every prefix is balanced too).
+pub fn generate(n: usize, rng: &mut Xoshiro256pp) -> Vec<TaskGraph> {
+    let cost = cost_mixture();
+    let data = data_mixture();
+    (0..n)
+        .map(|i| {
+            let s = Structure::ALL[i % 4];
+            build(s, i, &cost, &data, rng)
+        })
+        .collect()
+}
+
+/// Build one graph of the given structure with randomized shape params.
+pub fn build(
+    s: Structure,
+    idx: usize,
+    cost: &GaussianMixture,
+    data: &GaussianMixture,
+    rng: &mut Xoshiro256pp,
+) -> TaskGraph {
+    match s {
+        Structure::OutTree => {
+            let depth = rng.int_range(2, 3);
+            let branch = rng.int_range(2, 3);
+            out_tree(&format!("out_tree_{idx}"), depth, branch, cost, data, rng)
+        }
+        Structure::InTree => {
+            let depth = rng.int_range(2, 3);
+            let branch = rng.int_range(2, 3);
+            in_tree(&format!("in_tree_{idx}"), depth, branch, cost, data, rng)
+        }
+        Structure::ForkJoin => {
+            let stages = rng.int_range(1, 3);
+            let width = rng.int_range(2, 4);
+            fork_join(&format!("fork_join_{idx}"), stages, width, cost, data, rng)
+        }
+        Structure::Chain => {
+            let len = rng.int_range(4, 10);
+            chain(&format!("chain_{idx}"), len, cost, data, rng)
+        }
+    }
+}
+
+/// Complete `branch`-ary out-tree of the given depth (depth 0 = root only).
+pub fn out_tree(
+    name: &str,
+    depth: usize,
+    branch: usize,
+    cost: &GaussianMixture,
+    data: &GaussianMixture,
+    rng: &mut Xoshiro256pp,
+) -> TaskGraph {
+    let mut b = GraphBuilder::new(name);
+    let root = b.task(cost.sample(rng));
+    let mut frontier = vec![root];
+    for _ in 0..depth {
+        let mut next = Vec::new();
+        for &p in &frontier {
+            for _ in 0..branch {
+                let t = b.task(cost.sample(rng));
+                b.edge(p, t, data.sample(rng));
+                next.push(t);
+            }
+        }
+        frontier = next;
+    }
+    b.build().expect("out_tree is a DAG by construction")
+}
+
+/// Mirror image: leaves feed upward into a single sink.
+pub fn in_tree(
+    name: &str,
+    depth: usize,
+    branch: usize,
+    cost: &GaussianMixture,
+    data: &GaussianMixture,
+    rng: &mut Xoshiro256pp,
+) -> TaskGraph {
+    let mut b = GraphBuilder::new(name);
+    let sink = b.task(cost.sample(rng));
+    let mut frontier = vec![sink];
+    for _ in 0..depth {
+        let mut next = Vec::new();
+        for &c in &frontier {
+            for _ in 0..branch {
+                let t = b.task(cost.sample(rng));
+                b.edge(t, c, data.sample(rng));
+                next.push(t);
+            }
+        }
+        frontier = next;
+    }
+    b.build().expect("in_tree is a DAG by construction")
+}
+
+/// `stages` fork/join diamonds in sequence, each of the given width.
+pub fn fork_join(
+    name: &str,
+    stages: usize,
+    width: usize,
+    cost: &GaussianMixture,
+    data: &GaussianMixture,
+    rng: &mut Xoshiro256pp,
+) -> TaskGraph {
+    let mut b = GraphBuilder::new(name);
+    let mut join = b.task(cost.sample(rng));
+    for _ in 0..stages {
+        let mids: Vec<_> = (0..width).map(|_| b.task(cost.sample(rng))).collect();
+        let next_join = b.task(cost.sample(rng));
+        for &m in &mids {
+            b.edge(join, m, data.sample(rng));
+            b.edge(m, next_join, data.sample(rng));
+        }
+        join = next_join;
+    }
+    b.build().expect("fork_join is a DAG by construction")
+}
+
+/// Linear chain of `len` tasks.
+pub fn chain(
+    name: &str,
+    len: usize,
+    cost: &GaussianMixture,
+    data: &GaussianMixture,
+    rng: &mut Xoshiro256pp,
+) -> TaskGraph {
+    let mut b = GraphBuilder::new(name);
+    let ids: Vec<_> = (0..len.max(1)).map(|_| b.task(cost.sample(rng))).collect();
+    for w in ids.windows(2) {
+        b.edge(w[0], w[1], data.sample(rng));
+    }
+    b.build().expect("chain is a DAG by construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Xoshiro256pp {
+        Xoshiro256pp::seed_from_u64(11)
+    }
+
+    #[test]
+    fn out_tree_shape() {
+        let g = out_tree("t", 2, 2, &cost_mixture(), &data_mixture(), &mut rng());
+        assert_eq!(g.n_tasks(), 1 + 2 + 4);
+        assert_eq!(g.n_edges(), 6);
+        assert!(g.is_source(0));
+        assert_eq!(g.height(), 3);
+        // every non-root has exactly one parent
+        for t in 1..g.n_tasks() {
+            assert_eq!(g.predecessors(t).len(), 1);
+        }
+    }
+
+    #[test]
+    fn in_tree_shape() {
+        let g = in_tree("t", 2, 3, &cost_mixture(), &data_mixture(), &mut rng());
+        assert_eq!(g.n_tasks(), 1 + 3 + 9);
+        assert!(g.is_sink(0));
+        for t in 1..g.n_tasks() {
+            assert_eq!(g.successors(t).len(), 1);
+        }
+    }
+
+    #[test]
+    fn fork_join_shape() {
+        let g = fork_join("t", 2, 3, &cost_mixture(), &data_mixture(), &mut rng());
+        // 1 + (3 + 1) * 2 tasks
+        assert_eq!(g.n_tasks(), 9);
+        assert_eq!(g.height(), 5);
+        assert!(g.is_source(0));
+    }
+
+    #[test]
+    fn chain_shape() {
+        let g = chain("t", 6, &cost_mixture(), &data_mixture(), &mut rng());
+        assert_eq!(g.n_tasks(), 6);
+        assert_eq!(g.n_edges(), 5);
+        assert_eq!(g.height(), 6);
+    }
+
+    #[test]
+    fn generate_round_robins_structures() {
+        let gs = generate(8, &mut rng());
+        assert_eq!(gs.len(), 8);
+        assert!(gs[0].name().starts_with("out_tree"));
+        assert!(gs[1].name().starts_with("in_tree"));
+        assert!(gs[2].name().starts_with("fork_join"));
+        assert!(gs[3].name().starts_with("chain"));
+        assert!(gs[4].name().starts_with("out_tree"));
+    }
+
+    #[test]
+    fn weights_within_mixture_bounds() {
+        let gs = generate(20, &mut rng());
+        for g in &gs {
+            for t in 0..g.n_tasks() {
+                assert!((1.0..=100.0).contains(&g.cost(t)));
+                for &(_, d) in g.successors(t) {
+                    assert!((1.0..=50.0).contains(&d));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reproducible() {
+        let a = generate(12, &mut Xoshiro256pp::seed_from_u64(5));
+        let b = generate(12, &mut Xoshiro256pp::seed_from_u64(5));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.n_tasks(), y.n_tasks());
+            for t in 0..x.n_tasks() {
+                assert_eq!(x.cost(t), y.cost(t));
+            }
+        }
+    }
+}

@@ -1,0 +1,389 @@
+//! §VI.C WFCommons scientific workflows (Coleman, Casanova & Ferreira da
+//! Silva, 2023): recipe-style generators for the nine workflows the paper
+//! selects — Epigenomics, Montage, Cycles, Seismology, SoyKB, SRA Search,
+//! Genome (1000Genome), Blast and BWA.
+//!
+//! Each generator reproduces the workflow's published level structure
+//! (parallel lanes, split/merge phases, long sequential tails) with a
+//! randomized width parameter, and samples task runtimes from
+//! heavy-tailed per-stage distributions — the properties (long critical
+//! paths, wide fan-outs, imbalanced stage costs) the paper's evaluation
+//! exercises.
+
+use crate::graph::{GraphBuilder, TaskGraph};
+use crate::prng::Xoshiro256pp;
+use crate::stats::TruncatedGaussian;
+
+/// The nine selected workflows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workflow {
+    Epigenomics,
+    Montage,
+    Cycles,
+    Seismology,
+    SoyKb,
+    SraSearch,
+    Genome,
+    Blast,
+    Bwa,
+}
+
+impl Workflow {
+    pub const ALL: [Workflow; 9] = [
+        Workflow::Epigenomics,
+        Workflow::Montage,
+        Workflow::Cycles,
+        Workflow::Seismology,
+        Workflow::SoyKb,
+        Workflow::SraSearch,
+        Workflow::Genome,
+        Workflow::Blast,
+        Workflow::Bwa,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workflow::Epigenomics => "wf_epigenomics",
+            Workflow::Montage => "wf_montage",
+            Workflow::Cycles => "wf_cycles",
+            Workflow::Seismology => "wf_seismology",
+            Workflow::SoyKb => "wf_soykb",
+            Workflow::SraSearch => "wf_srasearch",
+            Workflow::Genome => "wf_genome",
+            Workflow::Blast => "wf_blast",
+            Workflow::Bwa => "wf_bwa",
+        }
+    }
+
+    pub fn build(&self, rng: &mut Xoshiro256pp) -> TaskGraph {
+        match self {
+            Workflow::Epigenomics => epigenomics(rng),
+            Workflow::Montage => montage(rng),
+            Workflow::Cycles => cycles(rng),
+            Workflow::Seismology => seismology(rng),
+            Workflow::SoyKb => soykb(rng),
+            Workflow::SraSearch => sra_search(rng),
+            Workflow::Genome => genome(rng),
+            Workflow::Blast => blast(rng),
+            Workflow::Bwa => bwa(rng),
+        }
+    }
+}
+
+/// Stage cost classes: scientific workflows are far more imbalanced than
+/// streaming operators — `Long` tasks dominate (heavy-tailed).
+#[derive(Clone, Copy)]
+enum C {
+    Short,
+    Mid,
+    Long,
+}
+
+struct Gen<'a> {
+    b: GraphBuilder,
+    rng: &'a mut Xoshiro256pp,
+}
+
+impl<'a> Gen<'a> {
+    fn new(name: &str, rng: &'a mut Xoshiro256pp) -> Self {
+        Self {
+            b: GraphBuilder::new(name),
+            rng,
+        }
+    }
+
+    fn t(&mut self, c: C) -> usize {
+        let (mean, spread, hi) = match c {
+            C::Short => (5.0, 2.0, 20.0),
+            C::Mid => (25.0, 10.0, 80.0),
+            C::Long => (90.0, 45.0, 400.0),
+        };
+        let d = TruncatedGaussian::new(mean, spread, 1.0, hi);
+        self.b.task(d.sample(self.rng))
+    }
+
+    fn e(&mut self, u: usize, v: usize) {
+        // file-transfer edges: wide spread (KBs to GBs, rescaled)
+        let d = TruncatedGaussian::new(10.0, 8.0, 0.5, 60.0);
+        let data = d.sample(self.rng);
+        self.b.edge(u, v, data);
+    }
+
+    fn finish(self) -> TaskGraph {
+        self.b.build().expect("wfcommons recipes are DAGs")
+    }
+}
+
+/// Epigenomics: `lanes` parallel 4-stage chains (split → filter →
+/// sol2sanger → map) merging into mapMerge → maqIndex → pileup.
+pub fn epigenomics(rng: &mut Xoshiro256pp) -> TaskGraph {
+    let lanes = rng.int_range(2, 4);
+    let mut g = Gen::new("wf_epigenomics", rng);
+    let split = g.t(C::Mid);
+    let merge = g.t(C::Mid);
+    for _ in 0..lanes {
+        let filter = g.t(C::Short);
+        let sol = g.t(C::Short);
+        let fq2bfq = g.t(C::Short);
+        let map = g.t(C::Long);
+        g.e(split, filter);
+        g.e(filter, sol);
+        g.e(sol, fq2bfq);
+        g.e(fq2bfq, map);
+        g.e(map, merge);
+    }
+    let index = g.t(C::Mid);
+    let pileup = g.t(C::Mid);
+    g.e(merge, index);
+    g.e(index, pileup);
+    g.finish()
+}
+
+/// Montage: mProject ×N → mDiffFit ×(N-1 pairwise) → mConcatFit →
+/// mBgModel → mBackground ×N → mImgtbl → mAdd → mShrink → mJPEG.
+pub fn montage(rng: &mut Xoshiro256pp) -> TaskGraph {
+    let n = rng.int_range(3, 6);
+    let mut g = Gen::new("wf_montage", rng);
+    let projects: Vec<_> = (0..n).map(|_| g.t(C::Mid)).collect();
+    let diffs: Vec<_> = (0..n - 1).map(|_| g.t(C::Short)).collect();
+    for i in 0..n - 1 {
+        g.e(projects[i], diffs[i]);
+        g.e(projects[i + 1], diffs[i]);
+    }
+    let concat = g.t(C::Short);
+    for &d in &diffs {
+        g.e(d, concat);
+    }
+    let bgmodel = g.t(C::Mid);
+    g.e(concat, bgmodel);
+    let backgrounds: Vec<_> = (0..n).map(|_| g.t(C::Short)).collect();
+    for (i, &bg) in backgrounds.iter().enumerate() {
+        g.e(bgmodel, bg);
+        g.e(projects[i], bg);
+    }
+    let imgtbl = g.t(C::Short);
+    for &bg in &backgrounds {
+        g.e(bg, imgtbl);
+    }
+    let add = g.t(C::Long);
+    let shrink = g.t(C::Short);
+    let jpeg = g.t(C::Short);
+    g.e(imgtbl, add);
+    g.e(add, shrink);
+    g.e(shrink, jpeg);
+    g.finish()
+}
+
+/// Cycles: baseline_cycles ×N → cycles ×N → output parser → summary.
+pub fn cycles(rng: &mut Xoshiro256pp) -> TaskGraph {
+    let n = rng.int_range(3, 7);
+    let mut g = Gen::new("wf_cycles", rng);
+    let parser = g.t(C::Mid);
+    for _ in 0..n {
+        let base = g.t(C::Mid);
+        let cyc = g.t(C::Long);
+        let fert = g.t(C::Short);
+        g.e(base, cyc);
+        g.e(cyc, fert);
+        g.e(fert, parser);
+    }
+    let summary = g.t(C::Short);
+    g.e(parser, summary);
+    g.finish()
+}
+
+/// Seismology: sG1IterDecon ×N all merging into wrapper_siftSTFByMisfit.
+pub fn seismology(rng: &mut Xoshiro256pp) -> TaskGraph {
+    let n = rng.int_range(4, 10);
+    let mut g = Gen::new("wf_seismology", rng);
+    let merge = g.t(C::Mid);
+    for _ in 0..n {
+        let d = g.t(C::Mid);
+        g.e(d, merge);
+    }
+    g.finish()
+}
+
+/// SoyKB: per-sample chains (align → sort → dedup → realign →
+/// haplotype_caller) → combine_variants → select/filter chain.
+pub fn soykb(rng: &mut Xoshiro256pp) -> TaskGraph {
+    let samples = rng.int_range(2, 4);
+    let mut g = Gen::new("wf_soykb", rng);
+    let combine = g.t(C::Mid);
+    for _ in 0..samples {
+        let align = g.t(C::Long);
+        let sort = g.t(C::Short);
+        let dedup = g.t(C::Short);
+        let realign = g.t(C::Mid);
+        let hap = g.t(C::Long);
+        g.e(align, sort);
+        g.e(sort, dedup);
+        g.e(dedup, realign);
+        g.e(realign, hap);
+        g.e(hap, combine);
+    }
+    let select_snp = g.t(C::Short);
+    let filter_snp = g.t(C::Short);
+    g.e(combine, select_snp);
+    g.e(select_snp, filter_snp);
+    g.finish()
+}
+
+/// SRA Search: N parallel (prefetch → fasterq_dump → bowtie2) lanes →
+/// merge.
+pub fn sra_search(rng: &mut Xoshiro256pp) -> TaskGraph {
+    let n = rng.int_range(2, 5);
+    let mut g = Gen::new("wf_srasearch", rng);
+    let merge = g.t(C::Short);
+    for _ in 0..n {
+        let prefetch = g.t(C::Mid);
+        let dump = g.t(C::Mid);
+        let bowtie = g.t(C::Long);
+        g.e(prefetch, dump);
+        g.e(dump, bowtie);
+        g.e(bowtie, merge);
+    }
+    g.finish()
+}
+
+/// 1000Genome: individuals ×N → individuals_merge → sifting, then
+/// {mutation_overlap, frequency} per population.
+pub fn genome(rng: &mut Xoshiro256pp) -> TaskGraph {
+    let n = rng.int_range(3, 6);
+    let pops = rng.int_range(1, 3);
+    let mut g = Gen::new("wf_genome", rng);
+    let merge = g.t(C::Mid);
+    for _ in 0..n {
+        let ind = g.t(C::Long);
+        g.e(ind, merge);
+    }
+    let sifting = g.t(C::Mid);
+    g.e(merge, sifting);
+    for _ in 0..pops {
+        let overlap = g.t(C::Mid);
+        let freq = g.t(C::Mid);
+        g.e(sifting, overlap);
+        g.e(sifting, freq);
+    }
+    g.finish()
+}
+
+/// Blast: split_fasta → blastall ×N → cat_blast → cleanup.
+pub fn blast(rng: &mut Xoshiro256pp) -> TaskGraph {
+    let n = rng.int_range(3, 8);
+    let mut g = Gen::new("wf_blast", rng);
+    let split = g.t(C::Short);
+    let cat = g.t(C::Short);
+    for _ in 0..n {
+        let b = g.t(C::Long);
+        g.e(split, b);
+        g.e(b, cat);
+    }
+    let cleanup = g.t(C::Short);
+    g.e(cat, cleanup);
+    g.finish()
+}
+
+/// BWA: bwa_index → bwa_aln ×N (paired) → concat.
+pub fn bwa(rng: &mut Xoshiro256pp) -> TaskGraph {
+    let n = rng.int_range(3, 8);
+    let mut g = Gen::new("wf_bwa", rng);
+    let index = g.t(C::Mid);
+    let concat = g.t(C::Short);
+    for _ in 0..n {
+        let aln = g.t(C::Long);
+        g.e(index, aln);
+        g.e(aln, concat);
+    }
+    g.finish()
+}
+
+/// Generate `n` workflows evenly distributed by type (§VI.C: 50 graphs
+/// over nine types — round-robin keeps every prefix balanced).
+pub fn generate(n: usize, rng: &mut Xoshiro256pp) -> Vec<TaskGraph> {
+    (0..n)
+        .map(|i| Workflow::ALL[i % Workflow::ALL.len()].build(rng))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Xoshiro256pp {
+        Xoshiro256pp::seed_from_u64(31)
+    }
+
+    #[test]
+    fn all_workflows_build_valid_dags() {
+        let mut r = rng();
+        for wf in Workflow::ALL {
+            for _ in 0..5 {
+                let g = wf.build(&mut r);
+                assert!(g.n_tasks() >= 5, "{} too small", wf.name());
+                assert!(g.n_edges() >= g.n_tasks() - 2, "{} too sparse", wf.name());
+                assert_eq!(g.topo_order().len(), g.n_tasks());
+            }
+        }
+    }
+
+    #[test]
+    fn epigenomics_has_parallel_lanes_and_long_tail() {
+        let g = epigenomics(&mut rng());
+        // split fans out to `lanes` filters
+        assert!(g.successors(0).len() >= 2);
+        assert!(g.height() >= 7, "height {}", g.height());
+    }
+
+    #[test]
+    fn montage_has_pairwise_diff_structure() {
+        let g = montage(&mut rng());
+        // find a diff task with exactly two project parents
+        let has_pairwise = (0..g.n_tasks()).any(|t| g.predecessors(t).len() == 2);
+        assert!(has_pairwise);
+        assert!(g.height() >= 7);
+    }
+
+    #[test]
+    fn seismology_is_star_merge() {
+        let g = seismology(&mut rng());
+        assert_eq!(g.height(), 2);
+        assert_eq!(g.predecessors(0).len(), g.n_tasks() - 1);
+    }
+
+    #[test]
+    fn blast_split_merge_counts() {
+        let g = blast(&mut rng());
+        let n_par = g.successors(0).len();
+        assert!(n_par >= 3);
+        assert_eq!(g.predecessors(1).len(), n_par);
+    }
+
+    #[test]
+    fn generate_covers_all_nine_types() {
+        let gs = generate(50, &mut rng());
+        let names: std::collections::HashSet<_> =
+            gs.iter().map(|g| g.name().to_string()).collect();
+        assert_eq!(names.len(), 9, "{names:?}");
+        // round-robin balance: each type appears 5 or 6 times in 50
+        for wf in Workflow::ALL {
+            let c = gs.iter().filter(|g| g.name() == wf.name()).count();
+            assert!((5..=6).contains(&c), "{} appears {c} times", wf.name());
+        }
+    }
+
+    #[test]
+    fn long_tasks_are_heavy_tailed() {
+        let mut r = rng();
+        let mut maxc: f64 = 0.0;
+        let mut minc = f64::INFINITY;
+        for _ in 0..30 {
+            let g = blast(&mut r);
+            for t in 0..g.n_tasks() {
+                maxc = maxc.max(g.cost(t));
+                minc = minc.min(g.cost(t));
+            }
+        }
+        assert!(maxc / minc > 10.0, "spread {maxc}/{minc}");
+    }
+}

@@ -1,0 +1,150 @@
+//! End-to-end dynamic coordinator integration: every (dataset × policy ×
+//! heuristic) combination must produce §II-valid, replay-consistent
+//! schedules, and the preemption machinery must behave per the paper's
+//! model.
+
+use dts::coordinator::{paper_grid, Coordinator, DynamicProblem, Policy, Variant};
+use dts::schedule::validate;
+use dts::schedulers::SchedulerKind;
+use dts::sim::replay;
+use dts::workloads::Dataset;
+
+fn check(prob: &DynamicProblem, variant: Variant, seed: u64) {
+    let mut c = variant.coordinator(seed);
+    let res = c.run(prob);
+    assert_eq!(
+        res.schedule.n_assigned(),
+        prob.total_tasks(),
+        "{} left tasks unscheduled",
+        variant.label()
+    );
+    let viol = validate(&res.schedule, &prob.graphs, &prob.network);
+    assert!(
+        viol.is_empty(),
+        "{}: {:?}",
+        variant.label(),
+        &viol[..viol.len().min(3)]
+    );
+    let rep = replay(&res.schedule, &prob.graphs, &prob.network);
+    assert!(
+        rep.errors.is_empty(),
+        "{}: {:?}",
+        variant.label(),
+        &rep.errors[..rep.errors.len().min(3)]
+    );
+}
+
+#[test]
+fn full_grid_on_synthetic() {
+    let prob = Dataset::Synthetic.instance(14, 100);
+    for v in paper_grid() {
+        check(&prob, v, 1);
+    }
+}
+
+#[test]
+fn full_grid_on_adversarial() {
+    let prob = Dataset::Adversarial.instance(10, 200);
+    for v in paper_grid() {
+        check(&prob, v, 2);
+    }
+}
+
+#[test]
+fn key_variants_on_riotbench_and_wfcommons() {
+    for dataset in [Dataset::RiotBench, Dataset::WfCommons] {
+        let prob = dataset.instance(12, 300);
+        for label in ["P-HEFT", "NP-HEFT", "5P-CPOP", "2P-MinMin", "20P-MaxMin", "P-Random"] {
+            check(&prob, Variant::parse(label).unwrap(), 3);
+        }
+    }
+}
+
+#[test]
+fn reverted_counts_ordered_by_policy() {
+    // more preemption ⇒ at least as many reverted tasks, per event
+    let prob = Dataset::Synthetic.instance(20, 5);
+    let run = |policy| {
+        let mut c = Coordinator::new(policy, SchedulerKind::Heft.make(0));
+        c.run(&prob)
+            .events
+            .iter()
+            .map(|e| e.n_reverted)
+            .sum::<usize>()
+    };
+    let np = run(Policy::NonPreemptive);
+    let k2 = run(Policy::LastK(2));
+    let p = run(Policy::Preemptive);
+    assert_eq!(np, 0, "NP reverts nothing");
+    assert!(k2 <= p, "Last-2 ({k2}) cannot revert more than P ({p})");
+    assert!(p > 0, "P should revert something on an overlapping workload");
+}
+
+#[test]
+fn np_runtime_not_slower_than_p() {
+    // §VII.D: non-preemptive schedulers are fastest — they solve smaller
+    // composite problems.  Compare *pending work*, which is deterministic
+    // (wall time on shared CI is noisy).
+    let prob = Dataset::Synthetic.instance(30, 8);
+    let pending = |policy| {
+        let mut c = Coordinator::new(policy, SchedulerKind::Heft.make(0));
+        c.run(&prob)
+            .events
+            .iter()
+            .map(|e| e.n_pending)
+            .sum::<usize>()
+    };
+    let np = pending(Policy::NonPreemptive);
+    let k5 = pending(Policy::LastK(5));
+    let p = pending(Policy::Preemptive);
+    assert!(np <= k5, "NP pending {np} vs 5P {k5}");
+    assert!(k5 <= p, "5P pending {k5} vs P {p}");
+}
+
+#[test]
+fn single_graph_problem_identical_across_policies() {
+    // with one graph there is nothing to preempt: all policies agree
+    let prob = Dataset::RiotBench.instance(1, 9);
+    let sig = |policy: Policy| {
+        let mut c = Coordinator::new(policy, SchedulerKind::Heft.make(0));
+        let res = c.run(&prob);
+        let mut v: Vec<_> = res
+            .schedule
+            .iter()
+            .map(|(g, a)| (*g, a.node, a.start.to_bits()))
+            .collect();
+        v.sort();
+        v
+    };
+    let p = sig(Policy::Preemptive);
+    assert_eq!(p, sig(Policy::NonPreemptive));
+    assert_eq!(p, sig(Policy::LastK(3)));
+}
+
+#[test]
+fn far_apart_arrivals_make_policies_agree() {
+    // if every graph finishes before the next arrives, preemption never
+    // fires: P ≡ NP
+    use dts::network::Network;
+    use dts::prng::Xoshiro256pp;
+    use dts::workloads::synthetic;
+    let mut rng = Xoshiro256pp::seed_from_u64(17);
+    let graphs = synthetic::generate(6, &mut rng);
+    // arrivals far beyond any plausible makespan
+    let problem = DynamicProblem::new(
+        Network::homogeneous(4),
+        graphs
+            .into_iter()
+            .enumerate()
+            .map(|(i, g)| (i as f64 * 1e6, g))
+            .collect(),
+    );
+    let run = |policy: Policy| {
+        let mut c = Coordinator::new(policy, SchedulerKind::Cpop.make(0));
+        let res = c.run(&problem);
+        res.metrics(&problem).total_makespan
+    };
+    let p = run(Policy::Preemptive);
+    let np = run(Policy::NonPreemptive);
+    assert!((p - np).abs() < 1e-9, "P {p} vs NP {np}");
+}

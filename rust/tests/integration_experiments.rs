@@ -1,0 +1,124 @@
+//! Experiment-harness integration: small sweeps must reproduce the
+//! paper's *qualitative* claims (§VII) — who wins, in which direction —
+//! on reduced instance sizes that keep CI fast.
+
+use dts::config::ExperimentConfig;
+use dts::coordinator::Variant;
+use dts::experiments::run_sweep;
+use dts::metrics::Metric;
+use dts::workloads::Dataset;
+
+fn cfg(dataset: Dataset, n_graphs: usize, trials: usize, labels: &[&str]) -> ExperimentConfig {
+    ExperimentConfig {
+        dataset,
+        n_graphs,
+        trials,
+        seed: 1000,
+        load: 0.5,
+        variants: labels.iter().map(|l| Variant::parse(l).unwrap()).collect(),
+    }
+}
+
+#[test]
+fn adversarial_np_heft_much_worse_than_p_heft() {
+    // §VII.A / Fig 8a: "NP-HEFT's makespan is 1.6× that of P-HEFT"
+    let c = cfg(
+        Dataset::Adversarial,
+        20,
+        3,
+        &["P-HEFT", "NP-HEFT", "5P-HEFT", "10P-HEFT", "20P-HEFT"],
+    );
+    let r = run_sweep(&c);
+    let p = r.value_of("P-HEFT", Metric::TotalMakespan).unwrap();
+    let np = r.value_of("NP-HEFT", Metric::TotalMakespan).unwrap();
+    assert!(
+        np > 1.15 * p,
+        "adversarial gap missing: NP {np:.3} vs P {p:.3}"
+    );
+    // partially preemptive close to P (within ~15%)
+    for k in ["10P-HEFT", "20P-HEFT"] {
+        let v = r.value_of(k, Metric::TotalMakespan).unwrap();
+        assert!(
+            v < 0.75 * np.max(1.3 * p),
+            "{k} {v:.3} should sit near P {p:.3}, far from NP {np:.3}"
+        );
+    }
+}
+
+#[test]
+fn adversarial_utilization_improves_with_preemption() {
+    // Fig 8e: utilization rises sharply from 5P toward P
+    let c = cfg(
+        Dataset::Adversarial,
+        20,
+        3,
+        &["NP-HEFT", "5P-HEFT", "P-HEFT"],
+    );
+    let r = run_sweep(&c);
+    let np = r.value_of("NP-HEFT", Metric::Utilization).unwrap();
+    let p = r.value_of("P-HEFT", Metric::Utilization).unwrap();
+    assert!(p > np, "P util {p:.3} must exceed NP {np:.3}");
+}
+
+#[test]
+fn flowtime_favors_np_on_regular_workloads() {
+    // §VII.C / Fig 5: non-preemptive schedulers have the smallest
+    // flowtime — they never spread a graph's tasks apart after placement.
+    let c = cfg(Dataset::Synthetic, 24, 3, &["NP-HEFT", "P-HEFT"]);
+    let r = run_sweep(&c);
+    let np = r.value_of("NP-HEFT", Metric::MeanFlowtime).unwrap();
+    let p = r.value_of("P-HEFT", Metric::MeanFlowtime).unwrap();
+    assert!(
+        np <= p * 1.05,
+        "NP flowtime {np:.3} should not exceed P {p:.3}"
+    );
+}
+
+#[test]
+fn runtime_ordering_np_fastest_p_slowest() {
+    // §VII.D / Fig 6: NP < low-K < P in scheduler runtime
+    let c = cfg(Dataset::Synthetic, 30, 3, &["NP-HEFT", "2P-HEFT", "P-HEFT"]);
+    let r = run_sweep(&c);
+    let np = r.value_of("NP-HEFT", Metric::Runtime).unwrap();
+    let p = r.value_of("P-HEFT", Metric::Runtime).unwrap();
+    assert!(np < p, "NP runtime {np:.4} must beat P {p:.4}");
+}
+
+#[test]
+fn total_makespan_preemption_helps_or_ties() {
+    // §VII.A: preemptive schedulers generally achieve smaller makespans
+    // (gap may be small on regular workloads — require no more than a
+    // tiny regression).
+    for dataset in [Dataset::Synthetic, Dataset::RiotBench] {
+        let c = cfg(dataset, 24, 3, &["NP-HEFT", "P-HEFT"]);
+        let r = run_sweep(&c);
+        let np = r.value_of("NP-HEFT", Metric::TotalMakespan).unwrap();
+        let p = r.value_of("P-HEFT", Metric::TotalMakespan).unwrap();
+        assert!(
+            p <= np * 1.05,
+            "{}: P {p:.3} should not exceed NP {np:.3} by >5%",
+            dataset.name()
+        );
+    }
+}
+
+#[test]
+fn sweep_runs_on_every_dataset_with_core_grid() {
+    for dataset in Dataset::ALL {
+        let c = ExperimentConfig {
+            dataset,
+            n_graphs: 8,
+            trials: 1,
+            seed: 5,
+            load: 0.5,
+            variants: dts::experiments::core_variants(),
+        };
+        let r = run_sweep(&c);
+        assert_eq!(r.labels.len(), 18);
+        // tables render for every metric
+        for m in Metric::ALL {
+            let t = r.figure_table(m);
+            assert!(t.contains("P-HEFT"), "{}", dataset.name());
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! PJRT round-trip integration: the XLA-compiled Pallas rank artifact
+//! must agree with the native Rust rank provider on real composite
+//! problems, and the EFT artifact with direct arithmetic.
+//!
+//! Requires `make artifacts` (skips loudly when absent so plain
+//! `cargo test` works in a fresh checkout).
+
+use dts::coordinator::{Coordinator, Policy};
+use dts::graph::GraphBuilder;
+use dts::network::Network;
+use dts::prng::Xoshiro256pp;
+use dts::runtime::{composite_height, XlaRanks, XlaRuntime, NEG};
+use dts::schedulers::{Cpop, Heft, NativeRanks, PTask, Pred, Problem, RankProvider};
+use dts::workloads::Dataset;
+
+use std::rc::Rc;
+
+fn runtime() -> Option<Rc<XlaRuntime>> {
+    match XlaRuntime::load("artifacts") {
+        Ok(rt) => Some(Rc::new(rt)),
+        Err(e) => {
+            eprintln!("SKIP integration_runtime: {e}");
+            None
+        }
+    }
+}
+
+/// Random multi-component problem with `n` tasks.
+fn random_problem(n: usize, seed: u64) -> Problem {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut tasks: Vec<PTask> = (0..n)
+        .map(|i| PTask {
+            gid: dts::graph::Gid::new(i / 16, i % 16),
+            cost: rng.uniform(1.0, 50.0),
+            ready: 0.0,
+            preds: Vec::new(),
+            succs: Vec::new(),
+        })
+        .collect();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            // edges only within the same 16-task block → components
+            if j / 16 == i / 16 && rng.next_f64() < 0.25 {
+                let data = rng.uniform(0.5, 20.0);
+                tasks[i].succs.push((j, data));
+                tasks[j].preds.push(Pred::Pending { idx: i, data });
+            }
+        }
+    }
+    Problem { tasks }
+}
+
+#[test]
+fn xla_ranks_match_native_across_sizes() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let net = Network::default_eval(&mut rng);
+    for &n in &[3usize, 10, 31, 32, 33, 64, 100, 200, 256] {
+        let prob = random_problem(n, n as u64);
+        let native = NativeRanks.ranks(&prob, &net);
+        let mut xr = XlaRanks::new(rt.clone());
+        let xla = xr.ranks(&prob, &net);
+        assert_eq!(xr.xla_calls, 1, "n={n} should use the artifact");
+        for i in 0..n {
+            let rel = (native.up[i] - xla.up[i]).abs() / (1.0 + native.up[i].abs());
+            assert!(rel < 1e-4, "up[{i}] native {} xla {} (n={n})", native.up[i], xla.up[i]);
+            let rel = (native.down[i] - xla.down[i]).abs() / (1.0 + native.down[i].abs());
+            assert!(rel < 1e-4, "down[{i}] native {} xla {} (n={n})", native.down[i], xla.down[i]);
+        }
+    }
+}
+
+#[test]
+fn oversize_problems_fall_back_to_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Xoshiro256pp::seed_from_u64(6);
+    let net = Network::default_eval(&mut rng);
+    let prob = random_problem(300, 9); // > max bucket (256)
+    let mut xr = XlaRanks::new(rt);
+    let _ = xr.ranks(&prob, &net);
+    assert_eq!(xr.native_calls, 1);
+    assert_eq!(xr.xla_calls, 0);
+}
+
+#[test]
+fn heft_with_xla_ranks_produces_equivalent_schedules() {
+    let Some(rt) = runtime() else { return };
+    // rank parity must translate into schedule parity (same priorities →
+    // same placements, up to fp tie-breaks which the tolerance absorbs)
+    let prob = Dataset::Synthetic.instance(10, 77);
+    let mut native = Coordinator::new(Policy::LastK(5), Box::new(Heft::new(NativeRanks)));
+    let res_native = native.run(&prob);
+    let mut xla = Coordinator::new(
+        Policy::LastK(5),
+        Box::new(Heft::new(XlaRanks::new(rt.clone()))),
+    );
+    let res_xla = xla.run(&prob);
+    let m_native = res_native.metrics(&prob);
+    let m_xla = res_xla.metrics(&prob);
+    let rel =
+        (m_native.total_makespan - m_xla.total_makespan).abs() / m_native.total_makespan;
+    assert!(
+        rel < 1e-3,
+        "makespan native {} vs xla {}",
+        m_native.total_makespan,
+        m_xla.total_makespan
+    );
+
+    // CPOP too
+    let mut cn = Coordinator::new(Policy::Preemptive, Box::new(Cpop::new(NativeRanks)));
+    let mut cx = Coordinator::new(Policy::Preemptive, Box::new(Cpop::new(XlaRanks::new(rt))));
+    let a = cn.run(&prob).metrics(&prob);
+    let b = cx.run(&prob).metrics(&prob);
+    let rel = (a.total_makespan - b.total_makespan).abs() / a.total_makespan;
+    assert!(rel < 1e-3, "cpop {} vs {}", a.total_makespan, b.total_makespan);
+}
+
+#[test]
+fn xla_schedules_are_valid() {
+    let Some(rt) = runtime() else { return };
+    let prob = Dataset::RiotBench.instance(12, 3);
+    let mut c = Coordinator::new(Policy::LastK(2), Box::new(Heft::new(XlaRanks::new(rt))));
+    let res = c.run(&prob);
+    let viol = dts::schedule::validate(&res.schedule, &prob.graphs, &prob.network);
+    assert!(viol.is_empty(), "{viol:?}");
+    let rep = dts::sim::replay(&res.schedule, &prob.graphs, &prob.network);
+    assert!(rep.errors.is_empty(), "{:?}", rep.errors);
+}
+
+#[test]
+fn eft_artifact_matches_direct_arithmetic() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Xoshiro256pp::seed_from_u64(12);
+    for &n_nodes in &[4usize, 8, 13, 32] {
+        let Some((p_bucket, v_bucket)) = rt.eft_bucket(n_nodes) else {
+            panic!("no eft bucket for {n_nodes} nodes");
+        };
+        let n_par = 5usize.min(p_bucket);
+        let mut finish = vec![NEG; p_bucket];
+        let mut comm = vec![0f32; p_bucket * v_bucket];
+        for i in 0..n_par {
+            finish[i] = rng.uniform(0.0, 40.0) as f32;
+            for j in 0..n_nodes {
+                comm[i * v_bucket + j] = rng.uniform(0.0, 10.0) as f32;
+            }
+        }
+        let mut exec = vec![0f32; v_bucket];
+        let mut avail = vec![0f32; v_bucket];
+        for j in 0..n_nodes {
+            exec[j] = rng.uniform(0.5, 20.0) as f32;
+            avail[j] = rng.uniform(0.0, 30.0) as f32;
+        }
+        let arrival = 7.5f32;
+        let out = rt
+            .batch_eft_padded(v_bucket, &finish, &comm, &exec, &avail, arrival)
+            .unwrap();
+        for j in 0..n_nodes {
+            let mut ready = arrival.max(avail[j]);
+            for i in 0..n_par {
+                ready = ready.max(finish[i] + comm[i * v_bucket + j]);
+            }
+            let want = ready + exec[j];
+            assert!(
+                (out[j] - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "node {j}: xla {} vs direct {want}",
+                out[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn composite_height_drives_convergence() {
+    let Some(rt) = runtime() else { return };
+    // a deep chain exactly at bucket size: depth = n must converge
+    let n = 32;
+    let mut b = GraphBuilder::new("deep");
+    let ids: Vec<_> = (0..n).map(|_| b.task(2.0)).collect();
+    for w in ids.windows(2) {
+        b.edge(w[0], w[1], 1.0);
+    }
+    let g = b.build().unwrap();
+    let mut tasks: Vec<PTask> = (0..n)
+        .map(|t| PTask {
+            gid: dts::graph::Gid::new(0, t),
+            cost: g.cost(t),
+            ready: 0.0,
+            preds: Vec::new(),
+            succs: Vec::new(),
+        })
+        .collect();
+    for t in 0..n {
+        for &(c, d) in g.successors(t) {
+            tasks[t].succs.push((c, d));
+            tasks[c].preds.push(Pred::Pending { idx: t, data: d });
+        }
+    }
+    let prob = Problem { tasks };
+    assert_eq!(composite_height(&prob), n);
+    let net = Network::homogeneous(4);
+    let native = NativeRanks.ranks(&prob, &net);
+    let mut xr = XlaRanks::new(rt);
+    let xla = xr.ranks(&prob, &net);
+    for i in 0..n {
+        let rel = (native.up[i] - xla.up[i]).abs() / (1.0 + native.up[i].abs());
+        assert!(rel < 1e-4, "up[{i}]");
+    }
+}
+
+#[test]
+fn allpairs_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Xoshiro256pp::seed_from_u64(21);
+    let net = Network::default_eval(&mut rng);
+    for &n in &[10usize, 32, 60, 128] {
+        let prob = random_problem(n, 1000 + n as u64);
+        let native = dts::analysis::allpairs_longest_native(&prob, &net);
+        let bucket = rt.allpairs_bucket(n).expect("bucket");
+        // build the padded edge matrix with the same semantics:
+        // m[u][c] = mean_comm(u,c) + mean_exec(c)
+        let inv_speed = net.mean_inv_speed() as f32;
+        let inv_link = net.mean_inv_link() as f32;
+        let mut m = vec![NEG; bucket * bucket];
+        for (u, t) in prob.tasks.iter().enumerate() {
+            for &(c, data) in &t.succs {
+                m[u * bucket + c] =
+                    data as f32 * inv_link + prob.tasks[c].cost as f32 * inv_speed;
+            }
+        }
+        let d = rt.allpairs_padded(bucket, &m).unwrap();
+        for u in 0..n {
+            for v in 0..n {
+                let want = native[u][v];
+                let got = d[u * bucket + v] as f64;
+                if want <= dts::analysis::NEG_D / 2.0 {
+                    assert!(got <= dts::analysis::NEG_D / 4.0, "({u},{v}) reachable in xla only");
+                } else {
+                    let rel = (want - got).abs() / (1.0 + want.abs());
+                    assert!(rel < 1e-4, "({u},{v}): native {want} xla {got} (n={n})");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn slack_analysis_identifies_adversarial_root() {
+    // the adversarial instance's heavy root must be the top critical task
+    let prob = Dataset::Adversarial.instance(1, 3);
+    let g = &prob.graphs[0].1;
+    let mut tasks = Vec::new();
+    for t in 0..g.n_tasks() {
+        tasks.push(dts::schedulers::PTask {
+            gid: dts::graph::Gid::new(0, t),
+            cost: g.cost(t),
+            ready: 0.0,
+            preds: Vec::new(),
+            succs: Vec::new(),
+        });
+    }
+    for t in 0..g.n_tasks() {
+        for &(c, d) in g.successors(t) {
+            tasks[t].succs.push((c, d));
+            tasks[c].preds.push(dts::schedulers::Pred::Pending { idx: t, data: d });
+        }
+    }
+    let prob2 = Problem { tasks };
+    let r = dts::analysis::slack_analysis(&prob2, &prob.network);
+    let crit = r.critical_tasks(1e-9);
+    assert_eq!(crit[0], 0, "heavy root must lead the critical list");
+}

@@ -1,0 +1,117 @@
+//! Cross-heuristic integration: relative quality and behavioural
+//! signatures of the five base schedulers on static (single-arrival)
+//! problems, where classic results must hold.
+
+use dts::coordinator::{Coordinator, DynamicProblem, Policy};
+use dts::network::Network;
+use dts::prng::Xoshiro256pp;
+use dts::schedule::validate;
+use dts::schedulers::SchedulerKind;
+use dts::stats::mean;
+use dts::workloads::{synthetic, Dataset};
+
+/// A single-arrival problem: the static scheduling special case.
+fn static_problem(seed: u64, n_graphs: usize) -> DynamicProblem {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let net = Network::default_eval(&mut rng);
+    let graphs = synthetic::generate(n_graphs, &mut rng);
+    DynamicProblem::new(net, graphs.into_iter().map(|g| (0.0, g)).collect())
+}
+
+fn makespan(kind: SchedulerKind, prob: &DynamicProblem, seed: u64) -> f64 {
+    let mut c = Coordinator::new(Policy::NonPreemptive, kind.make(seed));
+    let res = c.run(prob);
+    let viol = validate(&res.schedule, &prob.graphs, &prob.network);
+    assert!(viol.is_empty(), "{kind:?}: {viol:?}");
+    res.metrics(prob).total_makespan
+}
+
+#[test]
+fn heft_beats_random_on_average() {
+    let mut heft = Vec::new();
+    let mut random = Vec::new();
+    for seed in 0..8 {
+        let prob = static_problem(seed, 6);
+        heft.push(makespan(SchedulerKind::Heft, &prob, seed));
+        random.push(makespan(SchedulerKind::Random, &prob, seed));
+    }
+    assert!(
+        mean(&heft) < 0.95 * mean(&random),
+        "HEFT {} vs Random {}",
+        mean(&heft),
+        mean(&random)
+    );
+}
+
+#[test]
+fn informed_heuristics_beat_random_on_average() {
+    for kind in [SchedulerKind::Cpop, SchedulerKind::MinMin, SchedulerKind::MaxMin] {
+        let mut ours = Vec::new();
+        let mut random = Vec::new();
+        for seed in 0..8 {
+            let prob = static_problem(seed + 100, 6);
+            ours.push(makespan(kind, &prob, seed));
+            random.push(makespan(SchedulerKind::Random, &prob, seed));
+        }
+        assert!(
+            mean(&ours) < 1.05 * mean(&random),
+            "{kind:?} {} should not lose badly to Random {}",
+            mean(&ours),
+            mean(&random)
+        );
+    }
+}
+
+#[test]
+fn all_schedulers_valid_on_every_dataset() {
+    for dataset in Dataset::ALL {
+        let prob = dataset.instance(10, 31);
+        for kind in SchedulerKind::ALL {
+            let mut c = Coordinator::new(Policy::LastK(3), kind.make(7));
+            let res = c.run(&prob);
+            let viol = validate(&res.schedule, &prob.graphs, &prob.network);
+            assert!(
+                viol.is_empty(),
+                "{kind:?} on {}: {:?}",
+                dataset.name(),
+                &viol[..viol.len().min(3)]
+            );
+        }
+    }
+}
+
+#[test]
+fn deterministic_given_seed() {
+    for kind in SchedulerKind::ALL {
+        let prob = static_problem(5, 4);
+        let a = makespan(kind, &prob, 42);
+        let b = makespan(kind, &prob, 42);
+        assert_eq!(a, b, "{kind:?} must be deterministic");
+    }
+}
+
+#[test]
+fn random_scheduler_varies_with_seed() {
+    let prob = static_problem(6, 4);
+    let a = makespan(SchedulerKind::Random, &prob, 1);
+    let b = makespan(SchedulerKind::Random, &prob, 2);
+    assert_ne!(a, b);
+}
+
+#[test]
+fn heft_uses_heterogeneity() {
+    // one very fast node: HEFT's makespan on the heterogeneous network
+    // must beat its makespan on a uniform-slow network
+    let mut rng = Xoshiro256pp::seed_from_u64(8);
+    let graphs = synthetic::generate(4, &mut rng);
+    let slow = Network::new(vec![1.0, 1.0], vec![0.0, 1.0, 1.0, 0.0]);
+    let fast = Network::new(vec![1.0, 5.0], vec![0.0, 1.0, 1.0, 0.0]);
+    let mk = |net: &Network| {
+        let prob = DynamicProblem::new(
+            net.clone(),
+            graphs.iter().cloned().map(|g| (0.0, g)).collect(),
+        );
+        makespan(SchedulerKind::Heft, &prob, 0)
+    };
+    assert!(mk(&fast) < mk(&slow));
+}

