@@ -1,18 +1,63 @@
 //! §Perf micro-benchmarks of the L3 scheduling hot paths: full dynamic
-//! runs per heuristic/policy, one-shot composite scheduling, and the
-//! insertion gap-finder.  These are the numbers tracked in
-//! EXPERIMENTS.md §Perf.
+//! runs per heuristic/policy, one-shot composite scheduling, the
+//! insertion gap-finder, and the parallel sweep harness.  These are the
+//! numbers tracked in EXPERIMENTS.md §Perf.
+//!
+//! Besides the human-readable table, the run writes
+//! `BENCH_hotpath.json` (override the path with `DTS_BENCH_JSON`):
+//! `{ "<bench name>": {"mean": s, "min": s, "max": s}, ... }` — all
+//! values in seconds — so successive PRs have a machine-readable perf
+//! trajectory to diff against.
 
 #[path = "util/mod.rs"]
 mod util;
 
-use dts::coordinator::{Coordinator, Policy};
+use dts::config::ExperimentConfig;
+use dts::coordinator::{Coordinator, Policy, Variant};
+use dts::experiments::run_sweep_parallel;
 use dts::graph::Gid;
+use dts::json;
 use dts::schedule::{Slot, Timelines};
 use dts::schedulers::SchedulerKind;
 use dts::workloads::Dataset;
 
+/// Collected (name, mean, min, max) rows for the JSON dump.
+struct Recorder {
+    rows: Vec<(String, f64, f64, f64)>,
+}
+
+impl Recorder {
+    fn new() -> Self {
+        Self { rows: Vec::new() }
+    }
+
+    fn report(&mut self, name: &str, mean: f64, min: f64, max: f64) {
+        util::report(name, mean, min, max);
+        self.rows.push((name.to_string(), mean, min, max));
+    }
+
+    fn to_json(&self) -> json::Value {
+        json::obj(
+            self.rows
+                .iter()
+                .map(|(name, mean, min, max)| {
+                    (
+                        name.as_str(),
+                        json::obj(vec![
+                            ("mean", json::num(*mean)),
+                            ("min", json::num(*min)),
+                            ("max", json::num(*max)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+}
+
 fn main() {
+    let mut rec = Recorder::new();
+
     // 1. end-to-end dynamic runs, 100-graph synthetic (the paper's size)
     let prob = Dataset::Synthetic.instance(100, 1);
     for kind in SchedulerKind::ALL {
@@ -21,7 +66,7 @@ fn main() {
                 let mut c = Coordinator::new(policy, kind.make(0));
                 std::hint::black_box(c.run(&prob));
             });
-            util::report(
+            rec.report(
                 &format!("dynamic {}-{} synthetic×100", policy.label(), kind.name()),
                 mean,
                 min,
@@ -36,7 +81,7 @@ fn main() {
         let res = c.run(&prob);
         std::hint::black_box(res.events.iter().map(|e| e.n_pending).max());
     });
-    util::report("peak-composite probe (P-HEFT)", mean, min, max);
+    rec.report("peak-composite probe (P-HEFT)", mean, min, max);
 
     // 3. insertion gap-finder on a long timeline
     let mut tl = Timelines::new(1);
@@ -48,10 +93,55 @@ fn main() {
         // worst case: a task too big for every interior gap
         std::hint::black_box(tl.earliest_start(0, 0.0, 7.0));
     });
-    util::report("earliest_start scan (2000 slots, no fit)", mean, min, max);
+    rec.report("earliest_start scan (2000 slots, no fit)", mean, min, max);
 
     let (mean, min, max) = util::time_it(10, 50, || {
         std::hint::black_box(tl.earliest_start(0, 9500.0, 3.0));
     });
-    util::report("earliest_start scan (ready mid-timeline)", mean, min, max);
+    rec.report("earliest_start scan (ready mid-timeline)", mean, min, max);
+
+    // 4. slot removal by binary search on the known start (the Last-K /
+    // preemptive revert hot path).  Each probe removes and re-inserts the
+    // same slot, so the timeline is invariant across iterations and the
+    // timed loop contains no clone — it isolates lookup + shift, the two
+    // costs a revert actually pays.
+    let mut t2 = tl.clone();
+    let (mean, min, max) = util::time_it(5, 30, || {
+        for i in (0..2000).step_by(4) {
+            let start = i as f64 * 10.0;
+            std::hint::black_box(t2.remove_at(0, Gid::new(0, i), start));
+            t2.insert(0, Slot { start, finish: start + 6.0, gid: Gid::new(0, i) });
+        }
+    });
+    rec.report("remove_at+reinsert 500 of 2000 slots", mean, min, max);
+
+    // 5. parallel sweep harness scaling (same cells, 1 vs 4 workers)
+    let sweep_cfg = ExperimentConfig {
+        dataset: Dataset::Synthetic,
+        n_graphs: 30,
+        trials: 4,
+        seed: 7,
+        load: dts::workloads::DEFAULT_LOAD,
+        variants: ["NP-HEFT", "5P-HEFT", "P-HEFT", "P-CPOP", "P-MinMin"]
+            .iter()
+            .map(|l| Variant::parse(l).unwrap())
+            .collect(),
+    };
+    for jobs in [1usize, 4] {
+        let (mean, min, max) = util::time_it(0, 2, || {
+            std::hint::black_box(run_sweep_parallel(&sweep_cfg, jobs));
+        });
+        rec.report(
+            &format!("run_sweep synthetic×30 (5 variants, jobs={jobs})"),
+            mean,
+            min,
+            max,
+        );
+    }
+
+    let path = std::env::var("DTS_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    match std::fs::write(&path, format!("{}\n", rec.to_json())) {
+        Ok(()) => eprintln!("[bench] wrote {path}"),
+        Err(e) => eprintln!("[bench] cannot write {path}: {e}"),
+    }
 }

@@ -12,7 +12,7 @@ use std::collections::HashMap;
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::{Coordinator, Variant};
-use crate::experiments::run_sweep;
+use crate::experiments::run_sweep_parallel;
 use crate::metrics::Metric;
 use crate::schedule::validate;
 use crate::schedulers::{Cpop, Heft};
@@ -70,6 +70,7 @@ dts — dynamic task-graph scheduling with controlled preemption
 USAGE:
   dts run        --dataset <d> [--graphs N] [--seed S] [--variant 5P-HEFT] [--xla]
   dts experiment [--config cfg.json | --dataset <d>] [--quick] [--csv out.csv]
+                 [--jobs N]   (N worker threads; deterministic at any N)
   dts generate   --dataset <d> [--graphs N] [--seed S] [--dot]
   dts validate   --dataset <d> [--graphs N] [--seed S] [--variant V]
   dts analyze    --dataset <d> [--graphs N] [--seed S] [--variant V]
@@ -174,14 +175,18 @@ fn cmd_experiment(args: &Args) -> i32 {
         c
     };
 
+    let n_cells = cfg.trials * cfg.variants.len();
+    let jobs = args.usize_flag("jobs", 1).clamp(1, n_cells.max(1));
     eprintln!(
-        "sweep: {} × {} variants × {} trials ({} graphs)",
+        "sweep: {} × {} variants × {} trials ({} graphs, {} job{})",
         cfg.dataset.name(),
         cfg.variants.len(),
         cfg.trials,
-        cfg.n_graphs
+        cfg.n_graphs,
+        jobs,
+        if jobs == 1 { "" } else { "s" }
     );
-    let result = run_sweep(&cfg);
+    let result = run_sweep_parallel(&cfg, jobs);
     for metric in Metric::ALL {
         println!("\n## {} — {}\n", cfg.dataset.name(), metric.name());
         println!("{}", result.figure_table(metric));
@@ -354,6 +359,14 @@ mod tests {
         let a = parse_args(&argv("experiment --dataset=adv --trials=2"));
         assert_eq!(a.flag("dataset"), Some("adv"));
         assert_eq!(a.usize_flag("trials", 0), 2);
+    }
+
+    #[test]
+    fn jobs_flag_parses() {
+        let a = parse_args(&argv("experiment --dataset synthetic --jobs 4"));
+        assert_eq!(a.usize_flag("jobs", 1), 4);
+        let a = parse_args(&argv("experiment --dataset synthetic"));
+        assert_eq!(a.usize_flag("jobs", 1), 1);
     }
 
     #[test]

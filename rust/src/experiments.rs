@@ -10,8 +10,11 @@
 //! * Fig 7 — (raw) mean node utilization
 //! * Fig 8 — all five metrics on the adversarial dataset
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
 use crate::config::ExperimentConfig;
-use crate::coordinator::Variant;
+use crate::coordinator::{DynamicProblem, Variant};
 use crate::json::{self, Value};
 use crate::metrics::{normalize, Metric, MetricRow};
 use crate::report;
@@ -26,11 +29,40 @@ pub struct SweepResult {
     pub rows: Vec<Vec<MetricRow>>,
 }
 
-/// Run the full sweep described by `cfg`.  Every produced schedule is
-/// checked by the §II validator; a violation is a hard panic (the harness
-/// must never report numbers from an invalid schedule).
+/// Run the full sweep described by `cfg` on one thread.  Every produced
+/// schedule is checked by the §II validator; a violation is a hard panic
+/// (the harness must never report numbers from an invalid schedule).
 pub fn run_sweep(cfg: &ExperimentConfig) -> SweepResult {
     run_sweep_with(cfg, |_trial, _variant| {})
+}
+
+/// Generate trial `trial`'s instance, honouring the config's offered
+/// load (the one generation path shared by the serial and parallel
+/// sweeps — `Dataset::instance` would silently pin `DEFAULT_LOAD`).
+fn make_instance(cfg: &ExperimentConfig, trial: usize) -> DynamicProblem {
+    cfg.dataset
+        .instance_opts(cfg.n_graphs, cfg.seed + trial as u64, cfg.load, None)
+}
+
+/// Run one (trial, variant) cell against its trial's shared instance.
+fn run_cell(
+    cfg: &ExperimentConfig,
+    prob: &DynamicProblem,
+    trial: usize,
+    variant: &Variant,
+) -> MetricRow {
+    let seed = cfg.seed + trial as u64;
+    let mut coord = variant.coordinator(seed ^ 0x5EED);
+    let res = coord.run(prob);
+    let viol = validate(&res.schedule, &prob.graphs, &prob.network);
+    assert!(
+        viol.is_empty(),
+        "invalid schedule from {} on {} trial {trial}: {:?}",
+        variant.label(),
+        cfg.dataset.name(),
+        &viol[..viol.len().min(3)]
+    );
+    res.metrics(prob)
 }
 
 /// Like [`run_sweep`] but with a progress callback `(trial, variant_label)`.
@@ -41,28 +73,89 @@ pub fn run_sweep_with(
     let labels: Vec<String> = cfg.variants.iter().map(|v| v.label()).collect();
     let mut rows = Vec::with_capacity(cfg.trials);
     for trial in 0..cfg.trials {
-        let seed = cfg.seed + trial as u64;
-        let prob = cfg.dataset.instance(cfg.n_graphs, seed);
+        let prob = make_instance(cfg, trial);
         let mut row = Vec::with_capacity(cfg.variants.len());
         for v in &cfg.variants {
             progress(trial, &v.label());
-            let mut coord = v.coordinator(seed ^ 0x5EED);
-            let res = coord.run(&prob);
-            let viol = validate(&res.schedule, &prob.graphs, &prob.network);
-            assert!(
-                viol.is_empty(),
-                "invalid schedule from {} on {} trial {trial}: {:?}",
-                v.label(),
-                cfg.dataset.name(),
-                &viol[..viol.len().min(3)]
-            );
-            row.push(res.metrics(&prob));
+            row.push(run_cell(cfg, &prob, trial, v));
         }
         rows.push(row);
     }
     SweepResult {
         config: cfg.clone(),
         labels,
+        rows,
+    }
+}
+
+/// Parallel sweep: fans the (trial × variant) cells out over `jobs`
+/// worker threads and collects the rows **in cell order**, so every
+/// schedule-derived metric is bit-identical to the serial [`run_sweep`]
+/// at any thread count (instances are derived from `cfg.seed + trial`
+/// alone, every variant run is seeded, and each trial's instance is
+/// generated once through a `OnceLock` shared by its cells); only the
+/// measured wall-clock `runtime_s` naturally varies between runs.
+/// The §V.E `sched_runtime_s` metric
+/// stays meaningful under parallelism because the coordinator measures
+/// its own `Instant` span on whichever worker runs the cell — per
+/// coordinator wall time, never wall time of the whole pool.
+///
+/// Std-only by design: the offline build environment has no rayon, so
+/// the fan-out is a `std::thread::scope` work queue over an atomic cell
+/// counter (work-stealing granularity = one cell).
+pub fn run_sweep_parallel(cfg: &ExperimentConfig, jobs: usize) -> SweepResult {
+    let jobs = jobs.max(1);
+    let n_variants = cfg.variants.len();
+    let n_cells = cfg.trials * n_variants;
+    if jobs == 1 || n_cells <= 1 {
+        return run_sweep(cfg);
+    }
+
+    let instances: Vec<OnceLock<DynamicProblem>> =
+        (0..cfg.trials).map(|_| OnceLock::new()).collect();
+    let next_cell = AtomicUsize::new(0);
+    let mut flat: Vec<Option<MetricRow>> = vec![None; n_cells];
+
+    std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..jobs.min(n_cells))
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut done: Vec<(usize, MetricRow)> = Vec::new();
+                    loop {
+                        let cell = next_cell.fetch_add(1, Ordering::Relaxed);
+                        if cell >= n_cells {
+                            break;
+                        }
+                        let trial = cell / n_variants;
+                        let vi = cell % n_variants;
+                        let prob =
+                            instances[trial].get_or_init(|| make_instance(cfg, trial));
+                        done.push((cell, run_cell(cfg, prob, trial, &cfg.variants[vi])));
+                    }
+                    done
+                })
+            })
+            .collect();
+        for w in workers {
+            for (cell, row) in w.join().expect("sweep worker panicked") {
+                flat[cell] = Some(row);
+            }
+        }
+    });
+
+    let mut rows = Vec::with_capacity(cfg.trials);
+    let mut it = flat.into_iter();
+    for _ in 0..cfg.trials {
+        rows.push(
+            (&mut it)
+                .take(n_variants)
+                .map(|r| r.expect("cell not computed"))
+                .collect(),
+        );
+    }
+    SweepResult {
+        config: cfg.clone(),
+        labels: cfg.variants.iter().map(|v| v.label()).collect(),
         rows,
     }
 }
@@ -245,6 +338,45 @@ mod tests {
         assert_eq!(r.rows.len(), 2);
         assert_eq!(r.rows[0].len(), 3);
         assert_eq!(r.labels, vec!["NP-HEFT", "P-HEFT", "2P-HEFT"]);
+    }
+
+    #[test]
+    fn parallel_sweep_is_deterministic_across_thread_counts() {
+        // Every schedule-derived metric must be bit-identical whether the
+        // (trial × variant) cells run on 1 thread or many; only the
+        // wall-clock runtime_s measurement may differ.
+        let mut cfg = tiny_cfg();
+        cfg.trials = 3;
+        cfg.variants.push(Variant::parse("P-MinMin").unwrap());
+        cfg.variants.push(Variant::parse("5P-Random").unwrap());
+        let serial = run_sweep_parallel(&cfg, 1);
+        for jobs in [2, 4, 7] {
+            let parallel = run_sweep_parallel(&cfg, jobs);
+            assert_eq!(serial.labels, parallel.labels);
+            assert_eq!(serial.rows.len(), parallel.rows.len());
+            for (trial, (rs, rp)) in
+                serial.rows.iter().zip(parallel.rows.iter()).enumerate()
+            {
+                assert_eq!(rs.len(), rp.len());
+                for (vi, (s, p)) in rs.iter().zip(rp.iter()).enumerate() {
+                    let sig = |m: &MetricRow| {
+                        (
+                            m.total_makespan.to_bits(),
+                            m.mean_makespan.to_bits(),
+                            m.mean_flowtime.to_bits(),
+                            m.mean_utilization.to_bits(),
+                        )
+                    };
+                    assert_eq!(
+                        sig(s),
+                        sig(p),
+                        "jobs={jobs}, trial {trial}, variant {}",
+                        serial.labels[vi]
+                    );
+                    assert!(p.runtime_s > 0.0, "per-coordinator runtime recorded");
+                }
+            }
+        }
     }
 
     #[test]

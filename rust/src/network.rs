@@ -101,6 +101,16 @@ impl Network {
         }
     }
 
+    /// Row `u` of the link-strength matrix: `comm_time(data, u, v)` is
+    /// `data / row[v]` for `v != u`.  §Perf: the EFT inner loops hold a
+    /// parent's row across all candidate nodes, turning the per-(parent,
+    /// node) lookup into a plain slice index.
+    #[inline]
+    pub fn comm_row(&self, u: usize) -> &[f64] {
+        let n = self.speed.len();
+        &self.link[u * n..(u + 1) * n]
+    }
+
     /// Mean execution time of a `cost` across all nodes — the `w̄(t)` used
     /// by rank computations.
     pub fn mean_exec_time(&self, cost: f64) -> f64 {
@@ -177,6 +187,16 @@ mod tests {
         assert!((n.mean_comm_time(8.0) - 2.0).abs() < 1e-12);
         assert!((n.mean_inv_speed() - 0.75).abs() < 1e-12);
         assert!((n.mean_inv_link() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_row_matches_comm_time() {
+        let n = tiny();
+        let row0 = n.comm_row(0);
+        assert_eq!(row0.len(), 2);
+        assert_eq!(8.0 / row0[1], n.comm_time(8.0, 0, 1));
+        let row1 = n.comm_row(1);
+        assert_eq!(8.0 / row1[0], n.comm_time(8.0, 1, 0));
     }
 
     #[test]

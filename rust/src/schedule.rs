@@ -30,15 +30,30 @@ pub struct Assignment {
 }
 
 /// Per-node sorted interval lists.
+///
+/// §Perf: the structure doubles as its own **undo-log scratch** (the
+/// `TimelineScratch` design): [`Timelines::begin_txn`] starts journaling
+/// insertions, and [`Timelines::rollback_txn`] removes them again in
+/// O(touched · log n) — so speculative composite scheduling costs only
+/// the slots it actually touched, never a full clone of every node's
+/// slot list.  The dynamic coordinator runs base heuristics directly on
+/// the master timelines inside such a transaction instead of cloning.
 #[derive(Clone, Debug, Default)]
 pub struct Timelines {
     slots: Vec<Vec<Slot>>,
+    /// insertion journal `(node, gid, start)`; recording only while
+    /// `txn_active` (the journal Vec is retained across transactions so
+    /// steady-state arrivals allocate nothing).
+    journal: Vec<(usize, Gid, f64)>,
+    txn_active: bool,
 }
 
 impl Timelines {
     pub fn new(n_nodes: usize) -> Self {
         Self {
             slots: vec![Vec::new(); n_nodes],
+            journal: Vec::new(),
+            txn_active: false,
         }
     }
 
@@ -68,10 +83,54 @@ impl Timelines {
             slot
         );
         list.insert(idx, slot);
+        if self.txn_active {
+            self.journal.push((v, slot.gid, slot.start));
+        }
+    }
+
+    /// Start journaling insertions (the undo-log scratch).  Nested
+    /// transactions are not supported; removals while a transaction is
+    /// active are rejected in debug builds (the journal only records
+    /// inserts).
+    pub fn begin_txn(&mut self) {
+        debug_assert!(!self.txn_active, "nested timeline transaction");
+        self.journal.clear();
+        self.txn_active = true;
+    }
+
+    /// Keep every insertion made since [`begin_txn`](Self::begin_txn) and
+    /// stop journaling.
+    pub fn commit_txn(&mut self) {
+        debug_assert!(self.txn_active, "commit without begin_txn");
+        self.journal.clear();
+        self.txn_active = false;
+    }
+
+    /// Remove every insertion made since [`begin_txn`](Self::begin_txn),
+    /// newest first, and stop journaling.  O(touched · log n).
+    pub fn rollback_txn(&mut self) {
+        debug_assert!(self.txn_active, "rollback without begin_txn");
+        self.txn_active = false;
+        while let Some((v, gid, start)) = self.journal.pop() {
+            let removed = self.remove_at(v, gid, start);
+            debug_assert!(removed, "journaled slot {gid} missing on node {v}");
+        }
+    }
+
+    /// Number of insertions journaled by the active transaction.
+    pub fn txn_len(&self) -> usize {
+        if self.txn_active {
+            self.journal.len()
+        } else {
+            0
+        }
     }
 
     /// Remove the slot owned by `gid` on node `v`; true if found.
+    /// O(n) scan — prefer [`remove_at`](Self::remove_at) when the slot's
+    /// start time is known (every [`Assignment`] carries it).
     pub fn remove(&mut self, v: usize, gid: Gid) -> bool {
+        debug_assert!(!self.txn_active, "removal inside a timeline transaction");
         let list = &mut self.slots[v];
         if let Some(i) = list.iter().position(|s| s.gid == gid) {
             list.remove(i);
@@ -79,6 +138,32 @@ impl Timelines {
         } else {
             false
         }
+    }
+
+    /// Remove the slot owned by `gid` on node `v` whose start time is
+    /// `start`, locating it by binary search on the sorted slot list —
+    /// O(log n + equal-start run) instead of [`remove`](Self::remove)'s
+    /// linear scan.  A `gid` present at a *different* start is a caller
+    /// bug (every caller reads `start` off the owning [`Assignment`]):
+    /// debug builds assert on it, release builds report a miss.
+    pub fn remove_at(&mut self, v: usize, gid: Gid, start: f64) -> bool {
+        debug_assert!(!self.txn_active, "removal inside a timeline transaction");
+        let list = &mut self.slots[v];
+        // first slot that could share this start (EPS guard for safety;
+        // starts are stored bit-exact from the owning Assignment)
+        let mut i = list.partition_point(|s| s.start < start - EPS);
+        while i < list.len() && list[i].start <= start + EPS {
+            if list[i].gid == gid {
+                list.remove(i);
+                return true;
+            }
+            i += 1;
+        }
+        debug_assert!(
+            !list.iter().any(|s| s.gid == gid),
+            "remove_at({v}, {gid}, {start}): slot exists at a different start"
+        );
+        false
     }
 
     /// Earliest start >= `ready` at which a task of length `dur` fits into
@@ -143,6 +228,25 @@ impl Schedule {
         &self.timelines
     }
 
+    /// Mutable timeline access for schedulers running **in place** on the
+    /// master schedule (the coordinator hot path: base heuristics insert
+    /// their slots directly, inside a timeline transaction, and the
+    /// coordinator then [`record`](Self::record)s the returned
+    /// assignments).  Callers must keep the map/timeline invariant: every
+    /// slot inserted here must be recorded, or rolled back.
+    pub fn timelines_mut(&mut self) -> &mut Timelines {
+        &mut self.timelines
+    }
+
+    /// Record a placement whose slot was **already inserted** into the
+    /// timelines by an in-place scheduler (see
+    /// [`timelines_mut`](Self::timelines_mut)).  Panics if the task is
+    /// already assigned.
+    pub fn record(&mut self, gid: Gid, a: Assignment) {
+        let prev = self.assign.insert(gid, a);
+        assert!(prev.is_none(), "task {gid} assigned twice");
+    }
+
     pub fn get(&self, gid: Gid) -> Option<&Assignment> {
         self.assign.get(&gid)
     }
@@ -170,9 +274,12 @@ impl Schedule {
     }
 
     /// Revert a placement (preemption). Returns the removed assignment.
+    /// The slot is located by binary search on its known start time
+    /// (§Perf: preemption-heavy policies unassign thousands of tasks per
+    /// run; the old linear `position` scan dominated Last-K reverts).
     pub fn unassign(&mut self, gid: Gid) -> Option<Assignment> {
         let a = self.assign.remove(&gid)?;
-        let removed = self.timelines.remove(a.node, gid);
+        let removed = self.timelines.remove_at(a.node, gid, a.start);
         debug_assert!(removed, "assignment map and timelines out of sync");
         Some(a)
     }
@@ -309,6 +416,73 @@ mod tests {
         assert_eq!(tl.node_slots(0).len(), 2);
         assert!((tl.busy_time(0) - 3.0).abs() < 1e-12);
         assert_eq!(tl.max_finish(), 6.0);
+    }
+
+    #[test]
+    fn remove_at_finds_slot_by_binary_search() {
+        let mut tl = Timelines::new(1);
+        for i in 0..100 {
+            let t = i as f64 * 2.0;
+            tl.insert(0, Slot { start: t, finish: t + 1.0, gid: gid(i) });
+        }
+        assert!(tl.remove_at(0, gid(37), 74.0));
+        assert!(!tl.remove_at(0, gid(37), 74.0), "already removed");
+        assert_eq!(tl.node_slots(0).len(), 99);
+        // wrong gid at an occupied start: not removed
+        assert!(!tl.remove_at(0, gid(999), 10.0));
+        assert_eq!(tl.node_slots(0).len(), 99);
+    }
+
+    #[test]
+    fn remove_at_handles_equal_start_runs() {
+        // zero-duration slots sharing a start: each removable by gid
+        let mut tl = Timelines::new(1);
+        tl.insert(0, Slot { start: 5.0, finish: 5.0, gid: gid(0) });
+        tl.insert(0, Slot { start: 5.0, finish: 5.0, gid: gid(1) });
+        tl.insert(0, Slot { start: 5.0, finish: 5.0, gid: gid(2) });
+        assert!(tl.remove_at(0, gid(1), 5.0));
+        assert!(tl.remove_at(0, gid(2), 5.0));
+        assert!(tl.remove_at(0, gid(0), 5.0));
+        assert!(tl.node_slots(0).is_empty());
+    }
+
+    #[test]
+    fn txn_rollback_removes_only_journaled_slots() {
+        let mut tl = Timelines::new(2);
+        tl.insert(0, Slot { start: 0.0, finish: 2.0, gid: gid(0) });
+        tl.begin_txn();
+        tl.insert(0, Slot { start: 3.0, finish: 4.0, gid: gid(1) });
+        tl.insert(1, Slot { start: 0.0, finish: 5.0, gid: gid(2) });
+        assert_eq!(tl.txn_len(), 2);
+        tl.rollback_txn();
+        assert_eq!(tl.txn_len(), 0);
+        assert_eq!(tl.node_slots(0).len(), 1, "pre-txn slot survives");
+        assert_eq!(tl.node_slots(0)[0].gid, gid(0));
+        assert!(tl.node_slots(1).is_empty());
+        // a fresh transaction can commit
+        tl.begin_txn();
+        tl.insert(1, Slot { start: 1.0, finish: 2.0, gid: gid(3) });
+        tl.commit_txn();
+        assert_eq!(tl.node_slots(1).len(), 1);
+    }
+
+    #[test]
+    fn record_after_inplace_insert_matches_assign() {
+        // the coordinator's in-place path: scheduler inserts the slot,
+        // coordinator records the assignment — equivalent to assign().
+        let a = Assignment { node: 0, start: 1.0, finish: 3.0 };
+        let mut s1 = Schedule::new(1);
+        s1.assign(gid(0), a);
+        let mut s2 = Schedule::new(1);
+        s2.timelines_mut().insert(
+            0,
+            Slot { start: a.start, finish: a.finish, gid: gid(0) },
+        );
+        s2.record(gid(0), a);
+        assert_eq!(s1.get(gid(0)), s2.get(gid(0)));
+        assert_eq!(s1.timelines().node_slots(0), s2.timelines().node_slots(0));
+        assert_eq!(s2.unassign(gid(0)), Some(a));
+        assert!(s2.timelines().node_slots(0).is_empty());
     }
 
     #[test]

@@ -14,22 +14,18 @@
 use crate::network::Network;
 use crate::schedule::{Assignment, Slot, Timelines};
 
-use super::common::eft_on_node;
+use super::common::{EftRows, EftScratch};
 use super::{Pred, Problem, Scheduler};
 
 /// Shared ready-queue driver: `place` picks the (task, assignment) to
-/// commit from the current ready set.
+/// commit from the current ready set.  Ready-time rows are cached in a
+/// shared [`EftRows`] — §Perf: the baselines' inner loops previously
+/// re-walked predecessor lists per (ready task × node) per round.
 fn drive(
     prob: &Problem,
     net: &Network,
     timelines: &mut Timelines,
-    mut place: impl FnMut(
-        &[usize],
-        &Problem,
-        &Network,
-        &Timelines,
-        &[Option<Assignment>],
-    ) -> (usize, Assignment),
+    mut place: impl FnMut(&[usize], &Problem, &Network, &Timelines, &EftRows) -> (usize, Assignment),
 ) -> Vec<Assignment> {
     let n = prob.n_tasks();
     let mut partial: Vec<Option<Assignment>> = vec![None; n];
@@ -44,9 +40,14 @@ fn drive(
         })
         .collect();
     let mut ready: Vec<usize> = (0..n).filter(|&i| missing[i] == 0).collect();
+    let mut rows = EftRows::new(n, net.n_nodes());
+    let mut scratch = EftScratch::new();
+    for &i in &ready {
+        rows.fill(prob, i, net, &partial, &mut scratch);
+    }
     let mut placed = 0;
     while !ready.is_empty() {
-        let (i, a) = place(&ready, prob, net, timelines, &partial);
+        let (i, a) = place(&ready, prob, net, timelines, &rows);
         timelines.insert(
             a.node,
             Slot {
@@ -61,6 +62,7 @@ fn drive(
         for &(c, _) in &prob.tasks[i].succs {
             missing[c] -= 1;
             if missing[c] == 0 {
+                rows.fill(prob, c, net, &partial, &mut scratch);
                 ready.push(c);
             }
         }
@@ -83,7 +85,7 @@ impl Scheduler for Met {
         net: &Network,
         timelines: &mut Timelines,
     ) -> Vec<Assignment> {
-        drive(prob, net, timelines, |ready, prob, net, tl, partial| {
+        drive(prob, net, timelines, |ready, prob, net, tl, rows| {
             // first ready task (FIFO by gid for determinism), fastest node
             let &i = ready
                 .iter()
@@ -97,7 +99,7 @@ impl Scheduler for Met {
                         .then(a.cmp(&b))
                 })
                 .unwrap();
-            (i, eft_on_node(prob, i, v, net, tl, partial))
+            (i, rows.eft(prob, net, tl, i, v))
         })
     }
 }
@@ -116,7 +118,7 @@ impl Scheduler for Olb {
         net: &Network,
         timelines: &mut Timelines,
     ) -> Vec<Assignment> {
-        drive(prob, net, timelines, |ready, prob, net, tl, partial| {
+        drive(prob, net, timelines, |ready, prob, net, tl, rows| {
             let &i = ready
                 .iter()
                 .min_by_key(|&&i| prob.tasks[i].gid)
@@ -124,7 +126,7 @@ impl Scheduler for Olb {
             // node where the task can *start* soonest (availability only —
             // execution speed deliberately ignored when choosing)
             let a = (0..net.n_nodes())
-                .map(|v| eft_on_node(prob, i, v, net, tl, partial))
+                .map(|v| rows.eft(prob, net, tl, i, v))
                 .min_by(|x, y| {
                     x.start
                         .partial_cmp(&y.start)
@@ -151,11 +153,11 @@ impl Scheduler for Etf {
         net: &Network,
         timelines: &mut Timelines,
     ) -> Vec<Assignment> {
-        drive(prob, net, timelines, |ready, prob, net, tl, partial| {
+        drive(prob, net, timelines, |ready, prob, net, tl, rows| {
             let mut best: Option<(usize, Assignment)> = None;
             for &i in ready {
                 for v in 0..net.n_nodes() {
-                    let a = eft_on_node(prob, i, v, net, tl, partial);
+                    let a = rows.eft(prob, net, tl, i, v);
                     let better = match &best {
                         None => true,
                         Some((bi, ba)) => {

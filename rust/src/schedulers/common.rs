@@ -28,20 +28,12 @@ impl Ord for OrdF64 {
 pub fn topo_order(prob: &Problem) -> Vec<usize> {
     let n = prob.n_tasks();
     let mut indeg = vec![0usize; n];
-    for t in &prob.tasks {
-        for p in &t.preds {
-            if let Pred::Pending { .. } = p {
-                // counted below per-task
-            }
-        }
-    }
-    for (_i, t) in prob.tasks.iter().enumerate() {
-        let d = t
+    for (i, t) in prob.tasks.iter().enumerate() {
+        indeg[i] = t
             .preds
             .iter()
             .filter(|p| matches!(p, Pred::Pending { .. }))
             .count();
-        indeg[_i] = d;
     }
     let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
     let mut out = Vec::with_capacity(n);
@@ -119,6 +111,27 @@ pub fn ready_time(
     ready
 }
 
+/// Insertion-based EFT on node `v` of a task with compute cost `cost`
+/// whose data-ready time there is already known — the single shared
+/// assembly of the paper's EFT formula (every scheduler path routes
+/// through here, so the insertion policy lives in exactly one place).
+#[inline]
+pub fn eft_at(
+    ready: f64,
+    cost: f64,
+    v: usize,
+    net: &Network,
+    timelines: &Timelines,
+) -> Assignment {
+    let dur = net.exec_time(cost, v);
+    let start = timelines.earliest_start(v, ready, dur);
+    Assignment {
+        node: v,
+        start,
+        finish: start + dur,
+    }
+}
+
 /// Insertion-based EFT of pending task `i` on node `v`.
 pub fn eft_on_node(
     prob: &Problem,
@@ -129,17 +142,17 @@ pub fn eft_on_node(
     partial: &[Option<Assignment>],
 ) -> Assignment {
     let ready = ready_time(prob, i, v, net, partial);
-    let dur = net.exec_time(prob.tasks[i].cost, v);
-    let start = timelines.earliest_start(v, ready, dur);
-    Assignment {
-        node: v,
-        start,
-        finish: start + dur,
-    }
+    eft_at(ready, prob.tasks[i].cost, v, net, timelines)
 }
 
 /// Minimum-EFT placement of task `i` across all nodes (ties: lowest node
 /// id, for determinism).
+///
+/// This is the uncached reference formulation: it re-walks `i`'s
+/// predecessor list once **per candidate node** (preds × nodes work).
+/// The hot paths use [`EftScratch`] + [`min_eft_cached`] instead, which
+/// produce bit-identical assignments (see the
+/// `cached_eft_matches_reference` test) at preds + nodes cost.
 pub fn min_eft(
     prob: &Problem,
     i: usize,
@@ -150,6 +163,168 @@ pub fn min_eft(
     let mut best: Option<Assignment> = None;
     for v in 0..net.n_nodes() {
         let a = eft_on_node(prob, i, v, net, timelines, partial);
+        if best.map_or(true, |b| a.finish < b.finish) {
+            best = Some(a);
+        }
+    }
+    best.expect("network has no nodes")
+}
+
+/// Reusable EFT workspace (§Perf): a task's data-ready time on node `v`
+/// depends only on its parents' placements — which are final by the time
+/// the task is evaluated (list schedulers only evaluate *ready* tasks) —
+/// never on the timelines.  So the parent `(node, finish, data)` triples
+/// are gathered **once** per task, and the per-node ready times are
+/// computed parent-major with the parent's cached [`Network::comm_row`],
+/// instead of re-walking the predecessor list for every candidate node.
+/// Both buffers are reused across tasks: steady state allocates nothing.
+#[derive(Debug, Default)]
+pub struct EftScratch {
+    /// parent placements `(node, finish, data)` of the loaded task
+    parents: Vec<(usize, f64, f64)>,
+    /// data-ready time of the loaded task per node
+    ready: Vec<f64>,
+}
+
+impl EftScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Gather task `i`'s parent triples and compute its ready time on
+    /// every node.  Pending parents must already be placed in `partial`.
+    pub fn load(
+        &mut self,
+        prob: &Problem,
+        i: usize,
+        net: &Network,
+        partial: &[Option<Assignment>],
+    ) {
+        let t = &prob.tasks[i];
+        self.parents.clear();
+        for p in &t.preds {
+            match *p {
+                Pred::Pending { idx, data } => {
+                    let a = partial[idx].expect("pending parent not yet placed");
+                    self.parents.push((a.node, a.finish, data));
+                }
+                Pred::Fixed { node, finish, data } => {
+                    self.parents.push((node, finish, data));
+                }
+            }
+        }
+        let n = net.n_nodes();
+        self.ready.clear();
+        self.ready.resize(n, t.ready);
+        for &(u, finish, data) in &self.parents {
+            let row = net.comm_row(u);
+            for (v, r) in self.ready.iter_mut().enumerate() {
+                let arrival = finish + if u == v { 0.0 } else { data / row[v] };
+                if arrival > *r {
+                    *r = arrival;
+                }
+            }
+        }
+    }
+
+    /// Ready time of the loaded task on node `v` (bit-identical to
+    /// [`ready_time`], which is max-folded from the same values).
+    #[inline]
+    pub fn ready_on(&self, v: usize) -> f64 {
+        self.ready[v]
+    }
+
+    /// All per-node ready times of the loaded task.
+    #[inline]
+    pub fn ready_row(&self) -> &[f64] {
+        &self.ready
+    }
+}
+
+/// Flattened per-task ready-time rows for schedulers that keep many
+/// tasks "ready" at once (MinMin/MaxMin, MET/OLB/ETF): row `i` is
+/// filled exactly once — when task `i` becomes ready, its parents being
+/// final from then on — and probed as `ready_on(i, v)` by every later
+/// EFT evaluation.  One buffer per `schedule()` call, like the
+/// schedulers' other per-call vectors (`partial`, heaps, EFT caches).
+///
+/// Tradeoff: filling a row costs O(preds × nodes) up front; schedulers
+/// that probe a single node per task (MET) pay slightly more here than
+/// a one-node `ready_time` walk, in exchange for every multi-node
+/// scheduler sharing one implementation.
+pub struct EftRows {
+    ready: Vec<f64>,
+    n_nodes: usize,
+}
+
+impl EftRows {
+    pub fn new(n_tasks: usize, n_nodes: usize) -> Self {
+        Self {
+            ready: vec![0.0; n_tasks * n_nodes],
+            n_nodes,
+        }
+    }
+
+    /// Fill task `i`'s row from its (final) parents via `scratch`.
+    pub fn fill(
+        &mut self,
+        prob: &Problem,
+        i: usize,
+        net: &Network,
+        partial: &[Option<Assignment>],
+        scratch: &mut EftScratch,
+    ) {
+        scratch.load(prob, i, net, partial);
+        self.ready[i * self.n_nodes..(i + 1) * self.n_nodes]
+            .copy_from_slice(scratch.ready_row());
+    }
+
+    /// Cached data-ready time of task `i` on node `v`.
+    #[inline]
+    pub fn ready_on(&self, i: usize, v: usize) -> f64 {
+        self.ready[i * self.n_nodes + v]
+    }
+
+    /// Insertion-based EFT of ready task `i` on node `v`.
+    #[inline]
+    pub fn eft(
+        &self,
+        prob: &Problem,
+        net: &Network,
+        timelines: &Timelines,
+        i: usize,
+        v: usize,
+    ) -> Assignment {
+        eft_at(self.ready_on(i, v), prob.tasks[i].cost, v, net, timelines)
+    }
+}
+
+/// Insertion-based EFT of the task loaded into `scratch` on node `v`.
+#[inline]
+pub fn eft_on_node_cached(
+    scratch: &EftScratch,
+    prob: &Problem,
+    i: usize,
+    v: usize,
+    net: &Network,
+    timelines: &Timelines,
+) -> Assignment {
+    eft_at(scratch.ready_on(v), prob.tasks[i].cost, v, net, timelines)
+}
+
+/// Minimum-EFT placement of the task loaded into `scratch` across all
+/// nodes — the cached counterpart of [`min_eft`] (same tie-break: lowest
+/// node id wins).
+pub fn min_eft_cached(
+    scratch: &EftScratch,
+    prob: &Problem,
+    i: usize,
+    net: &Network,
+    timelines: &Timelines,
+) -> Assignment {
+    let mut best: Option<Assignment> = None;
+    for v in 0..net.n_nodes() {
+        let a = eft_on_node_cached(scratch, prob, i, v, net, timelines);
         if best.map_or(true, |b| a.finish < b.finish) {
             best = Some(a);
         }
@@ -281,6 +456,78 @@ mod tests {
         let (w, sc) = mean_costs(&p, &net);
         assert!((w[0] - 10.0 * 0.75).abs() < 1e-12);
         assert!((sc[0][0].1 - 2.0 * 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cached_eft_matches_reference() {
+        // Property test: on random DAGs (with random Fixed preds mixed
+        // in), placing tasks in topo order via the cached EFT path must
+        // be bit-identical to the reference preds×nodes formulation.
+        use crate::network::Network;
+        use crate::prng::Xoshiro256pp;
+        use crate::schedule::Slot;
+        let mut rng = Xoshiro256pp::seed_from_u64(2024);
+        for case in 0..40 {
+            let n = rng.int_range(1, 25);
+            let mut b = GraphBuilder::new("rand");
+            let ids: Vec<_> = (0..n).map(|_| b.task(rng.uniform(0.5, 15.0))).collect();
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    if rng.next_f64() < 0.2 {
+                        b.edge(ids[i], ids[j], rng.uniform(0.0, 6.0));
+                    }
+                }
+            }
+            let mut prob = problem_from_graph(&b.build().unwrap(), 0, rng.uniform(0.0, 4.0));
+            let n_nodes = rng.int_range(1, 6);
+            let dist = crate::stats::TruncatedGaussian::new(1.0, 0.3, 0.4, 2.0);
+            let net = Network::generate(n_nodes, &dist, &dist, &mut rng);
+            // sprinkle committed parents
+            for t in prob.tasks.iter_mut() {
+                if rng.next_f64() < 0.3 {
+                    t.preds.push(Pred::Fixed {
+                        node: rng.below(n_nodes),
+                        finish: rng.uniform(0.0, 20.0),
+                        data: rng.uniform(0.0, 5.0),
+                    });
+                }
+            }
+
+            let order = topo_order(&prob);
+            let mut tl_ref = Timelines::new(n_nodes);
+            let mut tl_new = Timelines::new(n_nodes);
+            let mut partial_ref: Vec<Option<Assignment>> = vec![None; prob.n_tasks()];
+            let mut partial_new: Vec<Option<Assignment>> = vec![None; prob.n_tasks()];
+            let mut scratch = EftScratch::new();
+            for &i in &order {
+                let a_ref = min_eft(&prob, i, &net, &tl_ref, &partial_ref);
+                scratch.load(&prob, i, &net, &partial_new);
+                let a_new = min_eft_cached(&scratch, &prob, i, &net, &tl_new);
+                assert_eq!(
+                    (a_ref.node, a_ref.start.to_bits(), a_ref.finish.to_bits()),
+                    (a_new.node, a_new.start.to_bits(), a_new.finish.to_bits()),
+                    "case {case}, task {i}"
+                );
+                // also the per-node ready times must agree bit-exactly
+                for v in 0..n_nodes {
+                    let r = ready_time(&prob, i, v, &net, &partial_ref);
+                    assert_eq!(
+                        r.to_bits(),
+                        scratch.ready_on(v).to_bits(),
+                        "case {case}, task {i}, node {v}"
+                    );
+                }
+                let slot = Slot {
+                    start: a_ref.start,
+                    finish: a_ref.finish,
+                    gid: prob.tasks[i].gid,
+                };
+                tl_ref.insert(a_ref.node, slot);
+                tl_new.insert(a_new.node, slot);
+                partial_ref[i] = Some(a_ref);
+                partial_new[i] = Some(a_new);
+            }
+        }
     }
 
     #[test]

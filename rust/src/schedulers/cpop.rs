@@ -12,7 +12,7 @@ use std::collections::BinaryHeap;
 use crate::network::Network;
 use crate::schedule::{Assignment, Slot, Timelines};
 
-use super::common::{components, eft_on_node, min_eft, OrdF64};
+use super::common::{components, eft_on_node_cached, min_eft_cached, EftScratch, OrdF64};
 use super::rank::RankProvider;
 use super::{Pred, Problem, Scheduler};
 
@@ -170,11 +170,13 @@ impl<R: RankProvider> Scheduler for Cpop<R> {
         }
 
         let mut placed = 0;
+        let mut scratch = EftScratch::new();
         while let Some((_, _, i)) = heap.pop() {
+            scratch.load(prob, i, net, &partial);
             let a = if is_cp[i] {
-                eft_on_node(prob, i, cp_node[comp[i]], net, timelines, &partial)
+                eft_on_node_cached(&scratch, prob, i, cp_node[comp[i]], net, timelines)
             } else {
-                min_eft(prob, i, net, timelines, &partial)
+                min_eft_cached(&scratch, prob, i, net, timelines)
             };
             timelines.insert(
                 a.node,

@@ -14,7 +14,7 @@ use std::collections::BinaryHeap;
 use crate::network::Network;
 use crate::schedule::{Assignment, Slot, Timelines};
 
-use super::common::{min_eft, OrdF64};
+use super::common::{min_eft_cached, EftScratch, OrdF64};
 use super::rank::RankProvider;
 use super::{Pred, Problem, Scheduler};
 
@@ -68,8 +68,10 @@ impl<R: RankProvider> Scheduler for Heft<R> {
         }
 
         let mut placed = 0;
+        let mut scratch = EftScratch::new();
         while let Some((_, _, i)) = heap.pop() {
-            let a = min_eft(prob, i, net, timelines, &partial);
+            scratch.load(prob, i, net, &partial);
+            let a = min_eft_cached(&scratch, prob, i, net, timelines);
             timelines.insert(
                 a.node,
                 Slot {

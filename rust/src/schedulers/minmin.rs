@@ -6,7 +6,9 @@
 use crate::network::Network;
 use crate::schedule::{Assignment, Slot, Timelines};
 
-use super::common::{eft_on_node, min_eft};
+use super::common::{EftRows, EftScratch};
+#[cfg(test)]
+use super::common::min_eft;
 use super::{Pred, Problem, Scheduler};
 
 pub struct MinMin;
@@ -56,32 +58,48 @@ pub(super) fn schedule_mct(
         })
         .collect();
 
-    // flattened ready×node EFT cache + per-task best placement
+    // flattened ready×node EFT cache + per-task best placement, plus the
+    // per-task ready-time rows (parents are final once a task is ready,
+    // so its row is computed exactly once via EftRows and reused by
+    // every later column refresh)
     let mut eft: Vec<Assignment> = vec![
         Assignment { node: 0, start: 0.0, finish: 0.0 };
         n * n_nodes
     ];
     let mut best: Vec<Assignment> = vec![Assignment { node: 0, start: 0.0, finish: 0.0 }; n];
+    let mut rows = EftRows::new(n, n_nodes);
+    let mut scratch = EftScratch::new();
 
-    let fill_row = |i: usize,
-                    timelines: &Timelines,
-                    partial: &[Option<Assignment>],
-                    eft: &mut [Assignment],
-                    best: &mut [Assignment]| {
+    #[allow(clippy::too_many_arguments)]
+    fn fill_row(
+        prob: &Problem,
+        net: &Network,
+        i: usize,
+        timelines: &Timelines,
+        partial: &[Option<Assignment>],
+        scratch: &mut EftScratch,
+        rows: &mut EftRows,
+        eft: &mut [Assignment],
+        best: &mut [Assignment],
+    ) {
+        let n_nodes = net.n_nodes();
+        rows.fill(prob, i, net, partial, scratch);
         let mut b: Option<Assignment> = None;
         for v in 0..n_nodes {
-            let a = eft_on_node(prob, i, v, net, timelines, partial);
+            let a = rows.eft(prob, net, timelines, i, v);
             eft[i * n_nodes + v] = a;
             if b.map_or(true, |x| a.finish < x.finish) {
                 b = Some(a);
             }
         }
         best[i] = b.expect("network has no nodes");
-    };
+    }
 
     let mut ready: Vec<usize> = (0..n).filter(|&i| missing[i] == 0).collect();
     for &i in &ready {
-        fill_row(i, timelines, &partial, &mut eft, &mut best);
+        fill_row(
+            prob, net, i, timelines, &partial, &mut scratch, &mut rows, &mut eft, &mut best,
+        );
     }
 
     let mut placed = 0;
@@ -120,14 +138,18 @@ pub(super) fn schedule_mct(
             missing[c] -= 1;
             if missing[c] == 0 {
                 ready.push(c);
-                fill_row(c, timelines, &partial, &mut eft, &mut best);
+                fill_row(
+                    prob, net, c, timelines, &partial, &mut scratch, &mut rows, &mut eft,
+                    &mut best,
+                );
             }
         }
 
-        // only the column of the assigned node is stale for the rest
+        // only the column of the assigned node is stale for the rest;
+        // the cached ready row makes the refresh a pure gap-finder probe
         let vstar = a.node;
         for &j in &ready {
-            let fresh = eft_on_node(prob, j, vstar, net, timelines, &partial);
+            let fresh = rows.eft(prob, net, timelines, j, vstar);
             eft[j * n_nodes + vstar] = fresh;
             if best[j].node == vstar {
                 // previous best may have been displaced: re-min the row

@@ -40,7 +40,7 @@ pub enum Pred {
 }
 
 /// One pending task of a composite problem.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PTask {
     pub gid: Gid,
     /// compute cost `c(t)`
@@ -53,7 +53,7 @@ pub struct PTask {
 }
 
 /// The merged multi-component instance handed to a heuristic.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Problem {
     pub tasks: Vec<PTask>,
 }
