@@ -19,6 +19,7 @@ use dts::graph::Gid;
 use dts::json;
 use dts::schedule::{Slot, Timelines};
 use dts::schedulers::SchedulerKind;
+use dts::sim::{Reaction, ReactiveCoordinator, SimConfig};
 use dts::workloads::Dataset;
 
 /// Collected (name, mean, min, max) rows for the JSON dump.
@@ -73,6 +74,39 @@ fn main() {
                 max,
             );
         }
+    }
+
+    // 1b. reactive runtime end-to-end (§Reactive rows): realized
+    // durations under σ=0.3 noise, straggler-triggered Last-K
+    // rescheduling vs the no-reaction baseline.  Tracks the full event
+    // loop + belief refresh + in-place replans.
+    for (name, reaction) in [
+        ("no-reaction", Reaction::None),
+        (
+            "L3@0.25",
+            Reaction::LastK {
+                k: 3,
+                threshold: 0.25,
+            },
+        ),
+    ] {
+        let cfg = SimConfig {
+            noise_std: 0.3,
+            noise_seed: 1,
+            reaction,
+            record_frozen: false,
+        };
+        let (mean, min, max) = util::time_it(1, 3, || {
+            let mut rc =
+                ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
+            std::hint::black_box(rc.run(&prob));
+        });
+        rec.report(
+            &format!("reactive 5P-HEFT σ0.3 {name} synthetic×100"),
+            mean,
+            min,
+            max,
+        );
     }
 
     // 2. the biggest single composite problem a preemptive run sees

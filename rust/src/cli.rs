@@ -12,11 +12,11 @@ use std::collections::HashMap;
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::{Coordinator, Variant};
-use crate::experiments::run_sweep_parallel;
+use crate::experiments::{run_sim_sweep_parallel, run_sweep_parallel, SimScenario, SimSweepConfig};
 use crate::metrics::Metric;
 use crate::schedule::validate;
 use crate::schedulers::{Cpop, Heft};
-use crate::sim::replay;
+use crate::sim::{replay, Reaction};
 use crate::workloads::Dataset;
 use crate::{report, runtime};
 
@@ -71,6 +71,11 @@ USAGE:
   dts run        --dataset <d> [--graphs N] [--seed S] [--variant 5P-HEFT] [--xla]
   dts experiment [--config cfg.json | --dataset <d>] [--quick] [--csv out.csv]
                  [--jobs N]   (N worker threads; deterministic at any N)
+  dts simulate   --dataset <d|all> [--graphs N] [--trials T] [--seed S]
+                 [--variant 5P-HEFT] [--noise 0.0,0.3] [--threshold 0.25,none]
+                 [--k 3] [--jobs N] [--csv out.csv] [--json out.json]
+                 [--trace out.json]
+                 (reactive runtime: realized durations, straggler Last-K)
   dts generate   --dataset <d> [--graphs N] [--seed S] [--dot]
   dts validate   --dataset <d> [--graphs N] [--seed S] [--variant V]
   dts analyze    --dataset <d> [--graphs N] [--seed S] [--variant V]
@@ -87,6 +92,7 @@ pub fn main_with(argv: &[String]) -> i32 {
     match args.positional.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&args),
         Some("experiment") => cmd_experiment(&args),
+        Some("simulate") => cmd_simulate(&args),
         Some("generate") => cmd_generate(&args),
         Some("validate") => cmd_validate(&args),
         Some("analyze") => cmd_analyze(&args),
@@ -204,6 +210,196 @@ fn cmd_experiment(args: &Args) -> i32 {
             return 1;
         }
         eprintln!("wrote {path}");
+    }
+    0
+}
+
+/// Comma-separated f64 list (`"0.0,0.3"`).
+fn parse_f64_list(s: &str) -> Option<Vec<f64>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        out.push(p.parse::<f64>().ok()?);
+    }
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+/// Comma-separated straggler thresholds; `none` selects the no-reaction
+/// baseline (`"0.25,none"`).
+fn parse_threshold_list(s: &str) -> Option<Vec<Option<f64>>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        if p.eq_ignore_ascii_case("none") {
+            out.push(None);
+        } else {
+            out.push(Some(p.parse::<f64>().ok()?));
+        }
+    }
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let datasets: Vec<Dataset> = match args.flag("dataset") {
+        Some("all") => Dataset::ALL.to_vec(),
+        Some(s) => match Dataset::parse(s) {
+            Some(d) => vec![d],
+            None => {
+                eprintln!("error: bad --dataset '{s}'");
+                return 2;
+            }
+        },
+        None => {
+            eprintln!(
+                "error: --dataset required (synthetic|riotbench|wfcommons|adversarial|all)"
+            );
+            return 2;
+        }
+    };
+    let label = args.flag("variant").unwrap_or("5P-HEFT");
+    let Some(variant) = Variant::parse(label) else {
+        eprintln!("error: bad --variant '{label}'");
+        return 2;
+    };
+    let Some(noise) = parse_f64_list(args.flag("noise").unwrap_or("0.0,0.3")) else {
+        eprintln!("error: bad --noise list (want e.g. 0.0,0.3)");
+        return 2;
+    };
+    if noise.iter().any(|x| !x.is_finite() || *x < 0.0) {
+        eprintln!("error: --noise values must be finite and >= 0");
+        return 2;
+    }
+    let Some(thresholds) = parse_threshold_list(args.flag("threshold").unwrap_or("0.25,none"))
+    else {
+        eprintln!("error: bad --threshold list (want e.g. 0.25,none)");
+        return 2;
+    };
+    if thresholds.iter().flatten().any(|t| !t.is_finite() || *t < 0.0) {
+        eprintln!("error: --threshold values must be finite and >= 0 (or 'none')");
+        return 2;
+    }
+    let k = args.usize_flag("k", 3);
+    let mut scenarios = Vec::new();
+    for &sigma in &noise {
+        for th in &thresholds {
+            scenarios.push(SimScenario {
+                noise_std: sigma,
+                reaction: match th {
+                    None => Reaction::None,
+                    Some(t) => Reaction::LastK { k, threshold: *t },
+                },
+            });
+        }
+    }
+    let trials = args.usize_flag("trials", 2);
+    let seed = args.u64_flag("seed", 0);
+    let graphs = args.usize_flag("graphs", 16);
+
+    let mut csv_out = String::new();
+    let mut json_parts = Vec::new();
+    for (di, dataset) in datasets.iter().enumerate() {
+        let cfg = SimSweepConfig {
+            dataset: *dataset,
+            n_graphs: graphs,
+            trials,
+            seed,
+            load: crate::workloads::DEFAULT_LOAD,
+            variant,
+            scenarios: scenarios.clone(),
+        };
+        let n_cells = cfg.trials * cfg.scenarios.len();
+        let jobs = args.usize_flag("jobs", 1).clamp(1, n_cells.max(1));
+        eprintln!(
+            "simulate: {} × {} scenarios × {} trials ({} graphs, {}, {} job{})",
+            dataset.name(),
+            cfg.scenarios.len(),
+            cfg.trials,
+            cfg.n_graphs,
+            variant.label(),
+            jobs,
+            if jobs == 1 { "" } else { "s" }
+        );
+        let result = run_sim_sweep_parallel(&cfg, jobs);
+        println!("\n## {} — reactive runtime, {}\n", dataset.name(), variant.label());
+        println!("{}", result.summary_table());
+        let csv = result.to_csv();
+        if di == 0 {
+            csv_out.push_str(&csv);
+        } else {
+            for line in csv.lines().skip(1) {
+                csv_out.push_str(line);
+                csv_out.push('\n');
+            }
+        }
+        json_parts.push(result.to_json());
+    }
+
+    if let Some(path) = args.flag("csv") {
+        if let Err(e) = std::fs::write(path, &csv_out) {
+            eprintln!("error writing {path}: {e}");
+            return 1;
+        }
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = args.flag("json") {
+        let v = crate::json::arr(json_parts);
+        if let Err(e) = std::fs::write(path, v.to_string()) {
+            eprintln!("error writing {path}: {e}");
+            return 1;
+        }
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = args.flag("trace") {
+        // one representative realized-event trace: the first dataset
+        // under the noisiest reactive scenario (or the first scenario
+        // when none reacts)
+        let sc = scenarios
+            .iter()
+            .filter(|s| s.reaction != Reaction::None && s.noise_std > 0.0)
+            .cloned()
+            .fold(None::<SimScenario>, |best, s| match best {
+                Some(b) if b.noise_std >= s.noise_std => Some(b),
+                _ => Some(s),
+            })
+            .unwrap_or(scenarios[0]);
+        let prob = datasets[0].instance_opts(graphs, seed, crate::workloads::DEFAULT_LOAD, None);
+        let sim_cfg = crate::sim::SimConfig {
+            noise_std: sc.noise_std,
+            noise_seed: seed ^ 0xA11CE,
+            reaction: sc.reaction,
+            record_frozen: false,
+        };
+        let mut rc = crate::sim::ReactiveCoordinator::new(
+            variant.policy,
+            variant.kind.make(seed ^ 0x5EED),
+            sim_cfg,
+        );
+        let res = rc.run(&prob);
+        let v = crate::trace::sim_to_json(&prob, &res);
+        if let Err(e) = std::fs::write(path, v.to_string()) {
+            eprintln!("error writing {path}: {e}");
+            return 1;
+        }
+        eprintln!(
+            "wrote {path} ({} events, {} replans under {})",
+            res.log.len(),
+            res.n_replans(),
+            sc.label()
+        );
     }
     0
 }
@@ -390,6 +586,56 @@ mod tests {
             0
         );
         assert_eq!(main_with(&argv("generate --dataset riotbench --graphs 5")), 0);
+    }
+
+    #[test]
+    fn simulate_smoke() {
+        assert_eq!(
+            main_with(&argv(
+                "simulate --dataset synthetic --graphs 5 --trials 1 \
+                 --noise 0.0,0.4 --threshold 0.2,none --k 2 --jobs 2"
+            )),
+            0
+        );
+    }
+
+    #[test]
+    fn simulate_rejects_bad_input() {
+        assert_eq!(main_with(&argv("simulate --dataset nope")), 2);
+        assert_eq!(main_with(&argv("simulate")), 2);
+        assert_eq!(
+            main_with(&argv("simulate --dataset synthetic --noise abc")),
+            2
+        );
+        assert_eq!(
+            main_with(&argv("simulate --dataset synthetic --threshold wat")),
+            2
+        );
+        assert_eq!(
+            main_with(&argv("simulate --dataset synthetic --noise -0.3")),
+            2
+        );
+        assert_eq!(
+            main_with(&argv("simulate --dataset synthetic --threshold nan")),
+            2
+        );
+        assert_eq!(
+            main_with(&argv("simulate --dataset synthetic --variant WAT")),
+            2
+        );
+    }
+
+    #[test]
+    fn scenario_lists_parse() {
+        assert_eq!(
+            parse_threshold_list("0.25,none"),
+            Some(vec![Some(0.25), None])
+        );
+        assert_eq!(parse_threshold_list("NONE"), Some(vec![None]));
+        assert!(parse_threshold_list("x").is_none());
+        assert_eq!(parse_f64_list("0.1, 0.2"), Some(vec![0.1, 0.2]));
+        assert!(parse_f64_list("").is_none());
+        assert!(parse_f64_list("1.0,zz").is_none());
     }
 
     #[test]

@@ -52,8 +52,9 @@ impl Policy {
     }
 
     /// How many of the most recent earlier graphs are revertible on the
-    /// arrival of graph `i` (0-based).
-    fn window(&self, i: usize) -> usize {
+    /// arrival of graph `i` (0-based).  Shared with the reactive runtime
+    /// simulator's arrival replans.
+    pub(crate) fn window(&self, i: usize) -> usize {
         match self {
             Policy::NonPreemptive => 0,
             Policy::Preemptive => i,
@@ -163,6 +164,21 @@ impl CompositeWorkspace {
         prob: &DynamicProblem,
         schedule: &Schedule,
     ) -> &Problem {
+        self.build_floored(pending, prob, schedule, f64::NEG_INFINITY)
+    }
+
+    /// [`build`](Self::build) with a **ready-time floor**: every pending
+    /// task's ready time becomes `max(arrival, floor)`.  The reactive
+    /// runtime passes the replan instant so the base heuristic can never
+    /// place work in the (simulated) past; `build` passes `-∞`, which
+    /// leaves the plan-time semantics bit-identical.
+    pub fn build_floored(
+        &mut self,
+        pending: &[Gid],
+        prob: &DynamicProblem,
+        schedule: &Schedule,
+        floor: f64,
+    ) -> &Problem {
         self.index.clear();
         for (i, &g) in pending.iter().enumerate() {
             self.index.insert(g, i);
@@ -184,7 +200,7 @@ impl CompositeWorkspace {
             let t = &mut tasks[i];
             t.gid = gid;
             t.cost = g.cost(gid.task as usize);
-            t.ready = *arrival;
+            t.ready = arrival.max(floor);
             t.preds.clear();
             t.succs.clear();
         }

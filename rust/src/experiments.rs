@@ -19,7 +19,9 @@ use crate::json::{self, Value};
 use crate::metrics::{normalize, Metric, MetricRow};
 use crate::report;
 use crate::schedule::validate;
+use crate::sim::{Reaction, ReactiveCoordinator, SimConfig};
 use crate::stats::mean;
+use crate::workloads::Dataset;
 
 /// Raw sweep output: `rows[trial][variant]`.
 #[derive(Clone, Debug)]
@@ -163,21 +165,21 @@ pub fn run_sweep_parallel(cfg: &ExperimentConfig, jobs: usize) -> SweepResult {
 impl SweepResult {
     /// Paper-style normalized values for one metric: normalize within
     /// each trial across variants (best = 1.0 for lower-is-better
-    /// metrics), then average across trials.  Utilization is reported
-    /// raw, as in Fig 7/8e.
+    /// metrics), then average across trials.  Bounded absolute-scale
+    /// metrics (utilization, Jain fairness) are reported raw, as in
+    /// Fig 7/8e.
     pub fn figure_values(&self, metric: Metric) -> Vec<f64> {
-        match metric {
-            Metric::Utilization => self.raw_mean(metric),
-            _ => {
-                let mut acc = vec![0.0; self.labels.len()];
-                for row in &self.rows {
-                    let vals: Vec<f64> = row.iter().map(|r| r.get(metric)).collect();
-                    for (i, v) in normalize(metric, &vals).iter().enumerate() {
-                        acc[i] += v;
-                    }
+        if metric.reported_raw() {
+            self.raw_mean(metric)
+        } else {
+            let mut acc = vec![0.0; self.labels.len()];
+            for row in &self.rows {
+                let vals: Vec<f64> = row.iter().map(|r| r.get(metric)).collect();
+                for (i, v) in normalize(metric, &vals).iter().enumerate() {
+                    acc[i] += v;
                 }
-                acc.iter().map(|v| v / self.rows.len() as f64).collect()
             }
+            acc.iter().map(|v| v / self.rows.len() as f64).collect()
         }
     }
 
@@ -199,8 +201,8 @@ impl SweepResult {
         } else {
             idx.sort_by(|&a, &b| vals[b].partial_cmp(&vals[a]).unwrap());
         }
-        let header_val = if metric == Metric::Utilization {
-            "utilization".to_string()
+        let header_val = if metric.reported_raw() {
+            metric.name().to_string()
         } else {
             format!("normalized {}", metric.name())
         };
@@ -239,6 +241,12 @@ impl SweepResult {
             "mean_flowtime_raw",
             "utilization",
             "utilization_raw",
+            "mean_stretch_norm",
+            "mean_stretch_raw",
+            "max_stretch_norm",
+            "max_stretch_raw",
+            "jain_fairness",
+            "jain_fairness_raw",
             "runtime_norm",
             "runtime_raw",
         ];
@@ -260,6 +268,9 @@ impl SweepResult {
                                 ("mean_makespan", json::num(r.mean_makespan)),
                                 ("mean_flowtime", json::num(r.mean_flowtime)),
                                 ("utilization", json::num(r.mean_utilization)),
+                                ("mean_stretch", json::num(r.mean_stretch)),
+                                ("max_stretch", json::num(r.max_stretch)),
+                                ("jain_fairness", json::num(r.jain_fairness)),
                                 ("runtime_s", json::num(r.runtime_s)),
                             ])
                         })
@@ -312,10 +323,413 @@ pub fn core_variants() -> Vec<Variant> {
     out
 }
 
+// ----------------------------------------------------- reactive sweeps
+
+/// One point of the noise × reaction grid evaluated by `dts simulate`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SimScenario {
+    pub noise_std: f64,
+    pub reaction: Reaction,
+}
+
+impl SimScenario {
+    pub fn label(&self) -> String {
+        format!("σ{:.2}/{}", self.noise_std, self.reaction.label())
+    }
+}
+
+/// A reactive-runtime sweep: `trials` seeded instances of `dataset`,
+/// each executed by the reactive simulator under every scenario, with
+/// the same policy × heuristic `variant` throughout.
+#[derive(Clone, Debug)]
+pub struct SimSweepConfig {
+    pub dataset: Dataset,
+    pub n_graphs: usize,
+    pub trials: usize,
+    pub seed: u64,
+    pub load: f64,
+    pub variant: Variant,
+    pub scenarios: Vec<SimScenario>,
+}
+
+/// One (trial, scenario) cell: realized metrics of the reactive run
+/// next to the planned metrics of the same variant under perfect
+/// estimates (the static coordinator's plan for the same instance).
+#[derive(Clone, Copy, Debug)]
+pub struct SimCell {
+    pub realized: MetricRow,
+    pub planned: MetricRow,
+    pub n_replans: usize,
+    pub n_straggler_replans: usize,
+    pub n_reverted: usize,
+}
+
+impl SimCell {
+    /// Realized-over-planned total makespan — the robustness
+    /// degradation ratio, now under reactive control instead of the
+    /// post-hoc [`crate::robustness::degradation`].
+    pub fn degradation(&self) -> f64 {
+        if self.planned.total_makespan > 0.0 {
+            self.realized.total_makespan / self.planned.total_makespan
+        } else {
+            0.0
+        }
+    }
+}
+
+fn sim_instance(cfg: &SimSweepConfig, trial: usize) -> DynamicProblem {
+    cfg.dataset
+        .instance_opts(cfg.n_graphs, cfg.seed + trial as u64, cfg.load, None)
+}
+
+/// Planned-baseline metrics for one trial: the static coordinator's
+/// plan, which is exactly what the reactive runtime would realize at
+/// zero noise (modulo the causal re-placement semantics).
+fn planned_row(cfg: &SimSweepConfig, prob: &DynamicProblem, trial: usize) -> MetricRow {
+    let seed = cfg.seed + trial as u64;
+    let mut coord = cfg.variant.coordinator(seed ^ 0x5EED);
+    let res = coord.run(prob);
+    res.metrics(prob)
+}
+
+/// Run one (trial, scenario) cell.  Every realized schedule is checked
+/// operationally by [`crate::sim::replay`]; an error is a hard panic —
+/// the harness must never report numbers from an invalid execution.
+fn run_sim_cell(
+    cfg: &SimSweepConfig,
+    prob: &DynamicProblem,
+    trial: usize,
+    scenario: &SimScenario,
+    planned: &MetricRow,
+) -> SimCell {
+    let seed = cfg.seed + trial as u64;
+    let sim_cfg = SimConfig {
+        noise_std: scenario.noise_std,
+        noise_seed: seed ^ 0xA11CE,
+        reaction: scenario.reaction,
+        record_frozen: false,
+    };
+    let mut rc = ReactiveCoordinator::new(
+        cfg.variant.policy,
+        cfg.variant.kind.make(seed ^ 0x5EED),
+        sim_cfg,
+    );
+    let res = rc.run(prob);
+    assert_eq!(res.schedule.n_assigned(), prob.total_tasks());
+    let rep = crate::sim::replay(&res.schedule, &prob.graphs, &prob.network);
+    assert!(
+        rep.errors.is_empty(),
+        "invalid realized schedule from {} under {} on {} trial {trial}: {:?}",
+        cfg.variant.label(),
+        scenario.label(),
+        cfg.dataset.name(),
+        &rep.errors[..rep.errors.len().min(3)]
+    );
+    SimCell {
+        realized: res.metrics(prob),
+        planned: *planned,
+        n_replans: res.n_replans(),
+        n_straggler_replans: res.n_straggler_replans(),
+        n_reverted: res.n_reverted_total(),
+    }
+}
+
+/// Raw sim-sweep output: `rows[trial][scenario]`.
+#[derive(Clone, Debug)]
+pub struct SimSweepResult {
+    pub config: SimSweepConfig,
+    pub labels: Vec<String>,
+    pub rows: Vec<Vec<SimCell>>,
+}
+
+/// Serial reference implementation of the sim sweep.
+pub fn run_sim_sweep(cfg: &SimSweepConfig) -> SimSweepResult {
+    let labels: Vec<String> = cfg.scenarios.iter().map(|s| s.label()).collect();
+    let mut rows = Vec::with_capacity(cfg.trials);
+    for trial in 0..cfg.trials {
+        let prob = sim_instance(cfg, trial);
+        let planned = planned_row(cfg, &prob, trial);
+        rows.push(
+            cfg.scenarios
+                .iter()
+                .map(|s| run_sim_cell(cfg, &prob, trial, s, &planned))
+                .collect(),
+        );
+    }
+    SimSweepResult {
+        config: cfg.clone(),
+        labels,
+        rows,
+    }
+}
+
+/// Parallel sim sweep, deterministic at any thread count: (trial ×
+/// scenario) cells fan out over a `std::thread::scope` work queue,
+/// instances and planned baselines derive from `seed + trial` alone and
+/// are shared per trial through a `OnceLock`, noise factors are a pure
+/// function of `(noise_std, seed, gid)`, and results are collected in
+/// cell order — same construction as [`run_sweep_parallel`].
+pub fn run_sim_sweep_parallel(cfg: &SimSweepConfig, jobs: usize) -> SimSweepResult {
+    let jobs = jobs.max(1);
+    let n_sc = cfg.scenarios.len();
+    let n_cells = cfg.trials * n_sc;
+    if jobs == 1 || n_cells <= 1 {
+        return run_sim_sweep(cfg);
+    }
+
+    let instances: Vec<OnceLock<(DynamicProblem, MetricRow)>> =
+        (0..cfg.trials).map(|_| OnceLock::new()).collect();
+    let next_cell = AtomicUsize::new(0);
+    let mut flat: Vec<Option<SimCell>> = vec![None; n_cells];
+
+    std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..jobs.min(n_cells))
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut done: Vec<(usize, SimCell)> = Vec::new();
+                    loop {
+                        let cell = next_cell.fetch_add(1, Ordering::Relaxed);
+                        if cell >= n_cells {
+                            break;
+                        }
+                        let trial = cell / n_sc;
+                        let si = cell % n_sc;
+                        let pair = instances[trial].get_or_init(|| {
+                            let prob = sim_instance(cfg, trial);
+                            let planned = planned_row(cfg, &prob, trial);
+                            (prob, planned)
+                        });
+                        done.push((
+                            cell,
+                            run_sim_cell(cfg, &pair.0, trial, &cfg.scenarios[si], &pair.1),
+                        ));
+                    }
+                    done
+                })
+            })
+            .collect();
+        for w in workers {
+            for (cell, c) in w.join().expect("sim sweep worker panicked") {
+                flat[cell] = Some(c);
+            }
+        }
+    });
+
+    let mut rows = Vec::with_capacity(cfg.trials);
+    let mut it = flat.into_iter();
+    for _ in 0..cfg.trials {
+        rows.push(
+            (&mut it)
+                .take(n_sc)
+                .map(|r| r.expect("cell not computed"))
+                .collect(),
+        );
+    }
+    SimSweepResult {
+        config: cfg.clone(),
+        labels: cfg.scenarios.iter().map(|s| s.label()).collect(),
+        rows,
+    }
+}
+
+impl SimSweepResult {
+    /// Mean across trials of one realized metric for scenario `si`.
+    pub fn realized_mean(&self, si: usize, metric: Metric) -> f64 {
+        mean(
+            &self
+                .rows
+                .iter()
+                .map(|r| r[si].realized.get(metric))
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Mean realized-over-planned total-makespan ratio for scenario `si`.
+    pub fn degradation_mean(&self, si: usize) -> f64 {
+        mean(
+            &self
+                .rows
+                .iter()
+                .map(|r| r[si].degradation())
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Mean (total, straggler-triggered) replan counts for scenario `si`.
+    pub fn replans_mean(&self, si: usize) -> (f64, f64) {
+        let total = mean(
+            &self
+                .rows
+                .iter()
+                .map(|r| r[si].n_replans as f64)
+                .collect::<Vec<_>>(),
+        );
+        let straggler = mean(
+            &self
+                .rows
+                .iter()
+                .map(|r| r[si].n_straggler_replans as f64)
+                .collect::<Vec<_>>(),
+        );
+        (total, straggler)
+    }
+
+    /// Markdown summary: one row per scenario, the key realized metrics
+    /// plus degradation and replan activity.
+    pub fn summary_table(&self) -> String {
+        let rows: Vec<Vec<String>> = (0..self.labels.len())
+            .map(|si| {
+                let (replans, stragglers) = self.replans_mean(si);
+                vec![
+                    self.labels[si].clone(),
+                    report::fmt(self.realized_mean(si, Metric::TotalMakespan)),
+                    report::fmt(self.realized_mean(si, Metric::MeanStretch)),
+                    report::fmt(self.realized_mean(si, Metric::MaxStretch)),
+                    report::fmt(self.realized_mean(si, Metric::JainFairness)),
+                    report::fmt(self.degradation_mean(si)),
+                    report::fmt(replans),
+                    report::fmt(stragglers),
+                ]
+            })
+            .collect();
+        report::markdown_table(
+            &[
+                "scenario",
+                "makespan",
+                "mean stretch",
+                "max stretch",
+                "jain",
+                "degradation",
+                "replans",
+                "straggler",
+            ],
+            &rows,
+        )
+    }
+
+    /// CSV with the full realized metric suite per scenario (means
+    /// across trials), plus the planned baseline and replan activity.
+    pub fn to_csv(&self) -> String {
+        let mut rows = Vec::new();
+        for (si, label) in self.labels.iter().enumerate() {
+            let sc = &self.config.scenarios[si];
+            let mut row = vec![
+                self.config.dataset.name().to_string(),
+                self.config.variant.label(),
+                label.clone(),
+                format!("{}", sc.noise_std),
+                sc.reaction.label(),
+            ];
+            for m in Metric::ALL {
+                row.push(format!("{}", self.realized_mean(si, m)));
+            }
+            let planned_mk = mean(
+                &self
+                    .rows
+                    .iter()
+                    .map(|r| r[si].planned.total_makespan)
+                    .collect::<Vec<_>>(),
+            );
+            let (replans, stragglers) = self.replans_mean(si);
+            let reverted = mean(
+                &self
+                    .rows
+                    .iter()
+                    .map(|r| r[si].n_reverted as f64)
+                    .collect::<Vec<_>>(),
+            );
+            row.push(format!("{planned_mk}"));
+            row.push(format!("{}", self.degradation_mean(si)));
+            row.push(format!("{replans}"));
+            row.push(format!("{stragglers}"));
+            row.push(format!("{reverted}"));
+            rows.push(row);
+        }
+        let headers = vec![
+            "dataset",
+            "variant",
+            "scenario",
+            "noise_std",
+            "reaction",
+            "total_makespan",
+            "mean_makespan",
+            "mean_flowtime",
+            "utilization",
+            "mean_stretch",
+            "max_stretch",
+            "jain_fairness",
+            "runtime_s",
+            "planned_total_makespan",
+            "degradation",
+            "replans",
+            "straggler_replans",
+            "reverted_tasks",
+        ];
+        report::csv(&headers, &rows)
+    }
+
+    /// JSON dump: config + per-trial realized/planned rows per scenario.
+    pub fn to_json(&self) -> Value {
+        let metric_obj = |r: &MetricRow| {
+            json::obj(vec![
+                ("total_makespan", json::num(r.total_makespan)),
+                ("mean_makespan", json::num(r.mean_makespan)),
+                ("mean_flowtime", json::num(r.mean_flowtime)),
+                ("utilization", json::num(r.mean_utilization)),
+                ("mean_stretch", json::num(r.mean_stretch)),
+                ("max_stretch", json::num(r.max_stretch)),
+                ("jain_fairness", json::num(r.jain_fairness)),
+                ("runtime_s", json::num(r.runtime_s)),
+            ])
+        };
+        let trials = self
+            .rows
+            .iter()
+            .map(|trial| {
+                json::arr(
+                    trial
+                        .iter()
+                        .map(|c| {
+                            json::obj(vec![
+                                ("realized", metric_obj(&c.realized)),
+                                ("planned", metric_obj(&c.planned)),
+                                ("degradation", json::num(c.degradation())),
+                                ("replans", json::num(c.n_replans as f64)),
+                                (
+                                    "straggler_replans",
+                                    json::num(c.n_straggler_replans as f64),
+                                ),
+                                ("reverted", json::num(c.n_reverted as f64)),
+                            ])
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        json::obj(vec![
+            (
+                "config",
+                json::obj(vec![
+                    ("dataset", json::s(self.config.dataset.name())),
+                    ("variant", json::s(&self.config.variant.label())),
+                    ("n_graphs", json::num(self.config.n_graphs as f64)),
+                    ("trials", json::num(self.config.trials as f64)),
+                    ("seed", json::num(self.config.seed as f64)),
+                    ("load", json::num(self.config.load)),
+                ]),
+            ),
+            (
+                "scenarios",
+                json::arr(self.labels.iter().map(|l| json::s(l)).collect()),
+            ),
+            ("trials", json::arr(trials)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workloads::Dataset;
 
     fn tiny_cfg() -> ExperimentConfig {
         ExperimentConfig {
@@ -428,5 +842,101 @@ mod tests {
         let labels: Vec<String> = vs.iter().map(|v| v.label()).collect();
         assert!(labels.contains(&"5P-HEFT".to_string()));
         assert!(labels.contains(&"P-Random".to_string()));
+    }
+
+    fn tiny_sim_cfg() -> SimSweepConfig {
+        SimSweepConfig {
+            dataset: Dataset::Synthetic,
+            n_graphs: 6,
+            trials: 2,
+            seed: 5,
+            load: 0.5,
+            variant: Variant::parse("5P-HEFT").unwrap(),
+            scenarios: vec![
+                SimScenario {
+                    noise_std: 0.0,
+                    reaction: Reaction::None,
+                },
+                SimScenario {
+                    noise_std: 0.4,
+                    reaction: Reaction::None,
+                },
+                SimScenario {
+                    noise_std: 0.4,
+                    reaction: Reaction::LastK {
+                        k: 3,
+                        threshold: 0.2,
+                    },
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn sim_sweep_shape_and_sanity() {
+        let r = run_sim_sweep(&tiny_sim_cfg());
+        assert_eq!(r.rows.len(), 2);
+        assert_eq!(r.rows[0].len(), 3);
+        assert_eq!(r.labels.len(), 3);
+        for row in &r.rows {
+            for c in row {
+                assert!(c.realized.total_makespan > 0.0);
+                assert!(c.planned.total_makespan > 0.0);
+                assert!(c.degradation() > 0.0);
+                assert!(
+                    c.realized.jain_fairness > 0.0
+                        && c.realized.jain_fairness <= 1.0 + 1e-12
+                );
+                assert!(c.realized.max_stretch + 1e-12 >= c.realized.mean_stretch);
+            }
+            // the reactive scenario (threshold armed) may replan more,
+            // never less, than its no-reaction twin at the same noise
+            assert!(row[2].n_replans >= row[1].n_replans);
+        }
+    }
+
+    #[test]
+    fn sim_sweep_parallel_is_deterministic_across_thread_counts() {
+        let cfg = tiny_sim_cfg();
+        let serial = run_sim_sweep_parallel(&cfg, 1);
+        let sig = |c: &SimCell| {
+            (
+                c.realized.total_makespan.to_bits(),
+                c.realized.mean_makespan.to_bits(),
+                c.realized.mean_flowtime.to_bits(),
+                c.realized.mean_utilization.to_bits(),
+                c.realized.mean_stretch.to_bits(),
+                c.realized.max_stretch.to_bits(),
+                c.realized.jain_fairness.to_bits(),
+                c.planned.total_makespan.to_bits(),
+                c.n_replans,
+                c.n_straggler_replans,
+                c.n_reverted,
+            )
+        };
+        for jobs in [2, 5] {
+            let par = run_sim_sweep_parallel(&cfg, jobs);
+            assert_eq!(serial.labels, par.labels);
+            for (trial, (rs, rp)) in serial.rows.iter().zip(par.rows.iter()).enumerate() {
+                for (si, (a, b)) in rs.iter().zip(rp.iter()).enumerate() {
+                    assert_eq!(sig(a), sig(b), "jobs={jobs}, trial {trial}, scenario {si}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sim_csv_json_and_table_render() {
+        let r = run_sim_sweep(&tiny_sim_cfg());
+        let c = r.to_csv();
+        assert_eq!(c.lines().count(), 4); // header + 3 scenarios
+        assert!(c.lines().next().unwrap().contains("jain_fairness"));
+        assert!(c.contains("5P-HEFT"));
+        let t = r.summary_table();
+        assert!(t.contains("σ0.40/L3@0.2"), "{t}");
+        assert!(t.contains("degradation"));
+        let j = r.to_json();
+        let round = Value::from_str(&j.to_string()).unwrap();
+        assert_eq!(round.get("scenarios"), j.get("scenarios"));
     }
 }

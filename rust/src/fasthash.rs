@@ -59,6 +59,10 @@ impl Hasher for FxHasher {
 
 pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
 
+/// `HashSet` keyed by the same fast hasher (used for the simulator's
+/// completed/reverted task sets).
+pub type FxHashSet<K> = std::collections::HashSet<K, FxBuildHasher>;
+
 /// `HashMap` with the fast hasher.
 pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
 

@@ -15,8 +15,12 @@
 //! * the paper's contribution, the **dynamic coordinator** with
 //!   preemptive, non-preemptive and Last-K-preemptive policies
 //!   ([`coordinator`]);
-//! * the §V **metric suite** ([`metrics`]) and the §VI **workload
-//!   generators** ([`workloads`]);
+//! * the §V **metric suite** incl. the fairness axes (per-graph
+//!   stretch, max-stretch, Jain's index) ([`metrics`]) and the §VI
+//!   **workload generators** ([`workloads`]);
+//! * the **reactive runtime simulator** — a discrete-event loop where
+//!   realized durations deviate from the estimates and straggler-
+//!   triggered Last-K rescheduling closes the loop ([`sim`]);
 //! * an **XLA/PJRT runtime** that executes the AOT-compiled JAX+Pallas
 //!   rank kernels from `artifacts/` on the scheduling hot path
 //!   ([`runtime`]);

@@ -103,6 +103,79 @@ pub fn mean_utilization(
     }
 }
 
+/// Best-case response-time lower bound of one graph on `network`: the
+/// longest path of per-task best-node execution times, communication
+/// ignored.  Every §II-valid execution of the graph alone or in company
+/// responds in at least this time (each relaxation — free choice of the
+/// fastest node per task, zero communication, no contention — only
+/// shrinks the bound), so it is the natural stretch denominator.
+pub fn ideal_response(g: &TaskGraph, network: &Network) -> f64 {
+    let n = g.n_tasks();
+    if n == 0 {
+        return 0.0;
+    }
+    let best: Vec<f64> = (0..n)
+        .map(|t| {
+            (0..network.n_nodes())
+                .map(|v| network.exec_time(g.cost(t), v))
+                .fold(f64::INFINITY, f64::min)
+        })
+        .collect();
+    let mut down = vec![0.0f64; n];
+    for &t in g.topo_order().iter().rev() {
+        let tail = g
+            .successors(t)
+            .iter()
+            .map(|&(c, _)| down[c])
+            .fold(0.0, f64::max);
+        down[t] = best[t] + tail;
+    }
+    down.into_iter().fold(0.0, f64::max)
+}
+
+/// §V fairness — per-graph **stretch** (slowdown): observed response
+/// time over the [`ideal_response`] lower bound; one entry per graph
+/// with at least one scheduled task.  Plans have stretch ≥ 1; realized
+/// schedules under speed-up noise may dip below 1.
+pub fn graph_stretches(
+    schedule: &Schedule,
+    problem: &[(f64, TaskGraph)],
+    network: &Network,
+) -> Vec<f64> {
+    let mut out = Vec::new();
+    for (gi, (arrival, g)) in problem.iter().enumerate() {
+        let finish = (0..g.n_tasks())
+            .filter_map(|t| schedule.get(Gid::new(gi, t)))
+            .map(|a| a.finish)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if !finish.is_finite() {
+            continue;
+        }
+        let ideal = ideal_response(g, network);
+        out.push(if ideal > 0.0 {
+            (finish - arrival) / ideal
+        } else {
+            1.0
+        });
+    }
+    out
+}
+
+/// Jain's fairness index over per-graph slowdowns:
+/// `(Σ s_i)² / (K · Σ s_i²)` ∈ (0, 1], where 1 means every graph is
+/// slowed down equally.  Empty input is vacuously fair (1.0).
+pub fn jain_fairness(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = xs.iter().sum();
+    let s2: f64 = xs.iter().map(|x| x * x).sum();
+    if s2 <= 0.0 {
+        return 1.0;
+    }
+    (s * s) / (xs.len() as f64 * s2)
+}
+
 /// A full metric row for one (workload, scheduler) run.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct MetricRow {
@@ -110,6 +183,12 @@ pub struct MetricRow {
     pub mean_makespan: f64,
     pub mean_flowtime: f64,
     pub mean_utilization: f64,
+    /// mean per-graph stretch (response / best-case lower bound)
+    pub mean_stretch: f64,
+    /// worst per-graph stretch — the max-stretch unfairness axis
+    pub max_stretch: f64,
+    /// Jain's index over the per-graph stretches (1 = perfectly fair)
+    pub jain_fairness: f64,
     /// scheduler wall-clock runtime in seconds (§V.E), filled by the
     /// dynamic coordinator.
     pub runtime_s: f64,
@@ -122,11 +201,23 @@ impl MetricRow {
         network: &Network,
         runtime_s: f64,
     ) -> Self {
+        let stretches = graph_stretches(schedule, problem, network);
+        let (mean_stretch, max_stretch) = if stretches.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (
+                stretches.iter().sum::<f64>() / stretches.len() as f64,
+                stretches.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+            )
+        };
         Self {
             total_makespan: total_makespan(schedule, problem),
             mean_makespan: mean_makespan(schedule, problem),
             mean_flowtime: mean_flowtime(schedule, problem),
             mean_utilization: mean_utilization(schedule, problem, network),
+            mean_stretch,
+            max_stretch,
+            jain_fairness: jain_fairness(&stretches),
             runtime_s,
         }
     }
@@ -137,6 +228,9 @@ impl MetricRow {
             Metric::MeanMakespan => self.mean_makespan,
             Metric::MeanFlowtime => self.mean_flowtime,
             Metric::Utilization => self.mean_utilization,
+            Metric::MeanStretch => self.mean_stretch,
+            Metric::MaxStretch => self.max_stretch,
+            Metric::JainFairness => self.jain_fairness,
             Metric::Runtime => self.runtime_s,
         }
     }
@@ -149,15 +243,21 @@ pub enum Metric {
     MeanMakespan,
     MeanFlowtime,
     Utilization,
+    MeanStretch,
+    MaxStretch,
+    JainFairness,
     Runtime,
 }
 
 impl Metric {
-    pub const ALL: [Metric; 5] = [
+    pub const ALL: [Metric; 8] = [
         Metric::TotalMakespan,
         Metric::MeanMakespan,
         Metric::MeanFlowtime,
         Metric::Utilization,
+        Metric::MeanStretch,
+        Metric::MaxStretch,
+        Metric::JainFairness,
         Metric::Runtime,
     ];
 
@@ -167,19 +267,32 @@ impl Metric {
             Metric::MeanMakespan => "mean_makespan",
             Metric::MeanFlowtime => "mean_flowtime",
             Metric::Utilization => "utilization",
+            Metric::MeanStretch => "mean_stretch",
+            Metric::MaxStretch => "max_stretch",
+            Metric::JainFairness => "jain_fairness",
             Metric::Runtime => "runtime",
         }
     }
 
     /// Whether *smaller* is better (normalization divides by the best).
+    /// Utilization and Jain fairness are higher-is-better.
     pub fn lower_is_better(&self) -> bool {
-        !matches!(self, Metric::Utilization)
+        !matches!(self, Metric::Utilization | Metric::JainFairness)
+    }
+
+    /// Metrics reported raw (already on a bounded absolute scale) rather
+    /// than normalized to the per-trial best, per the paper's Fig 7/8e
+    /// convention for utilization.
+    pub fn reported_raw(&self) -> bool {
+        matches!(self, Metric::Utilization | Metric::JainFairness)
     }
 }
 
 /// Normalize a set of values for one metric: divide by the best value
-/// (min for lower-is-better, max for utilization), so the best variant
-/// reads 1.0 — the convention of the paper's "Normalized ..." figures.
+/// (min for lower-is-better metrics, max for higher-is-better ones), so
+/// the best variant reads 1.0 — the convention of the paper's
+/// "Normalized ..." figures.  A zero or non-finite best (degenerate
+/// trial) returns the values untouched.
 pub fn normalize(metric: Metric, values: &[f64]) -> Vec<f64> {
     if values.is_empty() {
         return Vec::new();
@@ -192,11 +305,7 @@ pub fn normalize(metric: Metric, values: &[f64]) -> Vec<f64> {
     if best == 0.0 || !best.is_finite() {
         return values.to_vec();
     }
-    if metric.lower_is_better() {
-        values.iter().map(|v| v / best).collect()
-    } else {
-        values.iter().map(|v| v / best).collect()
-    }
+    values.iter().map(|v| v / best).collect()
 }
 
 #[cfg(test)]
@@ -277,8 +386,65 @@ mod tests {
         assert_eq!(row.get(Metric::TotalMakespan), 16.0);
         assert_eq!(row.get(Metric::Runtime), 0.5);
         assert_eq!(Metric::Utilization.lower_is_better(), false);
+        assert_eq!(Metric::JainFairness.lower_is_better(), false);
         assert_eq!(Metric::TotalMakespan.lower_is_better(), true);
-        assert_eq!(Metric::ALL.len(), 5);
+        assert_eq!(Metric::MaxStretch.lower_is_better(), true);
+        assert!(Metric::JainFairness.reported_raw());
+        assert!(!Metric::MeanStretch.reported_raw());
+        assert_eq!(Metric::ALL.len(), 8);
+    }
+
+    #[test]
+    fn stretch_and_jain_on_hand_example() {
+        let (s, p, net) = setup();
+        // g1: single task cost 4, homogeneous speed 1 → ideal 4,
+        // response 4 - 0 = 4 → stretch 1.
+        // g2: chain 2 + 2 → ideal 4, response 16 - 10 = 6 → stretch 1.5.
+        let st = graph_stretches(&s, &p, &net);
+        assert_eq!(st, vec![1.0, 1.5]);
+        let row = MetricRow::compute(&s, &p, &net, 0.0);
+        assert!((row.mean_stretch - 1.25).abs() < 1e-12);
+        assert!((row.max_stretch - 1.5).abs() < 1e-12);
+        // Jain over {1, 1.5}: (2.5)² / (2 · 3.25)
+        assert!((row.jain_fairness - 6.25 / 6.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ideal_response_is_critical_path_of_best_exec() {
+        // diamond: a(2) -> {b(3), c(5)} -> d(1); speeds {1, 2} → best
+        // exec halves every cost; longest path a-c-d = (2+5+1)/2 = 4.
+        let mut b = GraphBuilder::new("diamond");
+        let a = b.task(2.0);
+        let x = b.task(3.0);
+        let y = b.task(5.0);
+        let d = b.task(1.0);
+        b.edge(a, x, 1.0);
+        b.edge(a, y, 1.0);
+        b.edge(x, d, 1.0);
+        b.edge(y, d, 1.0);
+        let g = b.build().unwrap();
+        let net = Network::new(vec![1.0, 2.0], vec![0.0, 1.0, 1.0, 0.0]);
+        assert!((ideal_response(&g, &net) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jain_index_properties() {
+        assert_eq!(jain_fairness(&[]), 1.0);
+        assert_eq!(jain_fairness(&[0.0, 0.0]), 1.0);
+        assert!((jain_fairness(&[2.0, 2.0, 2.0]) - 1.0).abs() < 1e-12);
+        // one graph starved: index drops toward 1/K
+        let j = jain_fairness(&[1.0, 1.0, 10.0]);
+        assert!(j < 0.5, "{j}");
+        assert!(j > 1.0 / 3.0, "{j}");
+    }
+
+    #[test]
+    fn stretch_skips_unscheduled_graphs() {
+        let (mut s, p, net) = setup();
+        // drop g2's tasks: only g1 contributes a stretch
+        s.unassign(Gid::new(1, 0));
+        s.unassign(Gid::new(1, 1));
+        assert_eq!(graph_stretches(&s, &p, &net), vec![1.0]);
     }
 
     #[test]
@@ -289,5 +455,25 @@ mod tests {
         // utilization: higher is better → max maps to 1, others < 1
         let u = normalize(Metric::Utilization, &[0.5, 0.25]);
         assert_eq!(u, vec![1.0, 0.5]);
+        // higher-is-better fairness: same max convention
+        let j = normalize(Metric::JainFairness, &[0.9, 0.45]);
+        assert_eq!(j, vec![1.0, 0.5]);
+    }
+
+    #[test]
+    fn normalization_degenerate_inputs() {
+        // empty input → empty output
+        assert_eq!(normalize(Metric::TotalMakespan, &[]), Vec::<f64>::new());
+        // zero best (lower-is-better) → values returned untouched
+        assert_eq!(
+            normalize(Metric::TotalMakespan, &[0.0, 5.0]),
+            vec![0.0, 5.0]
+        );
+        // zero best (higher-is-better)
+        assert_eq!(normalize(Metric::Utilization, &[0.0, 0.0]), vec![0.0, 0.0]);
+        // non-finite best → values returned untouched
+        let inf = f64::INFINITY;
+        assert_eq!(normalize(Metric::TotalMakespan, &[inf, inf]), vec![inf, inf]);
+        assert_eq!(normalize(Metric::Utilization, &[inf, 3.0]), vec![inf, 3.0]);
     }
 }

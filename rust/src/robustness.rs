@@ -95,14 +95,55 @@ pub fn realize(
     realized
 }
 
+/// Truncation bounds of the multiplicative noise factor distributions.
+pub const NOISE_LO: f64 = 0.25;
+pub const NOISE_HI: f64 = 4.0;
+
 /// Multiplicative noise model: factors ~ TruncatedGaussian(1, std | lo, hi).
 pub fn noise_factors(
     std: f64,
     seed: u64,
 ) -> impl FnMut(Gid) -> f64 {
     let mut rng = Xoshiro256pp::seed_from_u64(seed);
-    let dist = TruncatedGaussian::new(1.0, std, 0.25, 4.0);
+    let dist = TruncatedGaussian::new(1.0, std, NOISE_LO, NOISE_HI);
     move |_gid| dist.sample(&mut rng)
+}
+
+/// **Call-order-independent** noise: the factor of a task is a pure
+/// function of `(std, seed, gid)`, not of the sampling sequence.
+///
+/// [`noise_factors`] draws sequentially, so the factor a task receives
+/// depends on how many tasks were sampled before it — fine for the
+/// post-hoc [`realize`] pass (which samples every task once, in map
+/// order), but wrong for the reactive runtime simulator, where the
+/// *dispatch* order depends on the policy and straggler threshold under
+/// test.  `StableNoise` guarantees that two simulations of the same
+/// instance with the same `(std, seed)` expose every task to the same
+/// realized duration, whatever the coordinator decides — the apples-to-
+/// apples requirement for comparing reaction policies under noise.
+#[derive(Clone, Copy, Debug)]
+pub struct StableNoise {
+    std: f64,
+    seed: u64,
+}
+
+impl StableNoise {
+    pub fn new(std: f64, seed: u64) -> Self {
+        assert!(std >= 0.0, "negative noise std {std}");
+        Self { std, seed }
+    }
+
+    /// The multiplicative duration factor for `gid`.
+    pub fn factor(&self, gid: Gid) -> f64 {
+        if self.std == 0.0 {
+            return 1.0;
+        }
+        // SplitMix-style mix of (seed, gid) into an independent stream
+        let packed = ((gid.graph as u64) << 32) | (gid.task as u64);
+        let mix = packed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ self.seed.rotate_left(17);
+        let mut rng = Xoshiro256pp::seed_from_u64(mix);
+        TruncatedGaussian::new(1.0, self.std, NOISE_LO, NOISE_HI).sample(&mut rng)
+    }
 }
 
 /// Realized-vs-planned makespan ratio under noise (≥ ~1 for brittle
@@ -191,6 +232,85 @@ mod tests {
             assert_eq!(a, f2(g));
             assert!((0.25..=4.0).contains(&a));
         }
+    }
+
+    #[test]
+    fn uniform_speedup_beats_the_plan() {
+        // factor < 1 left-shifts every task; the realized makespan must
+        // be at most the proportionally shrunk plan — and strictly beat
+        // the plan itself.
+        let (prob, planned) = plan(Policy::LastK(3));
+        let realized = realize(&planned, &prob, |_| 0.5);
+        check_realized(&realized, &prob);
+        let plan_mk = crate::metrics::total_makespan(&planned, &prob.graphs);
+        let real_mk = crate::metrics::total_makespan(&realized, &prob.graphs);
+        assert!(real_mk < plan_mk, "speedup must improve: {real_mk} vs {plan_mk}");
+        for (gid, a) in planned.iter() {
+            let r = realized.get(*gid).unwrap();
+            let want = 0.5 * (a.finish - a.start);
+            assert!(((r.finish - r.start) - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn empty_schedule_realizes_to_empty() {
+        let prob = Dataset::Synthetic.instance(3, 1);
+        let planned = Schedule::new(prob.network.n_nodes());
+        let realized = realize(&planned, &prob, |_| 2.0);
+        assert_eq!(realized.n_assigned(), 0);
+    }
+
+    #[test]
+    fn single_node_serialization_preserves_order_and_closes_gaps() {
+        // All work on one node: realization must keep the planned
+        // execution order and run back-to-back wherever the plan had
+        // slack (no dependencies between consecutive slots required).
+        use crate::graph::GraphBuilder;
+        use crate::network::Network;
+
+        let mut b = GraphBuilder::new("chain");
+        let t0 = b.task(2.0);
+        let t1 = b.task(3.0);
+        let t2 = b.task(1.0);
+        b.edge(t0, t1, 0.0);
+        b.edge(t1, t2, 0.0);
+        let g = b.build().unwrap();
+        let prob = DynamicProblem::new(Network::homogeneous(1), vec![(0.0, g)]);
+        let mut planned = Schedule::new(1);
+        // deliberate slack between the planned slots
+        planned.assign(Gid::new(0, 0), Assignment { node: 0, start: 0.0, finish: 2.0 });
+        planned.assign(Gid::new(0, 1), Assignment { node: 0, start: 5.0, finish: 8.0 });
+        planned.assign(Gid::new(0, 2), Assignment { node: 0, start: 11.0, finish: 12.0 });
+        let realized = realize(&planned, &prob, |_| 1.0);
+        // order preserved, gaps closed: [0,2], [2,5], [5,6]
+        assert_eq!(realized.get(Gid::new(0, 0)), Some(&Assignment { node: 0, start: 0.0, finish: 2.0 }));
+        assert_eq!(realized.get(Gid::new(0, 1)), Some(&Assignment { node: 0, start: 2.0, finish: 5.0 }));
+        assert_eq!(realized.get(Gid::new(0, 2)), Some(&Assignment { node: 0, start: 5.0, finish: 6.0 }));
+    }
+
+    #[test]
+    fn stable_noise_is_order_independent_and_bounded() {
+        let noise = StableNoise::new(0.4, 99);
+        // forward and reverse sampling orders give identical factors
+        let fwd: Vec<f64> = (0..200).map(|i| noise.factor(Gid::new(i % 5, i))).collect();
+        let rev: Vec<f64> = (0..200)
+            .rev()
+            .map(|i| noise.factor(Gid::new(i % 5, i)))
+            .collect();
+        for (a, b) in fwd.iter().zip(rev.iter().rev()) {
+            assert_eq!(a, b);
+        }
+        for &f in &fwd {
+            assert!((NOISE_LO..=NOISE_HI).contains(&f));
+        }
+        // distinct tasks get distinct draws (not one global factor)
+        assert!(fwd.windows(2).any(|w| w[0] != w[1]));
+        // zero std is exactly 1
+        let clean = StableNoise::new(0.0, 7);
+        assert_eq!(clean.factor(Gid::new(3, 14)), 1.0);
+        // different seeds decorrelate
+        let other = StableNoise::new(0.4, 100);
+        assert_ne!(noise.factor(Gid::new(0, 0)), other.factor(Gid::new(0, 0)));
     }
 
     #[test]

@@ -1,0 +1,856 @@
+//! The **reactive runtime coordinator**: a discrete-event simulation in
+//! which realized task durations deviate from the cost estimates (the
+//! [`crate::robustness`] noise models), the coordinator observes *actual*
+//! start/finish events, and — unlike the post-hoc analysis in
+//! [`crate::robustness::realize`] — reacts while the workload runs.
+//!
+//! Two rescheduling triggers exist:
+//!
+//! * **Graph arrivals** (§IV of the paper): the configured [`Policy`]
+//!   decides which pending tasks are reverted, exactly as in the static
+//!   [`Coordinator`](crate::coordinator::Coordinator) — except that
+//!   "started" is now an *observed* runtime fact, not a planned start
+//!   time.
+//! * **Stragglers** ([`Reaction::LastK`]): when a task finishes more than
+//!   `threshold × estimated duration` later than the coordinator
+//!   expected, the pending tasks of the `k` most recently arrived graphs
+//!   are reverted and the base heuristic re-runs against the *observed*
+//!   state.  [`Reaction::None`] is the no-reaction baseline (the plan is
+//!   executed as-is, late or not).
+//!
+//! §Perf: every replan runs the base heuristic **in place** on the
+//! belief schedule's master timelines inside a PR-1 insertion-journal
+//! transaction ([`Timelines::begin_txn`](crate::schedule::Timelines::begin_txn)),
+//! so reactive replans cost O(slots touched) and allocate nothing in
+//! steady state; all refresh scratch buffers live in the simulator and
+//! are reused across events.
+//!
+//! **Frozen-prefix invariant**: a task that has started executing is
+//! never moved by any replan — reverts only ever select tasks the
+//! runtime has not dispatched.  [`SimConfig::record_frozen`] makes every
+//! replan snapshot the dispatched set so tests can assert the invariant
+//! against the final realized schedule.
+//!
+//! **Causality.**  Unlike the static coordinator — whose plan-time
+//! convention may re-place a reverted task into an idle gap *before* the
+//! arrival that triggered the replan — the reactive runtime is causal:
+//! every replan floors the pending tasks' ready times at the decision
+//! instant, so work is only ever placed in the future.  With perfect
+//! estimates (zero noise) the two models coincide exactly whenever no
+//! task is re-placed (non-preemptive runs, single-graph instances); the
+//! unit tests pin both that equivalence and the preemptive divergence
+//! semantics.
+//!
+//! The simulation is deterministic: the event queue breaks timestamp
+//! ties by kind and insertion order, and noise factors are a pure
+//! function of `(noise_std, noise_seed, gid)`
+//! ([`crate::robustness::StableNoise`]), so two runs with the same
+//! configuration — or the same run embedded in a parallel sweep — are
+//! bit-identical.
+
+use std::time::Instant;
+
+use crate::coordinator::{CompositeWorkspace, DynamicProblem, Policy};
+use crate::fasthash::{FxHashMap, FxHashSet};
+use crate::graph::Gid;
+use crate::metrics::MetricRow;
+use crate::robustness::StableNoise;
+use crate::schedule::{Assignment, Schedule};
+use crate::schedulers::Scheduler;
+use crate::sim::events::{EventQueue, SimEvent, SimLogEntry, SimLogKind};
+
+/// How the coordinator reacts to observed lateness.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum Reaction {
+    /// No-reaction baseline: arrivals still replan per the policy, but
+    /// stragglers never trigger rescheduling.
+    #[default]
+    None,
+    /// Straggler-triggered Last-K rescheduling: when a task finishes
+    /// later than `(1 + threshold) ×` its estimated duration, revert the
+    /// pending tasks of the `k` most recently arrived graphs and re-run
+    /// the base heuristic against the observed state.
+    LastK { k: usize, threshold: f64 },
+}
+
+impl Reaction {
+    /// Short label for tables/CSV: `none` or `L3@0.25`.
+    pub fn label(&self) -> String {
+        match self {
+            Reaction::None => "none".to_string(),
+            Reaction::LastK { k, threshold } => format!("L{k}@{threshold}"),
+        }
+    }
+}
+
+/// Reactive-runtime configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct SimConfig {
+    /// std of the multiplicative truncated-Gaussian duration noise
+    /// (0 = perfect estimates; realized ≡ planned).
+    pub noise_std: f64,
+    /// seed of the per-task noise factors (independent of the instance
+    /// seed so the same workload can be re-run under fresh noise).
+    pub noise_seed: u64,
+    pub reaction: Reaction,
+    /// Snapshot the dispatched set at every replan into
+    /// [`ReplanRecord::frozen`] (test instrumentation; off by default).
+    pub record_frozen: bool,
+}
+
+/// One rescheduling pass of a simulated run.
+#[derive(Clone, Debug)]
+pub struct ReplanRecord {
+    pub time: f64,
+    /// true = straggler-triggered, false = arrival-time policy replan
+    pub straggler: bool,
+    /// previously scheduled tasks reverted by this pass
+    pub n_reverted: usize,
+    /// composite size handed to the base heuristic
+    pub n_pending: usize,
+    /// `(gid, node, start)` of every task already dispatched when the
+    /// replan fired (empty unless [`SimConfig::record_frozen`]); the
+    /// frozen-prefix invariant says each must equal the final realized
+    /// placement.
+    pub frozen: Vec<(Gid, usize, f64)>,
+}
+
+/// Outcome of a reactive simulated run.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// The realized execution: observed starts/finishes of every task.
+    /// Durations embed the noise, so §II-validate it with
+    /// [`crate::sim::replay`] (which never assumes duration = c/s).
+    pub schedule: Schedule,
+    /// Timestamped realized-event trace.
+    pub log: Vec<SimLogEntry>,
+    /// Every rescheduling pass, arrival-time and straggler-triggered.
+    pub replans: Vec<ReplanRecord>,
+    /// §V.E: total wall time inside the base heuristic across replans.
+    pub sched_runtime_s: f64,
+}
+
+impl SimResult {
+    pub fn metrics(&self, prob: &DynamicProblem) -> MetricRow {
+        MetricRow::compute(
+            &self.schedule,
+            &prob.graphs,
+            &prob.network,
+            self.sched_runtime_s,
+        )
+    }
+
+    pub fn n_replans(&self) -> usize {
+        self.replans.len()
+    }
+
+    pub fn n_straggler_replans(&self) -> usize {
+        self.replans.iter().filter(|r| r.straggler).count()
+    }
+
+    pub fn n_reverted_total(&self) -> usize {
+        self.replans.iter().map(|r| r.n_reverted).sum()
+    }
+}
+
+/// Mutable simulation state (belief + truth + scratch), separated from
+/// the coordinator so the borrow of the base heuristic and the composite
+/// workspace stays disjoint from the event-loop state.
+struct Sim<'a> {
+    prob: &'a DynamicProblem,
+    cfg: SimConfig,
+    noise: StableNoise,
+    /// The coordinator's **belief**: planned placements for pending
+    /// tasks, observed truth for dispatched ones (refreshed at replans).
+    plan: Schedule,
+    /// The **truth**: realized starts/finishes (durations include noise).
+    realized: Schedule,
+    completed: FxHashSet<Gid>,
+    /// finish the coordinator expected when it dispatched each task
+    /// (realized start + estimated duration)
+    expected_finish: FxHashMap<Gid, f64>,
+    node_running: Vec<Option<Gid>>,
+    /// realized finish of the last task dispatched to each node
+    node_free: Vec<f64>,
+    /// dispatch-decision epochs; a [`SimEvent::TaskStart`] is valid only
+    /// while its epoch matches (replans and newer decisions invalidate)
+    node_epoch: Vec<u64>,
+    /// dispatched-prefix length per node in plan slot order
+    cursor: Vec<usize>,
+    queue: EventQueue,
+    /// graphs arrived so far (straggler window base)
+    arrived: usize,
+    log: Vec<SimLogEntry>,
+    replans: Vec<ReplanRecord>,
+    sched_runtime_s: f64,
+    // --- reusable scratch (steady-state replans allocate nothing) ---
+    refresh_order: Vec<Vec<Gid>>,
+    refresh_next: Vec<usize>,
+    node_tail: Vec<f64>,
+    to_remove: Vec<Gid>,
+    fix: Vec<(Gid, Assignment)>,
+    revert_set: FxHashSet<Gid>,
+}
+
+impl<'a> Sim<'a> {
+    fn new(prob: &'a DynamicProblem, cfg: SimConfig) -> Self {
+        let n = prob.network.n_nodes();
+        let mut queue = EventQueue::new();
+        for (i, (arrival, _)) in prob.graphs.iter().enumerate() {
+            queue.push(*arrival, SimEvent::GraphArrival { idx: i });
+        }
+        Sim {
+            prob,
+            cfg,
+            noise: StableNoise::new(cfg.noise_std, cfg.noise_seed),
+            plan: Schedule::new(n),
+            realized: Schedule::new(n),
+            completed: FxHashSet::default(),
+            expected_finish: FxHashMap::default(),
+            node_running: vec![None; n],
+            node_free: vec![0.0; n],
+            node_epoch: vec![0; n],
+            cursor: vec![0; n],
+            queue,
+            arrived: 0,
+            log: Vec::new(),
+            replans: Vec::new(),
+            sched_runtime_s: 0.0,
+            refresh_order: vec![Vec::new(); n],
+            refresh_next: vec![0; n],
+            node_tail: vec![0.0; n],
+            to_remove: Vec::new(),
+            fix: Vec::new(),
+            revert_set: FxHashSet::default(),
+        }
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.node_free.len()
+    }
+
+    fn dispatched(&self, gid: Gid) -> bool {
+        self.realized.get(gid).is_some()
+    }
+
+    /// Work-conserving dispatch: for every idle node whose next planned
+    /// task has all predecessors *actually* finished, enqueue its start
+    /// at the earliest legal instant (data arrival is physical: it uses
+    /// realized finishes, never estimates).
+    fn dispatch_all(&mut self, now: f64) {
+        for v in 0..self.n_nodes() {
+            if self.node_running[v].is_some() {
+                continue;
+            }
+            let Some(slot) = self.plan.timelines().node_slots(v).get(self.cursor[v]) else {
+                continue;
+            };
+            let gid = slot.gid;
+            debug_assert!(!self.dispatched(gid), "cursor points at a dispatched task");
+            let (arrival, g) = &self.prob.graphs[gid.graph as usize];
+            let mut start = arrival.max(self.node_free[v]);
+            let mut ready = true;
+            for &(p, data) in g.predecessors(gid.task as usize) {
+                let pgid = Gid::new(gid.graph as usize, p);
+                if !self.completed.contains(&pgid) {
+                    ready = false;
+                    break;
+                }
+                let pa = self.realized.get(pgid).unwrap();
+                start = start.max(pa.finish + self.prob.network.comm_time(data, pa.node, v));
+            }
+            if !ready {
+                continue;
+            }
+            let start = start.max(now);
+            self.node_epoch[v] += 1;
+            self.queue.push(
+                start,
+                SimEvent::TaskStart {
+                    gid,
+                    node: v,
+                    epoch: self.node_epoch[v],
+                },
+            );
+        }
+    }
+
+    /// Project observed reality onto the belief schedule: dispatched
+    /// tasks snap to their observed truth (running tasks get
+    /// `max(expected finish, now)` — the coordinator cannot see a future
+    /// realized finish), and every pending task's expected start/finish
+    /// is re-derived in planned per-node order, floored at `now`.
+    /// Tasks in `revert` are dropped from the belief entirely (the
+    /// caller hands them back to the base heuristic).
+    fn refresh_belief(&mut self, now: f64, revert: &[Gid]) {
+        let n = self.n_nodes();
+        self.revert_set.clear();
+        self.revert_set.extend(revert.iter().copied());
+
+        // 1. capture the pending per-node order; drop all pending slots
+        self.to_remove.clear();
+        for v in 0..n {
+            self.refresh_order[v].clear();
+            for s in self.plan.timelines().node_slots(v) {
+                if self.realized.get(s.gid).is_none() {
+                    self.to_remove.push(s.gid);
+                    if !self.revert_set.contains(&s.gid) {
+                        self.refresh_order[v].push(s.gid);
+                    }
+                }
+            }
+        }
+        while let Some(gid) = self.to_remove.pop() {
+            self.plan.unassign(gid);
+        }
+
+        // 2. snap dispatched entries to observed truth (two-phase:
+        // remove every stale slot first, then insert the truths — a
+        // one-by-one swap could transiently overlap a neighbour)
+        self.fix.clear();
+        let mut fix = std::mem::take(&mut self.fix);
+        for (gid, pa) in self.plan.iter() {
+            let ra = self.realized.get(*gid).unwrap();
+            let truth = if self.completed.contains(gid) {
+                *ra
+            } else {
+                Assignment {
+                    node: ra.node,
+                    start: ra.start,
+                    finish: self.expected_finish[gid].max(now),
+                }
+            };
+            if *pa != truth {
+                fix.push((*gid, truth));
+            }
+        }
+        for &(gid, _) in &fix {
+            self.plan.unassign(gid);
+        }
+        for &(gid, a) in &fix {
+            self.plan.assign(gid, a);
+        }
+        fix.clear();
+        self.fix = fix;
+
+        // 3. re-derive expected times for the pending tasks, preserving
+        // assignment and per-node order (the realize recurrence:
+        // start = max(arrival, now, node predecessor, preds + comm))
+        let mut remaining = 0usize;
+        for v in 0..n {
+            self.refresh_next[v] = 0;
+            remaining += self.refresh_order[v].len();
+            self.node_tail[v] = self
+                .plan
+                .timelines()
+                .node_slots(v)
+                .last()
+                .map_or(0.0, |s| s.finish);
+        }
+        let mut placed_any = true;
+        while placed_any && remaining > 0 {
+            placed_any = false;
+            for v in 0..n {
+                'node: while self.refresh_next[v] < self.refresh_order[v].len() {
+                    let gid = self.refresh_order[v][self.refresh_next[v]];
+                    let (arrival, g) = &self.prob.graphs[gid.graph as usize];
+                    let mut start = arrival.max(now).max(self.node_tail[v]);
+                    for &(p, data) in g.predecessors(gid.task as usize) {
+                        let pgid = Gid::new(gid.graph as usize, p);
+                        match self.plan.get(pgid) {
+                            None => break 'node,
+                            Some(pa) => {
+                                start = start.max(
+                                    pa.finish
+                                        + self.prob.network.comm_time(data, pa.node, v),
+                                );
+                            }
+                        }
+                    }
+                    let dur = self
+                        .prob
+                        .network
+                        .exec_time(g.cost(gid.task as usize), v);
+                    self.plan.assign(
+                        gid,
+                        Assignment {
+                            node: v,
+                            start,
+                            finish: start + dur,
+                        },
+                    );
+                    self.node_tail[v] = start + dur;
+                    self.refresh_next[v] += 1;
+                    remaining -= 1;
+                    placed_any = true;
+                }
+            }
+        }
+        assert_eq!(
+            remaining, 0,
+            "belief refresh deadlocked — pending order inconsistent with deps"
+        );
+    }
+
+    /// Recompute the dispatched-prefix cursors after a replan reshaped
+    /// the plan's slot lists.
+    fn recompute_cursors(&mut self) {
+        for v in 0..self.n_nodes() {
+            let slots = self.plan.timelines().node_slots(v);
+            let mut c = 0;
+            while c < slots.len() && self.realized.get(slots[c].gid).is_some() {
+                c += 1;
+            }
+            debug_assert!(
+                slots[c..].iter().all(|s| self.realized.get(s.gid).is_none()),
+                "dispatched tasks are not a slot-order prefix on node {v}"
+            );
+            self.cursor[v] = c;
+        }
+    }
+
+    /// Sorted `(gid, node, start)` snapshot of the dispatched set.
+    fn frozen_snapshot(&self) -> Vec<(Gid, usize, f64)> {
+        let mut out: Vec<(Gid, usize, f64)> = self
+            .realized
+            .iter()
+            .map(|(g, a)| (*g, a.node, a.start))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+}
+
+/// The reactive coordinator: an arrival [`Policy`] plus a straggler
+/// [`Reaction`] wrapped around a base heuristic, driven by the
+/// discrete-event runtime.
+pub struct ReactiveCoordinator {
+    pub policy: Policy,
+    scheduler: Box<dyn Scheduler>,
+    cfg: SimConfig,
+    ws: CompositeWorkspace,
+    pending: Vec<Gid>,
+}
+
+impl ReactiveCoordinator {
+    pub fn new(policy: Policy, scheduler: Box<dyn Scheduler>, cfg: SimConfig) -> Self {
+        Self {
+            policy,
+            scheduler,
+            cfg,
+            ws: CompositeWorkspace::new(),
+            pending: Vec::new(),
+        }
+    }
+
+    /// `5P-HEFT σ0.30 L3@0.25` style label.
+    pub fn label(&self) -> String {
+        format!(
+            "{}-{} σ{:.2} {}",
+            self.policy.label(),
+            self.scheduler.name(),
+            self.cfg.noise_std,
+            self.cfg.reaction.label()
+        )
+    }
+
+    /// Run the reactive event loop over the whole problem.
+    pub fn run(&mut self, prob: &DynamicProblem) -> SimResult {
+        let mut sim = Sim::new(prob, self.cfg);
+
+        while let Some((t, ev)) = sim.queue.pop() {
+            match ev {
+                SimEvent::GraphArrival { idx } => {
+                    sim.arrived = idx + 1;
+                    sim.log.push(SimLogEntry {
+                        time: t,
+                        kind: SimLogKind::Arrival { graph: idx },
+                    });
+                    let window = self.policy.window(idx);
+                    self.replan(&mut sim, t, idx - window..idx, Some(idx), false);
+                    sim.dispatch_all(t);
+                }
+                SimEvent::TaskStart { gid, node, epoch } => {
+                    if epoch != sim.node_epoch[node] || sim.dispatched(gid) {
+                        continue; // invalidated by a replan or newer decision
+                    }
+                    debug_assert!(sim.node_running[node].is_none());
+                    let g = &prob.graphs[gid.graph as usize].1;
+                    let est = prob.network.exec_time(g.cost(gid.task as usize), node);
+                    let rdur = est * sim.noise.factor(gid);
+                    sim.realized.assign(
+                        gid,
+                        Assignment {
+                            node,
+                            start: t,
+                            finish: t + rdur,
+                        },
+                    );
+                    sim.expected_finish.insert(gid, t + est);
+                    sim.node_running[node] = Some(gid);
+                    sim.node_free[node] = t + rdur;
+                    sim.cursor[node] += 1;
+                    sim.queue.push(t + rdur, SimEvent::TaskFinish { gid });
+                    sim.log.push(SimLogEntry {
+                        time: t,
+                        kind: SimLogKind::Start { gid, node },
+                    });
+                }
+                SimEvent::TaskFinish { gid } => {
+                    let a = *sim.realized.get(gid).unwrap();
+                    sim.completed.insert(gid);
+                    debug_assert_eq!(sim.node_running[a.node], Some(gid));
+                    sim.node_running[a.node] = None;
+                    let expected = sim.expected_finish[&gid];
+                    let lateness = t - expected;
+                    sim.log.push(SimLogEntry {
+                        time: t,
+                        kind: SimLogKind::Finish {
+                            gid,
+                            node: a.node,
+                            lateness,
+                        },
+                    });
+                    if let Reaction::LastK { k, threshold } = self.cfg.reaction {
+                        let est = expected - a.start;
+                        if lateness > threshold * est {
+                            let lo = sim.arrived - k.min(sim.arrived);
+                            self.replan(&mut sim, t, lo..sim.arrived, None, true);
+                        }
+                    }
+                    sim.dispatch_all(t);
+                }
+            }
+        }
+
+        assert_eq!(
+            sim.realized.n_assigned(),
+            prob.total_tasks(),
+            "reactive runtime deadlocked before completing the workload"
+        );
+
+        SimResult {
+            schedule: sim.realized,
+            log: sim.log,
+            replans: sim.replans,
+            sched_runtime_s: sim.sched_runtime_s,
+        }
+    }
+
+    /// One rescheduling pass at time `now`: revert the still-pending
+    /// tasks of `revert_graphs` (plus all tasks of a newly arrived
+    /// graph), refresh the belief to the observed state, and run the
+    /// base heuristic in place inside a timeline transaction.
+    fn replan(
+        &mut self,
+        sim: &mut Sim<'_>,
+        now: f64,
+        revert_graphs: std::ops::Range<usize>,
+        new_graph: Option<usize>,
+        straggler: bool,
+    ) {
+        self.pending.clear();
+        let mut pending = std::mem::take(&mut self.pending);
+        for j in revert_graphs {
+            let g = &sim.prob.graphs[j].1;
+            for task in 0..g.n_tasks() {
+                let gid = Gid::new(j, task);
+                if sim.plan.get(gid).is_some() && !sim.dispatched(gid) {
+                    pending.push(gid);
+                }
+            }
+        }
+        let n_reverted = pending.len();
+        if n_reverted == 0 && new_graph.is_none() {
+            self.pending = pending;
+            return; // straggler fired but nothing is revertible
+        }
+
+        // belief refresh drops the reverted slots and re-derives the
+        // expected times of every frozen pending task
+        sim.refresh_belief(now, &pending);
+
+        if let Some(i) = new_graph {
+            let g = &sim.prob.graphs[i].1;
+            for task in 0..g.n_tasks() {
+                pending.push(Gid::new(i, task));
+            }
+        }
+
+        let problem = self
+            .ws
+            .build_floored(&pending, sim.prob, &sim.plan, now);
+        sim.plan.timelines_mut().begin_txn();
+        let t0 = Instant::now();
+        let assignments =
+            self.scheduler
+                .schedule(problem, &sim.prob.network, sim.plan.timelines_mut());
+        sim.sched_runtime_s += t0.elapsed().as_secs_f64();
+        for (idx, a) in assignments.iter().enumerate() {
+            sim.plan.record(problem.tasks[idx].gid, *a);
+        }
+        let n_pending = problem.n_tasks();
+        sim.plan.timelines_mut().commit_txn();
+
+        for v in 0..sim.n_nodes() {
+            sim.node_epoch[v] += 1; // stale dispatch decisions die here
+        }
+        sim.recompute_cursors();
+
+        sim.log.push(SimLogEntry {
+            time: now,
+            kind: SimLogKind::Replan {
+                straggler,
+                n_reverted,
+                n_pending,
+            },
+        });
+        let frozen = if sim.cfg.record_frozen {
+            sim.frozen_snapshot()
+        } else {
+            Vec::new()
+        };
+        sim.replans.push(ReplanRecord {
+            time: now,
+            straggler,
+            n_reverted,
+            n_pending,
+            frozen,
+        });
+        self.pending = pending;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Coordinator;
+    use crate::schedulers::SchedulerKind;
+    use crate::sim::replay;
+    use crate::workloads::Dataset;
+
+    fn sig(s: &Schedule) -> Vec<(Gid, usize, u64, u64)> {
+        let mut v: Vec<(Gid, usize, u64, u64)> = s
+            .iter()
+            .map(|(g, a)| (*g, a.node, a.start.to_bits(), a.finish.to_bits()))
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// With perfect estimates and no preemption the reactive runtime
+    /// executes the plan exactly: every placement of a non-preemptive
+    /// static plan is causal (nothing is ever re-placed), so the
+    /// realized schedule must be bit-identical to the static
+    /// coordinator's — with and without a straggler reaction armed (it
+    /// can never fire at zero lateness).  Preemptive policies are NOT
+    /// expected to match bit-exactly in general: the static coordinator
+    /// may re-place a reverted task into an already-past idle gap
+    /// (clairvoyant plan-time convention), which a causal runtime
+    /// cannot do — see `zero_noise_single_graph_matches_static`.
+    #[test]
+    fn zero_noise_np_matches_static_coordinator() {
+        for dataset in [Dataset::Synthetic, Dataset::RiotBench] {
+            let prob = dataset.instance(10, 42);
+            for kind in [SchedulerKind::Heft, SchedulerKind::Cpop] {
+                let mut st = Coordinator::new(Policy::NonPreemptive, kind.make(0));
+                let want = st.run(&prob);
+                for reaction in [
+                    Reaction::None,
+                    Reaction::LastK {
+                        k: 2,
+                        threshold: 0.25,
+                    },
+                ] {
+                    let cfg = SimConfig {
+                        noise_std: 0.0,
+                        noise_seed: 9,
+                        reaction,
+                        record_frozen: false,
+                    };
+                    let mut rc =
+                        ReactiveCoordinator::new(Policy::NonPreemptive, kind.make(0), cfg);
+                    let got = rc.run(&prob);
+                    assert_eq!(
+                        sig(&got.schedule),
+                        sig(&want.schedule),
+                        "{dataset:?} NP-{} {reaction:?}",
+                        kind.name()
+                    );
+                    assert_eq!(got.n_straggler_replans(), 0);
+                }
+            }
+        }
+    }
+
+    /// A single-graph instance has no later arrival, so no policy ever
+    /// reverts anything and the causal runtime matches the static plan
+    /// bit-exactly for every policy.
+    #[test]
+    fn zero_noise_single_graph_matches_static() {
+        let full = Dataset::WfCommons.instance(3, 5);
+        let prob = DynamicProblem::new(full.network.clone(), full.graphs[..1].to_vec());
+        for policy in [Policy::NonPreemptive, Policy::LastK(5), Policy::Preemptive] {
+            let mut st = Coordinator::new(policy, SchedulerKind::Heft.make(0));
+            let want = st.run(&prob);
+            let cfg = SimConfig {
+                noise_std: 0.0,
+                noise_seed: 0,
+                reaction: Reaction::None,
+                record_frozen: false,
+            };
+            let mut rc = ReactiveCoordinator::new(policy, SchedulerKind::Heft.make(0), cfg);
+            let got = rc.run(&prob);
+            assert_eq!(sig(&got.schedule), sig(&want.schedule), "{policy:?}");
+        }
+    }
+
+    /// Preemptive policies under zero noise: complete, operationally
+    /// valid, §II-valid (durations match estimates at zero noise), one
+    /// arrival replan per graph, and no straggler ever fires.
+    #[test]
+    fn zero_noise_preemptive_is_causal_and_valid() {
+        let prob = Dataset::Synthetic.instance(10, 42);
+        for policy in [Policy::LastK(3), Policy::Preemptive] {
+            let cfg = SimConfig {
+                noise_std: 0.0,
+                noise_seed: 0,
+                reaction: Reaction::LastK {
+                    k: 2,
+                    threshold: 0.25,
+                },
+                record_frozen: false,
+            };
+            let mut rc = ReactiveCoordinator::new(policy, SchedulerKind::Heft.make(0), cfg);
+            let res = rc.run(&prob);
+            assert_eq!(res.schedule.n_assigned(), prob.total_tasks());
+            assert_eq!(res.n_straggler_replans(), 0, "{policy:?}");
+            assert_eq!(res.n_replans(), prob.graphs.len(), "{policy:?}");
+            let rep = replay(&res.schedule, &prob.graphs, &prob.network);
+            assert!(rep.errors.is_empty(), "{policy:?}: {:?}", &rep.errors[..rep.errors.len().min(3)]);
+            let viol =
+                crate::schedule::validate(&res.schedule, &prob.graphs, &prob.network);
+            assert!(viol.is_empty(), "{policy:?}: {:?}", &viol[..viol.len().min(3)]);
+        }
+    }
+
+    #[test]
+    fn noisy_run_is_complete_and_replay_valid() {
+        let prob = Dataset::Synthetic.instance(12, 7);
+        for reaction in [
+            Reaction::None,
+            Reaction::LastK {
+                k: 3,
+                threshold: 0.2,
+            },
+        ] {
+            let cfg = SimConfig {
+                noise_std: 0.5,
+                noise_seed: 3,
+                reaction,
+                record_frozen: false,
+            };
+            let mut rc =
+                ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
+            let res = rc.run(&prob);
+            assert_eq!(res.schedule.n_assigned(), prob.total_tasks());
+            let rep = replay(&res.schedule, &prob.graphs, &prob.network);
+            assert!(
+                rep.errors.is_empty(),
+                "{reaction:?}: {:?}",
+                &rep.errors[..rep.errors.len().min(3)]
+            );
+        }
+    }
+
+    #[test]
+    fn stragglers_fire_under_heavy_noise() {
+        let prob = Dataset::Synthetic.instance(15, 11);
+        let cfg = SimConfig {
+            noise_std: 0.6,
+            noise_seed: 5,
+            reaction: Reaction::LastK {
+                k: 3,
+                threshold: 0.05,
+            },
+            record_frozen: false,
+        };
+        let mut rc =
+            ReactiveCoordinator::new(Policy::NonPreemptive, SchedulerKind::Heft.make(0), cfg);
+        let res = rc.run(&prob);
+        assert!(
+            res.n_straggler_replans() > 0,
+            "heavy noise with a tight threshold must trigger rescheduling"
+        );
+        // arrival replans happen regardless (one per arrival that had
+        // anything to schedule)
+        assert!(res.n_replans() >= prob.graphs.len());
+        let rep = replay(&res.schedule, &prob.graphs, &prob.network);
+        assert!(rep.errors.is_empty(), "{:?}", &rep.errors[..rep.errors.len().min(3)]);
+    }
+
+    #[test]
+    fn frozen_prefix_survives_every_replan() {
+        let prob = Dataset::Adversarial.instance(10, 2);
+        let cfg = SimConfig {
+            noise_std: 0.5,
+            noise_seed: 1,
+            reaction: Reaction::LastK {
+                k: 4,
+                threshold: 0.1,
+            },
+            record_frozen: true,
+        };
+        let mut rc =
+            ReactiveCoordinator::new(Policy::Preemptive, SchedulerKind::Cpop.make(0), cfg);
+        let res = rc.run(&prob);
+        assert!(!res.replans.is_empty());
+        for rec in &res.replans {
+            for &(gid, node, start) in &rec.frozen {
+                let a = res.schedule.get(gid).unwrap();
+                assert_eq!(a.node, node, "replan at {} moved started {gid}", rec.time);
+                assert_eq!(a.start, start, "replan at {} shifted started {gid}", rec.time);
+            }
+        }
+    }
+
+    #[test]
+    fn simulation_is_deterministic() {
+        let prob = Dataset::WfCommons.instance(8, 4);
+        let cfg = SimConfig {
+            noise_std: 0.4,
+            noise_seed: 8,
+            reaction: Reaction::LastK {
+                k: 2,
+                threshold: 0.15,
+            },
+            record_frozen: false,
+        };
+        let run = || {
+            let mut rc =
+                ReactiveCoordinator::new(Policy::LastK(3), SchedulerKind::Heft.make(0), cfg);
+            rc.run(&prob)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(sig(&a.schedule), sig(&b.schedule));
+        assert_eq!(a.n_replans(), b.n_replans());
+        assert_eq!(a.log.len(), b.log.len());
+    }
+
+    #[test]
+    fn labels_render() {
+        let cfg = SimConfig {
+            noise_std: 0.3,
+            noise_seed: 0,
+            reaction: Reaction::LastK {
+                k: 3,
+                threshold: 0.25,
+            },
+            record_frozen: false,
+        };
+        let rc = ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
+        assert_eq!(rc.label(), "5P-HEFT σ0.30 L3@0.25");
+        assert_eq!(Reaction::None.label(), "none");
+    }
+}

@@ -1,0 +1,190 @@
+//! Event types and the deterministic priority queue of the reactive
+//! runtime simulator.
+//!
+//! Three event kinds drive the simulation: a task **finishes** (the only
+//! moment the coordinator learns a realized duration), a graph
+//! **arrives** (the paper's §IV preemption decision point), and a task
+//! **starts** (a dispatch decision previously taken for an idle node).
+//! At equal timestamps the queue orders Finish < Arrival < Start: a node
+//! hands over at an instant (replay convention), and a task whose start
+//! coincides with an arrival is still *Scheduled*, not *Executing*, when
+//! the arrival's preemption decision is taken — the same tie the static
+//! coordinator breaks with its `start >= arrival - EPS` revert test.
+//! Remaining ties fall back to the monotone insertion sequence number,
+//! so the pop order is a pure function of the push history and the whole
+//! simulation is deterministic.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::graph::Gid;
+
+/// One simulator event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SimEvent {
+    /// A task's realized execution completed.
+    TaskFinish { gid: Gid },
+    /// Graph `idx` of the dynamic problem arrives.
+    GraphArrival { idx: usize },
+    /// Start `gid` on `node` — valid only while `epoch` matches the
+    /// node's current dispatch epoch (replans and newer dispatch
+    /// decisions invalidate older ones by bumping the epoch).
+    TaskStart { gid: Gid, node: usize, epoch: u64 },
+}
+
+impl SimEvent {
+    /// Same-timestamp rank: Finish < Arrival < Start (see module doc).
+    fn rank(&self) -> u8 {
+        match self {
+            SimEvent::TaskFinish { .. } => 0,
+            SimEvent::GraphArrival { .. } => 1,
+            SimEvent::TaskStart { .. } => 2,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    time: f64,
+    seq: u64,
+    ev: SimEvent,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // inverted: BinaryHeap is a max-heap, we want the earliest entry
+        // on top.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.ev.rank().cmp(&self.ev.rank()))
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic min-queue over [`SimEvent`]s.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, time: f64, ev: SimEvent) {
+        debug_assert!(time.is_finite(), "non-finite event time {time}");
+        self.heap.push(Entry {
+            time,
+            seq: self.seq,
+            ev,
+        });
+        self.seq += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, SimEvent)> {
+        self.heap.pop().map(|e| (e.time, e.ev))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// What happened at one instant of the simulated run — the realized-event
+/// trace exported by [`crate::trace::sim_to_json`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SimLogKind {
+    /// Graph `graph` arrived (its §IV replan is logged separately).
+    Arrival { graph: usize },
+    /// `gid` started executing on `node`.
+    Start { gid: Gid, node: usize },
+    /// `gid` finished on `node`; `lateness` is realized finish minus the
+    /// finish the coordinator expected when it dispatched the task
+    /// (negative = finished early).
+    Finish { gid: Gid, node: usize, lateness: f64 },
+    /// A rescheduling pass ran: `straggler` distinguishes reactive
+    /// (lateness-triggered) replans from arrival-time policy replans.
+    Replan {
+        straggler: bool,
+        n_reverted: usize,
+        n_pending: usize,
+    },
+}
+
+/// One timestamped entry of the realized-event trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SimLogEntry {
+    pub time: f64,
+    pub kind: SimLogKind,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, SimEvent::GraphArrival { idx: 3 });
+        q.push(1.0, SimEvent::GraphArrival { idx: 1 });
+        q.push(2.0, SimEvent::GraphArrival { idx: 2 });
+        let order: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|(t, _)| t).collect();
+        assert_eq!(order, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn equal_time_orders_finish_arrival_start() {
+        let g = Gid::new(0, 0);
+        let mut q = EventQueue::new();
+        q.push(5.0, SimEvent::TaskStart { gid: g, node: 0, epoch: 1 });
+        q.push(5.0, SimEvent::GraphArrival { idx: 1 });
+        q.push(5.0, SimEvent::TaskFinish { gid: g });
+        let kinds: Vec<u8> = std::iter::from_fn(|| q.pop())
+            .map(|(_, e)| e.rank())
+            .collect();
+        assert_eq!(kinds, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn equal_time_and_rank_preserves_push_order() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.push(1.0, SimEvent::GraphArrival { idx: i });
+        }
+        let idxs: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|(_, e)| match e {
+                SimEvent::GraphArrival { idx } => idx,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(idxs, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn len_and_empty() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(0.0, SimEvent::GraphArrival { idx: 0 });
+        assert_eq!(q.len(), 1);
+        q.pop();
+        assert!(q.is_empty());
+    }
+}

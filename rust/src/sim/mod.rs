@@ -1,6 +1,7 @@
-//! Discrete-event replay of a finished schedule — an *independent*
-//! cross-check of the analytic timeline arithmetic, plus
-//! utilization-over-time traces for reporting.
+//! Runtime simulation: discrete-event **replay** of a finished schedule
+//! (this module) and the **reactive runtime** ([`coordinator`]) in which
+//! realized durations deviate from the estimates and the coordinator
+//! observes actual finish times and reschedules stragglers.
 //!
 //! The replay walks (start, finish) events in time order, maintaining the
 //! set of running tasks per node and asserting the §II invariants as they
@@ -8,7 +9,16 @@
 //! communication delays; starts after arrivals).  Where
 //! [`crate::schedule::validate`] checks constraints pairwise, the replay
 //! checks them *operationally*, so a bug in the shared interval math
-//! cannot hide in both.
+//! cannot hide in both.  Because the replay never assumes a task's
+//! duration equals its cost estimate, it is also the validity oracle for
+//! *realized* schedules produced under execution-time noise (see
+//! [`crate::robustness`] and [`coordinator::ReactiveCoordinator`]).
+
+pub mod coordinator;
+pub mod events;
+
+pub use coordinator::{Reaction, ReactiveCoordinator, ReplanRecord, SimConfig, SimResult};
+pub use events::{SimLogEntry, SimLogKind};
 
 use crate::graph::{Gid, TaskGraph};
 use crate::network::Network;

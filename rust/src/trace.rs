@@ -2,25 +2,57 @@
 //! problem's arrival trace, every event's preemption record, and the
 //! final schedule.  Enables offline analysis, regression pinning
 //! ("golden traces"), and sharing runs between machines.
+//!
+//! Two formats exist: `dts-trace-v1` records a **planned** run of the
+//! static coordinator; `dts-sim-trace-v1` records a **realized** run of
+//! the reactive runtime simulator — the timestamped arrival/start/
+//! finish/replan event log plus the realized schedule.
 
 use crate::coordinator::{DynamicProblem, DynamicResult, EventLog};
 use crate::graph::Gid;
 use crate::json::{self, Value};
 use crate::schedule::{Assignment, Schedule};
+use crate::sim::{SimLogKind, SimResult};
+
+/// Graph summaries shared by both trace formats.
+fn graphs_json(problem: &DynamicProblem) -> Value {
+    json::arr(
+        problem
+            .graphs
+            .iter()
+            .map(|(arrival, g)| {
+                json::obj(vec![
+                    ("name", json::s(g.name())),
+                    ("arrival", json::num(*arrival)),
+                    ("n_tasks", json::num(g.n_tasks() as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Gid-sorted assignment dump shared by both trace formats.
+fn assignments_json(schedule: &Schedule) -> Value {
+    let mut slots: Vec<(Gid, Assignment)> = schedule.iter().map(|(g, a)| (*g, *a)).collect();
+    slots.sort_by_key(|(g, _)| *g);
+    json::arr(
+        slots
+            .into_iter()
+            .map(|(gid, a)| {
+                json::obj(vec![
+                    ("graph", json::num(gid.graph as f64)),
+                    ("task", json::num(gid.task as f64)),
+                    ("node", json::num(a.node as f64)),
+                    ("start", json::num(a.start)),
+                    ("finish", json::num(a.finish)),
+                ])
+            })
+            .collect(),
+    )
+}
 
 /// Serialize a finished run (problem shape + events + schedule).
 pub fn to_json(problem: &DynamicProblem, result: &DynamicResult) -> Value {
-    let graphs = problem
-        .graphs
-        .iter()
-        .map(|(arrival, g)| {
-            json::obj(vec![
-                ("name", json::s(g.name())),
-                ("arrival", json::num(*arrival)),
-                ("n_tasks", json::num(g.n_tasks() as f64)),
-            ])
-        })
-        .collect();
     let events = result
         .events
         .iter()
@@ -34,29 +66,144 @@ pub fn to_json(problem: &DynamicProblem, result: &DynamicResult) -> Value {
             ])
         })
         .collect();
-    let mut slots: Vec<(Gid, Assignment)> =
-        result.schedule.iter().map(|(g, a)| (*g, *a)).collect();
-    slots.sort_by_key(|(g, _)| *g);
-    let assignments = slots
-        .into_iter()
-        .map(|(gid, a)| {
-            json::obj(vec![
-                ("graph", json::num(gid.graph as f64)),
-                ("task", json::num(gid.task as f64)),
-                ("node", json::num(a.node as f64)),
-                ("start", json::num(a.start)),
-                ("finish", json::num(a.finish)),
-            ])
-        })
-        .collect();
     json::obj(vec![
         ("format", json::s("dts-trace-v1")),
         ("n_nodes", json::num(problem.network.n_nodes() as f64)),
-        ("graphs", json::arr(graphs)),
+        ("graphs", graphs_json(problem)),
         ("events", json::arr(events)),
-        ("assignments", json::arr(assignments)),
+        ("assignments", assignments_json(&result.schedule)),
         ("sched_runtime_s", json::num(result.sched_runtime_s)),
     ])
+}
+
+/// Serialize a reactive simulated run: the realized-event log (arrivals,
+/// observed starts/finishes with lateness, replans) plus the realized
+/// schedule.
+pub fn sim_to_json(problem: &DynamicProblem, result: &SimResult) -> Value {
+    let events = result
+        .log
+        .iter()
+        .map(|e| {
+            let mut fields = vec![("time", json::num(e.time))];
+            match e.kind {
+                SimLogKind::Arrival { graph } => {
+                    fields.push(("kind", json::s("arrival")));
+                    fields.push(("graph", json::num(graph as f64)));
+                }
+                SimLogKind::Start { gid, node } => {
+                    fields.push(("kind", json::s("start")));
+                    fields.push(("graph", json::num(gid.graph as f64)));
+                    fields.push(("task", json::num(gid.task as f64)));
+                    fields.push(("node", json::num(node as f64)));
+                }
+                SimLogKind::Finish { gid, node, lateness } => {
+                    fields.push(("kind", json::s("finish")));
+                    fields.push(("graph", json::num(gid.graph as f64)));
+                    fields.push(("task", json::num(gid.task as f64)));
+                    fields.push(("node", json::num(node as f64)));
+                    fields.push(("lateness", json::num(lateness)));
+                }
+                SimLogKind::Replan {
+                    straggler,
+                    n_reverted,
+                    n_pending,
+                } => {
+                    fields.push(("kind", json::s("replan")));
+                    fields.push(("straggler", Value::Bool(straggler)));
+                    fields.push(("reverted", json::num(n_reverted as f64)));
+                    fields.push(("pending", json::num(n_pending as f64)));
+                }
+            }
+            json::obj(fields)
+        })
+        .collect();
+    json::obj(vec![
+        ("format", json::s("dts-sim-trace-v1")),
+        ("n_nodes", json::num(problem.network.n_nodes() as f64)),
+        ("graphs", graphs_json(problem)),
+        ("events", json::arr(events)),
+        ("assignments", assignments_json(&result.schedule)),
+        ("n_replans", json::num(result.n_replans() as f64)),
+        (
+            "n_straggler_replans",
+            json::num(result.n_straggler_replans() as f64),
+        ),
+        ("sched_runtime_s", json::num(result.sched_runtime_s)),
+    ])
+}
+
+/// A parsed realized-run trace (realized schedule + event/replan counts;
+/// the full log stays in the JSON for offline tooling).
+#[derive(Debug, Clone)]
+pub struct SimTrace {
+    pub n_nodes: usize,
+    pub schedule: Schedule,
+    pub n_events: usize,
+    pub n_replans: usize,
+    pub n_straggler_replans: usize,
+    pub sched_runtime_s: f64,
+}
+
+/// Parse a `dts-sim-trace-v1` document.
+pub fn sim_from_json(v: &Value) -> Result<SimTrace, String> {
+    if v.get("format").and_then(|f| f.as_str()) != Some("dts-sim-trace-v1") {
+        return Err("not a dts-sim-trace-v1 document".into());
+    }
+    let n_nodes = v
+        .get("n_nodes")
+        .and_then(|x| x.as_usize())
+        .ok_or("missing n_nodes")?;
+    let schedule = parse_assignments(v, n_nodes)?;
+    let n_events = v
+        .get("events")
+        .and_then(|x| x.as_array())
+        .ok_or("missing events")?
+        .len();
+    Ok(SimTrace {
+        n_nodes,
+        schedule,
+        n_events,
+        n_replans: v.get("n_replans").and_then(|x| x.as_usize()).unwrap_or(0),
+        n_straggler_replans: v
+            .get("n_straggler_replans")
+            .and_then(|x| x.as_usize())
+            .unwrap_or(0),
+        sched_runtime_s: v
+            .get("sched_runtime_s")
+            .and_then(|x| x.as_f64())
+            .unwrap_or(0.0),
+    })
+}
+
+/// Parse the shared `assignments` array into a schedule, rejecting (as
+/// `Err`, never a panic) out-of-range nodes and duplicate tasks that a
+/// corrupted or hand-edited trace could carry.
+fn parse_assignments(v: &Value, n_nodes: usize) -> Result<Schedule, String> {
+    let mut schedule = Schedule::new(n_nodes);
+    for a in v
+        .get("assignments")
+        .and_then(|x| x.as_array())
+        .ok_or("missing assignments")?
+    {
+        let get = |k: &str| a.get(k).and_then(|x| x.as_f64()).ok_or(format!("bad {k}"));
+        let node_f = get("node")?;
+        if !(node_f >= 0.0 && node_f < n_nodes as f64) {
+            return Err(format!("assignment node {node_f} out of range 0..{n_nodes}"));
+        }
+        let gid = Gid::new(get("graph")? as usize, get("task")? as usize);
+        if schedule.get(gid).is_some() {
+            return Err(format!("duplicate assignment for {gid}"));
+        }
+        schedule.assign(
+            gid,
+            Assignment {
+                node: node_f as usize,
+                start: get("start")?,
+                finish: get("finish")?,
+            },
+        );
+    }
+    Ok(schedule)
 }
 
 /// A parsed trace (schedule + events; graph summaries only — weights are
@@ -79,22 +226,7 @@ pub fn from_json(v: &Value) -> Result<Trace, String> {
         .get("n_nodes")
         .and_then(|x| x.as_usize())
         .ok_or("missing n_nodes")?;
-    let mut schedule = Schedule::new(n_nodes);
-    for a in v
-        .get("assignments")
-        .and_then(|x| x.as_array())
-        .ok_or("missing assignments")?
-    {
-        let get = |k: &str| a.get(k).and_then(|x| x.as_f64()).ok_or(format!("bad {k}"));
-        schedule.assign(
-            Gid::new(get("graph")? as usize, get("task")? as usize),
-            Assignment {
-                node: get("node")? as usize,
-                start: get("start")?,
-                finish: get("finish")?,
-            },
-        );
-    }
+    let schedule = parse_assignments(v, n_nodes)?;
     let mut events = Vec::new();
     for e in v
         .get("events")
@@ -171,6 +303,94 @@ mod tests {
     fn rejects_wrong_format() {
         let v = Value::from_str(r#"{"format": "something-else"}"#).unwrap();
         assert!(from_json(&v).is_err());
+        assert!(sim_from_json(&v).is_err());
+        // the two formats are not interchangeable
+        let (prob, res) = run();
+        assert!(sim_from_json(&to_json(&prob, &res)).is_err());
+    }
+
+    #[test]
+    fn malformed_assignments_are_errors_not_panics() {
+        // node index beyond n_nodes
+        let v = Value::from_str(
+            r#"{"format":"dts-sim-trace-v1","n_nodes":1,"events":[],
+                "assignments":[{"graph":0,"task":0,"node":5,"start":0,"finish":1}]}"#,
+        )
+        .unwrap();
+        assert!(sim_from_json(&v).unwrap_err().contains("out of range"));
+        // duplicate (graph, task)
+        let v = Value::from_str(
+            r#"{"format":"dts-trace-v1","n_nodes":1,"events":[],"graphs":[],
+                "assignments":[{"graph":0,"task":0,"node":0,"start":0,"finish":1},
+                               {"graph":0,"task":0,"node":0,"start":2,"finish":3}]}"#,
+        )
+        .unwrap();
+        assert!(from_json(&v).unwrap_err().contains("duplicate"));
+        // negative node
+        let v = Value::from_str(
+            r#"{"format":"dts-sim-trace-v1","n_nodes":2,"events":[],
+                "assignments":[{"graph":0,"task":0,"node":-1,"start":0,"finish":1}]}"#,
+        )
+        .unwrap();
+        assert!(sim_from_json(&v).unwrap_err().contains("out of range"));
+    }
+
+    fn sim_run() -> (DynamicProblem, crate::sim::SimResult) {
+        use crate::coordinator::Policy;
+        use crate::sim::{Reaction, ReactiveCoordinator, SimConfig};
+        let prob = Dataset::Synthetic.instance(6, 13);
+        let cfg = SimConfig {
+            noise_std: 0.4,
+            noise_seed: 2,
+            reaction: Reaction::LastK {
+                k: 2,
+                threshold: 0.15,
+            },
+            record_frozen: false,
+        };
+        let mut rc =
+            ReactiveCoordinator::new(Policy::LastK(3), SchedulerKind::Heft.make(0), cfg);
+        let res = rc.run(&prob);
+        (prob, res)
+    }
+
+    #[test]
+    fn sim_trace_roundtrips_bit_exactly() {
+        let (prob, res) = sim_run();
+        let text = sim_to_json(&prob, &res).to_string();
+        let trace = sim_from_json(&Value::from_str(&text).unwrap()).unwrap();
+        assert_eq!(trace.n_nodes, prob.network.n_nodes());
+        assert_eq!(trace.schedule.n_assigned(), res.schedule.n_assigned());
+        assert_eq!(trace.n_events, res.log.len());
+        assert_eq!(trace.n_replans, res.n_replans());
+        assert_eq!(trace.n_straggler_replans, res.n_straggler_replans());
+        for (gid, a) in res.schedule.iter() {
+            assert_eq!(trace.schedule.get(*gid), Some(a), "{gid}");
+        }
+        // realized metrics recomputed from the parsed trace match the
+        // live run bit-exactly
+        use crate::metrics;
+        let live = metrics::total_makespan(&res.schedule, &prob.graphs);
+        let parsed = metrics::total_makespan(&trace.schedule, &prob.graphs);
+        assert_eq!(live.to_bits(), parsed.to_bits());
+    }
+
+    #[test]
+    fn sim_trace_event_log_serializes_every_kind() {
+        let (prob, res) = sim_run();
+        let v = sim_to_json(&prob, &res);
+        let events = v.get("events").and_then(|x| x.as_array()).unwrap();
+        let kind_of = |e: &Value| e.get("kind").and_then(|k| k.as_str()).unwrap().to_string();
+        let kinds: std::collections::HashSet<String> = events.iter().map(kind_of).collect();
+        assert!(kinds.contains("arrival"));
+        assert!(kinds.contains("start"));
+        assert!(kinds.contains("finish"));
+        assert!(kinds.contains("replan"));
+        // starts + finishes cover the whole workload
+        let n_starts = events.iter().filter(|e| kind_of(e) == "start").count();
+        let n_fin = events.iter().filter(|e| kind_of(e) == "finish").count();
+        assert_eq!(n_starts, prob.total_tasks());
+        assert_eq!(n_fin, prob.total_tasks());
     }
 
     #[test]

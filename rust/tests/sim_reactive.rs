@@ -1,0 +1,160 @@
+//! Property-based validity harness for the **reactive runtime
+//! simulator**: a seeded grid of (dataset × policy × noise × reaction)
+//! trials over all four datasets, each asserting
+//!
+//! * completeness — every task of the workload is realized;
+//! * operational §II validity — [`dts::sim::replay`] reports zero
+//!   errors (the replay never assumes a task's duration equals its cost
+//!   estimate, so it is the right oracle for noisy realized schedules);
+//! * full §II validity via [`dts::schedule::validate`] at zero noise,
+//!   where realized durations must equal the estimates exactly;
+//! * the **frozen-prefix invariant** — a task that started executing
+//!   before a replan (arrival-time or straggler-triggered Last-K) keeps
+//!   its node and start time in the final realized schedule.
+
+use dts::coordinator::Policy;
+use dts::schedule::validate;
+use dts::schedulers::SchedulerKind;
+use dts::sim::{replay, Reaction, ReactiveCoordinator, SimConfig, SimResult};
+use dts::workloads::Dataset;
+
+fn check_run(res: &SimResult, prob: &dts::coordinator::DynamicProblem, zero_noise: bool, ctx: &str) {
+    assert_eq!(
+        res.schedule.n_assigned(),
+        prob.total_tasks(),
+        "{ctx}: incomplete realized schedule"
+    );
+    let rep = replay(&res.schedule, &prob.graphs, &prob.network);
+    assert!(
+        rep.errors.is_empty(),
+        "{ctx}: {:?}",
+        &rep.errors[..rep.errors.len().min(3)]
+    );
+    if zero_noise {
+        let viol = validate(&res.schedule, &prob.graphs, &prob.network);
+        assert!(
+            viol.is_empty(),
+            "{ctx}: {:?}",
+            &viol[..viol.len().min(3)]
+        );
+    }
+    // frozen-prefix invariant, from the per-replan dispatched snapshots
+    for rec in &res.replans {
+        for &(gid, node, start) in &rec.frozen {
+            let a = res.schedule.get(gid).unwrap();
+            assert_eq!(
+                (a.node, a.start.to_bits()),
+                (node, start.to_bits()),
+                "{ctx}: replan at {} moved started task {gid}",
+                rec.time
+            );
+        }
+    }
+}
+
+/// PROPERTY GRID: dataset × policy × noise × reaction, HEFT base.
+#[test]
+fn prop_reactive_validity_grid() {
+    let policies = [Policy::NonPreemptive, Policy::LastK(3), Policy::Preemptive];
+    let noises = [0.0, 0.35];
+    let reactions = [
+        Reaction::None,
+        Reaction::LastK {
+            k: 2,
+            threshold: 0.2,
+        },
+    ];
+    for (di, dataset) in Dataset::ALL.iter().enumerate() {
+        for (pi, &policy) in policies.iter().enumerate() {
+            for &noise_std in &noises {
+                for &reaction in &reactions {
+                    let seed = 1000 + 97 * di as u64 + 17 * pi as u64;
+                    let prob = dataset.instance(8, seed);
+                    let cfg = SimConfig {
+                        noise_std,
+                        noise_seed: seed ^ 0xBEEF,
+                        reaction,
+                        record_frozen: true,
+                    };
+                    let mut rc = ReactiveCoordinator::new(
+                        policy,
+                        SchedulerKind::Heft.make(seed),
+                        cfg,
+                    );
+                    let res = rc.run(&prob);
+                    let ctx = format!(
+                        "{} {policy:?} σ{noise_std} {reaction:?}",
+                        dataset.name()
+                    );
+                    check_run(&res, &prob, noise_std == 0.0, &ctx);
+                }
+            }
+        }
+    }
+}
+
+/// The same properties across the remaining base heuristics (one noisy
+/// reactive configuration each, all datasets).
+#[test]
+fn prop_reactive_validity_other_heuristics() {
+    let kinds = [
+        SchedulerKind::Cpop,
+        SchedulerKind::MinMin,
+        SchedulerKind::MaxMin,
+        SchedulerKind::Random,
+    ];
+    for (di, dataset) in Dataset::ALL.iter().enumerate() {
+        for (ki, kind) in kinds.iter().enumerate() {
+            let seed = 4000 + 31 * di as u64 + 7 * ki as u64;
+            let prob = dataset.instance(6, seed);
+            let cfg = SimConfig {
+                noise_std: 0.4,
+                noise_seed: seed ^ 0xF00D,
+                reaction: Reaction::LastK {
+                    k: 3,
+                    threshold: 0.15,
+                },
+                record_frozen: true,
+            };
+            let mut rc = ReactiveCoordinator::new(Policy::LastK(2), kind.make(seed), cfg);
+            let res = rc.run(&prob);
+            let ctx = format!("{} {} reactive", dataset.name(), kind.name());
+            check_run(&res, &prob, false, &ctx);
+        }
+    }
+}
+
+/// Straggler reverts never touch a dispatched task: the number of
+/// realized (started) placements is monotone over the event log, and
+/// reverted counts in replan records are consistent with the composite
+/// sizes handed to the heuristic.
+#[test]
+fn prop_replan_accounting_is_consistent() {
+    let prob = Dataset::Synthetic.instance(10, 77);
+    let cfg = SimConfig {
+        noise_std: 0.5,
+        noise_seed: 4,
+        reaction: Reaction::LastK {
+            k: 3,
+            threshold: 0.1,
+        },
+        record_frozen: true,
+    };
+    let mut rc = ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(1), cfg);
+    let res = rc.run(&prob);
+    assert!(res.n_straggler_replans() > 0, "config chosen to trigger stragglers");
+    for rec in &res.replans {
+        if rec.straggler {
+            // straggler replans only ever re-place reverted tasks
+            assert_eq!(rec.n_pending, rec.n_reverted, "at {}", rec.time);
+            assert!(rec.n_reverted > 0, "empty straggler replans are skipped");
+        } else {
+            // arrival replans add the new graph's tasks on top
+            assert!(rec.n_pending >= rec.n_reverted);
+        }
+        // nothing frozen is ever pending again
+        for &(gid, _, _) in &rec.frozen {
+            assert!(res.schedule.get(gid).is_some());
+        }
+    }
+}
