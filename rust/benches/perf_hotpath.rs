@@ -17,6 +17,7 @@ use dts::coordinator::{Coordinator, Policy, Variant};
 use dts::experiments::run_sweep_parallel;
 use dts::graph::Gid;
 use dts::json;
+use dts::policy::PolicySpec;
 use dts::schedule::{Slot, Timelines};
 use dts::schedulers::SchedulerKind;
 use dts::sim::{Reaction, ReactiveCoordinator, SimConfig};
@@ -103,6 +104,53 @@ fn main() {
         });
         rec.report(
             &format!("reactive 5P-HEFT σ0.3 {name} synthetic×100"),
+            mean,
+            min,
+            max,
+        );
+    }
+
+    // 1c. policy-engine rows (§Policy): the adaptive controllers pay for
+    // per-finish decision hooks + per-graph stretch observations on top
+    // of the event loop — compare against the matching `reactive
+    // 5P-HEFT σ0.3 L3@0.25` row to read the engine's overhead, and
+    // against each other to read the budget/adaptation cost.
+    for spec in [
+        PolicySpec::FixedLastK {
+            k: 3,
+            threshold: 0.25,
+        },
+        PolicySpec::AdaptiveK {
+            k0: 3,
+            k_max: 20,
+            threshold: 0.25,
+            target_stretch: 2.0,
+        },
+        PolicySpec::Budgeted {
+            k: 3,
+            threshold: 0.25,
+            rate: 1.0,
+            burst: 4.0,
+        },
+    ] {
+        let cfg = SimConfig {
+            noise_std: 0.3,
+            noise_seed: 1,
+            reaction: Reaction::None,
+            record_frozen: false,
+        };
+        let label = spec.label();
+        let (mean, min, max) = util::time_it(1, 3, || {
+            let mut rc = ReactiveCoordinator::with_policy(
+                Policy::LastK(5),
+                SchedulerKind::Heft.make(0),
+                cfg,
+                spec.make(),
+            );
+            std::hint::black_box(rc.run(&prob));
+        });
+        rec.report(
+            &format!("policy 5P-HEFT σ0.3 {label} synthetic×100"),
             mean,
             min,
             max,

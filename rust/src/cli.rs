@@ -4,6 +4,8 @@
 //! Subcommands:
 //! * `run`        — run one scheduler variant on one dataset instance
 //! * `experiment` — full sweep, printing every figure table
+//! * `simulate`   — reactive runtime sweep (noise × reaction)
+//! * `policy`     — preemption-policy-engine sweep (k × θ × budget)
 //! * `generate`   — emit workload statistics (and optional DOT dumps)
 //! * `validate`   — run + §II-validate + discrete-event replay
 //! * `info`       — version, artifact/bucket status
@@ -12,8 +14,12 @@ use std::collections::HashMap;
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::{Coordinator, Variant};
-use crate::experiments::{run_sim_sweep_parallel, run_sweep_parallel, SimScenario, SimSweepConfig};
+use crate::experiments::{
+    run_policy_sweep_parallel, run_sim_sweep_parallel, run_sweep_parallel, PolicyScenario,
+    PolicySweepConfig, SimScenario, SimSweepConfig,
+};
 use crate::metrics::Metric;
+use crate::policy::PolicySpec;
 use crate::schedule::validate;
 use crate::schedulers::{Cpop, Heft};
 use crate::sim::{replay, Reaction};
@@ -76,6 +82,13 @@ USAGE:
                  [--k 3] [--jobs N] [--csv out.csv] [--json out.json]
                  [--trace out.json]
                  (reactive runtime: realized durations, straggler Last-K)
+  dts policy     --dataset <d|all> [--graphs N] [--trials T] [--seed S]
+                 [--variant 5P-HEFT] [--noise 0.3] [--k 1,3,5]
+                 [--threshold 0.25] [--budget none,1.0] [--burst 4]
+                 [--adaptive] [--target-stretch 2.0] [--kmax 20]
+                 [--cooldown 0] [--jobs N] [--csv out.csv] [--json out.json]
+                 (policy engine: joint k × θ × budget sweep with
+                  preemption-cost accounting)
   dts generate   --dataset <d> [--graphs N] [--seed S] [--dot]
   dts validate   --dataset <d> [--graphs N] [--seed S] [--variant V]
   dts analyze    --dataset <d> [--graphs N] [--seed S] [--variant V]
@@ -93,6 +106,7 @@ pub fn main_with(argv: &[String]) -> i32 {
         Some("run") => cmd_run(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("policy") => cmd_policy(&args),
         Some("generate") => cmd_generate(&args),
         Some("validate") => cmd_validate(&args),
         Some("analyze") => cmd_analyze(&args),
@@ -212,6 +226,19 @@ fn cmd_experiment(args: &Args) -> i32 {
         eprintln!("wrote {path}");
     }
     0
+}
+
+/// Append one dataset's CSV to a multi-dataset dump: the first dataset
+/// keeps its header, later ones contribute data rows only.
+fn append_csv(out: &mut String, csv: &str, first: bool) {
+    if first {
+        out.push_str(csv);
+    } else {
+        for line in csv.lines().skip(1) {
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
 }
 
 /// Comma-separated f64 list (`"0.0,0.3"`).
@@ -336,15 +363,7 @@ fn cmd_simulate(args: &Args) -> i32 {
         let result = run_sim_sweep_parallel(&cfg, jobs);
         println!("\n## {} — reactive runtime, {}\n", dataset.name(), variant.label());
         println!("{}", result.summary_table());
-        let csv = result.to_csv();
-        if di == 0 {
-            csv_out.push_str(&csv);
-        } else {
-            for line in csv.lines().skip(1) {
-                csv_out.push_str(line);
-                csv_out.push('\n');
-            }
-        }
+        append_csv(&mut csv_out, &result.to_csv(), di == 0);
         json_parts.push(result.to_json());
     }
 
@@ -400,6 +419,230 @@ fn cmd_simulate(args: &Args) -> i32 {
             res.n_replans(),
             sc.label()
         );
+    }
+    0
+}
+
+/// Comma-separated usize list (`"1,3,5"`).
+fn parse_usize_list(s: &str) -> Option<Vec<usize>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        out.push(p.parse::<usize>().ok()?);
+    }
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+/// Build the joint k × θ × budget scenario grid for one noise list: per
+/// noise level one no-reaction baseline, then every (θ, k, budget)
+/// combination — an unbudgeted [`PolicySpec::FixedLastK`] when the
+/// budget slot is `none`, a [`PolicySpec::Budgeted`] token bucket
+/// otherwise — plus, with `--adaptive`, one [`PolicySpec::AdaptiveK`]
+/// per θ.  A positive `--cooldown` wraps every reactive controller in
+/// hysteresis.
+#[allow(clippy::too_many_arguments)]
+fn policy_grid(
+    noise: &[f64],
+    ks: &[usize],
+    thresholds: &[f64],
+    budgets: &[Option<f64>],
+    burst: f64,
+    adaptive: Option<(usize, f64)>, // (k_max, target_stretch)
+    cooldown: f64,
+) -> Vec<PolicyScenario> {
+    let wrap = |spec: PolicySpec| {
+        if cooldown > 0.0 {
+            PolicySpec::Cooldown {
+                cooldown,
+                inner: Box::new(spec),
+            }
+        } else {
+            spec
+        }
+    };
+    let mut out = Vec::new();
+    for &sigma in noise {
+        out.push(PolicyScenario {
+            noise_std: sigma,
+            spec: PolicySpec::None,
+        });
+        for &threshold in thresholds {
+            for &k in ks {
+                for budget in budgets {
+                    let spec = match budget {
+                        None => PolicySpec::FixedLastK { k, threshold },
+                        Some(rate) => PolicySpec::Budgeted {
+                            k,
+                            threshold,
+                            rate: *rate,
+                            burst,
+                        },
+                    };
+                    out.push(PolicyScenario {
+                        noise_std: sigma,
+                        spec: wrap(spec),
+                    });
+                }
+            }
+            if let Some((k_max, target_stretch)) = adaptive {
+                out.push(PolicyScenario {
+                    noise_std: sigma,
+                    spec: wrap(PolicySpec::AdaptiveK {
+                        k0: ks[0],
+                        k_max,
+                        threshold,
+                        target_stretch,
+                    }),
+                });
+            }
+        }
+    }
+    out
+}
+
+fn cmd_policy(args: &Args) -> i32 {
+    let datasets: Vec<Dataset> = match args.flag("dataset") {
+        Some("all") => Dataset::ALL.to_vec(),
+        Some(s) => match Dataset::parse(s) {
+            Some(d) => vec![d],
+            None => {
+                eprintln!("error: bad --dataset '{s}'");
+                return 2;
+            }
+        },
+        None => {
+            eprintln!(
+                "error: --dataset required (synthetic|riotbench|wfcommons|adversarial|all)"
+            );
+            return 2;
+        }
+    };
+    let label = args.flag("variant").unwrap_or("5P-HEFT");
+    let Some(variant) = Variant::parse(label) else {
+        eprintln!("error: bad --variant '{label}'");
+        return 2;
+    };
+    let Some(noise) = parse_f64_list(args.flag("noise").unwrap_or("0.3")) else {
+        eprintln!("error: bad --noise list (want e.g. 0.3 or 0.0,0.3)");
+        return 2;
+    };
+    if noise.iter().any(|x| !x.is_finite() || *x < 0.0) {
+        eprintln!("error: --noise values must be finite and >= 0");
+        return 2;
+    }
+    let Some(ks) = parse_usize_list(args.flag("k").unwrap_or("1,3,5")) else {
+        eprintln!("error: bad --k list (want e.g. 1,3,5)");
+        return 2;
+    };
+    let Some(thresholds) = parse_f64_list(args.flag("threshold").unwrap_or("0.25")) else {
+        eprintln!("error: bad --threshold list (want e.g. 0.1,0.25)");
+        return 2;
+    };
+    if thresholds.iter().any(|t| !t.is_finite() || *t < 0.0) {
+        eprintln!("error: --threshold values must be finite and >= 0");
+        return 2;
+    }
+    // budget slots: 'none' = unbudgeted FixedLastK, a number = token
+    // rate (reverted tasks per unit simulated time)
+    let Some(budgets) = parse_threshold_list(args.flag("budget").unwrap_or("none,1.0")) else {
+        eprintln!("error: bad --budget list (want e.g. none,0.5,2.0)");
+        return 2;
+    };
+    if budgets.iter().flatten().any(|b| !b.is_finite() || *b <= 0.0) {
+        eprintln!("error: --budget rates must be finite and > 0 (or 'none')");
+        return 2;
+    }
+    let burst = args
+        .flag("burst")
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(4.0);
+    if !(burst >= 1.0 && burst.is_finite()) {
+        eprintln!("error: --burst must be finite and >= 1");
+        return 2;
+    }
+    let cooldown = args
+        .flag("cooldown")
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(0.0);
+    if !(cooldown >= 0.0 && cooldown.is_finite()) {
+        eprintln!("error: --cooldown must be finite and >= 0");
+        return 2;
+    }
+    let adaptive = if args.bool_flag("adaptive") {
+        let k_max = args.usize_flag("kmax", 20);
+        let target = args
+            .flag("target-stretch")
+            .and_then(|s| s.parse::<f64>().ok())
+            .unwrap_or(2.0);
+        if !(target > 0.0 && target.is_finite()) {
+            eprintln!("error: --target-stretch must be finite and > 0");
+            return 2;
+        }
+        Some((k_max, target))
+    } else {
+        None
+    };
+    let scenarios = policy_grid(&noise, &ks, &thresholds, &budgets, burst, adaptive, cooldown);
+    let trials = args.usize_flag("trials", 2);
+    let seed = args.u64_flag("seed", 0);
+    let graphs = args.usize_flag("graphs", 16);
+
+    let mut csv_out = String::new();
+    let mut json_parts = Vec::new();
+    for (di, dataset) in datasets.iter().enumerate() {
+        let cfg = PolicySweepConfig {
+            dataset: *dataset,
+            n_graphs: graphs,
+            trials,
+            seed,
+            load: crate::workloads::DEFAULT_LOAD,
+            variant,
+            scenarios: scenarios.clone(),
+        };
+        let n_cells = cfg.trials * cfg.scenarios.len();
+        let jobs = args.usize_flag("jobs", 1).clamp(1, n_cells.max(1));
+        eprintln!(
+            "policy: {} × {} scenarios × {} trials ({} graphs, {}, {} job{})",
+            dataset.name(),
+            cfg.scenarios.len(),
+            cfg.trials,
+            cfg.n_graphs,
+            variant.label(),
+            jobs,
+            if jobs == 1 { "" } else { "s" }
+        );
+        let result = run_policy_sweep_parallel(&cfg, jobs);
+        println!(
+            "\n## {} — preemption policy engine, {}\n",
+            dataset.name(),
+            variant.label()
+        );
+        println!("{}", result.summary_table());
+        append_csv(&mut csv_out, &result.to_csv(), di == 0);
+        json_parts.push(result.to_json());
+    }
+
+    if let Some(path) = args.flag("csv") {
+        if let Err(e) = std::fs::write(path, &csv_out) {
+            eprintln!("error writing {path}: {e}");
+            return 1;
+        }
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = args.flag("json") {
+        let v = crate::json::arr(json_parts);
+        if let Err(e) = std::fs::write(path, v.to_string()) {
+            eprintln!("error writing {path}: {e}");
+            return 1;
+        }
+        eprintln!("wrote {path}");
     }
     0
 }
@@ -623,6 +866,92 @@ mod tests {
             main_with(&argv("simulate --dataset synthetic --variant WAT")),
             2
         );
+    }
+
+    #[test]
+    fn policy_smoke() {
+        assert_eq!(
+            main_with(&argv(
+                "policy --dataset synthetic --graphs 5 --trials 1 --noise 0.3 \
+                 --k 2,4 --threshold 0.2 --budget none,1.0 --adaptive --jobs 2"
+            )),
+            0
+        );
+    }
+
+    #[test]
+    fn policy_rejects_bad_input() {
+        assert_eq!(main_with(&argv("policy")), 2);
+        assert_eq!(main_with(&argv("policy --dataset nope")), 2);
+        assert_eq!(main_with(&argv("policy --dataset synthetic --k x")), 2);
+        assert_eq!(
+            main_with(&argv("policy --dataset synthetic --noise -1")),
+            2
+        );
+        assert_eq!(
+            main_with(&argv("policy --dataset synthetic --threshold wat")),
+            2
+        );
+        assert_eq!(
+            main_with(&argv("policy --dataset synthetic --budget -2")),
+            2
+        );
+        assert_eq!(
+            main_with(&argv("policy --dataset synthetic --burst 0.2")),
+            2
+        );
+        assert_eq!(
+            main_with(&argv("policy --dataset synthetic --cooldown -5")),
+            2
+        );
+        assert_eq!(
+            main_with(&argv("policy --dataset synthetic --variant WAT")),
+            2
+        );
+        assert_eq!(
+            main_with(&argv(
+                "policy --dataset synthetic --adaptive --target-stretch -1"
+            )),
+            2
+        );
+    }
+
+    #[test]
+    fn policy_grid_shape() {
+        // 2 noise × (1 baseline + 2θ × (2k × 2budgets + 1 adaptive))
+        let grid = policy_grid(
+            &[0.0, 0.3],
+            &[2, 5],
+            &[0.1, 0.25],
+            &[None, Some(1.0)],
+            4.0,
+            Some((10, 2.0)),
+            0.0,
+        );
+        assert_eq!(grid.len(), 2 * (1 + 2 * (2 * 2 + 1)));
+        // cooldown wraps every reactive spec but never the baseline
+        let wrapped = policy_grid(&[0.3], &[3], &[0.25], &[None], 4.0, None, 5.0);
+        assert_eq!(wrapped.len(), 2);
+        assert_eq!(wrapped[0].spec, PolicySpec::None);
+        assert!(matches!(wrapped[1].spec, PolicySpec::Cooldown { .. }));
+        assert_eq!(wrapped[1].label(), "σ0.30/L3@0.25+cd5");
+    }
+
+    #[test]
+    fn append_csv_keeps_one_header() {
+        let mut out = String::new();
+        append_csv(&mut out, "h1,h2\na,1\n", true);
+        append_csv(&mut out, "h1,h2\nb,2\nc,3\n", false);
+        assert_eq!(out, "h1,h2\na,1\nb,2\nc,3\n");
+    }
+
+    #[test]
+    fn usize_lists_parse() {
+        assert_eq!(parse_usize_list("1,3,5"), Some(vec![1, 3, 5]));
+        assert_eq!(parse_usize_list(" 2 , 4 "), Some(vec![2, 4]));
+        assert!(parse_usize_list("x").is_none());
+        assert!(parse_usize_list("").is_none());
+        assert!(parse_usize_list("1,-2").is_none());
     }
 
     #[test]

@@ -16,7 +16,8 @@ use std::sync::OnceLock;
 use crate::config::ExperimentConfig;
 use crate::coordinator::{DynamicProblem, Variant};
 use crate::json::{self, Value};
-use crate::metrics::{normalize, Metric, MetricRow};
+use crate::metrics::{normalize, Metric, MetricRow, PreemptionCost};
+use crate::policy::PolicySpec;
 use crate::report;
 use crate::schedule::validate;
 use crate::sim::{Reaction, ReactiveCoordinator, SimConfig};
@@ -247,6 +248,12 @@ impl SweepResult {
             "max_stretch_raw",
             "jain_fairness",
             "jain_fairness_raw",
+            "weighted_mean_stretch_norm",
+            "weighted_mean_stretch_raw",
+            "weighted_max_stretch_norm",
+            "weighted_max_stretch_raw",
+            "weighted_jain",
+            "weighted_jain_raw",
             "runtime_norm",
             "runtime_raw",
         ];
@@ -271,6 +278,12 @@ impl SweepResult {
                                 ("mean_stretch", json::num(r.mean_stretch)),
                                 ("max_stretch", json::num(r.max_stretch)),
                                 ("jain_fairness", json::num(r.jain_fairness)),
+                                (
+                                    "weighted_mean_stretch",
+                                    json::num(r.weighted_mean_stretch),
+                                ),
+                                ("weighted_max_stretch", json::num(r.weighted_max_stretch)),
+                                ("weighted_jain", json::num(r.weighted_jain)),
                                 ("runtime_s", json::num(r.runtime_s)),
                             ])
                         })
@@ -369,12 +382,39 @@ impl SimCell {
     /// degradation ratio, now under reactive control instead of the
     /// post-hoc [`crate::robustness::degradation`].
     pub fn degradation(&self) -> f64 {
-        if self.planned.total_makespan > 0.0 {
-            self.realized.total_makespan / self.planned.total_makespan
-        } else {
-            0.0
-        }
+        degradation_ratio(self.realized.total_makespan, self.planned.total_makespan)
     }
+}
+
+/// Realized-over-planned makespan ratio.  A zero planned makespan means
+/// an empty/degenerate instance (nothing was scheduled), where "executed
+/// as planned" is the only sensible reading: the ratio-neutral 1.0 —
+/// not 0.0, which would average into summary means as "infinitely better
+/// than planned".
+fn degradation_ratio(realized: f64, planned: f64) -> f64 {
+    if planned > 0.0 {
+        realized / planned
+    } else {
+        1.0
+    }
+}
+
+/// The full [`MetricRow`] as a JSON object — shared by the sim and
+/// policy sweep dumps.
+fn metric_row_json(r: &MetricRow) -> Value {
+    json::obj(vec![
+        ("total_makespan", json::num(r.total_makespan)),
+        ("mean_makespan", json::num(r.mean_makespan)),
+        ("mean_flowtime", json::num(r.mean_flowtime)),
+        ("utilization", json::num(r.mean_utilization)),
+        ("mean_stretch", json::num(r.mean_stretch)),
+        ("max_stretch", json::num(r.max_stretch)),
+        ("jain_fairness", json::num(r.jain_fairness)),
+        ("weighted_mean_stretch", json::num(r.weighted_mean_stretch)),
+        ("weighted_max_stretch", json::num(r.weighted_max_stretch)),
+        ("weighted_jain", json::num(r.weighted_jain)),
+        ("runtime_s", json::num(r.runtime_s)),
+    ])
 }
 
 fn sim_instance(cfg: &SimSweepConfig, trial: usize) -> DynamicProblem {
@@ -658,6 +698,9 @@ impl SimSweepResult {
             "mean_stretch",
             "max_stretch",
             "jain_fairness",
+            "weighted_mean_stretch",
+            "weighted_max_stretch",
+            "weighted_jain",
             "runtime_s",
             "planned_total_makespan",
             "degradation",
@@ -670,18 +713,7 @@ impl SimSweepResult {
 
     /// JSON dump: config + per-trial realized/planned rows per scenario.
     pub fn to_json(&self) -> Value {
-        let metric_obj = |r: &MetricRow| {
-            json::obj(vec![
-                ("total_makespan", json::num(r.total_makespan)),
-                ("mean_makespan", json::num(r.mean_makespan)),
-                ("mean_flowtime", json::num(r.mean_flowtime)),
-                ("utilization", json::num(r.mean_utilization)),
-                ("mean_stretch", json::num(r.mean_stretch)),
-                ("max_stretch", json::num(r.max_stretch)),
-                ("jain_fairness", json::num(r.jain_fairness)),
-                ("runtime_s", json::num(r.runtime_s)),
-            ])
-        };
+        let metric_obj = metric_row_json;
         let trials = self
             .rows
             .iter()
@@ -700,6 +732,401 @@ impl SimSweepResult {
                                     json::num(c.n_straggler_replans as f64),
                                 ),
                                 ("reverted", json::num(c.n_reverted as f64)),
+                            ])
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        json::obj(vec![
+            (
+                "config",
+                json::obj(vec![
+                    ("dataset", json::s(self.config.dataset.name())),
+                    ("variant", json::s(&self.config.variant.label())),
+                    ("n_graphs", json::num(self.config.n_graphs as f64)),
+                    ("trials", json::num(self.config.trials as f64)),
+                    ("seed", json::num(self.config.seed as f64)),
+                    ("load", json::num(self.config.load)),
+                ]),
+            ),
+            (
+                "scenarios",
+                json::arr(self.labels.iter().map(|l| json::s(l)).collect()),
+            ),
+            ("trials", json::arr(trials)),
+        ])
+    }
+}
+
+// ------------------------------------------------ policy-engine sweeps
+
+/// One point of the joint k × θ × budget grid evaluated by `dts policy`:
+/// a noise level plus a [`PolicySpec`] controller description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PolicyScenario {
+    pub noise_std: f64,
+    pub spec: PolicySpec,
+}
+
+impl PolicyScenario {
+    pub fn label(&self) -> String {
+        format!("σ{:.2}/{}", self.noise_std, self.spec.label())
+    }
+}
+
+/// A policy-engine sweep: `trials` seeded instances of `dataset`, each
+/// executed by the reactive simulator under every scenario, with the
+/// same arrival policy × heuristic `variant` throughout.  Instances,
+/// noise and heuristic seeds match [`SimSweepConfig`]'s construction
+/// exactly, so a [`PolicySpec::FixedLastK`] scenario reproduces the
+/// PR-2 `Reaction::LastK` sim-sweep cell bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct PolicySweepConfig {
+    pub dataset: Dataset,
+    pub n_graphs: usize,
+    pub trials: usize,
+    pub seed: u64,
+    pub load: f64,
+    pub variant: Variant,
+    pub scenarios: Vec<PolicyScenario>,
+}
+
+/// One (trial, scenario) cell of the policy sweep: realized metrics,
+/// the planned baseline, and what the controller *spent* to earn them.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyCell {
+    pub realized: MetricRow,
+    pub planned: MetricRow,
+    pub cost: PreemptionCost,
+}
+
+impl PolicyCell {
+    /// Realized-over-planned total makespan (1.0-neutral on degenerate
+    /// instances, like [`SimCell::degradation`]).
+    pub fn degradation(&self) -> f64 {
+        degradation_ratio(self.realized.total_makespan, self.planned.total_makespan)
+    }
+}
+
+fn policy_instance(cfg: &PolicySweepConfig, trial: usize) -> DynamicProblem {
+    cfg.dataset
+        .instance_opts(cfg.n_graphs, cfg.seed + trial as u64, cfg.load, None)
+}
+
+fn policy_planned_row(
+    cfg: &PolicySweepConfig,
+    prob: &DynamicProblem,
+    trial: usize,
+) -> MetricRow {
+    let seed = cfg.seed + trial as u64;
+    let mut coord = cfg.variant.coordinator(seed ^ 0x5EED);
+    let res = coord.run(prob);
+    res.metrics(prob)
+}
+
+/// Run one (trial, scenario) policy cell.  Same replay-or-panic contract
+/// as [`run_sim_cell`]; the controller is built fresh per cell
+/// ([`PolicySpec::make`]), so no mutable state crosses cells and the
+/// sweep stays bit-identical at any `--jobs`.
+fn run_policy_cell(
+    cfg: &PolicySweepConfig,
+    prob: &DynamicProblem,
+    trial: usize,
+    scenario: &PolicyScenario,
+    planned: &MetricRow,
+) -> PolicyCell {
+    let seed = cfg.seed + trial as u64;
+    let sim_cfg = SimConfig {
+        noise_std: scenario.noise_std,
+        noise_seed: seed ^ 0xA11CE,
+        reaction: Reaction::None,
+        record_frozen: false,
+    };
+    let mut rc = ReactiveCoordinator::with_policy(
+        cfg.variant.policy,
+        cfg.variant.kind.make(seed ^ 0x5EED),
+        sim_cfg,
+        scenario.spec.make(),
+    );
+    let res = rc.run(prob);
+    assert_eq!(res.schedule.n_assigned(), prob.total_tasks());
+    let rep = crate::sim::replay(&res.schedule, &prob.graphs, &prob.network);
+    assert!(
+        rep.errors.is_empty(),
+        "invalid realized schedule from {} under {} on {} trial {trial}: {:?}",
+        cfg.variant.label(),
+        scenario.label(),
+        cfg.dataset.name(),
+        &rep.errors[..rep.errors.len().min(3)]
+    );
+    PolicyCell {
+        realized: res.metrics(prob),
+        planned: *planned,
+        cost: res.preemption_cost(),
+    }
+}
+
+/// Raw policy-sweep output: `rows[trial][scenario]`.
+#[derive(Clone, Debug)]
+pub struct PolicySweepResult {
+    pub config: PolicySweepConfig,
+    pub labels: Vec<String>,
+    pub rows: Vec<Vec<PolicyCell>>,
+}
+
+/// Serial reference implementation of the policy sweep.
+pub fn run_policy_sweep(cfg: &PolicySweepConfig) -> PolicySweepResult {
+    let labels: Vec<String> = cfg.scenarios.iter().map(|s| s.label()).collect();
+    let mut rows = Vec::with_capacity(cfg.trials);
+    for trial in 0..cfg.trials {
+        let prob = policy_instance(cfg, trial);
+        let planned = policy_planned_row(cfg, &prob, trial);
+        rows.push(
+            cfg.scenarios
+                .iter()
+                .map(|s| run_policy_cell(cfg, &prob, trial, s, &planned))
+                .collect(),
+        );
+    }
+    PolicySweepResult {
+        config: cfg.clone(),
+        labels,
+        rows,
+    }
+}
+
+/// Parallel policy sweep, deterministic at any thread count: (trial ×
+/// scenario) cells fan out over a `std::thread::scope` work queue,
+/// instances and planned baselines derive from `seed + trial` alone and
+/// are shared per trial through a `OnceLock`, each cell builds its own
+/// controller from the scenario's [`PolicySpec`], and results are
+/// collected in cell order — the same construction as
+/// [`run_sweep_parallel`] / [`run_sim_sweep_parallel`].  Only the
+/// measured wall-clock quantities (`runtime_s`, `replan_wall_s`) vary
+/// between runs; every schedule-derived metric and every replan/revert
+/// count is bit-identical.
+pub fn run_policy_sweep_parallel(cfg: &PolicySweepConfig, jobs: usize) -> PolicySweepResult {
+    let jobs = jobs.max(1);
+    let n_sc = cfg.scenarios.len();
+    let n_cells = cfg.trials * n_sc;
+    if jobs == 1 || n_cells <= 1 {
+        return run_policy_sweep(cfg);
+    }
+
+    let instances: Vec<OnceLock<(DynamicProblem, MetricRow)>> =
+        (0..cfg.trials).map(|_| OnceLock::new()).collect();
+    let next_cell = AtomicUsize::new(0);
+    let mut flat: Vec<Option<PolicyCell>> = vec![None; n_cells];
+
+    std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..jobs.min(n_cells))
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut done: Vec<(usize, PolicyCell)> = Vec::new();
+                    loop {
+                        let cell = next_cell.fetch_add(1, Ordering::Relaxed);
+                        if cell >= n_cells {
+                            break;
+                        }
+                        let trial = cell / n_sc;
+                        let si = cell % n_sc;
+                        let pair = instances[trial].get_or_init(|| {
+                            let prob = policy_instance(cfg, trial);
+                            let planned = policy_planned_row(cfg, &prob, trial);
+                            (prob, planned)
+                        });
+                        done.push((
+                            cell,
+                            run_policy_cell(cfg, &pair.0, trial, &cfg.scenarios[si], &pair.1),
+                        ));
+                    }
+                    done
+                })
+            })
+            .collect();
+        for w in workers {
+            for (cell, c) in w.join().expect("policy sweep worker panicked") {
+                flat[cell] = Some(c);
+            }
+        }
+    });
+
+    let mut rows = Vec::with_capacity(cfg.trials);
+    let mut it = flat.into_iter();
+    for _ in 0..cfg.trials {
+        rows.push(
+            (&mut it)
+                .take(n_sc)
+                .map(|r| r.expect("cell not computed"))
+                .collect(),
+        );
+    }
+    PolicySweepResult {
+        config: cfg.clone(),
+        labels: cfg.scenarios.iter().map(|s| s.label()).collect(),
+        rows,
+    }
+}
+
+impl PolicySweepResult {
+    /// Mean across trials of one realized metric for scenario `si`.
+    pub fn realized_mean(&self, si: usize, metric: Metric) -> f64 {
+        mean(
+            &self
+                .rows
+                .iter()
+                .map(|r| r[si].realized.get(metric))
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Mean realized-over-planned total-makespan ratio for scenario `si`.
+    pub fn degradation_mean(&self, si: usize) -> f64 {
+        mean(
+            &self
+                .rows
+                .iter()
+                .map(|r| r[si].degradation())
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Mean preemption cost for scenario `si` (counts as f64 means).
+    pub fn cost_mean(&self, si: usize) -> (f64, f64, f64, f64) {
+        let of = |f: &dyn Fn(&PreemptionCost) -> f64| {
+            mean(&self.rows.iter().map(|r| f(&r[si].cost)).collect::<Vec<_>>())
+        };
+        (
+            of(&|c| c.replans as f64),
+            of(&|c| c.straggler_replans as f64),
+            of(&|c| c.reverted_tasks as f64),
+            of(&|c| c.replan_wall_s),
+        )
+    }
+
+    /// Markdown summary: one row per scenario — the quality axes next to
+    /// the preemption-cost axes, the figure of the parsimonious-
+    /// preemption study (quality bought vs budget spent).
+    pub fn summary_table(&self) -> String {
+        let rows: Vec<Vec<String>> = (0..self.labels.len())
+            .map(|si| {
+                let (replans, stragglers, reverted, wall) = self.cost_mean(si);
+                vec![
+                    self.labels[si].clone(),
+                    report::fmt(self.realized_mean(si, Metric::TotalMakespan)),
+                    report::fmt(self.realized_mean(si, Metric::MeanStretch)),
+                    report::fmt(self.realized_mean(si, Metric::MaxStretch)),
+                    report::fmt(self.realized_mean(si, Metric::JainFairness)),
+                    report::fmt(self.degradation_mean(si)),
+                    report::fmt(replans),
+                    report::fmt(stragglers),
+                    report::fmt(reverted),
+                    format!("{:.3}", wall * 1e3),
+                ]
+            })
+            .collect();
+        report::markdown_table(
+            &[
+                "scenario",
+                "makespan",
+                "mean stretch",
+                "max stretch",
+                "jain",
+                "degradation",
+                "replans",
+                "straggler",
+                "reverted",
+                "replan ms",
+            ],
+            &rows,
+        )
+    }
+
+    /// CSV: the full realized metric suite per scenario (means across
+    /// trials) plus the planned baseline, degradation and the
+    /// preemption-cost columns.
+    pub fn to_csv(&self) -> String {
+        let mut rows = Vec::new();
+        for (si, label) in self.labels.iter().enumerate() {
+            let sc = &self.config.scenarios[si];
+            let mut row = vec![
+                self.config.dataset.name().to_string(),
+                self.config.variant.label(),
+                label.clone(),
+                format!("{}", sc.noise_std),
+                sc.spec.label(),
+            ];
+            for m in Metric::ALL {
+                row.push(format!("{}", self.realized_mean(si, m)));
+            }
+            let planned_mk = mean(
+                &self
+                    .rows
+                    .iter()
+                    .map(|r| r[si].planned.total_makespan)
+                    .collect::<Vec<_>>(),
+            );
+            let (replans, stragglers, reverted, wall) = self.cost_mean(si);
+            row.push(format!("{planned_mk}"));
+            row.push(format!("{}", self.degradation_mean(si)));
+            row.push(format!("{replans}"));
+            row.push(format!("{stragglers}"));
+            row.push(format!("{reverted}"));
+            row.push(format!("{wall}"));
+            rows.push(row);
+        }
+        let headers = vec![
+            "dataset",
+            "variant",
+            "scenario",
+            "noise_std",
+            "policy",
+            "total_makespan",
+            "mean_makespan",
+            "mean_flowtime",
+            "utilization",
+            "mean_stretch",
+            "max_stretch",
+            "jain_fairness",
+            "weighted_mean_stretch",
+            "weighted_max_stretch",
+            "weighted_jain",
+            "runtime_s",
+            "planned_total_makespan",
+            "degradation",
+            "replans",
+            "straggler_replans",
+            "reverted_tasks",
+            "replan_wall_s",
+        ];
+        report::csv(&headers, &rows)
+    }
+
+    /// JSON dump: config + per-trial realized/planned/cost per scenario.
+    pub fn to_json(&self) -> Value {
+        let trials = self
+            .rows
+            .iter()
+            .map(|trial| {
+                json::arr(
+                    trial
+                        .iter()
+                        .map(|c| {
+                            json::obj(vec![
+                                ("realized", metric_row_json(&c.realized)),
+                                ("planned", metric_row_json(&c.planned)),
+                                ("degradation", json::num(c.degradation())),
+                                ("replans", json::num(c.cost.replans as f64)),
+                                (
+                                    "straggler_replans",
+                                    json::num(c.cost.straggler_replans as f64),
+                                ),
+                                (
+                                    "reverted_tasks",
+                                    json::num(c.cost.reverted_tasks as f64),
+                                ),
+                                ("replan_wall_s", json::num(c.cost.replan_wall_s)),
                             ])
                         })
                         .collect(),
@@ -931,10 +1358,142 @@ mod tests {
         let c = r.to_csv();
         assert_eq!(c.lines().count(), 4); // header + 3 scenarios
         assert!(c.lines().next().unwrap().contains("jain_fairness"));
+        assert!(c.lines().next().unwrap().contains("weighted_jain"));
         assert!(c.contains("5P-HEFT"));
         let t = r.summary_table();
         assert!(t.contains("σ0.40/L3@0.2"), "{t}");
         assert!(t.contains("degradation"));
+        let j = r.to_json();
+        let round = Value::from_str(&j.to_string()).unwrap();
+        assert_eq!(round.get("scenarios"), j.get("scenarios"));
+    }
+
+    #[test]
+    fn degradation_degenerate_is_ratio_neutral() {
+        // an empty/degenerate instance has planned makespan 0; the ratio
+        // must read "executed as planned" (1.0), not "infinitely better"
+        let empty = SimCell {
+            realized: MetricRow::default(),
+            planned: MetricRow::default(),
+            n_replans: 0,
+            n_straggler_replans: 0,
+            n_reverted: 0,
+        };
+        assert_eq!(empty.degradation(), 1.0);
+        let pc = PolicyCell {
+            realized: MetricRow::default(),
+            planned: MetricRow::default(),
+            cost: PreemptionCost::default(),
+        };
+        assert_eq!(pc.degradation(), 1.0);
+        // the ordinary case is untouched
+        assert_eq!(degradation_ratio(3.0, 2.0), 1.5);
+    }
+
+    fn tiny_policy_cfg() -> PolicySweepConfig {
+        PolicySweepConfig {
+            dataset: Dataset::Synthetic,
+            n_graphs: 6,
+            trials: 2,
+            seed: 5,
+            load: 0.5,
+            variant: Variant::parse("5P-HEFT").unwrap(),
+            scenarios: vec![
+                PolicyScenario {
+                    noise_std: 0.4,
+                    spec: PolicySpec::None,
+                },
+                PolicyScenario {
+                    noise_std: 0.4,
+                    spec: PolicySpec::FixedLastK {
+                        k: 3,
+                        threshold: 0.2,
+                    },
+                },
+                PolicyScenario {
+                    noise_std: 0.4,
+                    spec: PolicySpec::Budgeted {
+                        k: 3,
+                        threshold: 0.2,
+                        rate: 0.05,
+                        burst: 3.0,
+                    },
+                },
+                PolicyScenario {
+                    noise_std: 0.4,
+                    spec: PolicySpec::AdaptiveK {
+                        k0: 3,
+                        k_max: 8,
+                        threshold: 0.2,
+                        target_stretch: 1.5,
+                    },
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn policy_sweep_shape_and_cost_sanity() {
+        let r = run_policy_sweep(&tiny_policy_cfg());
+        assert_eq!(r.rows.len(), 2);
+        assert_eq!(r.rows[0].len(), 4);
+        assert_eq!(r.labels[1], "σ0.40/L3@0.2");
+        for row in &r.rows {
+            for c in row {
+                assert!(c.realized.total_makespan > 0.0);
+                assert!(c.degradation() > 0.0);
+                assert!(c.cost.replans >= c.cost.straggler_replans);
+                assert!(c.cost.replan_wall_s >= 0.0);
+            }
+            // the no-reaction baseline never fires a straggler replan
+            assert_eq!(row[0].cost.straggler_replans, 0);
+        }
+    }
+
+    #[test]
+    fn policy_sweep_parallel_is_deterministic_across_thread_counts() {
+        let cfg = tiny_policy_cfg();
+        let serial = run_policy_sweep_parallel(&cfg, 1);
+        let sig = |c: &PolicyCell| {
+            (
+                c.realized.total_makespan.to_bits(),
+                c.realized.mean_stretch.to_bits(),
+                c.realized.weighted_jain.to_bits(),
+                c.planned.total_makespan.to_bits(),
+                c.cost.replans,
+                c.cost.straggler_replans,
+                c.cost.reverted_tasks,
+            )
+        };
+        for jobs in [2, 5] {
+            let par = run_policy_sweep_parallel(&cfg, jobs);
+            assert_eq!(serial.labels, par.labels);
+            for (trial, (rs, rp)) in serial.rows.iter().zip(par.rows.iter()).enumerate() {
+                for (si, (a, b)) in rs.iter().zip(rp.iter()).enumerate() {
+                    assert_eq!(sig(a), sig(b), "jobs={jobs}, trial {trial}, scenario {si}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn policy_csv_json_and_table_render() {
+        let r = run_policy_sweep(&tiny_policy_cfg());
+        let c = r.to_csv();
+        assert_eq!(c.lines().count(), 5); // header + 4 scenarios
+        let header = c.lines().next().unwrap();
+        for col in [
+            "replans",
+            "reverted_tasks",
+            "replan_wall_s",
+            "weighted_mean_stretch",
+            "jain_fairness",
+        ] {
+            assert!(header.contains(col), "missing {col} in {header}");
+        }
+        let t = r.summary_table();
+        assert!(t.contains("σ0.40/B3@0.2r0.05b3"), "{t}");
+        assert!(t.contains("reverted"));
         let j = r.to_json();
         let round = Value::from_str(&j.to_string()).unwrap();
         assert_eq!(round.get("scenarios"), j.get("scenarios"));

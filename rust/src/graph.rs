@@ -44,11 +44,25 @@ pub struct TaskGraph {
     pred: Vec<Vec<(TaskId, f64)>>,
     /// cached topological order (tasks were validated acyclic at build)
     topo: Vec<TaskId>,
+    /// graph-level importance weight for the weighted fairness metrics
+    /// (default 1.0 = every graph counts equally)
+    weight: f64,
 }
 
 impl TaskGraph {
     pub fn name(&self) -> &str {
         &self.name
+    }
+    /// Graph-level importance weight (see
+    /// [`crate::metrics::weighted_mean`]); 1.0 unless set.
+    pub fn weight(&self) -> f64 {
+        self.weight
+    }
+    /// Override the importance weight (`> 0`, finite); used by scenario
+    /// builders that prioritize some arrivals over others.
+    pub fn set_weight(&mut self, w: f64) {
+        assert!(w > 0.0 && w.is_finite(), "graph weight must be positive: {w}");
+        self.weight = w;
     }
     pub fn n_tasks(&self) -> usize {
         self.cost.len()
@@ -136,6 +150,7 @@ pub struct GraphBuilder {
     name: String,
     cost: Vec<f64>,
     edges: Vec<(TaskId, TaskId, f64)>,
+    weight: f64,
 }
 
 /// Errors surfaced while assembling a graph.
@@ -147,6 +162,7 @@ pub enum GraphError {
     NegativeData(f64),
     SelfLoop(TaskId),
     DuplicateEdge(TaskId, TaskId),
+    NonPositiveWeight(f64),
 }
 
 impl fmt::Display for GraphError {
@@ -158,6 +174,7 @@ impl fmt::Display for GraphError {
             GraphError::NegativeData(d) => write!(f, "negative edge data size {d}"),
             GraphError::SelfLoop(t) => write!(f, "self-loop on task {t}"),
             GraphError::DuplicateEdge(u, v) => write!(f, "duplicate edge {u}->{v}"),
+            GraphError::NonPositiveWeight(w) => write!(f, "non-positive graph weight {w}"),
         }
     }
 }
@@ -169,7 +186,14 @@ impl GraphBuilder {
             name: name.into(),
             cost: Vec::new(),
             edges: Vec::new(),
+            weight: 1.0,
         }
+    }
+
+    /// Set the graph-level importance weight (`> 0`, finite; default 1.0).
+    pub fn weight(&mut self, w: f64) -> &mut Self {
+        self.weight = w;
+        self
     }
 
     /// Add a task with compute cost `c(t) > 0`; returns its id.
@@ -186,6 +210,9 @@ impl GraphBuilder {
 
     pub fn build(self) -> Result<TaskGraph, GraphError> {
         let n = self.cost.len();
+        if !(self.weight > 0.0 && self.weight.is_finite()) {
+            return Err(GraphError::NonPositiveWeight(self.weight));
+        }
         for &c in &self.cost {
             if !(c > 0.0) {
                 return Err(GraphError::NonPositiveCost(c));
@@ -238,6 +265,7 @@ impl GraphBuilder {
             succ,
             pred,
             topo,
+            weight: self.weight,
         })
     }
 }
@@ -354,6 +382,32 @@ mod tests {
         let d = diamond().to_dot();
         assert!(d.contains("t0 -> t1"));
         assert!(d.contains("digraph"));
+    }
+
+    #[test]
+    fn graph_weight_defaults_and_overrides() {
+        let mut g = diamond();
+        assert_eq!(g.weight(), 1.0);
+        g.set_weight(2.5);
+        assert_eq!(g.weight(), 2.5);
+
+        let mut b = GraphBuilder::new("weighted");
+        b.task(1.0);
+        b.weight(4.0);
+        assert_eq!(b.build().unwrap().weight(), 4.0);
+    }
+
+    #[test]
+    fn rejects_bad_weight() {
+        let mut b = GraphBuilder::new("w");
+        b.task(1.0);
+        b.weight(0.0);
+        assert_eq!(b.build().unwrap_err(), GraphError::NonPositiveWeight(0.0));
+
+        let mut b = GraphBuilder::new("w");
+        b.task(1.0);
+        b.weight(f64::INFINITY);
+        assert!(matches!(b.build(), Err(GraphError::NonPositiveWeight(_))));
     }
 
     #[test]

@@ -20,7 +20,10 @@
 //!   **workload generators** ([`workloads`]);
 //! * the **reactive runtime simulator** — a discrete-event loop where
 //!   realized durations deviate from the estimates and straggler-
-//!   triggered Last-K rescheduling closes the loop ([`sim`]);
+//!   triggered rescheduling closes the loop ([`sim`]);
+//! * the **preemption policy engine** — pluggable straggler controllers
+//!   (fixed Last-K, AIMD-adaptive, token-budgeted, cooldown-wrapped)
+//!   driving the reactive coordinator ([`policy`]);
 //! * an **XLA/PJRT runtime** that executes the AOT-compiled JAX+Pallas
 //!   rank kernels from `artifacts/` on the scheduling hot path
 //!   ([`runtime`]);
@@ -41,6 +44,7 @@ pub mod graph;
 pub mod json;
 pub mod metrics;
 pub mod network;
+pub mod policy;
 pub mod prng;
 pub mod report;
 pub mod robustness;

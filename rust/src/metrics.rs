@@ -133,16 +133,18 @@ pub fn ideal_response(g: &TaskGraph, network: &Network) -> f64 {
     down.into_iter().fold(0.0, f64::max)
 }
 
-/// §V fairness — per-graph **stretch** (slowdown): observed response
-/// time over the [`ideal_response`] lower bound; one entry per graph
-/// with at least one scheduled task.  Plans have stretch ≥ 1; realized
-/// schedules under speed-up noise may dip below 1.
-pub fn graph_stretches(
+/// §V fairness — per-graph **stretch** (slowdown) paired with the
+/// graph's importance weight ([`TaskGraph::weight`], 1.0 unless set):
+/// observed response time over the [`ideal_response`] lower bound; one
+/// entry per graph with at least one scheduled task.  The two vectors
+/// are index-aligned.
+pub fn graph_stretch_weights(
     schedule: &Schedule,
     problem: &[(f64, TaskGraph)],
     network: &Network,
-) -> Vec<f64> {
-    let mut out = Vec::new();
+) -> (Vec<f64>, Vec<f64>) {
+    let mut stretches = Vec::new();
+    let mut weights = Vec::new();
     for (gi, (arrival, g)) in problem.iter().enumerate() {
         let finish = (0..g.n_tasks())
             .filter_map(|t| schedule.get(Gid::new(gi, t)))
@@ -152,13 +154,55 @@ pub fn graph_stretches(
             continue;
         }
         let ideal = ideal_response(g, network);
-        out.push(if ideal > 0.0 {
+        stretches.push(if ideal > 0.0 {
             (finish - arrival) / ideal
         } else {
             1.0
         });
+        weights.push(g.weight());
     }
-    out
+    (stretches, weights)
+}
+
+/// §V fairness — per-graph **stretch** (slowdown): observed response
+/// time over the [`ideal_response`] lower bound; one entry per graph
+/// with at least one scheduled task.  Plans have stretch ≥ 1; realized
+/// schedules under speed-up noise may dip below 1.
+pub fn graph_stretches(
+    schedule: &Schedule,
+    problem: &[(f64, TaskGraph)],
+    network: &Network,
+) -> Vec<f64> {
+    graph_stretch_weights(schedule, problem, network).0
+}
+
+/// Weighted mean `Σ wᵢxᵢ / Σ wᵢ` (0.0 on empty or degenerate weights).
+/// With all weights 1.0 this is bit-identical to the plain mean.
+pub fn weighted_mean(xs: &[f64], ws: &[f64]) -> f64 {
+    debug_assert_eq!(xs.len(), ws.len());
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let wsum: f64 = ws.iter().sum();
+    if !(wsum > 0.0) {
+        return 0.0;
+    }
+    let acc: f64 = xs.iter().zip(ws).map(|(x, w)| w * x).sum();
+    acc / wsum
+}
+
+/// Weighted max `maxᵢ wᵢxᵢ` — the weighted-max-stretch unfairness axis:
+/// a graph's slowdown counts in proportion to its importance.  With all
+/// weights 1.0 this is bit-identical to the plain max (0.0 on empty).
+pub fn weighted_max(xs: &[f64], ws: &[f64]) -> f64 {
+    debug_assert_eq!(xs.len(), ws.len());
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter()
+        .zip(ws)
+        .map(|(x, w)| w * x)
+        .fold(f64::NEG_INFINITY, f64::max)
 }
 
 /// Jain's fairness index over per-graph slowdowns:
@@ -176,6 +220,24 @@ pub fn jain_fairness(xs: &[f64]) -> f64 {
     (s * s) / (xs.len() as f64 * s2)
 }
 
+/// Weighted Jain's index `(Σ wᵢxᵢ)² / (Σ wᵢ · Σ wᵢxᵢ²)` ∈ (0, 1]: each
+/// graph's slowdown counts in proportion to its importance weight.  With
+/// all weights 1.0 this is bit-identical to [`jain_fairness`]; empty or
+/// degenerate input is vacuously fair (1.0).
+pub fn weighted_jain(xs: &[f64], ws: &[f64]) -> f64 {
+    debug_assert_eq!(xs.len(), ws.len());
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = xs.iter().zip(ws).map(|(x, w)| w * x).sum();
+    let s2: f64 = xs.iter().zip(ws).map(|(x, w)| w * x * x).sum();
+    let wsum: f64 = ws.iter().sum();
+    if s2 <= 0.0 || !(wsum > 0.0) {
+        return 1.0;
+    }
+    (s * s) / (wsum * s2)
+}
+
 /// A full metric row for one (workload, scheduler) run.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct MetricRow {
@@ -189,6 +251,13 @@ pub struct MetricRow {
     pub max_stretch: f64,
     /// Jain's index over the per-graph stretches (1 = perfectly fair)
     pub jain_fairness: f64,
+    /// importance-weighted mean stretch (`Σ wᵢsᵢ / Σ wᵢ`); equals
+    /// `mean_stretch` bit-exactly when every graph weight is 1.0
+    pub weighted_mean_stretch: f64,
+    /// importance-weighted max stretch (`maxᵢ wᵢsᵢ`)
+    pub weighted_max_stretch: f64,
+    /// weighted Jain's index over the per-graph stretches
+    pub weighted_jain: f64,
     /// scheduler wall-clock runtime in seconds (§V.E), filled by the
     /// dynamic coordinator.
     pub runtime_s: f64,
@@ -201,7 +270,7 @@ impl MetricRow {
         network: &Network,
         runtime_s: f64,
     ) -> Self {
-        let stretches = graph_stretches(schedule, problem, network);
+        let (stretches, weights) = graph_stretch_weights(schedule, problem, network);
         let (mean_stretch, max_stretch) = if stretches.is_empty() {
             (0.0, 0.0)
         } else {
@@ -218,6 +287,9 @@ impl MetricRow {
             mean_stretch,
             max_stretch,
             jain_fairness: jain_fairness(&stretches),
+            weighted_mean_stretch: weighted_mean(&stretches, &weights),
+            weighted_max_stretch: weighted_max(&stretches, &weights),
+            weighted_jain: weighted_jain(&stretches, &weights),
             runtime_s,
         }
     }
@@ -231,6 +303,9 @@ impl MetricRow {
             Metric::MeanStretch => self.mean_stretch,
             Metric::MaxStretch => self.max_stretch,
             Metric::JainFairness => self.jain_fairness,
+            Metric::WeightedMeanStretch => self.weighted_mean_stretch,
+            Metric::WeightedMaxStretch => self.weighted_max_stretch,
+            Metric::WeightedJain => self.weighted_jain,
             Metric::Runtime => self.runtime_s,
         }
     }
@@ -246,11 +321,14 @@ pub enum Metric {
     MeanStretch,
     MaxStretch,
     JainFairness,
+    WeightedMeanStretch,
+    WeightedMaxStretch,
+    WeightedJain,
     Runtime,
 }
 
 impl Metric {
-    pub const ALL: [Metric; 8] = [
+    pub const ALL: [Metric; 11] = [
         Metric::TotalMakespan,
         Metric::MeanMakespan,
         Metric::MeanFlowtime,
@@ -258,6 +336,9 @@ impl Metric {
         Metric::MeanStretch,
         Metric::MaxStretch,
         Metric::JainFairness,
+        Metric::WeightedMeanStretch,
+        Metric::WeightedMaxStretch,
+        Metric::WeightedJain,
         Metric::Runtime,
     ];
 
@@ -270,22 +351,48 @@ impl Metric {
             Metric::MeanStretch => "mean_stretch",
             Metric::MaxStretch => "max_stretch",
             Metric::JainFairness => "jain_fairness",
+            Metric::WeightedMeanStretch => "weighted_mean_stretch",
+            Metric::WeightedMaxStretch => "weighted_max_stretch",
+            Metric::WeightedJain => "weighted_jain",
             Metric::Runtime => "runtime",
         }
     }
 
     /// Whether *smaller* is better (normalization divides by the best).
-    /// Utilization and Jain fairness are higher-is-better.
+    /// Utilization and the Jain indices are higher-is-better.
     pub fn lower_is_better(&self) -> bool {
-        !matches!(self, Metric::Utilization | Metric::JainFairness)
+        !matches!(
+            self,
+            Metric::Utilization | Metric::JainFairness | Metric::WeightedJain
+        )
     }
 
     /// Metrics reported raw (already on a bounded absolute scale) rather
     /// than normalized to the per-trial best, per the paper's Fig 7/8e
     /// convention for utilization.
     pub fn reported_raw(&self) -> bool {
-        matches!(self, Metric::Utilization | Metric::JainFairness)
+        matches!(
+            self,
+            Metric::Utilization | Metric::JainFairness | Metric::WeightedJain
+        )
     }
+}
+
+/// Preemption-cost accounting of one reactive run — what a policy
+/// *spent* to earn its schedule-quality metrics.  Filled by
+/// [`crate::sim::SimResult::preemption_cost`] and reported alongside the
+/// [`MetricRow`] in the policy sweep's tables/CSV/JSON.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PreemptionCost {
+    /// rescheduling passes that actually ran (arrival + straggler)
+    pub replans: usize,
+    /// straggler-triggered subset of `replans`
+    pub straggler_replans: usize,
+    /// previously scheduled tasks reverted across all replans
+    pub reverted_tasks: usize,
+    /// wall-clock seconds inside replan passes (belief refresh + base
+    /// heuristic + bookkeeping) — the runtime price of reacting
+    pub replan_wall_s: f64,
 }
 
 /// Normalize a set of values for one metric: divide by the best value
@@ -387,11 +494,15 @@ mod tests {
         assert_eq!(row.get(Metric::Runtime), 0.5);
         assert_eq!(Metric::Utilization.lower_is_better(), false);
         assert_eq!(Metric::JainFairness.lower_is_better(), false);
+        assert_eq!(Metric::WeightedJain.lower_is_better(), false);
         assert_eq!(Metric::TotalMakespan.lower_is_better(), true);
         assert_eq!(Metric::MaxStretch.lower_is_better(), true);
+        assert_eq!(Metric::WeightedMaxStretch.lower_is_better(), true);
         assert!(Metric::JainFairness.reported_raw());
+        assert!(Metric::WeightedJain.reported_raw());
         assert!(!Metric::MeanStretch.reported_raw());
-        assert_eq!(Metric::ALL.len(), 8);
+        assert!(!Metric::WeightedMeanStretch.reported_raw());
+        assert_eq!(Metric::ALL.len(), 11);
     }
 
     #[test]
@@ -407,6 +518,57 @@ mod tests {
         assert!((row.max_stretch - 1.5).abs() < 1e-12);
         // Jain over {1, 1.5}: (2.5)² / (2 · 3.25)
         assert!((row.jain_fairness - 6.25 / 6.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unit_weights_are_bit_identical_to_unweighted() {
+        let (s, p, net) = setup();
+        let row = MetricRow::compute(&s, &p, &net, 0.0);
+        // every generator leaves weights at 1.0, so the weighted axes
+        // must reproduce the unweighted ones bit-exactly
+        assert_eq!(
+            row.weighted_mean_stretch.to_bits(),
+            row.mean_stretch.to_bits()
+        );
+        assert_eq!(row.weighted_max_stretch.to_bits(), row.max_stretch.to_bits());
+        assert_eq!(row.weighted_jain.to_bits(), row.jain_fairness.to_bits());
+    }
+
+    #[test]
+    fn weights_skew_the_fairness_axes() {
+        let (s, mut p, net) = setup();
+        // g2 (stretch 1.5) is 3× as important as g1 (stretch 1.0)
+        p[1].1.set_weight(3.0);
+        let (st, w) = graph_stretch_weights(&s, &p, &net);
+        assert_eq!(st, vec![1.0, 1.5]);
+        assert_eq!(w, vec![1.0, 3.0]);
+        let row = MetricRow::compute(&s, &p, &net, 0.0);
+        // weighted mean = (1·1 + 3·1.5) / 4 = 1.375 > unweighted 1.25
+        assert!((row.weighted_mean_stretch - 1.375).abs() < 1e-12);
+        assert!(row.weighted_mean_stretch > row.mean_stretch);
+        // weighted max = 3 · 1.5 = 4.5
+        assert!((row.weighted_max_stretch - 4.5).abs() < 1e-12);
+        // weighted Jain = (5.5)² / (4 · (1 + 3·2.25))
+        assert!((row.weighted_jain - 30.25 / 31.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_helpers_degenerate_inputs() {
+        assert_eq!(weighted_mean(&[], &[]), 0.0);
+        assert_eq!(weighted_max(&[], &[]), 0.0);
+        assert_eq!(weighted_jain(&[], &[]), 1.0);
+        assert_eq!(weighted_jain(&[0.0], &[1.0]), 1.0);
+        assert_eq!(weighted_mean(&[2.0, 4.0], &[1.0, 1.0]), 3.0);
+        assert_eq!(weighted_max(&[2.0, 4.0], &[3.0, 1.0]), 6.0);
+    }
+
+    #[test]
+    fn preemption_cost_defaults_to_zero() {
+        let c = PreemptionCost::default();
+        assert_eq!(c.replans, 0);
+        assert_eq!(c.straggler_replans, 0);
+        assert_eq!(c.reverted_tasks, 0);
+        assert_eq!(c.replan_wall_s, 0.0);
     }
 
     #[test]

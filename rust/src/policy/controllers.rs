@@ -1,0 +1,370 @@
+//! The stock [`PreemptionPolicy`] controllers: the PR-2 fixed trigger,
+//! an AIMD adaptive window, a token-bucket budget, and a cooldown
+//! (hysteresis) wrapper.  All controllers are deterministic functions of
+//! their observation history, so any sweep that drives them is
+//! bit-identical at any thread count.
+
+use super::{Decision, FinishObservation, PreemptionPolicy, Scope};
+
+/// The no-reaction baseline: never preempts on stragglers (arrival-time
+/// preemption still runs per the §IV policy).  Equivalent to the PR-2
+/// `Reaction::None`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoPreemption;
+
+impl PreemptionPolicy for NoPreemption {
+    fn label(&self) -> String {
+        "none".to_string()
+    }
+
+    fn on_finish(&mut self, _obs: &FinishObservation) -> Decision {
+        Decision::Hold
+    }
+}
+
+/// Bit-exact port of the PR-2 `Reaction::LastK { k, threshold }`: when a
+/// task finishes later than `threshold ×` its estimated duration, revert
+/// the pending tasks of the `k` most recently arrived graphs, uncapped.
+#[derive(Clone, Copy, Debug)]
+pub struct FixedLastK {
+    k: usize,
+    threshold: f64,
+}
+
+impl FixedLastK {
+    pub fn new(k: usize, threshold: f64) -> Self {
+        Self { k, threshold }
+    }
+}
+
+impl PreemptionPolicy for FixedLastK {
+    /// `L{k}@{θ}` — identical to the PR-2 `Reaction::LastK` label.
+    fn label(&self) -> String {
+        format!("L{}@{}", self.k, self.threshold)
+    }
+
+    fn on_finish(&mut self, obs: &FinishObservation) -> Decision {
+        if obs.is_straggler(self.threshold) {
+            Decision::Reschedule(Scope::last_k(self.k))
+        } else {
+            Decision::Hold
+        }
+    }
+}
+
+/// AIMD feedback controller over the Last-K window: each completed graph
+/// reports its observed stretch; above `target_stretch` the window widens
+/// additively (`k + 1`, service is degrading — preempt more), at or below
+/// it halves (`k / 2`, integer — back off toward non-preemptive).  `k` is
+/// clamped to `0..=k_max`; at `k = 0` the controller holds until a late
+/// completion widens it again.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveK {
+    k0: usize,
+    k: usize,
+    k_max: usize,
+    threshold: f64,
+    target_stretch: f64,
+}
+
+impl AdaptiveK {
+    pub fn new(k0: usize, k_max: usize, threshold: f64, target_stretch: f64) -> Self {
+        // clamp the seed before storing it, so the label always names
+        // the window the controller actually starts with
+        let k0 = k0.min(k_max);
+        Self {
+            k0,
+            k: k0,
+            k_max,
+            threshold,
+            target_stretch,
+        }
+    }
+
+    /// Current window width (test/diagnostic hook).
+    pub fn current_k(&self) -> usize {
+        self.k
+    }
+}
+
+impl PreemptionPolicy for AdaptiveK {
+    /// `A{k0}-{k_max}@{θ}τ{target}` — every parameter is in the label so
+    /// scenarios differing in any of them stay distinguishable in
+    /// tables/CSV/JSON.
+    fn label(&self) -> String {
+        format!(
+            "A{}-{}@{}τ{}",
+            self.k0, self.k_max, self.threshold, self.target_stretch
+        )
+    }
+
+    fn on_finish(&mut self, obs: &FinishObservation) -> Decision {
+        if self.k >= 1 && obs.is_straggler(self.threshold) {
+            Decision::Reschedule(Scope::last_k(self.k))
+        } else {
+            Decision::Hold
+        }
+    }
+
+    fn on_graph_complete(&mut self, _graph: usize, stretch: f64) {
+        if stretch > self.target_stretch {
+            self.k = (self.k + 1).min(self.k_max);
+        } else {
+            self.k /= 2;
+        }
+    }
+}
+
+/// Token bucket on **reverted tasks per unit simulated time** — the
+/// parsimonious-preemption knob.  Tokens accrue at `rate` up to `burst`
+/// (the bucket starts full); a straggler fires only while at least one
+/// whole token is banked, and the resulting replan may revert at most
+/// `⌊tokens⌋` tasks (the coordinator keeps the most recently arrived
+/// graphs' tasks when it must truncate).  Each actually-reverted task
+/// consumes one token, so over any run the controller can never revert
+/// more than `burst + rate × elapsed` tasks.
+#[derive(Clone, Copy, Debug)]
+pub struct Budgeted {
+    k: usize,
+    threshold: f64,
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last_refill: f64,
+}
+
+impl Budgeted {
+    pub fn new(k: usize, threshold: f64, rate: f64, burst: f64) -> Self {
+        Self {
+            k,
+            threshold,
+            rate,
+            burst,
+            tokens: burst,
+            last_refill: 0.0,
+        }
+    }
+
+    fn refill(&mut self, now: f64) {
+        // event times are non-decreasing; guard anyway so a same-instant
+        // pair can never drain the bucket via a negative dt
+        let dt = (now - self.last_refill).max(0.0);
+        self.tokens = (self.tokens + self.rate * dt).min(self.burst);
+        self.last_refill = now;
+    }
+
+    /// Current token balance (test/diagnostic hook).
+    pub fn tokens(&self) -> f64 {
+        self.tokens
+    }
+}
+
+impl PreemptionPolicy for Budgeted {
+    /// `B{k}@{θ}r{rate}b{burst}` — every parameter is in the label so
+    /// scenarios differing in any of them stay distinguishable in
+    /// tables/CSV/JSON.
+    fn label(&self) -> String {
+        format!(
+            "B{}@{}r{}b{}",
+            self.k, self.threshold, self.rate, self.burst
+        )
+    }
+
+    fn on_finish(&mut self, obs: &FinishObservation) -> Decision {
+        self.refill(obs.time);
+        if obs.is_straggler(self.threshold) && self.tokens >= 1.0 {
+            Decision::Reschedule(Scope {
+                last_k: self.k,
+                max_reverted: self.tokens.floor() as usize,
+            })
+        } else {
+            Decision::Hold
+        }
+    }
+
+    fn on_replan(&mut self, _time: f64, n_reverted: usize) {
+        // the coordinator capped the revert at ⌊tokens⌋, so the balance
+        // stays non-negative
+        self.tokens -= n_reverted as f64;
+        debug_assert!(self.tokens >= -1e-9, "token bucket overdrawn: {}", self.tokens);
+    }
+}
+
+/// Hysteresis wrapper: after any replan the inner controller fired,
+/// suppress further straggler triggers until `cooldown` simulated time
+/// has passed, so a burst of late finishes from one slow node cannot
+/// thrash the planner with back-to-back replans.  The inner controller
+/// still observes *every* finish and completion during the window (its
+/// trait contract; adaptation and statistics continue) — only its
+/// fire decisions are discarded.  `cooldown = 0` is bit-identical to
+/// the bare inner controller.
+pub struct Cooldown {
+    inner: Box<dyn PreemptionPolicy>,
+    cooldown: f64,
+    ready_at: f64,
+}
+
+impl Cooldown {
+    pub fn new(inner: Box<dyn PreemptionPolicy>, cooldown: f64) -> Self {
+        Self {
+            inner,
+            cooldown,
+            ready_at: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl PreemptionPolicy for Cooldown {
+    fn label(&self) -> String {
+        format!("{}+cd{}", self.inner.label(), self.cooldown)
+    }
+
+    fn on_finish(&mut self, obs: &FinishObservation) -> Decision {
+        // the inner controller observes every finish (stateful
+        // controllers need the full history); a fire inside the window
+        // is discarded — discarded fires are never charged, because a
+        // decision only reaches on_replan when the coordinator ran it
+        let inner = self.inner.on_finish(obs);
+        if obs.time < self.ready_at {
+            return Decision::Hold;
+        }
+        inner
+    }
+
+    fn on_replan(&mut self, time: f64, n_reverted: usize) {
+        self.ready_at = time + self.cooldown;
+        self.inner.on_replan(time, n_reverted);
+    }
+
+    fn on_graph_complete(&mut self, graph: usize, stretch: f64) {
+        self.inner.on_graph_complete(graph, stretch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Gid;
+
+    fn obs_at(time: f64, lateness: f64) -> FinishObservation {
+        FinishObservation {
+            gid: Gid::new(0, 0),
+            time,
+            est: 1.0,
+            lateness,
+            arrived: 10,
+        }
+    }
+
+    #[test]
+    fn no_preemption_always_holds() {
+        let mut p = NoPreemption;
+        assert_eq!(p.on_finish(&obs_at(1.0, 100.0)), Decision::Hold);
+    }
+
+    #[test]
+    fn fixed_lastk_fires_on_strict_threshold() {
+        let mut p = FixedLastK::new(3, 0.25);
+        assert_eq!(p.on_finish(&obs_at(1.0, 0.25)), Decision::Hold);
+        assert_eq!(
+            p.on_finish(&obs_at(1.0, 0.26)),
+            Decision::Reschedule(Scope::last_k(3))
+        );
+    }
+
+    #[test]
+    fn adaptive_k_aimd_transitions() {
+        let mut p = AdaptiveK::new(2, 6, 0.1, 1.5);
+        assert_eq!(p.current_k(), 2);
+        // slow graphs widen additively
+        p.on_graph_complete(0, 3.0);
+        p.on_graph_complete(1, 3.0);
+        assert_eq!(p.current_k(), 4);
+        // clamped at k_max
+        for g in 2..10 {
+            p.on_graph_complete(g, 3.0);
+        }
+        assert_eq!(p.current_k(), 6);
+        // healthy graphs halve
+        p.on_graph_complete(10, 1.0);
+        assert_eq!(p.current_k(), 3);
+        p.on_graph_complete(11, 1.0);
+        p.on_graph_complete(12, 1.0);
+        assert_eq!(p.current_k(), 0);
+        // at k = 0 the controller holds even on blatant stragglers...
+        assert_eq!(p.on_finish(&obs_at(1.0, 50.0)), Decision::Hold);
+        // ...and recovers once service degrades again
+        p.on_graph_complete(13, 3.0);
+        assert_eq!(
+            p.on_finish(&obs_at(2.0, 50.0)),
+            Decision::Reschedule(Scope::last_k(1))
+        );
+    }
+
+    #[test]
+    fn budgeted_caps_and_refills() {
+        let mut p = Budgeted::new(5, 0.0, 1.0, 3.0);
+        // bucket starts full (3 tokens): fire with cap 3
+        match p.on_finish(&obs_at(0.0, 1.0)) {
+            Decision::Reschedule(s) => assert_eq!(s.max_reverted, 3),
+            d => panic!("expected fire, got {d:?}"),
+        }
+        p.on_replan(0.0, 3);
+        assert!(p.tokens().abs() < 1e-12);
+        // empty bucket holds even for stragglers
+        assert_eq!(p.on_finish(&obs_at(0.5, 1.0)), Decision::Hold);
+        // refill at 1 token per time unit: 0.5 banked at t=0.5, so 2.0
+        // tokens by t=2 → cap ⌊2.0⌋ = 2
+        match p.on_finish(&obs_at(2.0, 1.0)) {
+            Decision::Reschedule(s) => assert_eq!(s.max_reverted, 2),
+            d => panic!("expected fire, got {d:?}"),
+        }
+        // a fire that reverted nothing is not reported; the balance keeps
+        // accruing and is clamped at burst
+        match p.on_finish(&obs_at(100.0, 1.0)) {
+            Decision::Reschedule(s) => assert_eq!(s.max_reverted, 3),
+            d => panic!("expected fire, got {d:?}"),
+        }
+        assert!((p.tokens() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn budgeted_non_straggler_never_fires() {
+        let mut p = Budgeted::new(5, 0.25, 10.0, 10.0);
+        assert_eq!(p.on_finish(&obs_at(1.0, 0.1)), Decision::Hold);
+    }
+
+    #[test]
+    fn cooldown_gates_fires_but_not_adaptation() {
+        let mut p = Cooldown::new(Box::new(FixedLastK::new(2, 0.0)), 10.0);
+        assert_eq!(
+            p.on_finish(&obs_at(1.0, 1.0)),
+            Decision::Reschedule(Scope::last_k(2))
+        );
+        p.on_replan(1.0, 4);
+        // suppressed inside the window...
+        assert_eq!(p.on_finish(&obs_at(5.0, 1.0)), Decision::Hold);
+        assert_eq!(p.on_finish(&obs_at(10.9, 1.0)), Decision::Hold);
+        // ...open again at ready_at (>=, so cd=0 is bit-identical to bare)
+        assert_eq!(
+            p.on_finish(&obs_at(11.0, 1.0)),
+            Decision::Reschedule(Scope::last_k(2))
+        );
+    }
+
+    #[test]
+    fn zero_cooldown_is_transparent() {
+        let mut bare = FixedLastK::new(3, 0.2);
+        let mut wrapped = Cooldown::new(Box::new(FixedLastK::new(3, 0.2)), 0.0);
+        for (t, late) in [(1.0, 0.5), (1.0, 0.5), (2.0, 0.1), (3.0, 0.9)] {
+            let o = obs_at(t, late);
+            let a = bare.on_finish(&o);
+            let b = wrapped.on_finish(&o);
+            assert_eq!(a, b, "t={t} late={late}");
+            if let Decision::Reschedule(_) = a {
+                bare.on_replan(t, 2);
+                wrapped.on_replan(t, 2);
+            }
+        }
+    }
+}

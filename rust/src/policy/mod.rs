@@ -1,0 +1,296 @@
+//! The **preemption policy engine**: pluggable controllers that decide,
+//! from observed runtime facts, *when* the reactive coordinator should
+//! preempt (revert and re-place pending work) and *how much*.
+//!
+//! PR 2 hardwired one straggler reaction into the event loop
+//! ([`crate::sim::Reaction::LastK`]); this module makes the decision a
+//! first-class subsystem.  A [`PreemptionPolicy`] observes every task
+//! finish ([`FinishObservation`]: realized lateness vs the estimate) and
+//! every graph completion (observed per-graph stretch) and answers with a
+//! [`Decision`]: hold the plan, or reschedule a [`Scope`] — the pending
+//! tasks of the `last_k` most recently arrived graphs, optionally capped
+//! at `max_reverted` tasks.  The coordinator then runs the base heuristic
+//! in place through the PR-1 insertion-journal transactions exactly as
+//! before and reports the outcome back ([`PreemptionPolicy::on_replan`]),
+//! closing the feedback loop stateful controllers need.
+//!
+//! Four controllers ship with the engine ([`controllers`]):
+//!
+//! * [`FixedLastK`] — bit-exact port of the PR-2 `Reaction::LastK{k,θ}`
+//!   trigger (fire when `lateness > θ × estimate`, scope = last `k`
+//!   graphs, no cap).  Its label matches PR-2's `L{k}@{θ}` so sweep rows
+//!   line up column-for-column.
+//! * [`AdaptiveK`] — AIMD feedback controller: each graph completion
+//!   compares observed stretch against a target; too slow ⇒ widen `k`
+//!   additively, healthy ⇒ halve it.  Probes how much preemption the
+//!   workload *currently* needs instead of fixing it a priori.
+//! * [`Budgeted`] — a token bucket on **reverted tasks per unit simulated
+//!   time** (the parsimonious-preemption knob of arXiv:2605.23255): fires
+//!   only while tokens remain and caps each replan's revert count at the
+//!   integral token balance.
+//! * [`Cooldown`] — hysteresis wrapper: after a replan fires, suppress
+//!   further straggler triggers for a fixed window so a burst of late
+//!   finishes cannot thrash the planner.
+//!
+//! The engine governs **straggler** preemption only; arrival-time
+//! preemption remains the §IV [`crate::coordinator::Policy`]
+//! (NP / Last-K / P), unchanged.
+//!
+//! [`PolicySpec`] is the serializable description used by the experiment
+//! harness: it labels a scenario and [`PolicySpec::make`]s a fresh
+//! controller per run, so sweep cells never share mutable state and the
+//! joint k×θ×budget sweep stays bit-identical at any `--jobs`.
+
+pub mod controllers;
+
+pub use controllers::{AdaptiveK, Budgeted, Cooldown, FixedLastK, NoPreemption};
+
+use crate::graph::Gid;
+
+/// What the coordinator observed when a task finished — everything a
+/// controller may condition its straggler decision on.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FinishObservation {
+    /// the task that finished
+    pub gid: Gid,
+    /// simulation time of the (realized) finish
+    pub time: f64,
+    /// the task's estimated duration when it was dispatched
+    pub est: f64,
+    /// realized finish minus expected finish (negative = early)
+    pub lateness: f64,
+    /// graphs arrived so far — upper bound of any Last-K window
+    pub arrived: usize,
+}
+
+impl FinishObservation {
+    /// The PR-2 straggler predicate: finished more than
+    /// `threshold × estimate` later than expected.
+    pub fn is_straggler(&self, threshold: f64) -> bool {
+        self.lateness > threshold * self.est
+    }
+}
+
+/// How much a [`Decision::Reschedule`] may preempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Scope {
+    /// revert pending tasks of the `last_k` most recently arrived graphs
+    pub last_k: usize,
+    /// cap on how many tasks this replan may revert; when the revertible
+    /// set is larger, the coordinator keeps the tasks of the most
+    /// recently arrived graphs and leaves the oldest in place.
+    /// `usize::MAX` = uncapped.
+    pub max_reverted: usize,
+}
+
+impl Scope {
+    /// Uncapped Last-K scope.
+    pub fn last_k(k: usize) -> Self {
+        Scope {
+            last_k: k,
+            max_reverted: usize::MAX,
+        }
+    }
+}
+
+/// A controller's answer to one [`FinishObservation`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Keep executing the current plan.
+    Hold,
+    /// Revert and re-place the given [`Scope`] of pending work.
+    Reschedule(Scope),
+}
+
+/// A stateful straggler-preemption controller driven by the reactive
+/// coordinator ([`crate::sim::ReactiveCoordinator::with_policy`]).
+///
+/// Contract:
+/// * [`on_finish`](Self::on_finish) is called for **every** realized task
+///   finish, in event order (times are non-decreasing).
+/// * [`on_replan`](Self::on_replan) is called after a straggler replan
+///   this policy fired actually ran, with the number of tasks it
+///   reverted.  A fire that found nothing revertible is *not* reported
+///   (no replan happened — same as PR-2, which recorded no
+///   `ReplanRecord`); budgets are only charged for real work.
+///   Arrival-time replans (the §IV policy) are never reported.
+/// * [`on_graph_complete`](Self::on_graph_complete) is called when the
+///   last task of a graph finishes, **before** the same finish event's
+///   `on_finish` decision, so adaptation sees the freshest stretch.
+pub trait PreemptionPolicy {
+    /// Short scenario label for tables/CSV (`L3@0.25`, `B3@0.25r1`, ...).
+    fn label(&self) -> String;
+
+    /// Decide on one observed task finish.
+    fn on_finish(&mut self, obs: &FinishObservation) -> Decision;
+
+    /// Feedback: a straggler replan this policy fired reverted
+    /// `n_reverted` tasks at simulated time `time`.
+    fn on_replan(&mut self, time: f64, n_reverted: usize) {
+        let _ = (time, n_reverted);
+    }
+
+    /// Feedback: graph `graph` completed with observed stretch `stretch`
+    /// (response time over the best-exec critical-path lower bound).
+    fn on_graph_complete(&mut self, graph: usize, stretch: f64) {
+        let _ = (graph, stretch);
+    }
+}
+
+/// Serializable description of a controller — the unit the experiment
+/// harness sweeps.  [`make`](Self::make) builds a fresh controller (no
+/// state shared between runs); [`label`](Self::label) matches the
+/// controller's own label so scenario names are stable.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PolicySpec {
+    /// No straggler reaction (the arXiv:1802.10309 baseline; identical
+    /// to `Reaction::None`).
+    None,
+    /// PR-2 `Reaction::LastK` semantics.
+    FixedLastK { k: usize, threshold: f64 },
+    /// AIMD controller seeded at `k0`, clamped to `0..=k_max`, widening
+    /// when observed per-graph stretch exceeds `target_stretch`.
+    AdaptiveK {
+        k0: usize,
+        k_max: usize,
+        threshold: f64,
+        target_stretch: f64,
+    },
+    /// Token bucket: `rate` revert-tokens per unit simulated time, cap
+    /// `burst`, Last-K window `k`, trigger threshold `threshold`.
+    Budgeted {
+        k: usize,
+        threshold: f64,
+        rate: f64,
+        burst: f64,
+    },
+    /// Hysteresis wrapper: suppress the inner controller's fires for
+    /// `cooldown` simulated time after each replan.
+    Cooldown {
+        cooldown: f64,
+        inner: Box<PolicySpec>,
+    },
+}
+
+impl PolicySpec {
+    /// Build a fresh controller for one run.
+    pub fn make(&self) -> Box<dyn PreemptionPolicy> {
+        match self {
+            PolicySpec::None => Box::new(NoPreemption),
+            PolicySpec::FixedLastK { k, threshold } => {
+                Box::new(FixedLastK::new(*k, *threshold))
+            }
+            PolicySpec::AdaptiveK {
+                k0,
+                k_max,
+                threshold,
+                target_stretch,
+            } => Box::new(AdaptiveK::new(*k0, *k_max, *threshold, *target_stretch)),
+            PolicySpec::Budgeted {
+                k,
+                threshold,
+                rate,
+                burst,
+            } => Box::new(Budgeted::new(*k, *threshold, *rate, *burst)),
+            PolicySpec::Cooldown { cooldown, inner } => {
+                Box::new(Cooldown::new(inner.make(), *cooldown))
+            }
+        }
+    }
+
+    /// Scenario label; identical to the built controller's
+    /// [`PreemptionPolicy::label`].
+    pub fn label(&self) -> String {
+        match self {
+            PolicySpec::None => "none".to_string(),
+            _ => self.make().label(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(lateness: f64, est: f64, arrived: usize) -> FinishObservation {
+        FinishObservation {
+            gid: Gid::new(0, 0),
+            time: 10.0,
+            est,
+            lateness,
+            arrived,
+        }
+    }
+
+    #[test]
+    fn straggler_predicate_matches_pr2() {
+        // PR-2: fire iff lateness > threshold * est (strict)
+        assert!(obs(0.26, 1.0, 1).is_straggler(0.25));
+        assert!(!obs(0.25, 1.0, 1).is_straggler(0.25));
+        assert!(!obs(-0.5, 1.0, 1).is_straggler(0.25));
+        // zero threshold: any positive lateness fires
+        assert!(obs(1e-9, 1.0, 1).is_straggler(0.0));
+        assert!(!obs(0.0, 1.0, 1).is_straggler(0.0));
+    }
+
+    #[test]
+    fn spec_labels_match_controllers() {
+        let specs = [
+            PolicySpec::None,
+            PolicySpec::FixedLastK {
+                k: 3,
+                threshold: 0.25,
+            },
+            PolicySpec::AdaptiveK {
+                k0: 3,
+                k_max: 10,
+                threshold: 0.25,
+                target_stretch: 2.0,
+            },
+            PolicySpec::Budgeted {
+                k: 3,
+                threshold: 0.25,
+                rate: 1.0,
+                burst: 4.0,
+            },
+            PolicySpec::Cooldown {
+                cooldown: 5.0,
+                inner: Box::new(PolicySpec::FixedLastK {
+                    k: 2,
+                    threshold: 0.1,
+                }),
+            },
+        ];
+        let labels: Vec<String> = specs.iter().map(|s| s.label()).collect();
+        assert_eq!(labels[0], "none");
+        assert_eq!(labels[1], "L3@0.25");
+        assert_eq!(labels[2], "A3-10@0.25τ2");
+        assert_eq!(labels[3], "B3@0.25r1b4");
+        assert_eq!(labels[4], "L2@0.1+cd5");
+        for (spec, label) in specs.iter().zip(&labels) {
+            assert_eq!(&spec.make().label(), label, "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn fixed_lastk_label_matches_pr2_reaction() {
+        // the sweep acceptance: FixedLastK rows must line up with PR-2's
+        // `L{k}@{θ}` reaction labels, Display-formatted the same way
+        let spec = PolicySpec::FixedLastK {
+            k: 3,
+            threshold: 0.25,
+        };
+        let reaction = crate::sim::Reaction::LastK {
+            k: 3,
+            threshold: 0.25,
+        };
+        assert_eq!(spec.label(), reaction.label());
+    }
+
+    #[test]
+    fn scope_helpers() {
+        let s = Scope::last_k(4);
+        assert_eq!(s.last_k, 4);
+        assert_eq!(s.max_reverted, usize::MAX);
+    }
+}

@@ -11,12 +11,24 @@
 //!   [`Coordinator`](crate::coordinator::Coordinator) — except that
 //!   "started" is now an *observed* runtime fact, not a planned start
 //!   time.
-//! * **Stragglers** ([`Reaction::LastK`]): when a task finishes more than
-//!   `threshold × estimated duration` later than the coordinator
-//!   expected, the pending tasks of the `k` most recently arrived graphs
-//!   are reverted and the base heuristic re-runs against the *observed*
-//!   state.  [`Reaction::None`] is the no-reaction baseline (the plan is
+//! * **Stragglers**: when a task finishes later than the coordinator
+//!   expected, something decides whether (and how much) to reschedule.
+//!   Two drivers exist: the built-in [`Reaction::LastK`] trigger
+//!   (PR 2's fixed rule — revert the pending tasks of the `k` most
+//!   recently arrived graphs when `lateness > threshold × estimate`),
+//!   and, via [`ReactiveCoordinator::with_policy`], any
+//!   [`PreemptionPolicy`] controller from the [`crate::policy`] engine
+//!   (fixed, AIMD-adaptive, token-budgeted, cooldown-wrapped).  A policy
+//!   observes every finish and every graph completion, answers with a
+//!   [`crate::policy::Decision`] (hold, or reschedule a scope — Last-K
+//!   window plus an optional cap on reverted tasks), and receives the
+//!   replan outcome back for budget/hysteresis accounting.
+//!   [`Reaction::None`] is the no-reaction baseline (the plan is
 //!   executed as-is, late or not).
+//!
+//! Both drivers share the same replan machinery; `FixedLastK` through
+//! the policy path is bit-identical to `Reaction::LastK` through the
+//! built-in path (pinned by `rust/tests/policy_engine.rs`).
 //!
 //! §Perf: every replan runs the base heuristic **in place** on the
 //! belief schedule's master timelines inside a PR-1 insertion-journal
@@ -53,7 +65,8 @@ use std::time::Instant;
 use crate::coordinator::{CompositeWorkspace, DynamicProblem, Policy};
 use crate::fasthash::{FxHashMap, FxHashSet};
 use crate::graph::Gid;
-use crate::metrics::MetricRow;
+use crate::metrics::{ideal_response, MetricRow, PreemptionCost};
+use crate::policy::{Decision, FinishObservation, PreemptionPolicy};
 use crate::robustness::StableNoise;
 use crate::schedule::{Assignment, Schedule};
 use crate::schedulers::Scheduler;
@@ -108,6 +121,9 @@ pub struct ReplanRecord {
     pub n_reverted: usize,
     /// composite size handed to the base heuristic
     pub n_pending: usize,
+    /// wall-clock seconds this pass spent (belief refresh + base
+    /// heuristic + cursor bookkeeping) — the per-replan §V.E cost
+    pub wall_s: f64,
     /// `(gid, node, start)` of every task already dispatched when the
     /// replan fired (empty unless [`SimConfig::record_frozen`]); the
     /// frozen-prefix invariant says each must equal the final realized
@@ -128,6 +144,9 @@ pub struct SimResult {
     pub replans: Vec<ReplanRecord>,
     /// §V.E: total wall time inside the base heuristic across replans.
     pub sched_runtime_s: f64,
+    /// Total wall time of whole replan passes (belief refresh + base
+    /// heuristic + bookkeeping) — a superset of `sched_runtime_s`.
+    pub replan_wall_s: f64,
 }
 
 impl SimResult {
@@ -150,6 +169,27 @@ impl SimResult {
 
     pub fn n_reverted_total(&self) -> usize {
         self.replans.iter().map(|r| r.n_reverted).sum()
+    }
+
+    /// Tasks reverted by straggler-triggered replans only (the quantity
+    /// a [`crate::policy::Budgeted`] token bucket meters).
+    pub fn n_straggler_reverted_total(&self) -> usize {
+        self.replans
+            .iter()
+            .filter(|r| r.straggler)
+            .map(|r| r.n_reverted)
+            .sum()
+    }
+
+    /// The run's preemption-cost accounting (replans, reverted tasks,
+    /// replan wall time) for the policy sweep's figure tables.
+    pub fn preemption_cost(&self) -> PreemptionCost {
+        PreemptionCost {
+            replans: self.n_replans(),
+            straggler_replans: self.n_straggler_replans(),
+            reverted_tasks: self.n_reverted_total(),
+            replan_wall_s: self.replan_wall_s,
+        }
     }
 }
 
@@ -180,9 +220,13 @@ struct Sim<'a> {
     queue: EventQueue,
     /// graphs arrived so far (straggler window base)
     arrived: usize,
+    /// unfinished-task countdown per graph (0 = graph complete) — feeds
+    /// the policy engine's per-graph stretch observations
+    graph_left: Vec<usize>,
     log: Vec<SimLogEntry>,
     replans: Vec<ReplanRecord>,
     sched_runtime_s: f64,
+    replan_wall_s: f64,
     // --- reusable scratch (steady-state replans allocate nothing) ---
     refresh_order: Vec<Vec<Gid>>,
     refresh_next: Vec<usize>,
@@ -213,9 +257,11 @@ impl<'a> Sim<'a> {
             cursor: vec![0; n],
             queue,
             arrived: 0,
+            graph_left: prob.graphs.iter().map(|(_, g)| g.n_tasks()).collect(),
             log: Vec::new(),
             replans: Vec::new(),
             sched_runtime_s: 0.0,
+            replan_wall_s: 0.0,
             refresh_order: vec![Vec::new(); n],
             refresh_next: vec![0; n],
             node_tail: vec![0.0; n],
@@ -422,12 +468,16 @@ impl<'a> Sim<'a> {
 }
 
 /// The reactive coordinator: an arrival [`Policy`] plus a straggler
-/// [`Reaction`] wrapped around a base heuristic, driven by the
+/// driver — the built-in [`Reaction`] or any [`PreemptionPolicy`]
+/// controller — wrapped around a base heuristic, driven by the
 /// discrete-event runtime.
 pub struct ReactiveCoordinator {
     pub policy: Policy,
     scheduler: Box<dyn Scheduler>,
     cfg: SimConfig,
+    /// Straggler controller from the [`crate::policy`] engine; when
+    /// `None` the built-in [`SimConfig::reaction`] trigger drives.
+    preemption: Option<Box<dyn PreemptionPolicy>>,
     ws: CompositeWorkspace,
     pending: Vec<Gid>,
 }
@@ -438,6 +488,30 @@ impl ReactiveCoordinator {
             policy,
             scheduler,
             cfg,
+            preemption: None,
+            ws: CompositeWorkspace::new(),
+            pending: Vec::new(),
+        }
+    }
+
+    /// A coordinator whose straggler decisions come from a
+    /// [`PreemptionPolicy`] controller instead of the built-in
+    /// [`Reaction`].  The controller replaces the built-in reaction
+    /// entirely: `cfg.reaction` is normalized to [`Reaction::None`]
+    /// (same behavior in debug and release — a configured `LastK` would
+    /// otherwise be silently unreachable).
+    pub fn with_policy(
+        policy: Policy,
+        scheduler: Box<dyn Scheduler>,
+        mut cfg: SimConfig,
+        preemption: Box<dyn PreemptionPolicy>,
+    ) -> Self {
+        cfg.reaction = Reaction::None;
+        Self {
+            policy,
+            scheduler,
+            cfg,
+            preemption: Some(preemption),
             ws: CompositeWorkspace::new(),
             pending: Vec::new(),
         }
@@ -445,12 +519,16 @@ impl ReactiveCoordinator {
 
     /// `5P-HEFT σ0.30 L3@0.25` style label.
     pub fn label(&self) -> String {
+        let straggler = match &self.preemption {
+            Some(p) => p.label(),
+            None => self.cfg.reaction.label(),
+        };
         format!(
             "{}-{} σ{:.2} {}",
             self.policy.label(),
             self.scheduler.name(),
             self.cfg.noise_std,
-            self.cfg.reaction.label()
+            straggler
         )
     }
 
@@ -511,11 +589,60 @@ impl ReactiveCoordinator {
                             lateness,
                         },
                     });
-                    if let Reaction::LastK { k, threshold } = self.cfg.reaction {
-                        let est = expected - a.start;
-                        if lateness > threshold * est {
-                            let lo = sim.arrived - k.min(sim.arrived);
-                            self.replan(&mut sim, t, lo..sim.arrived, None, true);
+                    // graph-completion feedback for adaptive controllers
+                    // (before this finish's own decision, so adaptation
+                    // sees the freshest stretch)
+                    let gi = gid.graph as usize;
+                    sim.graph_left[gi] -= 1;
+                    if sim.graph_left[gi] == 0 {
+                        if let Some(p) = self.preemption.as_mut() {
+                            let (arrival, g) = &prob.graphs[gi];
+                            let ideal = ideal_response(g, &prob.network);
+                            let stretch = if ideal > 0.0 {
+                                (t - arrival) / ideal
+                            } else {
+                                1.0
+                            };
+                            p.on_graph_complete(gi, stretch);
+                        }
+                    }
+                    // straggler decision: policy engine if installed,
+                    // else the built-in PR-2 reaction
+                    let est = expected - a.start;
+                    let decision = self.preemption.as_mut().map(|p| {
+                        p.on_finish(&FinishObservation {
+                            gid,
+                            time: t,
+                            est,
+                            lateness,
+                            arrived: sim.arrived,
+                        })
+                    });
+                    match decision {
+                        Some(Decision::Reschedule(scope)) => {
+                            let lo = sim.arrived - scope.last_k.min(sim.arrived);
+                            let ran = self.replan_scoped(
+                                &mut sim,
+                                t,
+                                lo..sim.arrived,
+                                None,
+                                true,
+                                scope.max_reverted,
+                            );
+                            if let Some(n_reverted) = ran {
+                                if let Some(p) = self.preemption.as_mut() {
+                                    p.on_replan(t, n_reverted);
+                                }
+                            }
+                        }
+                        Some(Decision::Hold) => {}
+                        None => {
+                            if let Reaction::LastK { k, threshold } = self.cfg.reaction {
+                                if lateness > threshold * est {
+                                    let lo = sim.arrived - k.min(sim.arrived);
+                                    self.replan(&mut sim, t, lo..sim.arrived, None, true);
+                                }
+                            }
                         }
                     }
                     sim.dispatch_all(t);
@@ -534,13 +661,12 @@ impl ReactiveCoordinator {
             log: sim.log,
             replans: sim.replans,
             sched_runtime_s: sim.sched_runtime_s,
+            replan_wall_s: sim.replan_wall_s,
         }
     }
 
-    /// One rescheduling pass at time `now`: revert the still-pending
-    /// tasks of `revert_graphs` (plus all tasks of a newly arrived
-    /// graph), refresh the belief to the observed state, and run the
-    /// base heuristic in place inside a timeline transaction.
+    /// [`replan_scoped`](Self::replan_scoped) without a revert cap — the
+    /// arrival-time and built-in-reaction paths.
     fn replan(
         &mut self,
         sim: &mut Sim<'_>,
@@ -548,7 +674,32 @@ impl ReactiveCoordinator {
         revert_graphs: std::ops::Range<usize>,
         new_graph: Option<usize>,
         straggler: bool,
-    ) {
+    ) -> Option<usize> {
+        self.replan_scoped(sim, now, revert_graphs, new_graph, straggler, usize::MAX)
+    }
+
+    /// One rescheduling pass at time `now`: revert the still-pending
+    /// tasks of `revert_graphs` (plus all tasks of a newly arrived
+    /// graph), refresh the belief to the observed state, and run the
+    /// base heuristic in place inside a timeline transaction.  At most
+    /// `max_reverted` tasks are reverted (a [`crate::policy::Budgeted`]
+    /// cap); when the revertible set is larger, whole per-graph blocks
+    /// are kept newest-arrival-first while they fit the cap (misfit
+    /// blocks are skipped, not split) and everything else stays in
+    /// place.
+    /// Returns the number of tasks actually reverted, or `None` when the
+    /// pass was skipped because nothing was revertible and no new graph
+    /// arrived (no replan happened, nothing is recorded).
+    fn replan_scoped(
+        &mut self,
+        sim: &mut Sim<'_>,
+        now: f64,
+        revert_graphs: std::ops::Range<usize>,
+        new_graph: Option<usize>,
+        straggler: bool,
+        max_reverted: usize,
+    ) -> Option<usize> {
+        let wall0 = Instant::now();
         self.pending.clear();
         let mut pending = std::mem::take(&mut self.pending);
         for j in revert_graphs {
@@ -560,10 +711,41 @@ impl ReactiveCoordinator {
                 }
             }
         }
+        if pending.len() > max_reverted {
+            // Budget cap, graph-granular: walking whole per-graph blocks
+            // from the newest arrival backwards, keep every block that
+            // still fits the remaining budget and skip the ones that
+            // don't (a misfit newest block must not abort the revert —
+            // an older, smaller block may still fit).  Partial graphs
+            // are never reverted: a kept pending task whose parent was
+            // reverted would be underivable in the belief refresh
+            // (dependencies are intra-graph).  Kept blocks are compacted
+            // to the tail in their original (arrival-ascending) order.
+            let mut budget = max_reverted;
+            let mut write = pending.len();
+            let mut read = pending.len();
+            while read > 0 {
+                let g = pending[read - 1].graph;
+                let mut lo = read;
+                while lo > 0 && pending[lo - 1].graph == g {
+                    lo -= 1;
+                }
+                let len = read - lo;
+                if len <= budget {
+                    budget -= len;
+                    write -= len;
+                    if write != lo {
+                        pending.copy_within(lo..read, write);
+                    }
+                }
+                read = lo;
+            }
+            pending.drain(..write);
+        }
         let n_reverted = pending.len();
         if n_reverted == 0 && new_graph.is_none() {
             self.pending = pending;
-            return; // straggler fired but nothing is revertible
+            return None; // straggler fired but nothing is revertible
         }
 
         // belief refresh drops the reverted slots and re-derives the
@@ -597,6 +779,9 @@ impl ReactiveCoordinator {
         }
         sim.recompute_cursors();
 
+        let wall_s = wall0.elapsed().as_secs_f64();
+        sim.replan_wall_s += wall_s;
+
         sim.log.push(SimLogEntry {
             time: now,
             kind: SimLogKind::Replan {
@@ -615,9 +800,11 @@ impl ReactiveCoordinator {
             straggler,
             n_reverted,
             n_pending,
+            wall_s,
             frozen,
         });
         self.pending = pending;
+        Some(n_reverted)
     }
 }
 
@@ -852,5 +1039,47 @@ mod tests {
         let rc = ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
         assert_eq!(rc.label(), "5P-HEFT σ0.30 L3@0.25");
         assert_eq!(Reaction::None.label(), "none");
+    }
+
+    #[test]
+    fn policy_driven_label_and_run() {
+        use crate::policy::PolicySpec;
+        let cfg = SimConfig {
+            noise_std: 0.4,
+            noise_seed: 2,
+            reaction: Reaction::None,
+            record_frozen: true,
+        };
+        let spec = PolicySpec::Budgeted {
+            k: 3,
+            threshold: 0.1,
+            rate: 0.5,
+            burst: 4.0,
+        };
+        let mut rc = ReactiveCoordinator::with_policy(
+            Policy::LastK(5),
+            SchedulerKind::Heft.make(0),
+            cfg,
+            spec.make(),
+        );
+        assert_eq!(rc.label(), "5P-HEFT σ0.40 B3@0.1r0.5b4");
+        let prob = Dataset::Synthetic.instance(10, 21);
+        let res = rc.run(&prob);
+        assert_eq!(res.schedule.n_assigned(), prob.total_tasks());
+        let rep = replay(&res.schedule, &prob.graphs, &prob.network);
+        assert!(rep.errors.is_empty(), "{:?}", &rep.errors[..rep.errors.len().min(3)]);
+        // frozen-prefix invariant holds under the policy engine too
+        for rec in &res.replans {
+            for &(gid, node, start) in &rec.frozen {
+                let a = res.schedule.get(gid).unwrap();
+                assert_eq!((a.node, a.start.to_bits()), (node, start.to_bits()));
+            }
+        }
+        // cost accounting is internally consistent
+        let cost = res.preemption_cost();
+        assert_eq!(cost.replans, res.n_replans());
+        assert_eq!(cost.reverted_tasks, res.n_reverted_total());
+        assert!(cost.replan_wall_s >= res.sched_runtime_s);
+        assert!(res.n_straggler_reverted_total() <= res.n_reverted_total());
     }
 }

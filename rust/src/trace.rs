@@ -128,7 +128,9 @@ pub fn sim_to_json(problem: &DynamicProblem, result: &SimResult) -> Value {
             "n_straggler_replans",
             json::num(result.n_straggler_replans() as f64),
         ),
+        ("n_reverted", json::num(result.n_reverted_total() as f64)),
         ("sched_runtime_s", json::num(result.sched_runtime_s)),
+        ("replan_wall_s", json::num(result.replan_wall_s)),
     ])
 }
 
@@ -141,7 +143,11 @@ pub struct SimTrace {
     pub n_events: usize,
     pub n_replans: usize,
     pub n_straggler_replans: usize,
+    /// tasks reverted across all replans (preemption-cost accounting)
+    pub n_reverted: usize,
     pub sched_runtime_s: f64,
+    /// total wall time of whole replan passes (0.0 in pre-PR-3 traces)
+    pub replan_wall_s: f64,
 }
 
 /// Parse a `dts-sim-trace-v1` document.
@@ -168,8 +174,13 @@ pub fn sim_from_json(v: &Value) -> Result<SimTrace, String> {
             .get("n_straggler_replans")
             .and_then(|x| x.as_usize())
             .unwrap_or(0),
+        n_reverted: v.get("n_reverted").and_then(|x| x.as_usize()).unwrap_or(0),
         sched_runtime_s: v
             .get("sched_runtime_s")
+            .and_then(|x| x.as_f64())
+            .unwrap_or(0.0),
+        replan_wall_s: v
+            .get("replan_wall_s")
             .and_then(|x| x.as_f64())
             .unwrap_or(0.0),
     })
@@ -364,6 +375,8 @@ mod tests {
         assert_eq!(trace.n_events, res.log.len());
         assert_eq!(trace.n_replans, res.n_replans());
         assert_eq!(trace.n_straggler_replans, res.n_straggler_replans());
+        assert_eq!(trace.n_reverted, res.n_reverted_total());
+        assert!((trace.replan_wall_s - res.replan_wall_s).abs() < 1e-9);
         for (gid, a) in res.schedule.iter() {
             assert_eq!(trace.schedule.get(*gid), Some(a), "{gid}");
         }

@@ -1,0 +1,413 @@
+//! Integration harness for the preemption policy engine:
+//!
+//! * **Bit-exact equivalence** — [`dts::policy::FixedLastK`] driven
+//!   through `ReactiveCoordinator::with_policy` must reproduce the PR-2
+//!   `Reaction::LastK` path (same replans, same realized schedule, bit
+//!   for bit) on all four datasets, and the sweep-level
+//!   `PolicySpec::FixedLastK` cells must reproduce the sim-sweep's
+//!   `Reaction::LastK` cells.
+//! * **Determinism** — the joint k × θ × budget policy sweep is
+//!   bit-identical at `--jobs` 1, 2 and 8.
+//! * **Budget property** — a [`dts::policy::Budgeted`] controller never
+//!   reverts more tasks than its token bucket allows:
+//!   `straggler-reverted ≤ burst + rate × elapsed` on every run.
+//! * **Hysteresis** — a zero cooldown is transparent; an effectively
+//!   infinite cooldown fires at most once.
+
+use dts::coordinator::Policy;
+use dts::experiments::{
+    run_policy_sweep_parallel, run_sim_sweep, PolicyScenario, PolicySweepConfig, SimScenario,
+    SimSweepConfig,
+};
+use dts::graph::Gid;
+use dts::policy::PolicySpec;
+use dts::schedule::Schedule;
+use dts::schedulers::SchedulerKind;
+use dts::sim::{replay, Reaction, ReactiveCoordinator, SimConfig, SimResult};
+use dts::workloads::Dataset;
+
+fn sig(s: &Schedule) -> Vec<(Gid, usize, u64, u64)> {
+    let mut v: Vec<(Gid, usize, u64, u64)> = s
+        .iter()
+        .map(|(g, a)| (*g, a.node, a.start.to_bits(), a.finish.to_bits()))
+        .collect();
+    v.sort();
+    v
+}
+
+fn run_reaction(prob: &dts::coordinator::DynamicProblem, cfg: SimConfig) -> SimResult {
+    let mut rc = ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
+    rc.run(prob)
+}
+
+fn run_spec(
+    prob: &dts::coordinator::DynamicProblem,
+    mut cfg: SimConfig,
+    spec: &PolicySpec,
+) -> SimResult {
+    cfg.reaction = Reaction::None;
+    let mut rc = ReactiveCoordinator::with_policy(
+        Policy::LastK(5),
+        SchedulerKind::Heft.make(0),
+        cfg,
+        spec.make(),
+    );
+    rc.run(prob)
+}
+
+/// The acceptance pin: `FixedLastK` through the policy engine is
+/// bit-exactly the PR-2 `Reaction::LastK` event loop, on all four
+/// datasets, replans and realized placements alike.
+#[test]
+fn fixed_lastk_matches_reaction_path_on_all_datasets() {
+    for (di, dataset) in Dataset::ALL.iter().enumerate() {
+        let seed = 300 + 13 * di as u64;
+        let prob = dataset.instance(10, seed);
+        let (k, threshold) = (3, 0.05);
+        let cfg = SimConfig {
+            noise_std: 0.55,
+            noise_seed: seed ^ 0xACE,
+            reaction: Reaction::LastK { k, threshold },
+            record_frozen: false,
+        };
+        let want = run_reaction(&prob, cfg);
+        let got = run_spec(&prob, cfg, &PolicySpec::FixedLastK { k, threshold });
+        assert_eq!(
+            sig(&got.schedule),
+            sig(&want.schedule),
+            "{} realized schedules diverged",
+            dataset.name()
+        );
+        assert_eq!(got.log.len(), want.log.len(), "{}", dataset.name());
+        assert_eq!(got.n_replans(), want.n_replans(), "{}", dataset.name());
+        assert_eq!(
+            got.n_straggler_replans(),
+            want.n_straggler_replans(),
+            "{}",
+            dataset.name()
+        );
+        assert_eq!(
+            got.n_reverted_total(),
+            want.n_reverted_total(),
+            "{}",
+            dataset.name()
+        );
+        assert!(
+            want.n_straggler_replans() > 0,
+            "{}: config should actually exercise the straggler path",
+            dataset.name()
+        );
+    }
+}
+
+/// Sweep-level equivalence: a `PolicySpec::FixedLastK` scenario in the
+/// policy sweep reproduces the PR-2 `L{k}@{θ}` sim-sweep cell bit-for-
+/// bit (same instances, same noise seeds, same variant seeds).
+#[test]
+fn policy_sweep_reproduces_sim_sweep_lastk_cells() {
+    let variant = dts::coordinator::Variant::parse("5P-HEFT").unwrap();
+    let (k, threshold, noise) = (3, 0.2, 0.4);
+    let sim_cfg = SimSweepConfig {
+        dataset: Dataset::Synthetic,
+        n_graphs: 8,
+        trials: 2,
+        seed: 9,
+        load: 0.5,
+        variant,
+        scenarios: vec![SimScenario {
+            noise_std: noise,
+            reaction: Reaction::LastK { k, threshold },
+        }],
+    };
+    let pol_cfg = PolicySweepConfig {
+        dataset: Dataset::Synthetic,
+        n_graphs: 8,
+        trials: 2,
+        seed: 9,
+        load: 0.5,
+        variant,
+        scenarios: vec![PolicyScenario {
+            noise_std: noise,
+            spec: PolicySpec::FixedLastK { k, threshold },
+        }],
+    };
+    let a = run_sim_sweep(&sim_cfg);
+    let b = run_policy_sweep_parallel(&pol_cfg, 1);
+    // labels line up because FixedLastK's label IS the reaction label
+    assert_eq!(a.labels, b.labels);
+    for trial in 0..2 {
+        let sc = &a.rows[trial][0];
+        let pc = &b.rows[trial][0];
+        assert_eq!(
+            sc.realized.total_makespan.to_bits(),
+            pc.realized.total_makespan.to_bits(),
+            "trial {trial}"
+        );
+        assert_eq!(
+            sc.realized.mean_stretch.to_bits(),
+            pc.realized.mean_stretch.to_bits()
+        );
+        assert_eq!(
+            sc.realized.jain_fairness.to_bits(),
+            pc.realized.jain_fairness.to_bits()
+        );
+        assert_eq!(sc.planned.total_makespan.to_bits(), pc.planned.total_makespan.to_bits());
+        assert_eq!(sc.n_replans, pc.cost.replans);
+        assert_eq!(sc.n_straggler_replans, pc.cost.straggler_replans);
+        assert_eq!(sc.n_reverted, pc.cost.reverted_tasks);
+    }
+}
+
+/// Joint-grid determinism: every schedule-derived metric and every
+/// replan/revert count is bit-identical at any `--jobs`.
+#[test]
+fn policy_sweep_is_deterministic_across_jobs_1_2_8() {
+    let mut scenarios = Vec::new();
+    for &threshold in &[0.15, 0.3] {
+        for &k in &[2, 4] {
+            scenarios.push(PolicyScenario {
+                noise_std: 0.35,
+                spec: PolicySpec::FixedLastK { k, threshold },
+            });
+            scenarios.push(PolicyScenario {
+                noise_std: 0.35,
+                spec: PolicySpec::Budgeted {
+                    k,
+                    threshold,
+                    rate: 0.05,
+                    burst: 3.0,
+                },
+            });
+        }
+        scenarios.push(PolicyScenario {
+            noise_std: 0.35,
+            spec: PolicySpec::AdaptiveK {
+                k0: 2,
+                k_max: 8,
+                threshold,
+                target_stretch: 1.5,
+            },
+        });
+    }
+    let cfg = PolicySweepConfig {
+        dataset: Dataset::RiotBench,
+        n_graphs: 6,
+        trials: 2,
+        seed: 17,
+        load: 0.5,
+        variant: dts::coordinator::Variant::parse("5P-HEFT").unwrap(),
+        scenarios,
+    };
+    let serial = run_policy_sweep_parallel(&cfg, 1);
+    let cell_sig = |c: &dts::experiments::PolicyCell| {
+        (
+            c.realized.total_makespan.to_bits(),
+            c.realized.mean_makespan.to_bits(),
+            c.realized.mean_flowtime.to_bits(),
+            c.realized.mean_utilization.to_bits(),
+            c.realized.mean_stretch.to_bits(),
+            c.realized.max_stretch.to_bits(),
+            c.realized.jain_fairness.to_bits(),
+            c.realized.weighted_mean_stretch.to_bits(),
+            c.realized.weighted_max_stretch.to_bits(),
+            c.realized.weighted_jain.to_bits(),
+            c.cost.replans,
+            c.cost.straggler_replans,
+            c.cost.reverted_tasks,
+        )
+    };
+    for jobs in [2, 8] {
+        let par = run_policy_sweep_parallel(&cfg, jobs);
+        assert_eq!(serial.labels, par.labels);
+        for (trial, (rs, rp)) in serial.rows.iter().zip(par.rows.iter()).enumerate() {
+            for (si, (a, b)) in rs.iter().zip(rp.iter()).enumerate() {
+                assert_eq!(
+                    cell_sig(a),
+                    cell_sig(b),
+                    "jobs={jobs}, trial {trial}, scenario {}",
+                    serial.labels[si]
+                );
+            }
+        }
+    }
+}
+
+/// PROPERTY: a budgeted controller can never revert more tasks via
+/// straggler replans than its token bucket ever issued:
+/// `Σ straggler-reverted ≤ burst + rate × (last event time)`.
+/// The last event time is bounded by the realized schedule's maximum
+/// finish (arrivals start at 0 for generated instances).
+#[test]
+fn budgeted_never_exceeds_token_budget() {
+    // a tight bucket (the property stress) and a generous one (which
+    // must actually buy productive reverts — guards against the budget
+    // path silently degenerating into no-preemption)
+    let mut total_spent = 0usize;
+    for (rate, burst) in [(0.03, 2.0), (0.5, 8.0)] {
+        for (di, dataset) in Dataset::ALL.iter().enumerate() {
+            for (si, seed) in [5u64, 23].into_iter().enumerate() {
+                let prob = dataset.instance(10, seed + di as u64);
+                let cfg = SimConfig {
+                    noise_std: 0.5,
+                    noise_seed: seed ^ 0xB00C,
+                    reaction: Reaction::None,
+                    record_frozen: false,
+                };
+                let res = run_spec(
+                    &prob,
+                    cfg,
+                    &PolicySpec::Budgeted {
+                        k: 5,
+                        threshold: 0.05,
+                        rate,
+                        burst,
+                    },
+                );
+                assert_eq!(res.schedule.n_assigned(), prob.total_tasks());
+                let rep = replay(&res.schedule, &prob.graphs, &prob.network);
+                assert!(
+                    rep.errors.is_empty(),
+                    "{:?}",
+                    &rep.errors[..rep.errors.len().min(3)]
+                );
+                let span = res
+                    .schedule
+                    .iter()
+                    .map(|(_, a)| a.finish)
+                    .fold(0.0, f64::max);
+                let budget = burst + rate * span;
+                let spent = res.n_straggler_reverted_total();
+                assert!(
+                    spent as f64 <= budget + 1e-9,
+                    "{} seed-case {si} r{rate}b{burst}: reverted {spent} > budget {budget}",
+                    dataset.name()
+                );
+                total_spent += spent;
+            }
+        }
+    }
+    assert!(
+        total_spent > 0,
+        "no Budgeted run ever reverted a task — the budget path is a no-op"
+    );
+}
+
+/// The budget cap binds in practice: under heavy noise and a tight
+/// threshold, the uncapped controller reverts strictly more than a
+/// starved token bucket.
+#[test]
+fn tight_budget_reverts_less_than_uncapped() {
+    let prob = Dataset::Synthetic.instance(14, 31);
+    let cfg = SimConfig {
+        noise_std: 0.6,
+        noise_seed: 8,
+        reaction: Reaction::None,
+        record_frozen: false,
+    };
+    let (k, threshold) = (5, 0.05);
+    let uncapped = run_spec(&prob, cfg, &PolicySpec::FixedLastK { k, threshold });
+    let starved = run_spec(
+        &prob,
+        cfg,
+        &PolicySpec::Budgeted {
+            k,
+            threshold,
+            rate: 1e-6,
+            burst: 1.0,
+        },
+    );
+    assert!(
+        uncapped.n_straggler_reverted_total() > 0,
+        "config must exercise straggler reverts"
+    );
+    // a bucket that never refills can spend at most its initial burst
+    assert!(starved.n_straggler_reverted_total() <= 1);
+    assert!(
+        starved.n_straggler_reverted_total() < uncapped.n_straggler_reverted_total()
+    );
+}
+
+/// Cooldown semantics: zero cooldown is bit-exactly transparent, and an
+/// effectively infinite cooldown fires at most one straggler replan.
+#[test]
+fn cooldown_zero_is_transparent_and_infinite_fires_once() {
+    let prob = Dataset::Adversarial.instance(10, 4);
+    let cfg = SimConfig {
+        noise_std: 0.55,
+        noise_seed: 6,
+        reaction: Reaction::None,
+        record_frozen: false,
+    };
+    let inner = PolicySpec::FixedLastK {
+        k: 4,
+        threshold: 0.05,
+    };
+    let bare = run_spec(&prob, cfg, &inner);
+    let cd0 = run_spec(
+        &prob,
+        cfg,
+        &PolicySpec::Cooldown {
+            cooldown: 0.0,
+            inner: Box::new(inner.clone()),
+        },
+    );
+    assert_eq!(sig(&bare.schedule), sig(&cd0.schedule));
+    assert_eq!(bare.n_replans(), cd0.n_replans());
+
+    let cd_inf = run_spec(
+        &prob,
+        cfg,
+        &PolicySpec::Cooldown {
+            cooldown: 1e18,
+            inner: Box::new(inner),
+        },
+    );
+    assert!(cd_inf.n_straggler_replans() <= 1);
+    assert!(bare.n_straggler_replans() > 1, "config must fire repeatedly");
+}
+
+/// AdaptiveK stays replay-valid on every dataset and never moves a
+/// started task, whatever trajectory its window width takes.
+#[test]
+fn adaptive_k_is_valid_on_all_datasets() {
+    for (di, dataset) in Dataset::ALL.iter().enumerate() {
+        let prob = dataset.instance(10, 60 + di as u64);
+        let cfg = SimConfig {
+            noise_std: 0.55,
+            noise_seed: 41,
+            reaction: Reaction::None,
+            record_frozen: true,
+        };
+        let res = run_spec(
+            &prob,
+            cfg,
+            &PolicySpec::AdaptiveK {
+                k0: 2,
+                k_max: 10,
+                threshold: 0.05,
+                target_stretch: 1.2,
+            },
+        );
+        assert_eq!(res.schedule.n_assigned(), prob.total_tasks());
+        let rep = replay(&res.schedule, &prob.graphs, &prob.network);
+        assert!(
+            rep.errors.is_empty(),
+            "{}: {:?}",
+            dataset.name(),
+            &rep.errors[..rep.errors.len().min(3)]
+        );
+        // frozen-prefix invariant under the policy engine
+        for rec in &res.replans {
+            for &(gid, node, start) in &rec.frozen {
+                let a = res.schedule.get(gid).unwrap();
+                assert_eq!(
+                    (a.node, a.start.to_bits()),
+                    (node, start.to_bits()),
+                    "{}: replan at {} moved started {gid}",
+                    dataset.name(),
+                    rec.time
+                );
+            }
+        }
+    }
+}
