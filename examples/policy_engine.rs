@@ -85,6 +85,7 @@ fn main() {
         seed: 7,
         load: dts::workloads::DEFAULT_LOAD,
         variant: dts::coordinator::Variant::parse("5P-HEFT").unwrap(),
+        scenario: dts::workloads::Scenario::default(),
         scenarios,
     };
     let result = run_policy_sweep_parallel(&cfg, 4);

@@ -157,6 +157,46 @@ fn main() {
         );
     }
 
+    // 1d. deadline-scenario row: the urgency-scoped DeadlineAware
+    // controller on a weighted + deadline-laden instance — compare
+    // against the `policy … L3@0.25` row to read the price of ranking
+    // graphs by belief slack at every straggler replan.
+    {
+        use dts::workloads::{DeadlineModel, Scenario, WeightModel, DEFAULT_LOAD};
+        let scen = Scenario {
+            weights: WeightModel::HeavyTail { alpha: 1.5 },
+            deadlines: DeadlineModel::CritPathSlack { slack: 2.0 },
+            arrivals: Default::default(),
+        };
+        let dprob = Dataset::Synthetic.instance_scenario(100, 1, DEFAULT_LOAD, None, &scen);
+        let spec = PolicySpec::DeadlineAware {
+            k: 3,
+            threshold: 0.25,
+        };
+        let cfg = SimConfig {
+            noise_std: 0.3,
+            noise_seed: 1,
+            reaction: Reaction::None,
+            record_frozen: false,
+        };
+        let label = spec.label();
+        let (mean, min, max) = util::time_it(1, 3, || {
+            let mut rc = ReactiveCoordinator::with_policy(
+                Policy::LastK(5),
+                SchedulerKind::Heft.make(0),
+                cfg,
+                spec.make(),
+            );
+            std::hint::black_box(rc.run(&dprob));
+        });
+        rec.report(
+            &format!("policy 5P-HEFT σ0.3 {label} w+d synthetic×100"),
+            mean,
+            min,
+            max,
+        );
+    }
+
     // 2. the biggest single composite problem a preemptive run sees
     let (mean, min, max) = util::time_it(1, 5, || {
         let mut c = Coordinator::new(Policy::Preemptive, SchedulerKind::Heft.make(0));

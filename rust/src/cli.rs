@@ -23,7 +23,7 @@ use crate::policy::PolicySpec;
 use crate::schedule::validate;
 use crate::schedulers::{Cpop, Heft};
 use crate::sim::{replay, Reaction};
-use crate::workloads::Dataset;
+use crate::workloads::{ArrivalModel, Dataset, DeadlineModel, Scenario, WeightModel};
 use crate::{report, runtime};
 
 /// Parsed flags: `--key value` pairs plus positional words.
@@ -79,16 +79,22 @@ USAGE:
                  [--jobs N]   (N worker threads; deterministic at any N)
   dts simulate   --dataset <d|all> [--graphs N] [--trials T] [--seed S]
                  [--variant 5P-HEFT] [--noise 0.0,0.3] [--threshold 0.25,none]
-                 [--k 3] [--jobs N] [--csv out.csv] [--json out.json]
+                 [--k 3] [--weighted [pareto|classes]] [--deadline-slack F]
+                 [--arrival poisson|bursty] [--burst-size 4]
+                 [--jobs N] [--csv out.csv] [--json out.json]
                  [--trace out.json]
                  (reactive runtime: realized durations, straggler Last-K)
   dts policy     --dataset <d|all> [--graphs N] [--trials T] [--seed S]
                  [--variant 5P-HEFT] [--noise 0.3] [--k 1,3,5]
                  [--threshold 0.25] [--budget none,1.0] [--burst 4]
                  [--adaptive] [--target-stretch 2.0] [--kmax 20]
-                 [--cooldown 0] [--jobs N] [--csv out.csv] [--json out.json]
+                 [--cooldown 0] [--deadline-aware]
+                 [--weighted [pareto|classes]] [--deadline-slack F]
+                 [--arrival poisson|bursty] [--burst-size 4]
+                 [--jobs N] [--csv out.csv] [--json out.json]
                  (policy engine: joint k × θ × budget sweep with
-                  preemption-cost accounting)
+                  preemption-cost accounting; --deadline-aware adds the
+                  urgency-scoped D{k}@{θ} controllers)
   dts generate   --dataset <d> [--graphs N] [--seed S] [--dot]
   dts validate   --dataset <d> [--graphs N] [--seed S] [--variant V]
   dts analyze    --dataset <d> [--graphs N] [--seed S] [--variant V]
@@ -280,6 +286,64 @@ fn parse_threshold_list(s: &str) -> Option<Vec<Option<f64>>> {
     }
 }
 
+/// Build the workload [`Scenario`] from the shared `--weighted` /
+/// `--deadline-slack` / `--arrival` (+`--burst-size`) flags of
+/// `dts simulate` and `dts policy`.  No flags = the default [`Scenario`]
+/// (bit-identical to the pre-scenario sweeps).
+fn scenario_of(args: &Args) -> Result<Scenario, i32> {
+    let weights = match args.flag("weighted") {
+        None => WeightModel::Unit,
+        // bare `--weighted` parses as "true": the heavy-tail default
+        Some("true") | Some("pareto") => WeightModel::HeavyTail { alpha: 1.5 },
+        Some("classes") => WeightModel::Classes {
+            weights: vec![1.0, 4.0, 16.0],
+        },
+        Some(other) => {
+            eprintln!("error: bad --weighted '{other}' (want pareto|classes)");
+            return Err(2);
+        }
+    };
+    let deadlines = match args.flag("deadline-slack") {
+        None => DeadlineModel::None,
+        Some(s) => match s.parse::<f64>() {
+            Ok(slack) if slack.is_finite() && slack >= 0.0 => {
+                DeadlineModel::CritPathSlack { slack }
+            }
+            _ => {
+                eprintln!("error: --deadline-slack must be finite and >= 0");
+                return Err(2);
+            }
+        },
+    };
+    let arrivals = match args.flag("arrival") {
+        None | Some("poisson") => ArrivalModel::Poisson,
+        Some("bursty") => {
+            // strict parse: a typo must not silently fall back to the
+            // default and change the experiment's arrival process
+            let burst = match args.flag("burst-size") {
+                None => 4,
+                Some(s) => match s.parse::<usize>() {
+                    Ok(b) if b >= 1 => b,
+                    _ => {
+                        eprintln!("error: --burst-size must be an integer >= 1");
+                        return Err(2);
+                    }
+                },
+            };
+            ArrivalModel::Bursty { burst }
+        }
+        Some(other) => {
+            eprintln!("error: bad --arrival '{other}' (want poisson|bursty)");
+            return Err(2);
+        }
+    };
+    Ok(Scenario {
+        weights,
+        deadlines,
+        arrivals,
+    })
+}
+
 fn cmd_simulate(args: &Args) -> i32 {
     let datasets: Vec<Dataset> = match args.flag("dataset") {
         Some("all") => Dataset::ALL.to_vec(),
@@ -320,6 +384,9 @@ fn cmd_simulate(args: &Args) -> i32 {
         return 2;
     }
     let k = args.usize_flag("k", 3);
+    let Ok(scenario) = scenario_of(args) else {
+        return 2;
+    };
     let mut scenarios = Vec::new();
     for &sigma in &noise {
         for th in &thresholds {
@@ -346,17 +413,19 @@ fn cmd_simulate(args: &Args) -> i32 {
             seed,
             load: crate::workloads::DEFAULT_LOAD,
             variant,
+            scenario: scenario.clone(),
             scenarios: scenarios.clone(),
         };
         let n_cells = cfg.trials * cfg.scenarios.len();
         let jobs = args.usize_flag("jobs", 1).clamp(1, n_cells.max(1));
         eprintln!(
-            "simulate: {} × {} scenarios × {} trials ({} graphs, {}, {} job{})",
+            "simulate: {} × {} scenarios × {} trials ({} graphs, {}, workload {}, {} job{})",
             dataset.name(),
             cfg.scenarios.len(),
             cfg.trials,
             cfg.n_graphs,
             variant.label(),
+            cfg.scenario.label(),
             jobs,
             if jobs == 1 { "" } else { "s" }
         );
@@ -395,7 +464,13 @@ fn cmd_simulate(args: &Args) -> i32 {
                 _ => Some(s),
             })
             .unwrap_or(scenarios[0]);
-        let prob = datasets[0].instance_opts(graphs, seed, crate::workloads::DEFAULT_LOAD, None);
+        let prob = datasets[0].instance_scenario(
+            graphs,
+            seed,
+            crate::workloads::DEFAULT_LOAD,
+            None,
+            &scenario,
+        );
         let sim_cfg = crate::sim::SimConfig {
             noise_std: sc.noise_std,
             noise_seed: seed ^ 0xA11CE,
@@ -445,8 +520,9 @@ fn parse_usize_list(s: &str) -> Option<Vec<usize>> {
 /// combination — an unbudgeted [`PolicySpec::FixedLastK`] when the
 /// budget slot is `none`, a [`PolicySpec::Budgeted`] token bucket
 /// otherwise — plus, with `--adaptive`, one [`PolicySpec::AdaptiveK`]
-/// per θ.  A positive `--cooldown` wraps every reactive controller in
-/// hysteresis.
+/// per θ, and, with `--deadline-aware`, one urgency-scoped
+/// [`PolicySpec::DeadlineAware`] per (θ, k).  A positive `--cooldown`
+/// wraps every reactive controller in hysteresis.
 #[allow(clippy::too_many_arguments)]
 fn policy_grid(
     noise: &[f64],
@@ -455,6 +531,7 @@ fn policy_grid(
     budgets: &[Option<f64>],
     burst: f64,
     adaptive: Option<(usize, f64)>, // (k_max, target_stretch)
+    deadline_aware: bool,
     cooldown: f64,
 ) -> Vec<PolicyScenario> {
     let wrap = |spec: PolicySpec| {
@@ -488,6 +565,12 @@ fn policy_grid(
                     out.push(PolicyScenario {
                         noise_std: sigma,
                         spec: wrap(spec),
+                    });
+                }
+                if deadline_aware {
+                    out.push(PolicyScenario {
+                        noise_std: sigma,
+                        spec: wrap(PolicySpec::DeadlineAware { k, threshold }),
                     });
                 }
             }
@@ -589,7 +672,20 @@ fn cmd_policy(args: &Args) -> i32 {
     } else {
         None
     };
-    let scenarios = policy_grid(&noise, &ks, &thresholds, &budgets, burst, adaptive, cooldown);
+    let deadline_aware = args.bool_flag("deadline-aware");
+    let Ok(scenario) = scenario_of(args) else {
+        return 2;
+    };
+    let scenarios = policy_grid(
+        &noise,
+        &ks,
+        &thresholds,
+        &budgets,
+        burst,
+        adaptive,
+        deadline_aware,
+        cooldown,
+    );
     let trials = args.usize_flag("trials", 2);
     let seed = args.u64_flag("seed", 0);
     let graphs = args.usize_flag("graphs", 16);
@@ -604,17 +700,19 @@ fn cmd_policy(args: &Args) -> i32 {
             seed,
             load: crate::workloads::DEFAULT_LOAD,
             variant,
+            scenario: scenario.clone(),
             scenarios: scenarios.clone(),
         };
         let n_cells = cfg.trials * cfg.scenarios.len();
         let jobs = args.usize_flag("jobs", 1).clamp(1, n_cells.max(1));
         eprintln!(
-            "policy: {} × {} scenarios × {} trials ({} graphs, {}, {} job{})",
+            "policy: {} × {} scenarios × {} trials ({} graphs, {}, workload {}, {} job{})",
             dataset.name(),
             cfg.scenarios.len(),
             cfg.trials,
             cfg.n_graphs,
             variant.label(),
+            cfg.scenario.label(),
             jobs,
             if jobs == 1 { "" } else { "s" }
         );
@@ -926,15 +1024,97 @@ mod tests {
             &[None, Some(1.0)],
             4.0,
             Some((10, 2.0)),
+            false,
             0.0,
         );
         assert_eq!(grid.len(), 2 * (1 + 2 * (2 * 2 + 1)));
         // cooldown wraps every reactive spec but never the baseline
-        let wrapped = policy_grid(&[0.3], &[3], &[0.25], &[None], 4.0, None, 5.0);
+        let wrapped = policy_grid(&[0.3], &[3], &[0.25], &[None], 4.0, None, false, 5.0);
         assert_eq!(wrapped.len(), 2);
         assert_eq!(wrapped[0].spec, PolicySpec::None);
         assert!(matches!(wrapped[1].spec, PolicySpec::Cooldown { .. }));
         assert_eq!(wrapped[1].label(), "σ0.30/L3@0.25+cd5");
+        // --deadline-aware adds one D{k}@{θ} per (θ, k)
+        let with_da =
+            policy_grid(&[0.3], &[2, 5], &[0.1, 0.25], &[None], 4.0, None, true, 0.0);
+        // 1 baseline + 2θ × 2k × (1 fixed + 1 deadline-aware)
+        assert_eq!(with_da.len(), 1 + 2 * 2 * 2);
+        let labels: Vec<String> = with_da.iter().map(|s| s.label()).collect();
+        assert!(labels.contains(&"σ0.30/D2@0.1".to_string()), "{labels:?}");
+        assert!(labels.contains(&"σ0.30/D5@0.25".to_string()), "{labels:?}");
+    }
+
+    #[test]
+    fn scenario_flags_parse() {
+        let a = parse_args(&argv(
+            "policy --dataset synthetic --weighted --deadline-slack 2.0 \
+             --arrival bursty --burst-size 3",
+        ));
+        let s = scenario_of(&a).unwrap();
+        assert_eq!(s.weights, WeightModel::HeavyTail { alpha: 1.5 });
+        assert_eq!(s.deadlines, DeadlineModel::CritPathSlack { slack: 2.0 });
+        assert_eq!(s.arrivals, ArrivalModel::Bursty { burst: 3 });
+        assert_eq!(s.label(), "w:pareto1.5+d:s2+a:burst3");
+
+        let a = parse_args(&argv("simulate --dataset synthetic --weighted classes"));
+        let s = scenario_of(&a).unwrap();
+        assert!(matches!(s.weights, WeightModel::Classes { .. }));
+        assert_eq!(s.deadlines, DeadlineModel::None);
+        assert_eq!(s.arrivals, ArrivalModel::Poisson);
+
+        // no flags: the paper-default scenario
+        let a = parse_args(&argv("simulate --dataset synthetic"));
+        assert!(scenario_of(&a).unwrap().is_default());
+
+        // rejects
+        for bad in [
+            "simulate --dataset synthetic --weighted wat",
+            "simulate --dataset synthetic --deadline-slack -1",
+            "simulate --dataset synthetic --deadline-slack nan",
+            "simulate --dataset synthetic --arrival wat",
+            "simulate --dataset synthetic --arrival bursty --burst-size 0",
+            "simulate --dataset synthetic --arrival bursty --burst-size 3x",
+            "simulate --dataset synthetic --arrival bursty --burst-size -3",
+        ] {
+            let a = parse_args(&argv(bad));
+            assert!(scenario_of(&a).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn simulate_scenario_smoke() {
+        assert_eq!(
+            main_with(&argv(
+                "simulate --dataset synthetic --graphs 5 --trials 1 \
+                 --noise 0.3 --threshold 0.2,none --k 2 --jobs 2 \
+                 --weighted --deadline-slack 1.5 --arrival bursty --burst-size 2"
+            )),
+            0
+        );
+    }
+
+    #[test]
+    fn policy_deadline_scenario_smoke() {
+        assert_eq!(
+            main_with(&argv(
+                "policy --dataset synthetic --graphs 5 --trials 1 --noise 0.3 \
+                 --k 2 --threshold 0.2 --budget none --deadline-aware \
+                 --weighted --deadline-slack 2.0 --jobs 2"
+            )),
+            0
+        );
+    }
+
+    #[test]
+    fn scenario_rejects_propagate_to_exit_code() {
+        assert_eq!(
+            main_with(&argv("simulate --dataset synthetic --deadline-slack -2")),
+            2
+        );
+        assert_eq!(
+            main_with(&argv("policy --dataset synthetic --arrival wat")),
+            2
+        );
     }
 
     #[test]

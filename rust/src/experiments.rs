@@ -22,7 +22,7 @@ use crate::report;
 use crate::schedule::validate;
 use crate::sim::{Reaction, ReactiveCoordinator, SimConfig};
 use crate::stats::mean;
-use crate::workloads::Dataset;
+use crate::workloads::{Dataset, Scenario};
 
 /// Raw sweep output: `rows[trial][variant]`.
 #[derive(Clone, Debug)]
@@ -254,6 +254,14 @@ impl SweepResult {
             "weighted_max_stretch_raw",
             "weighted_jain",
             "weighted_jain_raw",
+            "deadline_miss_rate",
+            "deadline_miss_rate_raw",
+            "mean_tardiness_norm",
+            "mean_tardiness_raw",
+            "max_tardiness_norm",
+            "max_tardiness_raw",
+            "weighted_tardiness_norm",
+            "weighted_tardiness_raw",
             "runtime_norm",
             "runtime_raw",
         ];
@@ -284,6 +292,13 @@ impl SweepResult {
                                 ),
                                 ("weighted_max_stretch", json::num(r.weighted_max_stretch)),
                                 ("weighted_jain", json::num(r.weighted_jain)),
+                                (
+                                    "deadline_miss_rate",
+                                    json::num(r.deadline_miss_rate),
+                                ),
+                                ("mean_tardiness", json::num(r.mean_tardiness)),
+                                ("max_tardiness", json::num(r.max_tardiness)),
+                                ("weighted_tardiness", json::num(r.weighted_tardiness)),
                                 ("runtime_s", json::num(r.runtime_s)),
                             ])
                         })
@@ -353,7 +368,10 @@ impl SimScenario {
 
 /// A reactive-runtime sweep: `trials` seeded instances of `dataset`,
 /// each executed by the reactive simulator under every scenario, with
-/// the same policy × heuristic `variant` throughout.
+/// the same policy × heuristic `variant` throughout.  `scenario` is the
+/// workload-shaping axis (weights / deadlines / arrival process); with
+/// the default [`Scenario`] instances are bit-identical to the
+/// pre-scenario sweeps.
 #[derive(Clone, Debug)]
 pub struct SimSweepConfig {
     pub dataset: Dataset,
@@ -362,6 +380,7 @@ pub struct SimSweepConfig {
     pub seed: u64,
     pub load: f64,
     pub variant: Variant,
+    pub scenario: Scenario,
     pub scenarios: Vec<SimScenario>,
 }
 
@@ -413,13 +432,22 @@ fn metric_row_json(r: &MetricRow) -> Value {
         ("weighted_mean_stretch", json::num(r.weighted_mean_stretch)),
         ("weighted_max_stretch", json::num(r.weighted_max_stretch)),
         ("weighted_jain", json::num(r.weighted_jain)),
+        ("deadline_miss_rate", json::num(r.deadline_miss_rate)),
+        ("mean_tardiness", json::num(r.mean_tardiness)),
+        ("max_tardiness", json::num(r.max_tardiness)),
+        ("weighted_tardiness", json::num(r.weighted_tardiness)),
         ("runtime_s", json::num(r.runtime_s)),
     ])
 }
 
 fn sim_instance(cfg: &SimSweepConfig, trial: usize) -> DynamicProblem {
-    cfg.dataset
-        .instance_opts(cfg.n_graphs, cfg.seed + trial as u64, cfg.load, None)
+    cfg.dataset.instance_scenario(
+        cfg.n_graphs,
+        cfg.seed + trial as u64,
+        cfg.load,
+        None,
+        &cfg.scenario,
+    )
 }
 
 /// Planned-baseline metrics for one trial: the static coordinator's
@@ -615,7 +643,7 @@ impl SimSweepResult {
     }
 
     /// Markdown summary: one row per scenario, the key realized metrics
-    /// plus degradation and replan activity.
+    /// (incl. the deadline axes) plus degradation and replan activity.
     pub fn summary_table(&self) -> String {
         let rows: Vec<Vec<String>> = (0..self.labels.len())
             .map(|si| {
@@ -626,6 +654,8 @@ impl SimSweepResult {
                     report::fmt(self.realized_mean(si, Metric::MeanStretch)),
                     report::fmt(self.realized_mean(si, Metric::MaxStretch)),
                     report::fmt(self.realized_mean(si, Metric::JainFairness)),
+                    report::fmt(self.realized_mean(si, Metric::DeadlineMissRate)),
+                    report::fmt(self.realized_mean(si, Metric::MeanTardiness)),
                     report::fmt(self.degradation_mean(si)),
                     report::fmt(replans),
                     report::fmt(stragglers),
@@ -639,6 +669,8 @@ impl SimSweepResult {
                 "mean stretch",
                 "max stretch",
                 "jain",
+                "miss",
+                "tardiness",
                 "degradation",
                 "replans",
                 "straggler",
@@ -656,6 +688,7 @@ impl SimSweepResult {
             let mut row = vec![
                 self.config.dataset.name().to_string(),
                 self.config.variant.label(),
+                self.config.scenario.label(),
                 label.clone(),
                 format!("{}", sc.noise_std),
                 sc.reaction.label(),
@@ -688,6 +721,7 @@ impl SimSweepResult {
         let headers = vec![
             "dataset",
             "variant",
+            "workload",
             "scenario",
             "noise_std",
             "reaction",
@@ -701,6 +735,10 @@ impl SimSweepResult {
             "weighted_mean_stretch",
             "weighted_max_stretch",
             "weighted_jain",
+            "deadline_miss_rate",
+            "mean_tardiness",
+            "max_tardiness",
+            "weighted_tardiness",
             "runtime_s",
             "planned_total_makespan",
             "degradation",
@@ -744,6 +782,7 @@ impl SimSweepResult {
                 json::obj(vec![
                     ("dataset", json::s(self.config.dataset.name())),
                     ("variant", json::s(&self.config.variant.label())),
+                    ("workload", json::s(&self.config.scenario.label())),
                     ("n_graphs", json::num(self.config.n_graphs as f64)),
                     ("trials", json::num(self.config.trials as f64)),
                     ("seed", json::num(self.config.seed as f64)),
@@ -789,6 +828,10 @@ pub struct PolicySweepConfig {
     pub seed: u64,
     pub load: f64,
     pub variant: Variant,
+    /// workload-shaping axis (weights / deadlines / arrival process);
+    /// the default [`Scenario`] reproduces the pre-scenario instances
+    /// bit-exactly
+    pub scenario: Scenario,
     pub scenarios: Vec<PolicyScenario>,
 }
 
@@ -810,8 +853,13 @@ impl PolicyCell {
 }
 
 fn policy_instance(cfg: &PolicySweepConfig, trial: usize) -> DynamicProblem {
-    cfg.dataset
-        .instance_opts(cfg.n_graphs, cfg.seed + trial as u64, cfg.load, None)
+    cfg.dataset.instance_scenario(
+        cfg.n_graphs,
+        cfg.seed + trial as u64,
+        cfg.load,
+        None,
+        &cfg.scenario,
+    )
 }
 
 fn policy_planned_row(
@@ -1018,6 +1066,8 @@ impl PolicySweepResult {
                     report::fmt(self.realized_mean(si, Metric::MeanStretch)),
                     report::fmt(self.realized_mean(si, Metric::MaxStretch)),
                     report::fmt(self.realized_mean(si, Metric::JainFairness)),
+                    report::fmt(self.realized_mean(si, Metric::DeadlineMissRate)),
+                    report::fmt(self.realized_mean(si, Metric::WeightedTardiness)),
                     report::fmt(self.degradation_mean(si)),
                     report::fmt(replans),
                     report::fmt(stragglers),
@@ -1033,6 +1083,8 @@ impl PolicySweepResult {
                 "mean stretch",
                 "max stretch",
                 "jain",
+                "miss",
+                "w-tardiness",
                 "degradation",
                 "replans",
                 "straggler",
@@ -1053,6 +1105,7 @@ impl PolicySweepResult {
             let mut row = vec![
                 self.config.dataset.name().to_string(),
                 self.config.variant.label(),
+                self.config.scenario.label(),
                 label.clone(),
                 format!("{}", sc.noise_std),
                 sc.spec.label(),
@@ -1079,6 +1132,7 @@ impl PolicySweepResult {
         let headers = vec![
             "dataset",
             "variant",
+            "workload",
             "scenario",
             "noise_std",
             "policy",
@@ -1092,6 +1146,10 @@ impl PolicySweepResult {
             "weighted_mean_stretch",
             "weighted_max_stretch",
             "weighted_jain",
+            "deadline_miss_rate",
+            "mean_tardiness",
+            "max_tardiness",
+            "weighted_tardiness",
             "runtime_s",
             "planned_total_makespan",
             "degradation",
@@ -1139,6 +1197,7 @@ impl PolicySweepResult {
                 json::obj(vec![
                     ("dataset", json::s(self.config.dataset.name())),
                     ("variant", json::s(&self.config.variant.label())),
+                    ("workload", json::s(&self.config.scenario.label())),
                     ("n_graphs", json::num(self.config.n_graphs as f64)),
                     ("trials", json::num(self.config.trials as f64)),
                     ("seed", json::num(self.config.seed as f64)),
@@ -1279,6 +1338,7 @@ mod tests {
             seed: 5,
             load: 0.5,
             variant: Variant::parse("5P-HEFT").unwrap(),
+            scenario: Scenario::default(),
             scenarios: vec![
                 SimScenario {
                     noise_std: 0.0,
@@ -1359,13 +1419,70 @@ mod tests {
         assert_eq!(c.lines().count(), 4); // header + 3 scenarios
         assert!(c.lines().next().unwrap().contains("jain_fairness"));
         assert!(c.lines().next().unwrap().contains("weighted_jain"));
+        assert!(c.lines().next().unwrap().contains("deadline_miss_rate"));
+        assert!(c.lines().next().unwrap().contains("weighted_tardiness"));
+        assert!(c.lines().next().unwrap().contains("workload"));
         assert!(c.contains("5P-HEFT"));
+        assert!(c.contains("default"));
         let t = r.summary_table();
         assert!(t.contains("σ0.40/L3@0.2"), "{t}");
         assert!(t.contains("degradation"));
+        assert!(t.contains("miss"));
         let j = r.to_json();
         let round = Value::from_str(&j.to_string()).unwrap();
         assert_eq!(round.get("scenarios"), j.get("scenarios"));
+        let workload = j
+            .get("config")
+            .and_then(|c| c.get("workload"))
+            .and_then(|w| w.as_str());
+        assert_eq!(workload, Some("default"));
+    }
+
+    /// A non-default scenario flows end-to-end through the sim sweep:
+    /// deadlines populate the deadline axes, weights skew the weighted
+    /// axes, and the parallel path stays bit-identical.
+    #[test]
+    fn sim_sweep_with_deadline_scenario() {
+        use crate::workloads::{ArrivalModel, DeadlineModel, WeightModel};
+        let mut cfg = tiny_sim_cfg();
+        cfg.scenario = Scenario {
+            weights: WeightModel::HeavyTail { alpha: 1.5 },
+            deadlines: DeadlineModel::CritPathSlack { slack: 1.0 },
+            arrivals: ArrivalModel::Bursty { burst: 3 },
+        };
+        let serial = run_sim_sweep_parallel(&cfg, 1);
+        // slack 1.0 is the (contention-free) ideal: under load at least
+        // one graph misses, so the deadline axes are live
+        let any_tardy = (0..serial.labels.len())
+            .any(|si| serial.realized_mean(si, Metric::MeanTardiness) > 0.0);
+        assert!(any_tardy, "slack-1 deadlines should produce tardiness");
+        for si in 0..serial.labels.len() {
+            let miss = serial.realized_mean(si, Metric::DeadlineMissRate);
+            assert!((0.0..=1.0).contains(&miss));
+            let mean_t = serial.realized_mean(si, Metric::MeanTardiness);
+            let max_t = serial.realized_mean(si, Metric::MaxTardiness);
+            assert!(max_t + 1e-12 >= mean_t);
+        }
+        let par = run_sim_sweep_parallel(&cfg, 5);
+        for (rs, rp) in serial.rows.iter().zip(par.rows.iter()) {
+            for (a, b) in rs.iter().zip(rp.iter()) {
+                assert_eq!(
+                    a.realized.mean_tardiness.to_bits(),
+                    b.realized.mean_tardiness.to_bits()
+                );
+                assert_eq!(
+                    a.realized.weighted_tardiness.to_bits(),
+                    b.realized.weighted_tardiness.to_bits()
+                );
+                assert_eq!(
+                    a.realized.total_makespan.to_bits(),
+                    b.realized.total_makespan.to_bits()
+                );
+            }
+        }
+        // the workload label round-trips into CSV and JSON
+        let csv = serial.to_csv();
+        assert!(csv.contains("w:pareto1.5+d:s1+a:burst3"), "{csv}");
     }
 
     #[test]
@@ -1398,6 +1515,7 @@ mod tests {
             seed: 5,
             load: 0.5,
             variant: Variant::parse("5P-HEFT").unwrap(),
+            scenario: Scenario::default(),
             scenarios: vec![
                 PolicyScenario {
                     noise_std: 0.4,

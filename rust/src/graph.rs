@@ -47,6 +47,9 @@ pub struct TaskGraph {
     /// graph-level importance weight for the weighted fairness metrics
     /// (default 1.0 = every graph counts equally)
     weight: f64,
+    /// absolute completion deadline for the deadline metrics
+    /// (`None` = no deadline; the paper's setting)
+    deadline: Option<f64>,
 }
 
 impl TaskGraph {
@@ -63,6 +66,19 @@ impl TaskGraph {
     pub fn set_weight(&mut self, w: f64) {
         assert!(w > 0.0 && w.is_finite(), "graph weight must be positive: {w}");
         self.weight = w;
+    }
+    /// Absolute completion deadline, if one was assigned (see
+    /// [`crate::metrics::deadline_summary`] and
+    /// [`crate::workloads::DeadlineModel`]).
+    pub fn deadline(&self) -> Option<f64> {
+        self.deadline
+    }
+    /// Assign an absolute completion deadline (finite); used by scenario
+    /// builders — the deadline metrics treat the graph as tardy by
+    /// `max(0, finish − deadline)`.
+    pub fn set_deadline(&mut self, d: f64) {
+        assert!(d.is_finite(), "graph deadline must be finite: {d}");
+        self.deadline = Some(d);
     }
     pub fn n_tasks(&self) -> usize {
         self.cost.len()
@@ -266,6 +282,7 @@ impl GraphBuilder {
             pred,
             topo,
             weight: self.weight,
+            deadline: None,
         })
     }
 }
@@ -382,6 +399,23 @@ mod tests {
         let d = diamond().to_dot();
         assert!(d.contains("t0 -> t1"));
         assert!(d.contains("digraph"));
+    }
+
+    #[test]
+    fn graph_deadline_defaults_and_overrides() {
+        let mut g = diamond();
+        assert_eq!(g.deadline(), None);
+        g.set_deadline(42.5);
+        assert_eq!(g.deadline(), Some(42.5));
+        // deadlines may sit anywhere on the time axis, including 0
+        g.set_deadline(0.0);
+        assert_eq!(g.deadline(), Some(0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_non_finite_deadline() {
+        diamond().set_deadline(f64::NAN);
     }
 
     #[test]

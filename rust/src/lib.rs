@@ -16,14 +16,20 @@
 //!   preemptive, non-preemptive and Last-K-preemptive policies
 //!   ([`coordinator`]);
 //! * the §V **metric suite** incl. the fairness axes (per-graph
-//!   stretch, max-stretch, Jain's index) ([`metrics`]) and the §VI
+//!   stretch, max-stretch, Jain's index) and the deadline axes (miss
+//!   rate, mean/max/weighted tardiness) ([`metrics`]) and the §VI
 //!   **workload generators** ([`workloads`]);
+//! * the **scenario axis** layered over any dataset — heavy-tail /
+//!   class-based importance weights, critical-path×slack deadlines,
+//!   bursty arrivals ([`workloads::scenario`]); the default scenario is
+//!   bit-identical to the paper's setting;
 //! * the **reactive runtime simulator** — a discrete-event loop where
 //!   realized durations deviate from the estimates and straggler-
 //!   triggered rescheduling closes the loop ([`sim`]);
 //! * the **preemption policy engine** — pluggable straggler controllers
-//!   (fixed Last-K, AIMD-adaptive, token-budgeted, cooldown-wrapped)
-//!   driving the reactive coordinator ([`policy`]);
+//!   (fixed Last-K, AIMD-adaptive, token-budgeted, cooldown-wrapped,
+//!   deadline-urgency-scoped) driving the reactive coordinator
+//!   ([`policy`]);
 //! * an **XLA/PJRT runtime** that executes the AOT-compiled JAX+Pallas
 //!   rank kernels from `artifacts/` on the scheduling hot path
 //!   ([`runtime`]);
@@ -31,7 +37,9 @@
 //!   ([`experiments`]).
 //!
 //! Start with `examples/quickstart.rs`; the figure pipeline lives behind
-//! `cargo bench` and the `dts` CLI.
+//! `cargo bench` and the `dts` CLI (`dts experiment` / `dts simulate` /
+//! `dts policy` — see the top-level `README.md` for the full CLI
+//! reference and `docs/METRICS.md` for the metric glossary).
 
 pub mod analysis;
 pub mod cli;

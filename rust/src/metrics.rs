@@ -26,6 +26,18 @@ pub fn total_makespan(schedule: &Schedule, problem: &[(f64, TaskGraph)]) -> f64 
     }
 }
 
+/// Latest finish among graph `gi`'s scheduled tasks (`None` when none
+/// of its tasks is scheduled) — the `f_i` shared by every per-graph
+/// axis, defined once so the makespan, stretch and deadline metrics can
+/// never disagree on which graphs contribute.
+fn graph_finish(schedule: &Schedule, gi: usize, g: &TaskGraph) -> Option<f64> {
+    let fin = (0..g.n_tasks())
+        .filter_map(|t| schedule.get(Gid::new(gi, t)))
+        .map(|a| a.finish)
+        .fold(f64::NEG_INFINITY, f64::max);
+    fin.is_finite().then_some(fin)
+}
+
 /// §V.B — per-graph responsiveness:
 /// `(1/K) Σ_i ( max_{t∈T_i} e(t) − a_i )`.
 pub fn mean_makespan(schedule: &Schedule, problem: &[(f64, TaskGraph)]) -> f64 {
@@ -34,11 +46,7 @@ pub fn mean_makespan(schedule: &Schedule, problem: &[(f64, TaskGraph)]) -> f64 {
     }
     let mut acc = 0.0;
     for (gi, (arrival, g)) in problem.iter().enumerate() {
-        let finish = (0..g.n_tasks())
-            .filter_map(|t| schedule.get(Gid::new(gi, t)))
-            .map(|a| a.finish)
-            .fold(f64::NEG_INFINITY, f64::max);
-        if finish.is_finite() {
+        if let Some(finish) = graph_finish(schedule, gi, g) {
             acc += finish - arrival;
         }
     }
@@ -146,13 +154,9 @@ pub fn graph_stretch_weights(
     let mut stretches = Vec::new();
     let mut weights = Vec::new();
     for (gi, (arrival, g)) in problem.iter().enumerate() {
-        let finish = (0..g.n_tasks())
-            .filter_map(|t| schedule.get(Gid::new(gi, t)))
-            .map(|a| a.finish)
-            .fold(f64::NEG_INFINITY, f64::max);
-        if !finish.is_finite() {
+        let Some(finish) = graph_finish(schedule, gi, g) else {
             continue;
-        }
+        };
         let ideal = ideal_response(g, network);
         stretches.push(if ideal > 0.0 {
             (finish - arrival) / ideal
@@ -238,6 +242,57 @@ pub fn weighted_jain(xs: &[f64], ws: &[f64]) -> f64 {
     (s * s) / (wsum * s2)
 }
 
+/// The deadline axes of one run, computed over the **deadline-bearing**
+/// graphs only ([`TaskGraph::deadline`]): per-graph tardiness is
+/// `max(0, finish − deadline)` where `finish` is the graph's last task
+/// completion.  A workload with no deadlines (the paper's setting) is
+/// **vacuously on-time** — every axis reads 0.0 — so turning the axes on
+/// never perturbs deadline-free sweeps.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DeadlineSummary {
+    /// fraction of deadline-bearing graphs finishing strictly after
+    /// their deadline (`tardiness > 0`) ∈ [0, 1]
+    pub miss_rate: f64,
+    /// mean per-graph tardiness
+    pub mean_tardiness: f64,
+    /// worst per-graph tardiness
+    pub max_tardiness: f64,
+    /// importance-weighted mean tardiness `Σ wᵢtᵢ / Σ wᵢ`; equals
+    /// `mean_tardiness` bit-exactly at unit weights
+    pub weighted_tardiness: f64,
+}
+
+/// Compute the [`DeadlineSummary`] of a finished schedule.  Graphs
+/// without a deadline, or with no scheduled task, contribute nothing.
+pub fn deadline_summary(schedule: &Schedule, problem: &[(f64, TaskGraph)]) -> DeadlineSummary {
+    let mut tard = Vec::new();
+    let mut weights = Vec::new();
+    let mut missed = 0usize;
+    for (gi, (_, g)) in problem.iter().enumerate() {
+        let Some(deadline) = g.deadline() else {
+            continue;
+        };
+        let Some(finish) = graph_finish(schedule, gi, g) else {
+            continue;
+        };
+        let t = (finish - deadline).max(0.0);
+        if t > 0.0 {
+            missed += 1;
+        }
+        tard.push(t);
+        weights.push(g.weight());
+    }
+    if tard.is_empty() {
+        return DeadlineSummary::default();
+    }
+    DeadlineSummary {
+        miss_rate: missed as f64 / tard.len() as f64,
+        mean_tardiness: tard.iter().sum::<f64>() / tard.len() as f64,
+        max_tardiness: tard.iter().copied().fold(0.0, f64::max),
+        weighted_tardiness: weighted_mean(&tard, &weights),
+    }
+}
+
 /// A full metric row for one (workload, scheduler) run.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct MetricRow {
@@ -258,6 +313,17 @@ pub struct MetricRow {
     pub weighted_max_stretch: f64,
     /// weighted Jain's index over the per-graph stretches
     pub weighted_jain: f64,
+    /// fraction of deadline-bearing graphs that missed their deadline
+    /// (0.0 when no graph carries a deadline — vacuously on-time)
+    pub deadline_miss_rate: f64,
+    /// mean tardiness `max(0, finish − deadline)` over deadline-bearing
+    /// graphs
+    pub mean_tardiness: f64,
+    /// worst per-graph tardiness
+    pub max_tardiness: f64,
+    /// importance-weighted mean tardiness; equals `mean_tardiness`
+    /// bit-exactly at unit weights
+    pub weighted_tardiness: f64,
     /// scheduler wall-clock runtime in seconds (§V.E), filled by the
     /// dynamic coordinator.
     pub runtime_s: f64,
@@ -279,6 +345,7 @@ impl MetricRow {
                 stretches.iter().copied().fold(f64::NEG_INFINITY, f64::max),
             )
         };
+        let dl = deadline_summary(schedule, problem);
         Self {
             total_makespan: total_makespan(schedule, problem),
             mean_makespan: mean_makespan(schedule, problem),
@@ -290,6 +357,10 @@ impl MetricRow {
             weighted_mean_stretch: weighted_mean(&stretches, &weights),
             weighted_max_stretch: weighted_max(&stretches, &weights),
             weighted_jain: weighted_jain(&stretches, &weights),
+            deadline_miss_rate: dl.miss_rate,
+            mean_tardiness: dl.mean_tardiness,
+            max_tardiness: dl.max_tardiness,
+            weighted_tardiness: dl.weighted_tardiness,
             runtime_s,
         }
     }
@@ -306,6 +377,10 @@ impl MetricRow {
             Metric::WeightedMeanStretch => self.weighted_mean_stretch,
             Metric::WeightedMaxStretch => self.weighted_max_stretch,
             Metric::WeightedJain => self.weighted_jain,
+            Metric::DeadlineMissRate => self.deadline_miss_rate,
+            Metric::MeanTardiness => self.mean_tardiness,
+            Metric::MaxTardiness => self.max_tardiness,
+            Metric::WeightedTardiness => self.weighted_tardiness,
             Metric::Runtime => self.runtime_s,
         }
     }
@@ -324,11 +399,15 @@ pub enum Metric {
     WeightedMeanStretch,
     WeightedMaxStretch,
     WeightedJain,
+    DeadlineMissRate,
+    MeanTardiness,
+    MaxTardiness,
+    WeightedTardiness,
     Runtime,
 }
 
 impl Metric {
-    pub const ALL: [Metric; 11] = [
+    pub const ALL: [Metric; 15] = [
         Metric::TotalMakespan,
         Metric::MeanMakespan,
         Metric::MeanFlowtime,
@@ -339,6 +418,10 @@ impl Metric {
         Metric::WeightedMeanStretch,
         Metric::WeightedMaxStretch,
         Metric::WeightedJain,
+        Metric::DeadlineMissRate,
+        Metric::MeanTardiness,
+        Metric::MaxTardiness,
+        Metric::WeightedTardiness,
         Metric::Runtime,
     ];
 
@@ -354,6 +437,10 @@ impl Metric {
             Metric::WeightedMeanStretch => "weighted_mean_stretch",
             Metric::WeightedMaxStretch => "weighted_max_stretch",
             Metric::WeightedJain => "weighted_jain",
+            Metric::DeadlineMissRate => "deadline_miss_rate",
+            Metric::MeanTardiness => "mean_tardiness",
+            Metric::MaxTardiness => "max_tardiness",
+            Metric::WeightedTardiness => "weighted_tardiness",
             Metric::Runtime => "runtime",
         }
     }
@@ -369,11 +456,16 @@ impl Metric {
 
     /// Metrics reported raw (already on a bounded absolute scale) rather
     /// than normalized to the per-trial best, per the paper's Fig 7/8e
-    /// convention for utilization.
+    /// convention for utilization.  The deadline miss rate is a bounded
+    /// fraction, so it joins the raw set; tardiness is an absolute time
+    /// and normalizes like the makespan axes.
     pub fn reported_raw(&self) -> bool {
         matches!(
             self,
-            Metric::Utilization | Metric::JainFairness | Metric::WeightedJain
+            Metric::Utilization
+                | Metric::JainFairness
+                | Metric::WeightedJain
+                | Metric::DeadlineMissRate
         )
     }
 }
@@ -502,7 +594,16 @@ mod tests {
         assert!(Metric::WeightedJain.reported_raw());
         assert!(!Metric::MeanStretch.reported_raw());
         assert!(!Metric::WeightedMeanStretch.reported_raw());
-        assert_eq!(Metric::ALL.len(), 11);
+        // deadline axes: all lower-is-better; only the bounded miss
+        // rate is reported raw, tardiness normalizes like makespan
+        assert!(Metric::DeadlineMissRate.lower_is_better());
+        assert!(Metric::MeanTardiness.lower_is_better());
+        assert!(Metric::WeightedTardiness.lower_is_better());
+        assert!(Metric::DeadlineMissRate.reported_raw());
+        assert!(!Metric::MeanTardiness.reported_raw());
+        assert!(!Metric::MaxTardiness.reported_raw());
+        assert!(!Metric::WeightedTardiness.reported_raw());
+        assert_eq!(Metric::ALL.len(), 15);
     }
 
     #[test]
@@ -560,6 +661,94 @@ mod tests {
         assert_eq!(weighted_jain(&[0.0], &[1.0]), 1.0);
         assert_eq!(weighted_mean(&[2.0, 4.0], &[1.0, 1.0]), 3.0);
         assert_eq!(weighted_max(&[2.0, 4.0], &[3.0, 1.0]), 6.0);
+    }
+
+    #[test]
+    fn no_deadlines_is_vacuously_on_time() {
+        // the degenerate-input convention: a deadline-free workload has
+        // miss rate 0 and zero tardiness on every axis, so deadline-free
+        // sweeps are unperturbed by the new columns
+        let (s, p, net) = setup();
+        let dl = deadline_summary(&s, &p);
+        assert_eq!(dl, DeadlineSummary::default());
+        let row = MetricRow::compute(&s, &p, &net, 0.0);
+        assert_eq!(row.get(Metric::DeadlineMissRate), 0.0);
+        assert_eq!(row.get(Metric::MeanTardiness), 0.0);
+        assert_eq!(row.get(Metric::MaxTardiness), 0.0);
+        assert_eq!(row.get(Metric::WeightedTardiness), 0.0);
+    }
+
+    #[test]
+    fn deadline_summary_hand_example() {
+        // g1 finishes at 4 (deadline 5: met); g2 finishes at 16
+        // (deadline 12: tardy by 4) → miss 1/2, mean 2, max 4
+        let (s, mut p, _) = setup();
+        p[0].1.set_deadline(5.0);
+        p[1].1.set_deadline(12.0);
+        let dl = deadline_summary(&s, &p);
+        assert_eq!(dl.miss_rate, 0.5);
+        assert_eq!(dl.mean_tardiness, 2.0);
+        assert_eq!(dl.max_tardiness, 4.0);
+        // unit weights: weighted ≡ unweighted bit-exactly
+        assert_eq!(dl.weighted_tardiness.to_bits(), dl.mean_tardiness.to_bits());
+    }
+
+    #[test]
+    fn single_graph_tardiness() {
+        // only g2 carries a deadline: the summary is that one graph's
+        let (s, mut p, _) = setup();
+        p[1].1.set_deadline(13.0);
+        let dl = deadline_summary(&s, &p);
+        assert_eq!(dl.miss_rate, 1.0);
+        assert_eq!(dl.mean_tardiness, 3.0);
+        assert_eq!(dl.max_tardiness, 3.0);
+        assert_eq!(dl.weighted_tardiness, 3.0);
+    }
+
+    #[test]
+    fn all_graphs_met_reads_zero_tardiness() {
+        let (s, mut p, _) = setup();
+        p[0].1.set_deadline(100.0);
+        p[1].1.set_deadline(100.0);
+        let dl = deadline_summary(&s, &p);
+        assert_eq!(dl.miss_rate, 0.0);
+        assert_eq!(dl.mean_tardiness, 0.0);
+        assert_eq!(dl.max_tardiness, 0.0);
+        assert_eq!(dl.weighted_tardiness, 0.0);
+        // an exactly-on-time finish is met, not missed (strict miss)
+        let mut q = p.clone();
+        q[0].1.set_deadline(4.0);
+        q[1].1.set_deadline(16.0);
+        let exact = deadline_summary(&s, &q);
+        assert_eq!(exact.miss_rate, 0.0);
+        assert_eq!(exact.mean_tardiness, 0.0);
+    }
+
+    #[test]
+    fn weights_skew_weighted_tardiness() {
+        let (s, mut p, _) = setup();
+        p[0].1.set_deadline(0.0); // tardy by 4
+        p[1].1.set_deadline(10.0); // tardy by 6
+        p[1].1.set_weight(3.0);
+        let dl = deadline_summary(&s, &p);
+        assert_eq!(dl.miss_rate, 1.0);
+        assert_eq!(dl.mean_tardiness, 5.0);
+        assert_eq!(dl.max_tardiness, 6.0);
+        // (1·4 + 3·6) / 4 = 5.5
+        assert!((dl.weighted_tardiness - 5.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deadline_summary_skips_unscheduled_graphs() {
+        let (mut s, mut p, _) = setup();
+        p[0].1.set_deadline(0.0);
+        p[1].1.set_deadline(0.0);
+        // drop g2 entirely: only g1 contributes
+        s.unassign(Gid::new(1, 0));
+        s.unassign(Gid::new(1, 1));
+        let dl = deadline_summary(&s, &p);
+        assert_eq!(dl.miss_rate, 1.0);
+        assert_eq!(dl.mean_tardiness, 4.0);
     }
 
     #[test]

@@ -1,10 +1,11 @@
 //! The stock [`PreemptionPolicy`] controllers: the PR-2 fixed trigger,
-//! an AIMD adaptive window, a token-bucket budget, and a cooldown
-//! (hysteresis) wrapper.  All controllers are deterministic functions of
-//! their observation history, so any sweep that drives them is
-//! bit-identical at any thread count.
+//! an AIMD adaptive window, a token-bucket budget, a cooldown
+//! (hysteresis) wrapper, and the deadline-urgency scoped
+//! [`DeadlineAware`] controller.  All controllers are deterministic
+//! functions of their observation history, so any sweep that drives
+//! them is bit-identical at any thread count.
 
-use super::{Decision, FinishObservation, PreemptionPolicy, Scope};
+use super::{Decision, FinishObservation, PreemptionPolicy, Scope, ScopeOrder};
 
 /// The no-reaction baseline: never preempts on stragglers (arrival-time
 /// preemption still runs per the §IV policy).  Equivalent to the PR-2
@@ -176,6 +177,7 @@ impl PreemptionPolicy for Budgeted {
             Decision::Reschedule(Scope {
                 last_k: self.k,
                 max_reverted: self.tokens.floor() as usize,
+                order: ScopeOrder::Recency,
             })
         } else {
             Decision::Hold
@@ -187,6 +189,43 @@ impl PreemptionPolicy for Budgeted {
         // stays non-negative
         self.tokens -= n_reverted as f64;
         debug_assert!(self.tokens >= -1e-9, "token bucket overdrawn: {}", self.tokens);
+    }
+}
+
+/// The deadline-scenario controller: the same straggler trigger as
+/// [`FixedLastK`] (`lateness > θ × estimate`), but the replan scope is
+/// **deadline urgency** ([`ScopeOrder::DeadlineUrgency`]) — the
+/// coordinator reverts the pending work of the `k` incomplete graphs
+/// whose belief slack (deadline minus predicted completion) is smallest,
+/// spending the preemption where a miss is most imminent instead of on
+/// whatever arrived last.  On a workload without deadlines the urgency
+/// order degrades to recency over the incomplete graphs, so the
+/// controller stays usable (though [`FixedLastK`] is then the natural
+/// choice).
+#[derive(Clone, Copy, Debug)]
+pub struct DeadlineAware {
+    k: usize,
+    threshold: f64,
+}
+
+impl DeadlineAware {
+    pub fn new(k: usize, threshold: f64) -> Self {
+        Self { k, threshold }
+    }
+}
+
+impl PreemptionPolicy for DeadlineAware {
+    /// `D{k}@{θ}` — the deadline-urgency twin of `L{k}@{θ}`.
+    fn label(&self) -> String {
+        format!("D{}@{}", self.k, self.threshold)
+    }
+
+    fn on_finish(&mut self, obs: &FinishObservation) -> Decision {
+        if obs.is_straggler(self.threshold) {
+            Decision::Reschedule(Scope::deadline_urgent(self.k))
+        } else {
+            Decision::Hold
+        }
     }
 }
 
@@ -326,6 +365,21 @@ mod tests {
             d => panic!("expected fire, got {d:?}"),
         }
         assert!((p.tokens() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deadline_aware_fires_with_urgency_scope() {
+        let mut p = DeadlineAware::new(4, 0.25);
+        assert_eq!(p.label(), "D4@0.25");
+        assert_eq!(p.on_finish(&obs_at(1.0, 0.2)), Decision::Hold);
+        match p.on_finish(&obs_at(1.0, 0.5)) {
+            Decision::Reschedule(s) => {
+                assert_eq!(s.last_k, 4);
+                assert_eq!(s.max_reverted, usize::MAX);
+                assert_eq!(s.order, ScopeOrder::DeadlineUrgency);
+            }
+            d => panic!("expected fire, got {d:?}"),
+        }
     }
 
     #[test]

@@ -31,6 +31,10 @@
 //! * [`Cooldown`] — hysteresis wrapper: after a replan fires, suppress
 //!   further straggler triggers for a fixed window so a burst of late
 //!   finishes cannot thrash the planner.
+//! * [`DeadlineAware`] — the deadline-scenario controller: fires on the
+//!   same straggler predicate but scopes the replan by **deadline
+//!   urgency** ([`ScopeOrder::DeadlineUrgency`]) — the most endangered
+//!   graphs are reverted first, instead of the most recent.
 //!
 //! The engine governs **straggler** preemption only; arrival-time
 //! preemption remains the §IV [`crate::coordinator::Policy`]
@@ -43,7 +47,7 @@
 
 pub mod controllers;
 
-pub use controllers::{AdaptiveK, Budgeted, Cooldown, FixedLastK, NoPreemption};
+pub use controllers::{AdaptiveK, Budgeted, Cooldown, DeadlineAware, FixedLastK, NoPreemption};
 
 use crate::graph::Gid;
 
@@ -71,24 +75,55 @@ impl FinishObservation {
     }
 }
 
+/// How the coordinator picks *which* graphs a
+/// [`Decision::Reschedule`]'s window of `last_k` graphs contains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ScopeOrder {
+    /// The `last_k` most recently **arrived** graphs — the paper's
+    /// Last-K recency window (PR-2 semantics, the default).
+    #[default]
+    Recency,
+    /// The `last_k` most **deadline-endangered** incomplete graphs:
+    /// ranked by belief slack (deadline minus the coordinator's
+    /// predicted completion), smallest slack first.  Graphs without
+    /// deadlines rank last; ties break toward recency, so on a
+    /// deadline-free workload the order degrades to recency over the
+    /// incomplete graphs.
+    DeadlineUrgency,
+}
+
 /// How much a [`Decision::Reschedule`] may preempt.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Scope {
-    /// revert pending tasks of the `last_k` most recently arrived graphs
+    /// revert pending tasks of a window of `last_k` graphs, selected
+    /// per [`Scope::order`]
     pub last_k: usize,
     /// cap on how many tasks this replan may revert; when the revertible
-    /// set is larger, the coordinator keeps the tasks of the most
-    /// recently arrived graphs and leaves the oldest in place.
+    /// set is larger, the coordinator keeps whole per-graph blocks in
+    /// priority order (most recent / most endangered first, per
+    /// [`Scope::order`]) and leaves the rest in place.
     /// `usize::MAX` = uncapped.
     pub max_reverted: usize,
+    /// graph-selection order of the window
+    pub order: ScopeOrder,
 }
 
 impl Scope {
-    /// Uncapped Last-K scope.
+    /// Uncapped Last-K recency scope (PR-2 semantics).
     pub fn last_k(k: usize) -> Self {
         Scope {
             last_k: k,
             max_reverted: usize::MAX,
+            order: ScopeOrder::Recency,
+        }
+    }
+
+    /// Uncapped deadline-urgency scope: the `k` most endangered graphs.
+    pub fn deadline_urgent(k: usize) -> Self {
+        Scope {
+            last_k: k,
+            max_reverted: usize::MAX,
+            order: ScopeOrder::DeadlineUrgency,
         }
     }
 }
@@ -170,6 +205,10 @@ pub enum PolicySpec {
         cooldown: f64,
         inner: Box<PolicySpec>,
     },
+    /// Deadline-urgency scoping: fire like `FixedLastK` but revert the
+    /// `k` most deadline-endangered incomplete graphs instead of the
+    /// `k` most recent.
+    DeadlineAware { k: usize, threshold: f64 },
 }
 
 impl PolicySpec {
@@ -194,6 +233,9 @@ impl PolicySpec {
             } => Box::new(Budgeted::new(*k, *threshold, *rate, *burst)),
             PolicySpec::Cooldown { cooldown, inner } => {
                 Box::new(Cooldown::new(inner.make(), *cooldown))
+            }
+            PolicySpec::DeadlineAware { k, threshold } => {
+                Box::new(DeadlineAware::new(*k, *threshold))
             }
         }
     }
@@ -260,6 +302,10 @@ mod tests {
                     threshold: 0.1,
                 }),
             },
+            PolicySpec::DeadlineAware {
+                k: 3,
+                threshold: 0.25,
+            },
         ];
         let labels: Vec<String> = specs.iter().map(|s| s.label()).collect();
         assert_eq!(labels[0], "none");
@@ -267,6 +313,7 @@ mod tests {
         assert_eq!(labels[2], "A3-10@0.25τ2");
         assert_eq!(labels[3], "B3@0.25r1b4");
         assert_eq!(labels[4], "L2@0.1+cd5");
+        assert_eq!(labels[5], "D3@0.25");
         for (spec, label) in specs.iter().zip(&labels) {
             assert_eq!(&spec.make().label(), label, "{spec:?}");
         }
@@ -292,5 +339,11 @@ mod tests {
         let s = Scope::last_k(4);
         assert_eq!(s.last_k, 4);
         assert_eq!(s.max_reverted, usize::MAX);
+        assert_eq!(s.order, ScopeOrder::Recency);
+        let d = Scope::deadline_urgent(2);
+        assert_eq!(d.last_k, 2);
+        assert_eq!(d.max_reverted, usize::MAX);
+        assert_eq!(d.order, ScopeOrder::DeadlineUrgency);
+        assert_eq!(ScopeOrder::default(), ScopeOrder::Recency);
     }
 }

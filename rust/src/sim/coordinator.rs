@@ -20,9 +20,14 @@
 //!   [`PreemptionPolicy`] controller from the [`crate::policy`] engine
 //!   (fixed, AIMD-adaptive, token-budgeted, cooldown-wrapped).  A policy
 //!   observes every finish and every graph completion, answers with a
-//!   [`crate::policy::Decision`] (hold, or reschedule a scope — Last-K
-//!   window plus an optional cap on reverted tasks), and receives the
-//!   replan outcome back for budget/hysteresis accounting.
+//!   [`crate::policy::Decision`] (hold, or reschedule a scope — a
+//!   window of `k` graphs plus an optional cap on reverted tasks), and
+//!   receives the replan outcome back for budget/hysteresis accounting.
+//!   The scope's [`crate::policy::ScopeOrder`] picks *which* graphs the
+//!   window contains: the `k` most recently arrived (the paper's Last-K
+//!   recency window), or — for deadline scenarios — the `k` most
+//!   **deadline-endangered** incomplete graphs, ranked by belief slack
+//!   (deadline minus predicted completion — `Sim::select_urgent`).
 //!   [`Reaction::None`] is the no-reaction baseline (the plan is
 //!   executed as-is, late or not).
 //!
@@ -66,7 +71,7 @@ use crate::coordinator::{CompositeWorkspace, DynamicProblem, Policy};
 use crate::fasthash::{FxHashMap, FxHashSet};
 use crate::graph::Gid;
 use crate::metrics::{ideal_response, MetricRow, PreemptionCost};
-use crate::policy::{Decision, FinishObservation, PreemptionPolicy};
+use crate::policy::{Decision, FinishObservation, PreemptionPolicy, ScopeOrder};
 use crate::robustness::StableNoise;
 use crate::schedule::{Assignment, Schedule};
 use crate::schedulers::Scheduler;
@@ -234,6 +239,20 @@ struct Sim<'a> {
     to_remove: Vec<Gid>,
     fix: Vec<(Gid, Assignment)>,
     revert_set: FxHashSet<Gid>,
+    /// urgency-ranked `(belief slack, graph)` scratch of the
+    /// deadline-urgency scope selection
+    urgency: Vec<(f64, usize)>,
+}
+
+/// Which graphs a replan pass may revert — the coordinator-side
+/// resolution of a [`crate::policy::Scope`].
+enum RevertSel {
+    /// A contiguous arrival-index window (recency scopes and the §IV
+    /// arrival-policy replans).
+    Range(std::ops::Range<usize>),
+    /// The `k` most deadline-endangered incomplete graphs, ranked by
+    /// belief slack ([`ScopeOrder::DeadlineUrgency`]).
+    Urgent(usize),
 }
 
 impl<'a> Sim<'a> {
@@ -268,7 +287,60 @@ impl<'a> Sim<'a> {
             to_remove: Vec::new(),
             fix: Vec::new(),
             revert_set: FxHashSet::default(),
+            urgency: Vec::new(),
         }
+    }
+
+    /// Rank the arrived, incomplete graphs by **deadline urgency** and
+    /// keep the `k` most endangered in `self.urgency`, stored
+    /// least-endangered first (so callers pushing per-graph revert
+    /// blocks in `self.urgency` order put the most endangered at the
+    /// tail, where the shared tail-keeping revert cap preserves them).
+    ///
+    /// Urgency is belief slack: the graph's deadline minus its predicted
+    /// completion under the coordinator's current belief schedule
+    /// (planned finishes for pending work, observed/expected truth for
+    /// dispatched work, as of the last refresh).  Only graphs with at
+    /// least one **revertible** (planned but not dispatched) task are
+    /// candidates — an endangered graph whose work is all dispatched
+    /// cannot be helped by preemption, and letting it occupy a window
+    /// slot would silently starve graphs the replan *can* still move.
+    /// Graphs without a deadline get `+∞` slack, so they are only
+    /// selected after every deadline-bearing candidate; ties (including
+    /// the all-`∞` case of a deadline-free workload) break toward
+    /// recency.  The ranking is a deterministic function of the belief,
+    /// so sweeps stay bit-identical at any thread count.
+    fn select_urgent(&mut self, k: usize) {
+        self.urgency.clear();
+        for gi in 0..self.arrived {
+            if self.graph_left[gi] == 0 {
+                continue;
+            }
+            let (_, g) = &self.prob.graphs[gi];
+            let mut fin = f64::NEG_INFINITY;
+            let mut revertible = false;
+            for t in 0..g.n_tasks() {
+                let gid = Gid::new(gi, t);
+                if let Some(a) = self.plan.get(gid) {
+                    fin = fin.max(a.finish);
+                    revertible |= self.realized.get(gid).is_none();
+                }
+            }
+            if !revertible {
+                continue;
+            }
+            let slack = match g.deadline() {
+                Some(d) if fin.is_finite() => d - fin,
+                _ => f64::INFINITY,
+            };
+            self.urgency.push((slack, gi));
+        }
+        // most endangered = smallest slack; ties → most recent first
+        self.urgency
+            .sort_by(|a, b| a.0.total_cmp(&b.0).then(b.1.cmp(&a.1)));
+        self.urgency.truncate(k);
+        // least endangered first (see above: the cap keeps the tail)
+        self.urgency.reverse();
     }
 
     fn n_nodes(&self) -> usize {
@@ -545,7 +617,13 @@ impl ReactiveCoordinator {
                         kind: SimLogKind::Arrival { graph: idx },
                     });
                     let window = self.policy.window(idx);
-                    self.replan(&mut sim, t, idx - window..idx, Some(idx), false);
+                    self.replan(
+                        &mut sim,
+                        t,
+                        RevertSel::Range(idx - window..idx),
+                        Some(idx),
+                        false,
+                    );
                     sim.dispatch_all(t);
                 }
                 SimEvent::TaskStart { gid, node, epoch } => {
@@ -620,11 +698,19 @@ impl ReactiveCoordinator {
                     });
                     match decision {
                         Some(Decision::Reschedule(scope)) => {
-                            let lo = sim.arrived - scope.last_k.min(sim.arrived);
+                            let sel = match scope.order {
+                                ScopeOrder::Recency => {
+                                    let lo = sim.arrived - scope.last_k.min(sim.arrived);
+                                    RevertSel::Range(lo..sim.arrived)
+                                }
+                                ScopeOrder::DeadlineUrgency => {
+                                    RevertSel::Urgent(scope.last_k)
+                                }
+                            };
                             let ran = self.replan_scoped(
                                 &mut sim,
                                 t,
-                                lo..sim.arrived,
+                                sel,
                                 None,
                                 true,
                                 scope.max_reverted,
@@ -640,7 +726,13 @@ impl ReactiveCoordinator {
                             if let Reaction::LastK { k, threshold } = self.cfg.reaction {
                                 if lateness > threshold * est {
                                     let lo = sim.arrived - k.min(sim.arrived);
-                                    self.replan(&mut sim, t, lo..sim.arrived, None, true);
+                                    self.replan(
+                                        &mut sim,
+                                        t,
+                                        RevertSel::Range(lo..sim.arrived),
+                                        None,
+                                        true,
+                                    );
                                 }
                             }
                         }
@@ -671,22 +763,24 @@ impl ReactiveCoordinator {
         &mut self,
         sim: &mut Sim<'_>,
         now: f64,
-        revert_graphs: std::ops::Range<usize>,
+        sel: RevertSel,
         new_graph: Option<usize>,
         straggler: bool,
     ) -> Option<usize> {
-        self.replan_scoped(sim, now, revert_graphs, new_graph, straggler, usize::MAX)
+        self.replan_scoped(sim, now, sel, new_graph, straggler, usize::MAX)
     }
 
     /// One rescheduling pass at time `now`: revert the still-pending
-    /// tasks of `revert_graphs` (plus all tasks of a newly arrived
-    /// graph), refresh the belief to the observed state, and run the
-    /// base heuristic in place inside a timeline transaction.  At most
-    /// `max_reverted` tasks are reverted (a [`crate::policy::Budgeted`]
-    /// cap); when the revertible set is larger, whole per-graph blocks
-    /// are kept newest-arrival-first while they fit the cap (misfit
-    /// blocks are skipped, not split) and everything else stays in
-    /// place.
+    /// tasks of the graphs `sel` selects (plus all tasks of a newly
+    /// arrived graph), refresh the belief to the observed state, and run
+    /// the base heuristic in place inside a timeline transaction.  At
+    /// most `max_reverted` tasks are reverted (a
+    /// [`crate::policy::Budgeted`] cap); when the revertible set is
+    /// larger, whole per-graph blocks are kept in priority order —
+    /// newest arrival first for [`RevertSel::Range`], most
+    /// deadline-endangered first for [`RevertSel::Urgent`] — while they
+    /// fit the cap (misfit blocks are skipped, not split) and everything
+    /// else stays in place.
     /// Returns the number of tasks actually reverted, or `None` when the
     /// pass was skipped because nothing was revertible and no new graph
     /// arrived (no replan happened, nothing is recorded).
@@ -694,7 +788,7 @@ impl ReactiveCoordinator {
         &mut self,
         sim: &mut Sim<'_>,
         now: f64,
-        revert_graphs: std::ops::Range<usize>,
+        sel: RevertSel,
         new_graph: Option<usize>,
         straggler: bool,
         max_reverted: usize,
@@ -702,7 +796,7 @@ impl ReactiveCoordinator {
         let wall0 = Instant::now();
         self.pending.clear();
         let mut pending = std::mem::take(&mut self.pending);
-        for j in revert_graphs {
+        let push_graph = |sim: &Sim<'_>, pending: &mut Vec<Gid>, j: usize| {
             let g = &sim.prob.graphs[j].1;
             for task in 0..g.n_tasks() {
                 let gid = Gid::new(j, task);
@@ -710,17 +804,35 @@ impl ReactiveCoordinator {
                     pending.push(gid);
                 }
             }
+        };
+        match sel {
+            RevertSel::Range(range) => {
+                for j in range {
+                    push_graph(sim, &mut pending, j);
+                }
+            }
+            RevertSel::Urgent(k) => {
+                // `sim.urgency` holds the k most endangered graphs,
+                // least-endangered first, so the most endangered block
+                // lands at the tail where the cap keeps it
+                sim.select_urgent(k);
+                for &(_, j) in &sim.urgency {
+                    push_graph(sim, &mut pending, j);
+                }
+            }
         }
         if pending.len() > max_reverted {
             // Budget cap, graph-granular: walking whole per-graph blocks
-            // from the newest arrival backwards, keep every block that
-            // still fits the remaining budget and skip the ones that
-            // don't (a misfit newest block must not abort the revert —
-            // an older, smaller block may still fit).  Partial graphs
-            // are never reverted: a kept pending task whose parent was
-            // reverted would be underivable in the belief refresh
-            // (dependencies are intra-graph).  Kept blocks are compacted
-            // to the tail in their original (arrival-ascending) order.
+            // from the tail (highest priority: newest arrival for
+            // recency scopes, most endangered for urgency scopes)
+            // backwards, keep every block that still fits the remaining
+            // budget and skip the ones that don't (a misfit tail block
+            // must not abort the revert — a lower-priority, smaller
+            // block may still fit).  Partial graphs are never reverted:
+            // a kept pending task whose parent was reverted would be
+            // underivable in the belief refresh (dependencies are
+            // intra-graph).  Kept blocks are compacted to the tail in
+            // their original (priority-ascending) order.
             let mut budget = max_reverted;
             let mut write = pending.len();
             let mut read = pending.len();
@@ -1039,6 +1151,119 @@ mod tests {
         let rc = ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
         assert_eq!(rc.label(), "5P-HEFT σ0.30 L3@0.25");
         assert_eq!(Reaction::None.label(), "none");
+    }
+
+    /// Unit pin of the deadline-urgency ranking: smallest belief slack
+    /// first, deadline-less graphs last, ties toward recency — and the
+    /// output stored least-endangered-first for the tail-keeping cap.
+    #[test]
+    fn select_urgent_ranks_by_belief_slack() {
+        use crate::graph::GraphBuilder;
+        use crate::network::Network;
+        let one_task = |name: &str, deadline: Option<f64>| {
+            let mut b = GraphBuilder::new(name);
+            b.task(1.0);
+            let mut g = b.build().unwrap();
+            if let Some(d) = deadline {
+                g.set_deadline(d);
+            }
+            g
+        };
+        // graph 0: deadline 10, predicted finish 8 → slack 2 (endangered)
+        // graph 1: deadline 20, predicted finish 9 → slack 11
+        // graph 2: no deadline → ∞ slack
+        // graph 3: deadline 10, predicted finish 8 → slack 2 (tie, newer)
+        let prob = DynamicProblem::new(
+            Network::homogeneous(2),
+            vec![
+                (0.0, one_task("g0", Some(10.0))),
+                (0.0, one_task("g1", Some(20.0))),
+                (0.0, one_task("g2", None)),
+                (0.0, one_task("g3", Some(10.0))),
+            ],
+        );
+        let mut sim = Sim::new(&prob, SimConfig::default());
+        sim.arrived = 4;
+        for (gi, fin) in [(0usize, 8.0f64), (1, 9.0), (2, 7.0), (3, 8.0)] {
+            sim.plan.assign(
+                Gid::new(gi, 0),
+                Assignment {
+                    node: 0,
+                    start: fin - 1.0,
+                    finish: fin,
+                },
+            );
+        }
+        sim.select_urgent(3);
+        // most endangered: g3 (slack 2, newer), g0 (slack 2), g1 (11);
+        // stored least-endangered first
+        let picked: Vec<usize> = sim.urgency.iter().map(|&(_, g)| g).collect();
+        assert_eq!(picked, vec![1, 0, 3]);
+        // completed graphs are never candidates
+        sim.graph_left[3] = 0;
+        sim.select_urgent(3);
+        let picked: Vec<usize> = sim.urgency.iter().map(|&(_, g)| g).collect();
+        assert_eq!(picked, vec![2, 1, 0], "deadline-less g2 ranks last");
+        // k larger than the candidate set is fine
+        sim.select_urgent(10);
+        assert_eq!(sim.urgency.len(), 3);
+        // a graph whose work is all dispatched has nothing revertible
+        // and must not occupy a window slot, however endangered
+        sim.realized.assign(
+            Gid::new(0, 0),
+            Assignment {
+                node: 0,
+                start: 7.0,
+                finish: 8.0,
+            },
+        );
+        sim.select_urgent(3);
+        let picked: Vec<usize> = sim.urgency.iter().map(|&(_, g)| g).collect();
+        assert_eq!(picked, vec![2, 1], "dispatched g0 is not a candidate");
+    }
+
+    /// End-to-end: a `DeadlineAware` controller on a deadline-laden
+    /// noisy workload completes, replays §II-valid, honours the frozen
+    /// prefix, and actually fires straggler replans.
+    #[test]
+    fn deadline_aware_run_is_valid_and_fires() {
+        use crate::policy::PolicySpec;
+        use crate::workloads::{DeadlineModel, Scenario, WeightModel, DEFAULT_LOAD};
+        let scen = Scenario {
+            weights: WeightModel::HeavyTail { alpha: 1.5 },
+            deadlines: DeadlineModel::CritPathSlack { slack: 1.5 },
+            arrivals: Default::default(),
+        };
+        let prob = Dataset::Synthetic.instance_scenario(15, 21, DEFAULT_LOAD, None, &scen);
+        assert!(prob.graphs.iter().all(|(_, g)| g.deadline().is_some()));
+        let cfg = SimConfig {
+            noise_std: 0.6,
+            noise_seed: 3,
+            reaction: Reaction::None,
+            record_frozen: true,
+        };
+        let spec = PolicySpec::DeadlineAware {
+            k: 4,
+            threshold: 0.05,
+        };
+        let mut rc = ReactiveCoordinator::with_policy(
+            Policy::LastK(5),
+            SchedulerKind::Heft.make(0),
+            cfg,
+            spec.make(),
+        );
+        assert_eq!(rc.label(), "5P-HEFT σ0.60 D4@0.05");
+        let res = rc.run(&prob);
+        assert_eq!(res.schedule.n_assigned(), prob.total_tasks());
+        assert!(res.n_straggler_replans() > 0, "tight threshold must fire");
+        let rep = replay(&res.schedule, &prob.graphs, &prob.network);
+        assert!(rep.errors.is_empty(), "{:?}", &rep.errors[..rep.errors.len().min(3)]);
+        for rec in &res.replans {
+            for &(gid, node, start) in &rec.frozen {
+                let a = res.schedule.get(gid).unwrap();
+                assert_eq!((a.node, a.start.to_bits()), (node, start.to_bits()));
+            }
+        }
     }
 
     #[test]

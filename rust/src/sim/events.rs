@@ -81,10 +81,13 @@ pub struct EventQueue {
 }
 
 impl EventQueue {
+    /// An empty queue (sequence counter at zero).
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Enqueue `ev` at `time` (must be finite).  The push order is
+    /// recorded, so equal `(time, kind)` entries pop in push order.
     pub fn push(&mut self, time: f64, ev: SimEvent) {
         debug_assert!(time.is_finite(), "non-finite event time {time}");
         self.heap.push(Entry {
@@ -95,14 +98,18 @@ impl EventQueue {
         self.seq += 1;
     }
 
+    /// Pop the earliest event: smallest time, then Finish < Arrival <
+    /// Start, then push order.  `None` when the queue is drained.
     pub fn pop(&mut self) -> Option<(f64, SimEvent)> {
         self.heap.pop().map(|e| (e.time, e.ev))
     }
 
+    /// Whether no events remain.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
 
+    /// Number of pending events.
     pub fn len(&self) -> usize {
         self.heap.len()
     }

@@ -14,18 +14,27 @@ use crate::json::{self, Value};
 use crate::schedule::{Assignment, Schedule};
 use crate::sim::{SimLogKind, SimResult};
 
-/// Graph summaries shared by both trace formats.
+/// Graph summaries shared by both trace formats.  Scenario-axis fields
+/// (importance weight, deadline) are emitted only when non-default, so
+/// default-scenario traces stay byte-identical to pre-scenario ones.
 fn graphs_json(problem: &DynamicProblem) -> Value {
     json::arr(
         problem
             .graphs
             .iter()
             .map(|(arrival, g)| {
-                json::obj(vec![
+                let mut fields = vec![
                     ("name", json::s(g.name())),
                     ("arrival", json::num(*arrival)),
                     ("n_tasks", json::num(g.n_tasks() as f64)),
-                ])
+                ];
+                if g.weight() != 1.0 {
+                    fields.push(("weight", json::num(g.weight())));
+                }
+                if let Some(d) = g.deadline() {
+                    fields.push(("deadline", json::num(d)));
+                }
+                json::obj(fields)
             })
             .collect(),
     )
@@ -404,6 +413,32 @@ mod tests {
         let n_fin = events.iter().filter(|e| kind_of(e) == "finish").count();
         assert_eq!(n_starts, prob.total_tasks());
         assert_eq!(n_fin, prob.total_tasks());
+    }
+
+    #[test]
+    fn scenario_fields_appear_only_when_non_default() {
+        let (prob, res) = run();
+        let v = to_json(&prob, &res);
+        let graphs = v.get("graphs").and_then(|x| x.as_array()).unwrap();
+        for g in graphs {
+            assert!(g.get("weight").is_none(), "unit weight must be omitted");
+            assert!(g.get("deadline").is_none(), "absent deadline must be omitted");
+        }
+        // stamp a weight and a deadline on the first graph and re-dump
+        let mut prob2 = prob.clone();
+        prob2.graphs[0].1.set_weight(3.0);
+        prob2.graphs[0].1.set_deadline(123.0);
+        let v2 = to_json(&prob2, &res);
+        let graphs2 = v2.get("graphs").and_then(|x| x.as_array()).unwrap();
+        assert_eq!(graphs2[0].get("weight").and_then(|w| w.as_f64()), Some(3.0));
+        assert_eq!(
+            graphs2[0].get("deadline").and_then(|d| d.as_f64()),
+            Some(123.0)
+        );
+        assert!(graphs2[1].get("weight").is_none());
+        // the parser is lenient: the enriched document still round-trips
+        let trace = from_json(&Value::from_str(&v2.to_string()).unwrap()).unwrap();
+        assert_eq!(trace.schedule.n_assigned(), res.schedule.n_assigned());
     }
 
     #[test]

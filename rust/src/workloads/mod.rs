@@ -18,11 +18,21 @@
 //! so the generators here encode the published topologies and cost
 //! heterogeneity parametrically.  Every figure depends only on topology
 //! shape + weight spread, which are preserved.
+//!
+//! Orthogonal to the dataset choice, the [`scenario`] module layers a
+//! **scenario axis** over any dataset: per-graph importance weights
+//! (heavy-tail or class-based), completion deadlines (critical-path ×
+//! slack), and a bursty arrival process — see
+//! [`Dataset::instance_scenario`].  The default [`Scenario`] reproduces the
+//! paper's setting bit-exactly.
 
 pub mod adversarial;
 pub mod riotbench;
+pub mod scenario;
 pub mod synthetic;
 pub mod wfcommons;
+
+pub use scenario::{ArrivalModel, DeadlineModel, Scenario, WeightModel};
 
 use crate::coordinator::DynamicProblem;
 use crate::graph::TaskGraph;
@@ -101,6 +111,26 @@ impl Dataset {
         load: f64,
         ccr: Option<f64>,
     ) -> DynamicProblem {
+        self.instance_scenario(n_graphs, seed, load, ccr, &Scenario::default())
+    }
+
+    /// [`Dataset::instance_opts`] with a [`Scenario`] layered on top:
+    /// the arrival process is drawn per [`ArrivalModel`], then per-graph
+    /// weights and deadlines are stamped by the scenario's models.
+    ///
+    /// The weight/deadline stamping consumes no RNG and the Poisson
+    /// arrival path is the pre-scenario generator verbatim, so at
+    /// the default [`Scenario`] the returned instance is **bit-identical**
+    /// to [`Dataset::instance_opts`] (differential-tested in
+    /// `rust/tests/scenario_deadline.rs`).
+    pub fn instance_scenario(
+        &self,
+        n_graphs: usize,
+        seed: u64,
+        load: f64,
+        ccr: Option<f64>,
+        scenario: &Scenario,
+    ) -> DynamicProblem {
         let mut rng = Xoshiro256pp::seed_from_u64(seed);
         let network = Network::default_eval(&mut rng);
         let mut graphs = self.graphs(n_graphs, &mut rng);
@@ -115,8 +145,15 @@ impl Dataset {
                 set_ccr(g, &network, c);
             }
         }
-        let arrivals = arrivals_for(&graphs, &network, &mut rng, load);
-        DynamicProblem::new(network, arrivals.into_iter().zip(graphs).collect())
+        let arrivals = match scenario.arrivals {
+            ArrivalModel::Poisson => arrivals_for(&graphs, &network, &mut rng, load),
+            ArrivalModel::Bursty { burst } => {
+                scenario::bursty_arrivals(&graphs, &network, &mut rng, load, burst)
+            }
+        };
+        let mut paired: Vec<(f64, TaskGraph)> = arrivals.into_iter().zip(graphs).collect();
+        scenario.apply(seed, &mut paired, &network);
+        DynamicProblem::new(network, paired)
     }
 }
 
@@ -125,8 +162,23 @@ impl Dataset {
 /// < 1 means graphs overlap (the dynamic regime the paper studies).
 pub const DEFAULT_LOAD: f64 = 0.5;
 
+/// Mean per-graph service demand: total cost × mean inverse speed,
+/// spread over the whole network.  The time unit of every arrival
+/// process ([`arrivals_for`], [`scenario::bursty_arrivals`]) — one
+/// definition so the processes stay load-matched by construction.
+pub fn mean_service_demand(graphs: &[TaskGraph], net: &Network) -> f64 {
+    if graphs.is_empty() {
+        return 0.0;
+    }
+    graphs
+        .iter()
+        .map(|g| g.total_cost() * net.mean_inv_speed() / net.n_nodes() as f64)
+        .sum::<f64>()
+        / graphs.len() as f64
+}
+
 /// Poisson arrivals scaled to the workload: the mean service demand of a
-/// graph (total cost × mean inverse speed / #nodes) sets the time unit.
+/// graph ([`mean_service_demand`]) sets the time unit.
 pub fn arrivals_for(
     graphs: &[TaskGraph],
     net: &Network,
@@ -136,12 +188,7 @@ pub fn arrivals_for(
     if graphs.is_empty() {
         return Vec::new();
     }
-    let mean_demand: f64 = graphs
-        .iter()
-        .map(|g| g.total_cost() * net.mean_inv_speed() / net.n_nodes() as f64)
-        .sum::<f64>()
-        / graphs.len() as f64;
-    let mean_gap = (load * mean_demand).max(1e-9);
+    let mean_gap = (load * mean_service_demand(graphs, net)).max(1e-9);
     poisson_arrivals(rng, graphs.len(), 1.0 / mean_gap)
 }
 

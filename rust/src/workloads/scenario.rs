@@ -1,0 +1,365 @@
+//! The **scenario axis**: per-graph importance weights, completion
+//! deadlines, and arrival-process shape layered over the §VI dataset
+//! generators.
+//!
+//! The paper evaluates every workload with unit-importance graphs, no
+//! deadlines, and Poisson arrivals.  A [`Scenario`] widens each of those
+//! knobs independently:
+//!
+//! * [`WeightModel`] — non-unit importance weights for the weighted
+//!   fairness metrics ([`crate::metrics`]): a truncated-Pareto
+//!   heavy-tail sampler (a few graphs matter a lot) or a class-based
+//!   sampler (gold/silver/bronze service tiers);
+//! * [`DeadlineModel`] — per-graph completion deadlines: the best-exec
+//!   critical-path lower bound ([`crate::metrics::ideal_response`])
+//!   times a configurable slack factor, anchored at the graph's arrival;
+//! * [`ArrivalModel`] — Poisson arrivals (the paper's process) or a
+//!   bursty process in which graphs arrive in simultaneous batches,
+//!   stressing the admission path the way arXiv:1802.10309's adversarial
+//!   online instances do.
+//!
+//! **Determinism.**  Weight draws are a pure function of
+//! `(instance seed, graph index)` — the same SplitMix-style mixing as
+//! [`crate::robustness::StableNoise`] — never of the sampling sequence,
+//! so turning weights on cannot perturb the graph structures or the
+//! arrival stream.  Deadlines are derived (no randomness).  The Poisson
+//! arrival path is byte-for-byte the pre-scenario generator, so at
+//! default knobs (the default [`Scenario`]) every instance, schedule and
+//! metric in the repo is **bit-identical** to its pre-scenario value
+//! (pinned by `rust/tests/scenario_deadline.rs`).
+
+use crate::graph::TaskGraph;
+use crate::metrics::ideal_response;
+use crate::network::Network;
+use crate::prng::Xoshiro256pp;
+
+/// Heavy-tail weights are clipped here so one astronomically important
+/// graph cannot reduce every weighted mean to a single-graph readout.
+pub const WEIGHT_CAP: f64 = 100.0;
+
+/// Per-graph RNG stream for the weight samplers: a pure function of
+/// `(seed, graph)`, independent of how many graphs the instance has and
+/// of every other random draw in the generator.
+fn graph_rng(seed: u64, graph: usize) -> Xoshiro256pp {
+    let mix = (graph as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ seed.rotate_left(21);
+    Xoshiro256pp::seed_from_u64(mix)
+}
+
+/// How per-graph importance weights are assigned.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub enum WeightModel {
+    /// Every graph weighs 1.0 (the paper's setting; weights untouched).
+    #[default]
+    Unit,
+    /// Truncated Pareto (`x_m = 1`, shape `alpha`, clipped at
+    /// [`WEIGHT_CAP`]): most graphs near weight 1, a heavy tail of
+    /// far more important ones.  Smaller `alpha` = heavier tail.
+    HeavyTail { alpha: f64 },
+    /// Service-tier classes: each graph is assigned one of the listed
+    /// weights uniformly at random (e.g. `[1, 4, 16]` for
+    /// bronze/silver/gold).
+    Classes { weights: Vec<f64> },
+}
+
+impl WeightModel {
+    /// The weight of graph `graph` under instance seed `seed`, or `None`
+    /// for [`WeightModel::Unit`] (the graph's default 1.0 is left
+    /// untouched, keeping default-knob instances bit-identical).
+    pub fn weight_of(&self, seed: u64, graph: usize) -> Option<f64> {
+        match self {
+            WeightModel::Unit => None,
+            WeightModel::HeavyTail { alpha } => {
+                assert!(*alpha > 0.0 && alpha.is_finite(), "bad pareto alpha {alpha}");
+                let u = graph_rng(seed, graph).next_f64();
+                Some((1.0 - u).powf(-1.0 / alpha).min(WEIGHT_CAP))
+            }
+            WeightModel::Classes { weights } => {
+                assert!(!weights.is_empty(), "empty class list");
+                let i = graph_rng(seed, graph).below(weights.len());
+                Some(weights[i])
+            }
+        }
+    }
+}
+
+/// How per-graph completion deadlines are assigned.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum DeadlineModel {
+    /// No deadlines (the paper's setting; the deadline metrics read
+    /// vacuously on-time).
+    #[default]
+    None,
+    /// `deadline = arrival + slack × ideal_response(g)`: the best-exec
+    /// critical-path lower bound times a slack factor.  `slack = 1` is
+    /// the (unreachable under contention) ideal; `slack = 0` makes the
+    /// deadline the arrival instant itself, so every graph with any work
+    /// is tardy by exactly its response time.
+    CritPathSlack { slack: f64 },
+}
+
+impl DeadlineModel {
+    /// Absolute deadline of a graph arriving at `arrival`, or `None`.
+    pub fn deadline_of(&self, arrival: f64, g: &TaskGraph, net: &Network) -> Option<f64> {
+        match self {
+            DeadlineModel::None => None,
+            DeadlineModel::CritPathSlack { slack } => {
+                assert!(*slack >= 0.0 && slack.is_finite(), "bad deadline slack {slack}");
+                Some(arrival + slack * ideal_response(g, net))
+            }
+        }
+    }
+}
+
+/// Shape of the arrival process.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum ArrivalModel {
+    /// Poisson arrivals scaled to the offered load (the paper's process;
+    /// byte-identical to the pre-scenario generator).
+    #[default]
+    Poisson,
+    /// Bursty arrivals: graphs arrive in simultaneous batches of
+    /// `burst`, batches separated by exponential gaps whose mean is
+    /// scaled by `burst` so the **offered load matches the Poisson
+    /// process** — same long-run pressure, far lumpier admission.
+    Bursty { burst: usize },
+}
+
+/// Bursty counterpart of [`super::arrivals_for`]: `burst`-sized batches
+/// of simultaneous arrivals, exponential inter-batch gaps with mean
+/// `burst × load × mean demand` (load-matched to the Poisson process).
+pub fn bursty_arrivals(
+    graphs: &[TaskGraph],
+    net: &Network,
+    rng: &mut Xoshiro256pp,
+    load: f64,
+    burst: usize,
+) -> Vec<f64> {
+    if graphs.is_empty() {
+        return Vec::new();
+    }
+    let burst = burst.max(1);
+    let mean_demand = super::mean_service_demand(graphs, net);
+    let mean_batch_gap = (load * mean_demand * burst as f64).max(1e-9);
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(graphs.len());
+    for i in 0..graphs.len() {
+        if i > 0 && i % burst == 0 {
+            t += rng.exponential(1.0 / mean_batch_gap);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// One point of the scenario axis: a weight model, a deadline model and
+/// an arrival model, applied on top of any [`super::Dataset`] by
+/// [`super::Dataset::instance_scenario`].  The default [`Scenario`] is the
+/// paper's setting (unit weights, no deadlines, Poisson arrivals) and is
+/// bit-transparent: instances are identical to [`super::Dataset::instance_opts`].
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Scenario {
+    pub weights: WeightModel,
+    pub deadlines: DeadlineModel,
+    pub arrivals: ArrivalModel,
+}
+
+impl Scenario {
+    /// True iff every knob is at the paper's default.
+    pub fn is_default(&self) -> bool {
+        *self == Scenario::default()
+    }
+
+    /// Compact scenario label for tables/CSV/JSON: `default`, or a `+`
+    /// join of the non-default knobs (`w:pareto1.5+d:s2+a:burst4`).
+    pub fn label(&self) -> String {
+        let mut parts = Vec::new();
+        match &self.weights {
+            WeightModel::Unit => {}
+            WeightModel::HeavyTail { alpha } => parts.push(format!("w:pareto{alpha}")),
+            WeightModel::Classes { weights } => {
+                parts.push(format!("w:classes{}", weights.len()))
+            }
+        }
+        match self.deadlines {
+            DeadlineModel::None => {}
+            DeadlineModel::CritPathSlack { slack } => parts.push(format!("d:s{slack}")),
+        }
+        match self.arrivals {
+            ArrivalModel::Poisson => {}
+            ArrivalModel::Bursty { burst } => parts.push(format!("a:burst{burst}")),
+        }
+        if parts.is_empty() {
+            "default".to_string()
+        } else {
+            parts.join("+")
+        }
+    }
+
+    /// Stamp weights and deadlines onto an arrival-paired graph
+    /// sequence (index = generation order).  Weight draws depend only on
+    /// `(seed, index)`; deadlines only on the pair's arrival and the
+    /// graph's best-exec critical path — no RNG stream is consumed, so
+    /// applying the default scenario is a no-op.
+    pub fn apply(&self, seed: u64, graphs: &mut [(f64, TaskGraph)], net: &Network) {
+        for (gi, (arrival, g)) in graphs.iter_mut().enumerate() {
+            if let Some(w) = self.weights.weight_of(seed, gi) {
+                g.set_weight(w);
+            }
+            if let Some(d) = self.deadlines.deadline_of(*arrival, g, net) {
+                g.set_deadline(d);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{synthetic, Dataset, DEFAULT_LOAD};
+
+    #[test]
+    fn default_scenario_is_transparent() {
+        let s = Scenario::default();
+        assert!(s.is_default());
+        assert_eq!(s.label(), "default");
+        assert_eq!(s.weights.weight_of(1, 0), None);
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let net = Network::default_eval(&mut rng);
+        let g = synthetic::generate(1, &mut rng).remove(0);
+        assert_eq!(s.deadlines.deadline_of(5.0, &g, &net), None);
+    }
+
+    #[test]
+    fn heavy_tail_weights_are_pure_and_bounded() {
+        let m = WeightModel::HeavyTail { alpha: 1.5 };
+        for gi in 0..200 {
+            let w = m.weight_of(42, gi).unwrap();
+            assert!((1.0..=WEIGHT_CAP).contains(&w), "g{gi}: {w}");
+            // pure function: same (seed, index) → same weight, whatever
+            // else was sampled in between
+            assert_eq!(w.to_bits(), m.weight_of(42, gi).unwrap().to_bits());
+        }
+        // different seeds decorrelate
+        assert_ne!(m.weight_of(1, 0).unwrap(), m.weight_of(2, 0).unwrap());
+        // the tail is actually heavy: some draw in 200 exceeds 4× median
+        let ws: Vec<f64> = (0..200).map(|gi| m.weight_of(42, gi).unwrap()).collect();
+        let hi = ws.iter().cloned().fold(0.0, f64::max);
+        assert!(hi > 4.0, "no tail in {hi}");
+    }
+
+    #[test]
+    fn class_weights_come_from_the_class_list() {
+        let classes = vec![1.0, 4.0, 16.0];
+        let m = WeightModel::Classes {
+            weights: classes.clone(),
+        };
+        let mut seen = std::collections::HashSet::new();
+        for gi in 0..100 {
+            let w = m.weight_of(7, gi).unwrap();
+            assert!(classes.contains(&w), "g{gi}: {w}");
+            seen.insert(w.to_bits());
+        }
+        assert_eq!(seen.len(), 3, "all classes visited");
+    }
+
+    #[test]
+    fn crit_path_slack_deadlines() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let net = Network::default_eval(&mut rng);
+        let g = synthetic::generate(1, &mut rng).remove(0);
+        let ideal = ideal_response(&g, &net);
+        assert!(ideal > 0.0);
+        let d2 = DeadlineModel::CritPathSlack { slack: 2.0 }
+            .deadline_of(10.0, &g, &net)
+            .unwrap();
+        assert!((d2 - (10.0 + 2.0 * ideal)).abs() < 1e-12);
+        // zero slack: the deadline is the arrival itself
+        let d0 = DeadlineModel::CritPathSlack { slack: 0.0 }
+            .deadline_of(10.0, &g, &net)
+            .unwrap();
+        assert_eq!(d0, 10.0);
+    }
+
+    #[test]
+    fn bursty_arrivals_batch_and_load_match() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let net = Network::default_eval(&mut rng);
+        let graphs = synthetic::generate(40, &mut rng);
+        let mut r1 = Xoshiro256pp::seed_from_u64(9);
+        let arr = bursty_arrivals(&graphs, &net, &mut r1, DEFAULT_LOAD, 4);
+        assert_eq!(arr.len(), 40);
+        assert_eq!(arr[0], 0.0);
+        assert!(arr.windows(2).all(|w| w[0] <= w[1]));
+        // every batch of 4 shares one arrival instant
+        for b in arr.chunks(4) {
+            assert!(b.iter().all(|&t| t == b[0]), "{b:?}");
+        }
+        // distinct batches are separated (exponential gaps are a.s. > 0)
+        assert!(arr[0] < arr[4]);
+        // deterministic in the rng seed
+        let mut r2 = Xoshiro256pp::seed_from_u64(9);
+        assert_eq!(arr, bursty_arrivals(&graphs, &net, &mut r2, DEFAULT_LOAD, 4));
+        // empty input stays empty; burst 0 is clamped to 1
+        assert!(bursty_arrivals(&[], &net, &mut r2, DEFAULT_LOAD, 4).is_empty());
+        let solo = bursty_arrivals(&graphs, &net, &mut r2, DEFAULT_LOAD, 0);
+        assert_eq!(solo.len(), 40);
+    }
+
+    #[test]
+    fn scenario_apply_stamps_weights_and_deadlines() {
+        let scen = Scenario {
+            weights: WeightModel::Classes {
+                weights: vec![2.0],
+            },
+            deadlines: DeadlineModel::CritPathSlack { slack: 3.0 },
+            arrivals: ArrivalModel::Poisson,
+        };
+        assert_eq!(scen.label(), "w:classes1+d:s3");
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let net = Network::default_eval(&mut rng);
+        let graphs = synthetic::generate(6, &mut rng);
+        let mut paired: Vec<(f64, TaskGraph)> = (0..6)
+            .map(|i| (i as f64 * 10.0, graphs[i].clone()))
+            .collect();
+        scen.apply(11, &mut paired, &net);
+        for (arrival, g) in &paired {
+            assert_eq!(g.weight(), 2.0);
+            let d = g.deadline().unwrap();
+            assert!((d - (arrival + 3.0 * ideal_response(g, &net))).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn labels_cover_every_knob() {
+        let s = Scenario {
+            weights: WeightModel::HeavyTail { alpha: 1.5 },
+            deadlines: DeadlineModel::CritPathSlack { slack: 2.0 },
+            arrivals: ArrivalModel::Bursty { burst: 4 },
+        };
+        assert_eq!(s.label(), "w:pareto1.5+d:s2+a:burst4");
+        assert!(!s.is_default());
+    }
+
+    #[test]
+    fn dataset_instance_scenario_default_matches_instance() {
+        // the bit-identity contract at default knobs, at the entry point
+        let a = Dataset::Synthetic.instance(12, 3);
+        let b = Dataset::Synthetic.instance_scenario(
+            12,
+            3,
+            DEFAULT_LOAD,
+            None,
+            &Scenario::default(),
+        );
+        assert_eq!(a.graphs.len(), b.graphs.len());
+        for ((aa, ga), (ab, gb)) in a.graphs.iter().zip(b.graphs.iter()) {
+            assert_eq!(aa.to_bits(), ab.to_bits());
+            assert_eq!(ga.n_tasks(), gb.n_tasks());
+            assert_eq!(ga.weight().to_bits(), gb.weight().to_bits());
+            assert_eq!(ga.deadline(), gb.deadline());
+            for t in 0..ga.n_tasks() {
+                assert_eq!(ga.cost(t).to_bits(), gb.cost(t).to_bits());
+            }
+        }
+    }
+}

@@ -24,7 +24,7 @@ use dts::policy::PolicySpec;
 use dts::schedule::Schedule;
 use dts::schedulers::SchedulerKind;
 use dts::sim::{replay, Reaction, ReactiveCoordinator, SimConfig, SimResult};
-use dts::workloads::Dataset;
+use dts::workloads::{Dataset, Scenario};
 
 fn sig(s: &Schedule) -> Vec<(Gid, usize, u64, u64)> {
     let mut v: Vec<(Gid, usize, u64, u64)> = s
@@ -114,6 +114,7 @@ fn policy_sweep_reproduces_sim_sweep_lastk_cells() {
         seed: 9,
         load: 0.5,
         variant,
+        scenario: Scenario::default(),
         scenarios: vec![SimScenario {
             noise_std: noise,
             reaction: Reaction::LastK { k, threshold },
@@ -126,6 +127,7 @@ fn policy_sweep_reproduces_sim_sweep_lastk_cells() {
         seed: 9,
         load: 0.5,
         variant,
+        scenario: Scenario::default(),
         scenarios: vec![PolicyScenario {
             noise_std: noise,
             spec: PolicySpec::FixedLastK { k, threshold },
@@ -196,6 +198,7 @@ fn policy_sweep_is_deterministic_across_jobs_1_2_8() {
         seed: 17,
         load: 0.5,
         variant: dts::coordinator::Variant::parse("5P-HEFT").unwrap(),
+        scenario: Scenario::default(),
         scenarios,
     };
     let serial = run_policy_sweep_parallel(&cfg, 1);

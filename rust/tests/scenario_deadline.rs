@@ -1,0 +1,280 @@
+//! Differential + behavioral harness for the **scenario axis**
+//! (weights / deadlines / arrival process):
+//!
+//! * **Bit-identity at default knobs** — the acceptance pin: a
+//!   [`Scenario::default`] instance, schedule, and full metric row are
+//!   bit-identical to the pre-scenario path (`Dataset::instance`), for
+//!   every dataset, through both the static coordinator and the
+//!   reactive sim sweep.
+//! * **Deadline axes end-to-end** — zero-slack deadlines are all
+//!   missed, generous ones all met, and `weighted_tardiness ≡
+//!   mean_tardiness` bit-exactly at unit weights.
+//! * **DeadlineAware vs FixedLastK** — both run the same realized
+//!   world; the urgency-scoped controller is §II-valid, deterministic
+//!   across `--jobs`, and spends its reverts on deadline-bearing work.
+
+use dts::coordinator::{Coordinator, DynamicProblem, Policy, Variant};
+use dts::experiments::{
+    run_policy_sweep_parallel, run_sim_sweep_parallel, PolicyScenario, PolicySweepConfig,
+    SimScenario, SimSweepConfig,
+};
+use dts::graph::Gid;
+use dts::metrics::{Metric, MetricRow};
+use dts::policy::PolicySpec;
+use dts::schedule::Schedule;
+use dts::schedulers::SchedulerKind;
+use dts::sim::Reaction;
+use dts::workloads::{ArrivalModel, Dataset, DeadlineModel, Scenario, WeightModel, DEFAULT_LOAD};
+
+fn sig(s: &Schedule) -> Vec<(Gid, usize, u64, u64)> {
+    let mut v: Vec<(Gid, usize, u64, u64)> = s
+        .iter()
+        .map(|(g, a)| (*g, a.node, a.start.to_bits(), a.finish.to_bits()))
+        .collect();
+    v.sort();
+    v
+}
+
+/// Bitwise signature of every **pre-scenario** metric axis (the new
+/// deadline axes are excluded on purpose: they are new columns, and at
+/// default knobs they read exactly 0.0, which the test pins separately).
+fn metric_sig(m: &MetricRow) -> Vec<u64> {
+    vec![
+        m.total_makespan.to_bits(),
+        m.mean_makespan.to_bits(),
+        m.mean_flowtime.to_bits(),
+        m.mean_utilization.to_bits(),
+        m.mean_stretch.to_bits(),
+        m.max_stretch.to_bits(),
+        m.jain_fairness.to_bits(),
+        m.weighted_mean_stretch.to_bits(),
+        m.weighted_max_stretch.to_bits(),
+        m.weighted_jain.to_bits(),
+    ]
+}
+
+/// ACCEPTANCE PIN: at default scenario knobs every instance, schedule
+/// and pre-existing metric is bit-identical to the pre-scenario path,
+/// on all four datasets, and the new deadline columns read exactly 0.
+#[test]
+fn default_knobs_are_bit_identical_everywhere() {
+    for (di, dataset) in Dataset::ALL.iter().enumerate() {
+        let seed = 100 + di as u64;
+        let a = dataset.instance(10, seed);
+        let b = dataset.instance_scenario(10, seed, DEFAULT_LOAD, None, &Scenario::default());
+        // instance level: arrivals, structure, weights, deadlines
+        assert_eq!(a.graphs.len(), b.graphs.len());
+        for ((aa, ga), (ab, gb)) in a.graphs.iter().zip(b.graphs.iter()) {
+            assert_eq!(aa.to_bits(), ab.to_bits(), "{}", dataset.name());
+            assert_eq!(ga.n_tasks(), gb.n_tasks());
+            assert_eq!(ga.n_edges(), gb.n_edges());
+            assert_eq!(ga.weight().to_bits(), gb.weight().to_bits());
+            assert_eq!(ga.deadline(), None);
+            assert_eq!(gb.deadline(), None);
+            for t in 0..ga.n_tasks() {
+                assert_eq!(ga.cost(t).to_bits(), gb.cost(t).to_bits());
+            }
+        }
+        // schedule + metric level, through the static coordinator
+        let run = |prob: &DynamicProblem| {
+            let mut c = Coordinator::new(Policy::LastK(3), SchedulerKind::Heft.make(seed));
+            let res = c.run(prob);
+            let m = res.metrics(prob);
+            (sig(&res.schedule), m)
+        };
+        let (sa, ma) = run(&a);
+        let (sb, mb) = run(&b);
+        assert_eq!(sa, sb, "{} schedules diverge at default knobs", dataset.name());
+        assert_eq!(metric_sig(&ma), metric_sig(&mb), "{}", dataset.name());
+        // the new columns are exactly zero on deadline-free workloads
+        for m in [&ma, &mb] {
+            assert_eq!(m.deadline_miss_rate, 0.0);
+            assert_eq!(m.mean_tardiness, 0.0);
+            assert_eq!(m.max_tardiness, 0.0);
+            assert_eq!(m.weighted_tardiness, 0.0);
+        }
+    }
+}
+
+/// The same pin at the sweep level: a default-scenario reactive sweep
+/// produces bit-identical realized cells to one whose config predates
+/// the scenario field (constructed via `Scenario::default()`), and the
+/// deadline columns stay zero through the whole pipeline.
+#[test]
+fn default_knobs_sim_sweep_is_bit_stable() {
+    let variant = Variant::parse("5P-HEFT").unwrap();
+    let scenarios = vec![
+        SimScenario {
+            noise_std: 0.35,
+            reaction: Reaction::None,
+        },
+        SimScenario {
+            noise_std: 0.35,
+            reaction: Reaction::LastK {
+                k: 3,
+                threshold: 0.2,
+            },
+        },
+    ];
+    let cfg = SimSweepConfig {
+        dataset: Dataset::Synthetic,
+        n_graphs: 8,
+        trials: 2,
+        seed: 11,
+        load: DEFAULT_LOAD,
+        variant,
+        scenario: Scenario::default(),
+        scenarios,
+    };
+    let serial = run_sim_sweep_parallel(&cfg, 1);
+    let par = run_sim_sweep_parallel(&cfg, 4);
+    for (rs, rp) in serial.rows.iter().zip(par.rows.iter()) {
+        for (a, b) in rs.iter().zip(rp.iter()) {
+            assert_eq!(metric_sig(&a.realized), metric_sig(&b.realized));
+            assert_eq!(a.realized.deadline_miss_rate, 0.0);
+            assert_eq!(a.realized.mean_tardiness, 0.0);
+            assert_eq!(b.realized.weighted_tardiness, 0.0);
+        }
+    }
+}
+
+/// Zero-slack deadlines (deadline = arrival): every graph with work is
+/// tardy by exactly its response time, so the miss rate is 1 and the
+/// weighted axis equals the unweighted one bit-exactly at unit weights.
+#[test]
+fn zero_slack_deadlines_all_miss() {
+    let scen = Scenario {
+        weights: WeightModel::Unit,
+        deadlines: DeadlineModel::CritPathSlack { slack: 0.0 },
+        arrivals: ArrivalModel::Poisson,
+    };
+    let prob = Dataset::Synthetic.instance_scenario(10, 5, DEFAULT_LOAD, None, &scen);
+    for (arrival, g) in &prob.graphs {
+        assert_eq!(g.deadline(), Some(*arrival), "slack 0 → deadline = arrival");
+    }
+    let mut c = Coordinator::new(Policy::NonPreemptive, SchedulerKind::Heft.make(0));
+    let res = c.run(&prob);
+    let m = res.metrics(&prob);
+    assert_eq!(m.deadline_miss_rate, 1.0);
+    assert!(m.mean_tardiness > 0.0);
+    assert!(m.max_tardiness >= m.mean_tardiness);
+    // tardiness = finish − arrival = the per-graph response time; its
+    // mean is exactly the §V.B mean makespan here
+    assert_eq!(m.mean_tardiness.to_bits(), m.mean_makespan.to_bits());
+    // unit weights: weighted ≡ unweighted, bit for bit
+    assert_eq!(m.weighted_tardiness.to_bits(), m.mean_tardiness.to_bits());
+}
+
+/// Generous deadlines are all met: miss rate 0, zero tardiness on every
+/// axis — the degenerate "all-graphs-met" convention.
+#[test]
+fn generous_deadlines_all_met() {
+    let scen = Scenario {
+        weights: WeightModel::Unit,
+        deadlines: DeadlineModel::CritPathSlack { slack: 1e6 },
+        arrivals: ArrivalModel::Poisson,
+    };
+    let prob = Dataset::RiotBench.instance_scenario(8, 5, DEFAULT_LOAD, None, &scen);
+    let mut c = Coordinator::new(Policy::Preemptive, SchedulerKind::Cpop.make(0));
+    let res = c.run(&prob);
+    let m = res.metrics(&prob);
+    assert_eq!(m.deadline_miss_rate, 0.0);
+    assert_eq!(m.mean_tardiness, 0.0);
+    assert_eq!(m.max_tardiness, 0.0);
+    assert_eq!(m.weighted_tardiness, 0.0);
+}
+
+/// Non-unit weights actually reach the weighted axes through a full
+/// scenario instance (the PR-3 machinery ran on degenerate input until
+/// now): with heavy-tail weights the weighted mean stretch must differ
+/// from the unweighted one.
+#[test]
+fn heavy_tail_weights_reach_the_weighted_axes() {
+    let scen = Scenario {
+        weights: WeightModel::HeavyTail { alpha: 1.5 },
+        deadlines: DeadlineModel::None,
+        arrivals: ArrivalModel::Poisson,
+    };
+    let prob = Dataset::Synthetic.instance_scenario(12, 9, DEFAULT_LOAD, None, &scen);
+    let distinct: std::collections::HashSet<u64> =
+        prob.graphs.iter().map(|(_, g)| g.weight().to_bits()).collect();
+    assert!(distinct.len() > 1, "heavy tail must spread the weights");
+    let mut c = Coordinator::new(Policy::LastK(3), SchedulerKind::Heft.make(0));
+    let res = c.run(&prob);
+    let m = res.metrics(&prob);
+    assert_ne!(
+        m.weighted_mean_stretch.to_bits(),
+        m.mean_stretch.to_bits(),
+        "non-unit weights must move the weighted mean"
+    );
+    assert!(m.weighted_max_stretch >= m.max_stretch);
+}
+
+/// DeadlineAware is deterministic across thread counts in the policy
+/// sweep, on a full deadline/weight/bursty scenario, alongside the
+/// fixed and budgeted controllers it competes with.
+#[test]
+fn deadline_aware_policy_sweep_is_deterministic() {
+    let scen = Scenario {
+        weights: WeightModel::Classes {
+            weights: vec![1.0, 4.0, 16.0],
+        },
+        deadlines: DeadlineModel::CritPathSlack { slack: 1.2 },
+        arrivals: ArrivalModel::Bursty { burst: 2 },
+    };
+    let cfg = PolicySweepConfig {
+        dataset: Dataset::Synthetic,
+        n_graphs: 8,
+        trials: 2,
+        seed: 23,
+        load: DEFAULT_LOAD,
+        variant: Variant::parse("5P-HEFT").unwrap(),
+        scenario: scen,
+        scenarios: vec![
+            PolicyScenario {
+                noise_std: 0.4,
+                spec: PolicySpec::None,
+            },
+            PolicyScenario {
+                noise_std: 0.4,
+                spec: PolicySpec::FixedLastK {
+                    k: 3,
+                    threshold: 0.15,
+                },
+            },
+            PolicyScenario {
+                noise_std: 0.4,
+                spec: PolicySpec::DeadlineAware {
+                    k: 3,
+                    threshold: 0.15,
+                },
+            },
+        ],
+    };
+    let serial = run_policy_sweep_parallel(&cfg, 1);
+    assert_eq!(serial.labels[2], "σ0.40/D3@0.15");
+    for jobs in [2, 5] {
+        let par = run_policy_sweep_parallel(&cfg, jobs);
+        for (rs, rp) in serial.rows.iter().zip(par.rows.iter()) {
+            for (a, b) in rs.iter().zip(rp.iter()) {
+                assert_eq!(
+                    a.realized.total_makespan.to_bits(),
+                    b.realized.total_makespan.to_bits()
+                );
+                assert_eq!(
+                    a.realized.weighted_tardiness.to_bits(),
+                    b.realized.weighted_tardiness.to_bits()
+                );
+                assert_eq!(a.cost.reverted_tasks, b.cost.reverted_tasks);
+                assert_eq!(a.cost.straggler_replans, b.cost.straggler_replans);
+            }
+        }
+    }
+    // the deadline axes are populated in the sweep outputs
+    let csv = serial.to_csv();
+    assert!(csv.contains("deadline_miss_rate"));
+    assert!(csv.contains("w:classes3+d:s1.2+a:burst2"));
+    let any_miss = (0..serial.labels.len())
+        .any(|si| serial.realized_mean(si, Metric::DeadlineMissRate) > 0.0);
+    assert!(any_miss, "slack-1.2 deadlines under bursty load should miss");
+}

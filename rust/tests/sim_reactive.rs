@@ -13,10 +13,11 @@
 //!   its node and start time in the final realized schedule.
 
 use dts::coordinator::Policy;
+use dts::policy::PolicySpec;
 use dts::schedule::validate;
 use dts::schedulers::SchedulerKind;
 use dts::sim::{replay, Reaction, ReactiveCoordinator, SimConfig, SimResult};
-use dts::workloads::Dataset;
+use dts::workloads::{ArrivalModel, Dataset, DeadlineModel, Scenario, WeightModel, DEFAULT_LOAD};
 
 fn check_run(res: &SimResult, prob: &dts::coordinator::DynamicProblem, zero_noise: bool, ctx: &str) {
     assert_eq!(
@@ -120,6 +121,54 @@ fn prop_reactive_validity_other_heuristics() {
             let res = rc.run(&prob);
             let ctx = format!("{} {} reactive", dataset.name(), kind.name());
             check_run(&res, &prob, false, &ctx);
+        }
+    }
+}
+
+/// The same properties for the deadline scenario axis: all four
+/// datasets under heavy-tail weights, critical-path×slack deadlines and
+/// bursty arrivals, driven by the urgency-scoped [`dts::policy::DeadlineAware`]
+/// controller.  Asserts completeness, operational §II validity, the
+/// frozen-prefix invariant, and the graph-granular revert accounting
+/// (straggler replans re-place exactly what they reverted).
+#[test]
+fn prop_deadline_aware_validity_grid() {
+    let scen = Scenario {
+        weights: WeightModel::HeavyTail { alpha: 1.5 },
+        deadlines: DeadlineModel::CritPathSlack { slack: 1.5 },
+        arrivals: ArrivalModel::Bursty { burst: 3 },
+    };
+    for (di, dataset) in Dataset::ALL.iter().enumerate() {
+        let seed = 7000 + 13 * di as u64;
+        let prob = dataset.instance_scenario(9, seed, DEFAULT_LOAD, None, &scen);
+        assert!(prob.graphs.iter().all(|(_, g)| g.deadline().is_some()));
+        let cfg = SimConfig {
+            noise_std: 0.45,
+            noise_seed: seed ^ 0xDEAD,
+            reaction: Reaction::None,
+            record_frozen: true,
+        };
+        let spec = PolicySpec::DeadlineAware {
+            k: 3,
+            threshold: 0.1,
+        };
+        let mut rc = ReactiveCoordinator::with_policy(
+            Policy::LastK(3),
+            SchedulerKind::Heft.make(seed),
+            cfg,
+            spec.make(),
+        );
+        let res = rc.run(&prob);
+        let ctx = format!("{} deadline-aware", dataset.name());
+        check_run(&res, &prob, false, &ctx);
+        // graph-granular revert accounting, shared with the budget path
+        for rec in &res.replans {
+            if rec.straggler {
+                assert_eq!(rec.n_pending, rec.n_reverted, "{ctx} at {}", rec.time);
+                assert!(rec.n_reverted > 0, "{ctx}: empty straggler replan recorded");
+            } else {
+                assert!(rec.n_pending >= rec.n_reverted, "{ctx}");
+            }
         }
     }
 }
