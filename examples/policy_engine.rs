@@ -123,6 +123,7 @@ fn main() {
         noise_seed: 11,
         reaction: Reaction::None,
         record_frozen: false,
+        full_refresh: false,
     };
     let mut rc = ReactiveCoordinator::with_policy(
         Policy::LastK(5),

@@ -8,6 +8,11 @@
 //! `{ "<bench name>": {"mean": s, "min": s, "max": s}, ... }` — all
 //! values in seconds — so successive PRs have a machine-readable perf
 //! trajectory to diff against.
+//!
+//! `DTS_BENCH_SCALE=quick` (default; the CI bench smoke) keeps the
+//! `scale …` row at a ~1k-task composite; `DTS_BENCH_SCALE=paper` runs
+//! it at the ~10k-task production size.  See docs/PERF.md for how to
+//! read the `refresh`/`scale` rows.
 
 #[path = "util/mod.rs"]
 mod util;
@@ -96,6 +101,7 @@ fn main() {
             noise_seed: 1,
             reaction,
             record_frozen: false,
+            full_refresh: false,
         };
         let (mean, min, max) = util::time_it(1, 3, || {
             let mut rc =
@@ -104,6 +110,76 @@ fn main() {
         });
         rec.report(
             &format!("reactive 5P-HEFT σ0.3 {name} synthetic×100"),
+            mean,
+            min,
+            max,
+        );
+    }
+
+    // 1b'. belief-refresh A/B (§Refresh): the same reactive L3@0.25 run
+    // under the full-plan refresh oracle vs the incremental dirty-cone
+    // refresh — the pair isolates the per-replan belief-refresh cost
+    // (both are bit-identical, so any delta is pure refresh work).
+    for (name, full) in [("full", true), ("incremental", false)] {
+        let cfg = SimConfig {
+            noise_std: 0.3,
+            noise_seed: 1,
+            reaction: Reaction::LastK {
+                k: 3,
+                threshold: 0.25,
+            },
+            record_frozen: false,
+            full_refresh: full,
+        };
+        let (mean, min, max) = util::time_it(1, 3, || {
+            let mut rc =
+                ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
+            std::hint::black_box(rc.run(&prob));
+        });
+        rec.report(
+            &format!("refresh σ0.3 {name} 5P-HEFT L3@0.25 synthetic×100"),
+            mean,
+            min,
+            max,
+        );
+    }
+
+    // 1b''. production-scale composite (§Scale): the 10⁴-task reactive
+    // sweep cell the dirty-cone refresh unlocks — ~1200 synthetic graphs
+    // ≈ 10k tasks at paper scale (DTS_BENCH_SCALE=paper), a 10× reduced
+    // ~1k-task instance at the default quick scale so the CI bench smoke
+    // stays fast.  Compare against the `refresh σ0.3 incremental` row to
+    // read how the per-replan cost grows with composite size.
+    {
+        let (label, n_graphs) = if util::scale() == "paper" {
+            ("10k", 1200)
+        } else {
+            ("1k (quick)", 120)
+        };
+        let big = Dataset::Synthetic.instance(n_graphs, 1);
+        eprintln!(
+            "[bench] scale row: {} graphs, {} tasks ({} scale)",
+            big.graphs.len(),
+            big.total_tasks(),
+            util::scale()
+        );
+        let cfg = SimConfig {
+            noise_std: 0.3,
+            noise_seed: 1,
+            reaction: Reaction::LastK {
+                k: 3,
+                threshold: 0.25,
+            },
+            record_frozen: false,
+            full_refresh: false,
+        };
+        let (mean, min, max) = util::time_it(0, 1, || {
+            let mut rc =
+                ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
+            std::hint::black_box(rc.run(&big));
+        });
+        rec.report(
+            &format!("scale {label} 5P-HEFT σ0.3 L3@0.25"),
             mean,
             min,
             max,
@@ -138,6 +214,7 @@ fn main() {
             noise_seed: 1,
             reaction: Reaction::None,
             record_frozen: false,
+            full_refresh: false,
         };
         let label = spec.label();
         let (mean, min, max) = util::time_it(1, 3, || {
@@ -178,6 +255,7 @@ fn main() {
             noise_seed: 1,
             reaction: Reaction::None,
             record_frozen: false,
+            full_refresh: false,
         };
         let label = spec.label();
         let (mean, min, max) = util::time_it(1, 3, || {

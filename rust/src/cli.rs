@@ -77,14 +77,14 @@ USAGE:
   dts run        --dataset <d> [--graphs N] [--seed S] [--variant 5P-HEFT] [--xla]
   dts experiment [--config cfg.json | --dataset <d>] [--quick] [--csv out.csv]
                  [--jobs N]   (N worker threads; deterministic at any N)
-  dts simulate   --dataset <d|all> [--graphs N] [--trials T] [--seed S]
+  dts simulate   --dataset <d|all> [--graphs N] [--scale M] [--trials T] [--seed S]
                  [--variant 5P-HEFT] [--noise 0.0,0.3] [--threshold 0.25,none]
                  [--k 3] [--weighted [pareto|classes]] [--deadline-slack F]
                  [--arrival poisson|bursty] [--burst-size 4]
                  [--jobs N] [--csv out.csv] [--json out.json]
                  [--trace out.json]
                  (reactive runtime: realized durations, straggler Last-K)
-  dts policy     --dataset <d|all> [--graphs N] [--trials T] [--seed S]
+  dts policy     --dataset <d|all> [--graphs N] [--scale M] [--trials T] [--seed S]
                  [--variant 5P-HEFT] [--noise 0.3] [--k 1,3,5]
                  [--threshold 0.25] [--budget none,1.0] [--burst 4]
                  [--adaptive] [--target-stretch 2.0] [--kmax 20]
@@ -401,7 +401,13 @@ fn cmd_simulate(args: &Args) -> i32 {
     }
     let trials = args.usize_flag("trials", 2);
     let seed = args.u64_flag("seed", 0);
-    let graphs = args.usize_flag("graphs", 16);
+    // --scale multiplies --graphs: the large-composite stress axis the
+    // incremental belief refresh unlocks (e.g. --graphs 100 --scale 12
+    // ≈ a 10⁴-task composite at synthetic task counts)
+    let graphs = crate::experiments::scaled_graphs(
+        args.usize_flag("graphs", 16),
+        args.usize_flag("scale", 1),
+    );
 
     let mut csv_out = String::new();
     let mut json_parts = Vec::new();
@@ -476,6 +482,7 @@ fn cmd_simulate(args: &Args) -> i32 {
             noise_seed: seed ^ 0xA11CE,
             reaction: sc.reaction,
             record_frozen: false,
+            full_refresh: false,
         };
         let mut rc = crate::sim::ReactiveCoordinator::new(
             variant.policy,
@@ -688,7 +695,11 @@ fn cmd_policy(args: &Args) -> i32 {
     );
     let trials = args.usize_flag("trials", 2);
     let seed = args.u64_flag("seed", 0);
-    let graphs = args.usize_flag("graphs", 16);
+    // same --scale semantics as `dts simulate`
+    let graphs = crate::experiments::scaled_graphs(
+        args.usize_flag("graphs", 16),
+        args.usize_flag("scale", 1),
+    );
 
     let mut csv_out = String::new();
     let mut json_parts = Vec::new();
@@ -935,6 +946,26 @@ mod tests {
             main_with(&argv(
                 "simulate --dataset synthetic --graphs 5 --trials 1 \
                  --noise 0.0,0.4 --threshold 0.2,none --k 2 --jobs 2"
+            )),
+            0
+        );
+    }
+
+    #[test]
+    fn simulate_scale_smoke() {
+        // --scale multiplies --graphs (the large-composite stress axis);
+        // an 8-graph scaled run must complete like its unscaled twin
+        assert_eq!(
+            main_with(&argv(
+                "simulate --dataset synthetic --graphs 4 --scale 2 --trials 1 \
+                 --noise 0.3 --threshold 0.25 --k 2 --jobs 2"
+            )),
+            0
+        );
+        assert_eq!(
+            main_with(&argv(
+                "policy --dataset synthetic --graphs 3 --scale 2 --trials 1 \
+                 --noise 0.3 --k 2 --threshold 0.25 --budget none --jobs 2"
             )),
             0
         );

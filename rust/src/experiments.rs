@@ -353,6 +353,17 @@ pub fn core_variants() -> Vec<Variant> {
 
 // ----------------------------------------------------- reactive sweeps
 
+/// The `--scale` axis of `dts simulate` / `dts policy`: a composite
+/// size multiplier layered on `--graphs`, so production-scale sweeps
+/// (the 10⁴-task composites the dirty-cone refresh targets — e.g.
+/// `--graphs 100 --scale 12`) are one flag away from the paper-default
+/// instances instead of a hand-computed graph count.  `scale` 0 is
+/// treated as 1 (the unscaled sweep); the product saturates rather than
+/// overflowing on absurd inputs.
+pub fn scaled_graphs(n_graphs: usize, scale: usize) -> usize {
+    n_graphs.saturating_mul(scale.max(1))
+}
+
 /// One point of the noise × reaction grid evaluated by `dts simulate`.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SimScenario {
@@ -476,6 +487,7 @@ fn run_sim_cell(
         noise_seed: seed ^ 0xA11CE,
         reaction: scenario.reaction,
         record_frozen: false,
+        full_refresh: false,
     };
     let mut rc = ReactiveCoordinator::new(
         cfg.variant.policy,
@@ -890,6 +902,7 @@ fn run_policy_cell(
         noise_seed: seed ^ 0xA11CE,
         reaction: Reaction::None,
         record_frozen: false,
+        full_refresh: false,
     };
     let mut rc = ReactiveCoordinator::with_policy(
         cfg.variant.policy,
@@ -1357,6 +1370,14 @@ mod tests {
                 },
             ],
         }
+    }
+
+    #[test]
+    fn scaled_graphs_multiplies_and_saturates() {
+        assert_eq!(scaled_graphs(16, 1), 16);
+        assert_eq!(scaled_graphs(100, 12), 1200);
+        assert_eq!(scaled_graphs(16, 0), 16, "scale 0 means unscaled");
+        assert_eq!(scaled_graphs(usize::MAX, 2), usize::MAX);
     }
 
     #[test]

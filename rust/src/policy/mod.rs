@@ -89,6 +89,13 @@ pub enum ScopeOrder {
     /// deadlines rank last; ties break toward recency, so on a
     /// deadline-free workload the order degrades to recency over the
     /// incomplete graphs.
+    ///
+    /// The predicted completions are belief finishes **as of the last
+    /// refresh** — under the incremental dirty-cone refresh these are
+    /// bit-identical to the full-refresh oracle's (pinned by
+    /// `rust/tests/refresh_incremental.rs`), so urgency selections, and
+    /// with them whole sweep trajectories, are independent of the
+    /// refresh mode.
     DeadlineUrgency,
 }
 

@@ -166,6 +166,58 @@ impl Timelines {
         false
     }
 
+    /// Index of the slot owned by `gid` on node `v` whose start time is
+    /// `start`, by binary search on the sorted slot list (the lookup
+    /// half of [`remove_at`](Self::remove_at)).  The belief refresh uses
+    /// it to turn a task's [`Assignment`] into a slot-list position —
+    /// the per-gid slot cursor of the dirty-cone seeding — without
+    /// scanning the node.
+    pub fn find_idx(&self, v: usize, gid: Gid, start: f64) -> Option<usize> {
+        let list = &self.slots[v];
+        let mut i = list.partition_point(|s| s.start < start - EPS);
+        while i < list.len() && list[i].start <= start + EPS {
+            if list[i].gid == gid {
+                return Some(i);
+            }
+            i += 1;
+        }
+        debug_assert!(
+            !list.iter().any(|s| s.gid == gid),
+            "find_idx({v}, {gid}, {start}): slot exists at a different start"
+        );
+        None
+    }
+
+    /// Remove the slot at a **known index** (§Perf: the belief refresh
+    /// walks a node's slot list and already holds the position, so the
+    /// [`remove_at`](Self::remove_at) binary search would be wasted
+    /// work).  Removing a suffix back-to-front through this method costs
+    /// O(1) per slot — no interior shift ever happens.
+    pub fn remove_idx(&mut self, v: usize, idx: usize) -> Slot {
+        debug_assert!(!self.txn_active, "removal inside a timeline transaction");
+        self.slots[v].remove(idx)
+    }
+
+    /// Append a slot at the **tail** of node `v` — O(1), skipping
+    /// [`insert`](Self::insert)'s `partition_point`.  The dirty-cone
+    /// re-derivation only ever appends (every re-derived start clears
+    /// the node's current tail), so the per-slot binary search of the
+    /// old full refresh disappears.  Panics in debug builds if the slot
+    /// does not belong at the tail.
+    pub fn push_tail(&mut self, v: usize, slot: Slot) {
+        let list = &mut self.slots[v];
+        if let Some(last) = list.last() {
+            debug_assert!(
+                last.finish <= slot.start + EPS,
+                "push_tail on node {v}: {slot:?} overlaps tail {last:?}"
+            );
+        }
+        list.push(slot);
+        if self.txn_active {
+            self.journal.push((v, slot.gid, slot.start));
+        }
+    }
+
     /// Earliest start >= `ready` at which a task of length `dur` fits into
     /// node `v`'s timeline — the **insertion-based** policy of HEFT:
     /// interior gaps are eligible, not just the tail.
@@ -282,6 +334,42 @@ impl Schedule {
         let removed = self.timelines.remove_at(a.node, gid, a.start);
         debug_assert!(removed, "assignment map and timelines out of sync");
         Some(a)
+    }
+
+    /// Drop node `v`'s slot suffix `[from..]` — timelines **and**
+    /// assignment map — back-to-front, so each removal pops the current
+    /// tail: O(suffix) total, no binary search, no interior shift.
+    /// §Perf: the incremental belief refresh evicts its dirty cone
+    /// through this (the cone is a per-node suffix by construction);
+    /// per-gid [`unassign`](Self::unassign) would pay a `partition_point`
+    /// plus an interior `Vec::remove` shift for every evicted slot.
+    pub fn unassign_tail(&mut self, v: usize, from: usize) {
+        while self.timelines.slots[v].len() > from {
+            let slot = self.timelines.remove_idx(v, self.timelines.slots[v].len() - 1);
+            let removed = self.assign.remove(&slot.gid);
+            debug_assert!(
+                removed.is_some(),
+                "assignment map and timelines out of sync for {}",
+                slot.gid
+            );
+        }
+    }
+
+    /// Record a placement whose slot belongs at the **tail** of its
+    /// node's timeline — the dirty-cone re-derivation path (every
+    /// re-derived start clears the node's running tail), using
+    /// [`Timelines::push_tail`] instead of the sorted insert.
+    pub fn assign_tail(&mut self, gid: Gid, a: Assignment) {
+        let prev = self.assign.insert(gid, a);
+        assert!(prev.is_none(), "task {gid} assigned twice");
+        self.timelines.push_tail(
+            a.node,
+            Slot {
+                start: a.start,
+                finish: a.finish,
+                gid,
+            },
+        );
     }
 }
 
@@ -444,6 +532,66 @@ mod tests {
         assert!(tl.remove_at(0, gid(2), 5.0));
         assert!(tl.remove_at(0, gid(0), 5.0));
         assert!(tl.node_slots(0).is_empty());
+    }
+
+    #[test]
+    fn find_idx_and_remove_idx() {
+        let mut tl = Timelines::new(1);
+        for i in 0..10 {
+            let t = i as f64 * 2.0;
+            tl.insert(0, Slot { start: t, finish: t + 1.0, gid: gid(i) });
+        }
+        assert_eq!(tl.find_idx(0, gid(4), 8.0), Some(4));
+        assert_eq!(tl.find_idx(0, gid(99), 8.0), None);
+        let s = tl.remove_idx(0, 4);
+        assert_eq!(s.gid, gid(4));
+        assert_eq!(tl.find_idx(0, gid(4), 8.0), None);
+        assert_eq!(tl.find_idx(0, gid(5), 10.0), Some(4), "indices shift down");
+    }
+
+    #[test]
+    fn push_tail_matches_insert_at_tail() {
+        let mut a = Timelines::new(1);
+        let mut b = Timelines::new(1);
+        for i in 0..5 {
+            let t = i as f64 * 3.0;
+            let slot = Slot { start: t, finish: t + 2.0, gid: gid(i) };
+            a.insert(0, slot);
+            b.push_tail(0, slot);
+        }
+        assert_eq!(a.node_slots(0), b.node_slots(0));
+        // journaling applies to tail pushes too
+        b.begin_txn();
+        b.push_tail(0, Slot { start: 20.0, finish: 21.0, gid: gid(9) });
+        assert_eq!(b.txn_len(), 1);
+        b.rollback_txn();
+        assert_eq!(b.node_slots(0), a.node_slots(0));
+    }
+
+    #[test]
+    fn unassign_tail_drops_suffix_and_map_entries() {
+        let mut s = Schedule::new(2);
+        for i in 0..6 {
+            let t = i as f64 * 2.0;
+            s.assign(gid(i), Assignment { node: 0, start: t, finish: t + 1.0 });
+        }
+        s.assign(gid(10), Assignment { node: 1, start: 0.0, finish: 4.0 });
+        s.unassign_tail(0, 2);
+        assert_eq!(s.timelines().node_slots(0).len(), 2);
+        assert_eq!(s.n_assigned(), 3);
+        for i in 0..2 {
+            assert!(s.get(gid(i)).is_some());
+        }
+        for i in 2..6 {
+            assert!(s.get(gid(i)).is_none(), "suffix slot {i} must be gone");
+        }
+        assert!(s.get(gid(10)).is_some(), "other nodes untouched");
+        // from == len is a no-op; re-adding via assign_tail round-trips
+        s.unassign_tail(0, 2);
+        assert_eq!(s.timelines().node_slots(0).len(), 2);
+        s.assign_tail(gid(7), Assignment { node: 0, start: 9.0, finish: 9.5 });
+        assert_eq!(s.timelines().node_slots(0).last().unwrap().gid, gid(7));
+        assert_eq!(s.get(gid(7)).unwrap().start, 9.0);
     }
 
     #[test]

@@ -42,6 +42,34 @@
 //! steady state; all refresh scratch buffers live in the simulator and
 //! are reused across events.
 //!
+//! **Incremental belief refresh (dirty-cone replanning).**  The belief
+//! refresh at each replan is *output-sensitive*: instead of re-deriving
+//! every pending task (the original full refresh, retained verbatim as
+//! `Sim::refresh_belief_full` — the differential oracle, selected by
+//! [`SimConfig::full_refresh`] or the `DTS_FULL_REFRESH` env var), the
+//! simulator seeds a **dirty set** from (a) the reverted tasks, (b) the
+//! dispatched tasks whose observed truth diverged from the belief —
+//! tracked as the tasks that started/finished since the last refresh
+//! plus the currently running set, never a scan of all dispatched work
+//! — and (c) the pending tasks whose `max(arrival, now, node tail,
+//! preds + comm)` floor actually moved (at most one O(1) probe per
+//! node: pending slots are start-sorted, so the stale-floor tasks are a
+//! prefix of each node's pending suffix).  Dirtiness propagates through
+//! the graphs' successor lists and the per-node slot order — which
+//! keeps every node's dirty region a contiguous *suffix* of its pending
+//! slots — and only the resulting downstream cone is evicted
+//! ([`crate::schedule::Schedule::unassign_tail`], O(1) per slot) and
+//! re-derived with a readiness worklist
+//! ([`crate::schedule::Schedule::assign_tail`], O(1) per slot),
+//! replacing the old O(rounds × nodes) round-robin.  Untouched tasks
+//! keep their stored values, which the recurrence would reproduce
+//! bit-exactly (their inputs are unchanged and their stored start
+//! already clears the new `now` floor), so the incremental refresh is
+//! **bit-identical** to the full oracle — pinned across all four
+//! datasets × noise × controllers by `rust/tests/refresh_incremental.rs`.
+//! [`ReplanRecord::n_refreshed`] counts the re-derived tasks (the cone
+//! size), the sublinearity instrumentation of that suite.
+//!
 //! **Frozen-prefix invariant**: a task that has started executing is
 //! never moved by any replan — reverts only ever select tasks the
 //! runtime has not dispatched.  [`SimConfig::record_frozen`] makes every
@@ -114,6 +142,12 @@ pub struct SimConfig {
     /// Snapshot the dispatched set at every replan into
     /// [`ReplanRecord::frozen`] (test instrumentation; off by default).
     pub record_frozen: bool,
+    /// Use the retained full-plan belief refresh instead of the
+    /// incremental dirty-cone refresh (the differential oracle; the
+    /// `DTS_FULL_REFRESH` env var forces it process-wide).  Off by
+    /// default: the incremental refresh is bit-identical and
+    /// output-sensitive.
+    pub full_refresh: bool,
 }
 
 /// One rescheduling pass of a simulated run.
@@ -126,6 +160,14 @@ pub struct ReplanRecord {
     pub n_reverted: usize,
     /// composite size handed to the base heuristic
     pub n_pending: usize,
+    /// pending tasks whose expected times the belief refresh re-derived
+    /// (reverted tasks excluded — they go back to the heuristic).  The
+    /// full oracle re-derives every kept pending task; the incremental
+    /// refresh only its dirty cone, so this is the §V.E sublinearity
+    /// counter the operation-count regression tests pin (never compare
+    /// it across refresh modes — the schedules are bit-identical, the
+    /// work counts intentionally are not).
+    pub n_refreshed: usize,
     /// wall-clock seconds this pass spent (belief refresh + base
     /// heuristic + cursor bookkeeping) — the per-replan §V.E cost
     pub wall_s: f64,
@@ -152,6 +194,11 @@ pub struct SimResult {
     /// Total wall time of whole replan passes (belief refresh + base
     /// heuristic + bookkeeping) — a superset of `sched_runtime_s`.
     pub replan_wall_s: f64,
+    /// Peak event-queue length observed during the run — instrumentation
+    /// for the [`EventQueue::with_capacity`] pre-reservation: whenever
+    /// this stays within the Σ tasks × 2 + graphs reservation the heap
+    /// never reallocated.
+    pub events_peak: usize,
 }
 
 impl SimResult {
@@ -184,6 +231,13 @@ impl SimResult {
             .filter(|r| r.straggler)
             .map(|r| r.n_reverted)
             .sum()
+    }
+
+    /// Pending tasks re-derived by belief refreshes across all replans
+    /// ([`ReplanRecord::n_refreshed`] summed) — the run-level
+    /// sublinearity counter of the incremental-refresh tests.
+    pub fn n_refreshed_total(&self) -> usize {
+        self.replans.iter().map(|r| r.n_refreshed).sum()
     }
 
     /// The run's preemption-cost accounting (replans, reverted tasks,
@@ -220,6 +274,14 @@ struct Sim<'a> {
     /// dispatch-decision epochs; a [`SimEvent::TaskStart`] is valid only
     /// while its epoch matches (replans and newer decisions invalidate)
     node_epoch: Vec<u64>,
+    /// the live queued start decision per node, `(gid, start bits)` —
+    /// §Perf: between replans a node's computed decision never changes
+    /// (completed predecessors' finishes are fixed and event order keeps
+    /// `now ≤ start`), so [`Sim::dispatch_all`] skips re-pushing an
+    /// identical decision instead of stranding an epoch-stale event in
+    /// the queue per event in a comm-wait window.  Cleared per node when
+    /// its start fires, and wholesale when a replan bumps the epochs.
+    pending_start: Vec<Option<(Gid, u64)>>,
     /// dispatched-prefix length per node in plan slot order
     cursor: Vec<usize>,
     queue: EventQueue,
@@ -232,6 +294,16 @@ struct Sim<'a> {
     replans: Vec<ReplanRecord>,
     sched_runtime_s: f64,
     replan_wall_s: f64,
+    /// peak queue length seen so far (pre-reservation instrumentation)
+    events_peak: usize,
+    /// resolved refresh mode: [`SimConfig::full_refresh`] or the
+    /// `DTS_FULL_REFRESH` env var
+    full_refresh: bool,
+    /// tasks that started or finished since the last belief refresh —
+    /// together with the currently running set, the only dispatched
+    /// entries whose observed truth can have diverged from the belief
+    /// (dirty-cone seed b; drained by every refresh)
+    dirty_dispatched: Vec<Gid>,
     // --- reusable scratch (steady-state replans allocate nothing) ---
     refresh_order: Vec<Vec<Gid>>,
     refresh_next: Vec<usize>,
@@ -242,6 +314,43 @@ struct Sim<'a> {
     /// urgency-ranked `(belief slack, graph)` scratch of the
     /// deadline-urgency scope selection
     urgency: Vec<(f64, usize)>,
+    /// per node: first dirty pending-slot index (`usize::MAX` = clean);
+    /// the dirty cone on every node is the suffix from this index
+    dirty_from: Vec<usize>,
+    /// per node: lowest slot index whose graph successors were already
+    /// propagated by the closure (avoids re-walking a grown suffix)
+    scan_from: Vec<usize>,
+    /// closure worklist of nodes whose dirty suffix grew
+    node_stack: Vec<usize>,
+    /// divergence-candidate scratch (sorted + deduped per refresh)
+    cand: Vec<Gid>,
+    /// cone membership: task → (node, per-node cone position, unplaced
+    /// blockers) for the readiness worklist
+    cone: FxHashMap<Gid, ConeEntry>,
+    /// readiness worklist of cone positions `(node, cone index)`
+    ready: Vec<(u32, u32)>,
+    /// nodes whose slot lists the current replan touched — the cursor
+    /// recompute scope (untouched nodes keep their incrementally
+    /// maintained cursors)
+    touched: Vec<bool>,
+}
+
+/// One dirty-cone member during the incremental refresh: where it sits
+/// (`node`, position `pos` in that node's captured cone order) and how
+/// many unplaced blockers — its in-cone node predecessor plus its
+/// in-cone graph predecessors — still gate its re-derivation.
+struct ConeEntry {
+    node: u32,
+    pos: u32,
+    blockers: u32,
+}
+
+/// `DTS_FULL_REFRESH` (any value but `0`) forces the full-refresh
+/// oracle process-wide — the escape hatch / A-B switch of the
+/// incremental belief refresh.
+fn full_refresh_forced() -> bool {
+    static FORCED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *FORCED.get_or_init(|| std::env::var_os("DTS_FULL_REFRESH").is_some_and(|v| v != "0"))
 }
 
 /// Which graphs a replan pass may revert — the coordinator-side
@@ -258,7 +367,13 @@ enum RevertSel {
 impl<'a> Sim<'a> {
     fn new(prob: &'a DynamicProblem, cfg: SimConfig) -> Self {
         let n = prob.network.n_nodes();
-        let mut queue = EventQueue::new();
+        // §Perf: pre-reserve the event heap from the instance — the
+        // up-front arrivals, one in-flight finish per running task, one
+        // live start decision per idle node (deduplicated; see
+        // `pending_start`), plus headroom for replan-invalidated starts
+        // — so the steady-state loop never grows the allocation.
+        let mut queue =
+            EventQueue::with_capacity(prob.total_tasks() * 2 + prob.graphs.len());
         for (i, (arrival, _)) in prob.graphs.iter().enumerate() {
             queue.push(*arrival, SimEvent::GraphArrival { idx: i });
         }
@@ -273,6 +388,7 @@ impl<'a> Sim<'a> {
             node_running: vec![None; n],
             node_free: vec![0.0; n],
             node_epoch: vec![0; n],
+            pending_start: vec![None; n],
             cursor: vec![0; n],
             queue,
             arrived: 0,
@@ -281,6 +397,9 @@ impl<'a> Sim<'a> {
             replans: Vec::new(),
             sched_runtime_s: 0.0,
             replan_wall_s: 0.0,
+            events_peak: 0,
+            full_refresh: cfg.full_refresh || full_refresh_forced(),
+            dirty_dispatched: Vec::new(),
             refresh_order: vec![Vec::new(); n],
             refresh_next: vec![0; n],
             node_tail: vec![0.0; n],
@@ -288,6 +407,13 @@ impl<'a> Sim<'a> {
             fix: Vec::new(),
             revert_set: FxHashSet::default(),
             urgency: Vec::new(),
+            dirty_from: vec![usize::MAX; n],
+            scan_from: vec![usize::MAX; n],
+            node_stack: Vec::new(),
+            cand: Vec::new(),
+            cone: FxHashMap::default(),
+            ready: Vec::new(),
+            touched: vec![false; n],
         }
     }
 
@@ -381,6 +507,16 @@ impl<'a> Sim<'a> {
                 continue;
             }
             let start = start.max(now);
+            // identical live decision already queued → don't strand
+            // another epoch-stale event (the computed decision cannot
+            // change between replans: predecessors' realized finishes
+            // are fixed once complete, and no event pops after `start`
+            // before the start itself fires, so the `now` floor never
+            // binds differently)
+            if self.pending_start[v] == Some((gid, start.to_bits())) {
+                continue;
+            }
+            self.pending_start[v] = Some((gid, start.to_bits()));
             self.node_epoch[v] += 1;
             self.queue.push(
                 start,
@@ -396,14 +532,37 @@ impl<'a> Sim<'a> {
     /// Project observed reality onto the belief schedule: dispatched
     /// tasks snap to their observed truth (running tasks get
     /// `max(expected finish, now)` — the coordinator cannot see a future
-    /// realized finish), and every pending task's expected start/finish
-    /// is re-derived in planned per-node order, floored at `now`.
-    /// Tasks in `revert` are dropped from the belief entirely (the
-    /// caller hands them back to the base heuristic).
-    fn refresh_belief(&mut self, now: f64, revert: &[Gid]) {
+    /// realized finish), and every **affected** pending task's expected
+    /// start/finish is re-derived in planned per-node order, floored at
+    /// `now`.  Tasks in `revert` are dropped from the belief entirely
+    /// (the caller hands them back to the base heuristic).  Returns the
+    /// number of pending tasks re-derived
+    /// ([`ReplanRecord::n_refreshed`]).
+    ///
+    /// Dispatches between the incremental dirty-cone refresh (default)
+    /// and the retained full-plan oracle — the two are bit-identical.
+    fn refresh_belief(&mut self, now: f64, revert: &[Gid]) -> usize {
+        if self.full_refresh {
+            self.refresh_belief_full(now, revert)
+        } else {
+            self.refresh_belief_incremental(now, revert)
+        }
+    }
+
+    /// The original full-plan refresh, retained **verbatim** as the
+    /// differential oracle for
+    /// [`refresh_belief_incremental`](Self::refresh_belief_incremental):
+    /// rescans every node's slot list, re-checks every dispatched entry
+    /// and re-derives every kept pending task — O(pending + dispatched)
+    /// per replan, with the O(rounds × nodes) round-robin re-derive.
+    fn refresh_belief_full(&mut self, now: f64, revert: &[Gid]) -> usize {
         let n = self.n_nodes();
         self.revert_set.clear();
         self.revert_set.extend(revert.iter().copied());
+        // the incremental seed journal restarts from the refreshed state
+        self.dirty_dispatched.clear();
+        // every node is rebuilt — recompute every cursor afterwards
+        self.touched.iter_mut().for_each(|t| *t = true);
 
         // 1. capture the pending per-node order; drop all pending slots
         self.to_remove.clear();
@@ -465,6 +624,7 @@ impl<'a> Sim<'a> {
                 .last()
                 .map_or(0.0, |s| s.finish);
         }
+        let n_refreshed = remaining;
         let mut placed_any = true;
         while placed_any && remaining > 0 {
             placed_any = false;
@@ -508,12 +668,353 @@ impl<'a> Sim<'a> {
             remaining, 0,
             "belief refresh deadlocked — pending order inconsistent with deps"
         );
+        n_refreshed
+    }
+
+    /// The observed truth the belief snaps a dispatched task to: the
+    /// realized placement once completed; while running, the realized
+    /// start with finish `max(expected, now)` (no future-peeking).
+    fn truth_of(&self, gid: Gid, now: f64) -> Assignment {
+        let ra = self.realized.get(gid).unwrap();
+        if self.completed.contains(&gid) {
+            *ra
+        } else {
+            Assignment {
+                node: ra.node,
+                start: ra.start,
+                finish: self.expected_finish[&gid].max(now),
+            }
+        }
+    }
+
+    /// Incremental dirty-cone refresh — bit-identical to
+    /// [`refresh_belief_full`](Self::refresh_belief_full), touching only
+    /// the tasks whose derivation inputs actually changed (see the
+    /// module docs for the seed/closure construction and the
+    /// bit-exactness argument).  O(seeds + cone) per replan instead of
+    /// O(pending + dispatched).
+    fn refresh_belief_incremental(&mut self, now: f64, revert: &[Gid]) -> usize {
+        /// Lower node `v`'s dirty suffix to start at `idx` and requeue
+        /// the node for closure propagation.
+        fn lower(dirty_from: &mut [usize], stack: &mut Vec<usize>, v: usize, idx: usize) {
+            if idx < dirty_from[v] {
+                dirty_from[v] = idx;
+                stack.push(v);
+            }
+        }
+
+        let n = self.n_nodes();
+        self.revert_set.clear();
+        self.revert_set.extend(revert.iter().copied());
+        let mut dirty_from = std::mem::take(&mut self.dirty_from);
+        let mut scan_from = std::mem::take(&mut self.scan_from);
+        let mut stack = std::mem::take(&mut self.node_stack);
+        for v in 0..n {
+            dirty_from[v] = usize::MAX;
+            scan_from[v] = usize::MAX;
+        }
+        debug_assert!(stack.is_empty());
+
+        // --- seed (a): reverted tasks dirty their node suffix from the
+        // evicted slot on (their node successors shift up to the gap)
+        for &gid in revert {
+            let a = self
+                .plan
+                .get(gid)
+                .expect("reverted task missing from the belief");
+            debug_assert!(!self.dispatched(gid), "revert of a dispatched task");
+            let idx = self
+                .plan
+                .timelines()
+                .find_idx(a.node, gid, a.start)
+                .expect("reverted task has no slot");
+            lower(&mut dirty_from, &mut stack, a.node, idx);
+        }
+
+        // --- seed (c): pending tasks whose `now` floor moved.  Pending
+        // slots are start-sorted, so the stale ones are a prefix of each
+        // node's pending suffix: one O(1) probe at the cursor suffices —
+        // the suffix-closure covers the rest of the run.
+        for v in 0..n {
+            let slots = self.plan.timelines().node_slots(v);
+            let c = self.cursor[v];
+            if c < slots.len() && slots[c].start < now {
+                lower(&mut dirty_from, &mut stack, v, c);
+            }
+        }
+
+        // --- seed (b): dispatched divergence.  Only tasks that started
+        // or finished since the last refresh, plus the currently running
+        // set (their `max(expected, now)` cap moves with `now`), can
+        // have drifted from the belief — everything else was snapped to
+        // its (immutable) truth by an earlier refresh.
+        let mut cand = std::mem::take(&mut self.cand);
+        cand.clear();
+        cand.append(&mut self.dirty_dispatched);
+        cand.extend(self.node_running.iter().flatten().copied());
+        cand.sort_unstable();
+        cand.dedup();
+        self.fix.clear();
+        let mut fix = std::mem::take(&mut self.fix);
+        for &gid in &cand {
+            debug_assert!(self.dispatched(gid));
+            let truth = self.truth_of(gid, now);
+            let pa = self
+                .plan
+                .get(gid)
+                .expect("dispatched task missing from the belief");
+            if *pa != truth {
+                fix.push((gid, truth));
+            }
+        }
+        for &(gid, truth) in &fix {
+            let v = truth.node;
+            let c = self.cursor[v];
+            debug_assert!(c > 0, "fix on a node with no dispatched prefix");
+            // dispatched-tail seed: the first pending slot chains off the
+            // last dispatched finish; re-derive the suffix if it moved
+            let slots = self.plan.timelines().node_slots(v);
+            let old_tail = slots[c - 1].finish;
+            let new_tail = match self.node_running[v] {
+                Some(g) => self.expected_finish[&g].max(now),
+                None => self.node_free[v],
+            };
+            if old_tail != new_tail && c < slots.len() {
+                lower(&mut dirty_from, &mut stack, v, c);
+            }
+            // graph-successor seeds: only a *finish* change can move a
+            // successor (the node never diverges — dispatch follows the
+            // plan's placement)
+            let pa = self.plan.get(gid).unwrap();
+            if pa.finish != truth.finish {
+                let g = &self.prob.graphs[gid.graph as usize].1;
+                for &(s, _) in g.successors(gid.task as usize) {
+                    let sgid = Gid::new(gid.graph as usize, s);
+                    if self.revert_set.contains(&sgid) || self.dispatched(sgid) {
+                        continue;
+                    }
+                    let Some(sa) = self.plan.get(sgid) else {
+                        continue;
+                    };
+                    let sidx = self
+                        .plan
+                        .timelines()
+                        .find_idx(sa.node, sgid, sa.start)
+                        .expect("pending successor has no slot");
+                    lower(&mut dirty_from, &mut stack, sa.node, sidx);
+                }
+            }
+        }
+
+        // --- closure: a dirty task can move, so its node successors
+        // (the rest of the suffix) and pending graph successors are
+        // dirty too.  `scan_from` guarantees each slot's successor list
+        // is walked once, however often the suffix grows.
+        while let Some(v) = stack.pop() {
+            let lo = dirty_from[v];
+            let hi = scan_from[v].min(self.plan.timelines().node_slots(v).len());
+            if lo >= hi {
+                continue;
+            }
+            scan_from[v] = lo;
+            for idx in lo..hi {
+                let slot = self.plan.timelines().node_slots(v)[idx];
+                let gid = slot.gid;
+                debug_assert!(
+                    !self.dispatched(gid),
+                    "dirty cone reached the dispatched prefix on node {v}"
+                );
+                let g = &self.prob.graphs[gid.graph as usize].1;
+                if self.revert_set.contains(&gid) {
+                    // a reverted task's pending successors are reverted
+                    // with it (reverts are graph-granular), so there is
+                    // nothing to propagate to
+                    debug_assert!(
+                        g.successors(gid.task as usize).iter().all(|&(s, _)| {
+                            let sgid = Gid::new(gid.graph as usize, s);
+                            self.revert_set.contains(&sgid) || self.dispatched(sgid)
+                        }),
+                        "reverted {gid} leaves a kept pending successor"
+                    );
+                    continue;
+                }
+                for &(s, _) in g.successors(gid.task as usize) {
+                    let sgid = Gid::new(gid.graph as usize, s);
+                    if self.revert_set.contains(&sgid) || self.dispatched(sgid) {
+                        continue;
+                    }
+                    let Some(sa) = self.plan.get(sgid) else {
+                        continue;
+                    };
+                    let sidx = self
+                        .plan
+                        .timelines()
+                        .find_idx(sa.node, sgid, sa.start)
+                        .expect("pending successor has no slot");
+                    lower(&mut dirty_from, &mut stack, sa.node, sidx);
+                }
+            }
+        }
+
+        // --- evict the cone (per-node pending suffixes), capturing the
+        // kept tasks in slot order; reverted slots leave the belief here
+        let mut n_kept = 0usize;
+        for v in 0..n {
+            self.refresh_order[v].clear();
+            let from = dirty_from[v];
+            if from >= self.plan.timelines().node_slots(v).len() {
+                continue;
+            }
+            debug_assert!(from >= self.cursor[v], "cone overlaps dispatched prefix");
+            self.touched[v] = true;
+            for s in &self.plan.timelines().node_slots(v)[from..] {
+                if !self.revert_set.contains(&s.gid) {
+                    self.refresh_order[v].push(s.gid);
+                }
+            }
+            n_kept += self.refresh_order[v].len();
+            self.plan.unassign_tail(v, from);
+        }
+        debug_assert!(
+            revert.iter().all(|g| self.plan.get(*g).is_none()),
+            "a reverted task survived cone eviction"
+        );
+
+        // --- apply the dispatched fixes, two-phase like the oracle.
+        // Every kept pending slot starts at or after its node's belief
+        // tail (else the tail seed or the `now` floor coned it), so the
+        // truths can never overlap a kept slot.
+        for &(gid, _) in &fix {
+            self.plan.unassign(gid);
+        }
+        for &(gid, a) in &fix {
+            self.plan.assign(gid, a);
+            self.touched[a.node] = true;
+        }
+
+        // --- re-derive the cone with a readiness worklist (replaces the
+        // oracle's O(rounds × nodes) round-robin): a task is ready once
+        // its in-cone node predecessor and in-cone graph predecessors
+        // are placed; everything else reads final values from the plan.
+        self.cone.clear();
+        for v in 0..n {
+            for (j, &gid) in self.refresh_order[v].iter().enumerate() {
+                self.cone.insert(
+                    gid,
+                    ConeEntry {
+                        node: v as u32,
+                        pos: j as u32,
+                        blockers: u32::from(j > 0),
+                    },
+                );
+            }
+        }
+        for order in &self.refresh_order {
+            for &gid in order {
+                let g = &self.prob.graphs[gid.graph as usize].1;
+                let mut extra = 0u32;
+                for &(p, _) in g.predecessors(gid.task as usize) {
+                    let pgid = Gid::new(gid.graph as usize, p);
+                    if self.cone.contains_key(&pgid) {
+                        extra += 1;
+                    }
+                }
+                if extra > 0 {
+                    self.cone.get_mut(&gid).unwrap().blockers += extra;
+                }
+            }
+        }
+        self.ready.clear();
+        for v in 0..n {
+            if self.refresh_order[v].is_empty() {
+                continue;
+            }
+            self.node_tail[v] = self
+                .plan
+                .timelines()
+                .node_slots(v)
+                .last()
+                .map_or(0.0, |s| s.finish);
+            for (j, &gid) in self.refresh_order[v].iter().enumerate() {
+                if self.cone[&gid].blockers == 0 {
+                    self.ready.push((v as u32, j as u32));
+                }
+            }
+        }
+        let mut placed = 0usize;
+        while let Some((v, j)) = self.ready.pop() {
+            let v = v as usize;
+            let gid = self.refresh_order[v][j as usize];
+            let (arrival, g) = &self.prob.graphs[gid.graph as usize];
+            // same accumulation order as the oracle, for bit-exactness
+            let mut start = arrival.max(now).max(self.node_tail[v]);
+            for &(p, data) in g.predecessors(gid.task as usize) {
+                let pgid = Gid::new(gid.graph as usize, p);
+                let pa = self
+                    .plan
+                    .get(pgid)
+                    .expect("predecessor neither placed nor committed in the belief");
+                start =
+                    start.max(pa.finish + self.prob.network.comm_time(data, pa.node, v));
+            }
+            let dur = self.prob.network.exec_time(g.cost(gid.task as usize), v);
+            self.plan.assign_tail(
+                gid,
+                Assignment {
+                    node: v,
+                    start,
+                    finish: start + dur,
+                },
+            );
+            self.node_tail[v] = start + dur;
+            placed += 1;
+            if (j as usize) + 1 < self.refresh_order[v].len() {
+                let ngid = self.refresh_order[v][j as usize + 1];
+                let e = self.cone.get_mut(&ngid).unwrap();
+                e.blockers -= 1;
+                if e.blockers == 0 {
+                    self.ready.push((e.node, e.pos));
+                }
+            }
+            for &(s, _) in g.successors(gid.task as usize) {
+                let sgid = Gid::new(gid.graph as usize, s);
+                if let Some(e) = self.cone.get_mut(&sgid) {
+                    e.blockers -= 1;
+                    if e.blockers == 0 {
+                        self.ready.push((e.node, e.pos));
+                    }
+                }
+            }
+        }
+        assert_eq!(
+            placed, n_kept,
+            "belief refresh deadlocked — dirty cone inconsistent with deps"
+        );
+
+        fix.clear();
+        self.fix = fix;
+        cand.clear();
+        self.cand = cand;
+        self.dirty_from = dirty_from;
+        self.scan_from = scan_from;
+        self.node_stack = stack;
+        n_kept
     }
 
     /// Recompute the dispatched-prefix cursors after a replan reshaped
-    /// the plan's slot lists.
+    /// the plan's slot lists — only for the **touched** nodes (belief
+    /// refresh evictions/fixes plus heuristic insertions; the callers
+    /// stamp [`Sim::touched`]).  An untouched node's slot list did not
+    /// change during the replan and `TaskStart` maintains its cursor
+    /// incrementally, so its recount — and its share of the prefix
+    /// `debug_assert` walk — is skipped.  The full-refresh oracle
+    /// touches every node, restoring the old full recompute.
     fn recompute_cursors(&mut self) {
         for v in 0..self.n_nodes() {
+            if !self.touched[v] {
+                continue;
+            }
+            self.touched[v] = false;
             let slots = self.plan.timelines().node_slots(v);
             let mut c = 0;
             while c < slots.len() && self.realized.get(slots[c].gid).is_some() {
@@ -607,6 +1108,7 @@ impl ReactiveCoordinator {
     /// Run the reactive event loop over the whole problem.
     pub fn run(&mut self, prob: &DynamicProblem) -> SimResult {
         let mut sim = Sim::new(prob, self.cfg);
+        sim.events_peak = sim.queue.len();
 
         while let Some((t, ev)) = sim.queue.pop() {
             match ev {
@@ -644,8 +1146,10 @@ impl ReactiveCoordinator {
                     );
                     sim.expected_finish.insert(gid, t + est);
                     sim.node_running[node] = Some(gid);
+                    sim.pending_start[node] = None; // decision consumed
                     sim.node_free[node] = t + rdur;
                     sim.cursor[node] += 1;
+                    sim.dirty_dispatched.push(gid);
                     sim.queue.push(t + rdur, SimEvent::TaskFinish { gid });
                     sim.log.push(SimLogEntry {
                         time: t,
@@ -657,6 +1161,7 @@ impl ReactiveCoordinator {
                     sim.completed.insert(gid);
                     debug_assert_eq!(sim.node_running[a.node], Some(gid));
                     sim.node_running[a.node] = None;
+                    sim.dirty_dispatched.push(gid);
                     let expected = sim.expected_finish[&gid];
                     let lateness = t - expected;
                     sim.log.push(SimLogEntry {
@@ -740,6 +1245,7 @@ impl ReactiveCoordinator {
                     sim.dispatch_all(t);
                 }
             }
+            sim.events_peak = sim.events_peak.max(sim.queue.len());
         }
 
         assert_eq!(
@@ -754,6 +1260,7 @@ impl ReactiveCoordinator {
             replans: sim.replans,
             sched_runtime_s: sim.sched_runtime_s,
             replan_wall_s: sim.replan_wall_s,
+            events_peak: sim.events_peak,
         }
     }
 
@@ -861,8 +1368,9 @@ impl ReactiveCoordinator {
         }
 
         // belief refresh drops the reverted slots and re-derives the
-        // expected times of every frozen pending task
-        sim.refresh_belief(now, &pending);
+        // expected times of the affected frozen pending tasks (all of
+        // them under the full-refresh oracle, the dirty cone otherwise)
+        let n_refreshed = sim.refresh_belief(now, &pending);
 
         if let Some(i) = new_graph {
             let g = &sim.prob.graphs[i].1;
@@ -882,12 +1390,17 @@ impl ReactiveCoordinator {
         sim.sched_runtime_s += t0.elapsed().as_secs_f64();
         for (idx, a) in assignments.iter().enumerate() {
             sim.plan.record(problem.tasks[idx].gid, *a);
+            sim.touched[a.node] = true;
         }
         let n_pending = problem.n_tasks();
         sim.plan.timelines_mut().commit_txn();
 
         for v in 0..sim.n_nodes() {
             sim.node_epoch[v] += 1; // stale dispatch decisions die here
+            // the queued decisions just went stale: forget them so the
+            // next dispatch_all re-pushes under the new epoch (a kept
+            // record would dedup against a dead event → deadlock)
+            sim.pending_start[v] = None;
         }
         sim.recompute_cursors();
 
@@ -912,6 +1425,7 @@ impl ReactiveCoordinator {
             straggler,
             n_reverted,
             n_pending,
+            n_refreshed,
             wall_s,
             frozen,
         });
@@ -966,6 +1480,7 @@ mod tests {
                         noise_seed: 9,
                         reaction,
                         record_frozen: false,
+                        full_refresh: false,
                     };
                     let mut rc =
                         ReactiveCoordinator::new(Policy::NonPreemptive, kind.make(0), cfg);
@@ -997,6 +1512,7 @@ mod tests {
                 noise_seed: 0,
                 reaction: Reaction::None,
                 record_frozen: false,
+                full_refresh: false,
             };
             let mut rc = ReactiveCoordinator::new(policy, SchedulerKind::Heft.make(0), cfg);
             let got = rc.run(&prob);
@@ -1019,6 +1535,7 @@ mod tests {
                     threshold: 0.25,
                 },
                 record_frozen: false,
+                full_refresh: false,
             };
             let mut rc = ReactiveCoordinator::new(policy, SchedulerKind::Heft.make(0), cfg);
             let res = rc.run(&prob);
@@ -1048,6 +1565,7 @@ mod tests {
                 noise_seed: 3,
                 reaction,
                 record_frozen: false,
+                full_refresh: false,
             };
             let mut rc =
                 ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
@@ -1073,6 +1591,7 @@ mod tests {
                 threshold: 0.05,
             },
             record_frozen: false,
+            full_refresh: false,
         };
         let mut rc =
             ReactiveCoordinator::new(Policy::NonPreemptive, SchedulerKind::Heft.make(0), cfg);
@@ -1099,6 +1618,7 @@ mod tests {
                 threshold: 0.1,
             },
             record_frozen: true,
+            full_refresh: false,
         };
         let mut rc =
             ReactiveCoordinator::new(Policy::Preemptive, SchedulerKind::Cpop.make(0), cfg);
@@ -1124,6 +1644,7 @@ mod tests {
                 threshold: 0.15,
             },
             record_frozen: false,
+            full_refresh: false,
         };
         let run = || {
             let mut rc =
@@ -1137,6 +1658,81 @@ mod tests {
         assert_eq!(a.log.len(), b.log.len());
     }
 
+    /// Quick in-module pin of the dirty-cone refresh: same run, both
+    /// refresh modes, bit-identical realized schedules and replan
+    /// shapes, and the incremental pass never re-derives more than the
+    /// full oracle (the exhaustive dataset × noise × controller matrix
+    /// lives in `rust/tests/refresh_incremental.rs`).
+    #[test]
+    fn incremental_refresh_matches_full_oracle() {
+        let prob = Dataset::Synthetic.instance(12, 9);
+        let run = |full: bool| {
+            let cfg = SimConfig {
+                noise_std: 0.5,
+                noise_seed: 4,
+                reaction: Reaction::LastK {
+                    k: 3,
+                    threshold: 0.1,
+                },
+                record_frozen: false,
+                full_refresh: full,
+            };
+            let mut rc =
+                ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
+            rc.run(&prob)
+        };
+        let fast = run(false);
+        let oracle = run(true);
+        assert_eq!(sig(&fast.schedule), sig(&oracle.schedule));
+        assert_eq!(fast.n_replans(), oracle.n_replans());
+        assert!(fast.n_straggler_replans() > 0, "scenario must exercise stragglers");
+        for (a, b) in fast.replans.iter().zip(oracle.replans.iter()) {
+            assert_eq!(a.time.to_bits(), b.time.to_bits());
+            assert_eq!(
+                (a.straggler, a.n_reverted, a.n_pending),
+                (b.straggler, b.n_reverted, b.n_pending)
+            );
+            assert!(a.n_refreshed <= b.n_refreshed, "cone exceeded full refresh");
+        }
+        assert!(fast.n_refreshed_total() <= oracle.n_refreshed_total());
+    }
+
+    /// The event heap is pre-reserved from the instance (Σ tasks × 2 +
+    /// graphs); the observed peak queue length must stay inside that
+    /// reservation, so the heap never grows mid-run.
+    #[test]
+    fn event_queue_reservation_survives_run() {
+        for (noise, reaction) in [
+            (0.0, Reaction::None),
+            (
+                0.6,
+                Reaction::LastK {
+                    k: 3,
+                    threshold: 0.1,
+                },
+            ),
+        ] {
+            let prob = Dataset::Synthetic.instance(15, 11);
+            let reserve = prob.total_tasks() * 2 + prob.graphs.len();
+            let cfg = SimConfig {
+                noise_std: noise,
+                noise_seed: 5,
+                reaction,
+                record_frozen: false,
+                full_refresh: false,
+            };
+            let mut rc =
+                ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
+            let res = rc.run(&prob);
+            assert!(res.events_peak > 0);
+            assert!(
+                res.events_peak <= reserve,
+                "peak {} exceeds reservation {reserve}",
+                res.events_peak
+            );
+        }
+    }
+
     #[test]
     fn labels_render() {
         let cfg = SimConfig {
@@ -1147,6 +1743,7 @@ mod tests {
                 threshold: 0.25,
             },
             record_frozen: false,
+            full_refresh: false,
         };
         let rc = ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
         assert_eq!(rc.label(), "5P-HEFT σ0.30 L3@0.25");
@@ -1241,6 +1838,7 @@ mod tests {
             noise_seed: 3,
             reaction: Reaction::None,
             record_frozen: true,
+            full_refresh: false,
         };
         let spec = PolicySpec::DeadlineAware {
             k: 4,
@@ -1274,6 +1872,7 @@ mod tests {
             noise_seed: 2,
             reaction: Reaction::None,
             record_frozen: true,
+            full_refresh: false,
         };
         let spec = PolicySpec::Budgeted {
             k: 3,

@@ -86,6 +86,28 @@ impl EventQueue {
         Self::default()
     }
 
+    /// An empty queue whose heap is pre-reserved for `cap` events.
+    /// §Perf: the simulator sizes this from the instance (Σ tasks × 2 +
+    /// graphs): the up-front arrivals, at most one in-flight finish per
+    /// running task, at most one **live** start decision per idle node
+    /// (the simulator deduplicates unchanged decisions instead of
+    /// stranding an epoch-stale event per re-evaluation), plus headroom
+    /// for the replan-invalidated start events that drain at their pop
+    /// times — so the steady-state event loop never grows the heap
+    /// allocation ([`crate::sim::SimResult::events_peak`] pins it).
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            heap: BinaryHeap::with_capacity(cap),
+            seq: 0,
+        }
+    }
+
+    /// Current heap capacity (events the queue can hold without
+    /// reallocating) — instrumentation for the pre-reservation tests.
+    pub fn capacity(&self) -> usize {
+        self.heap.capacity()
+    }
+
     /// Enqueue `ev` at `time` (must be finite).  The push order is
     /// recorded, so equal `(time, kind)` entries pop in push order.
     pub fn push(&mut self, time: f64, ev: SimEvent) {
@@ -183,6 +205,29 @@ mod tests {
             })
             .collect();
         assert_eq!(idxs, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn with_capacity_survives_push_pop_waves() {
+        // the simulator's access pattern: pre-reserve once, then push
+        // and pop in waves that never exceed the reservation — the heap
+        // allocation must never grow
+        let cap = 64;
+        let mut q = EventQueue::with_capacity(cap);
+        let initial = q.capacity();
+        assert!(initial >= cap);
+        for wave in 0..5 {
+            for i in 0..cap {
+                q.push((wave * cap + i) as f64, SimEvent::GraphArrival { idx: i });
+            }
+            assert_eq!(q.len(), cap);
+            while q.pop().is_some() {}
+        }
+        assert_eq!(
+            q.capacity(),
+            initial,
+            "heap reallocated despite pre-reservation"
+        );
     }
 
     #[test]

@@ -1,7 +1,13 @@
 //! Runtime simulation: discrete-event **replay** of a finished schedule
 //! (this module) and the **reactive runtime** ([`coordinator`]) in which
 //! realized durations deviate from the estimates and the coordinator
-//! observes actual finish times and reschedules stragglers.
+//! observes actual finish times and reschedules stragglers.  The
+//! coordinator's belief schedule is kept current by an **incremental
+//! dirty-cone refresh** (O(seeds + cone) per replan, bit-identical to
+//! the retained full-plan oracle behind [`SimConfig::full_refresh`] /
+//! `DTS_FULL_REFRESH`), which is what lets the runtime drive 10⁴-task
+//! composites at paper-default trial counts — see the [`coordinator`]
+//! module docs and docs/PERF.md.
 //!
 //! The replay walks (start, finish) events in time order, maintaining the
 //! set of running tasks per node and asserting the §II invariants as they

@@ -367,6 +367,7 @@ mod tests {
                 threshold: 0.15,
             },
             record_frozen: false,
+            full_refresh: false,
         };
         let mut rc =
             ReactiveCoordinator::new(Policy::LastK(3), SchedulerKind::Heft.make(0), cfg);

@@ -69,6 +69,7 @@ fn fixed_lastk_matches_reaction_path_on_all_datasets() {
             noise_seed: seed ^ 0xACE,
             reaction: Reaction::LastK { k, threshold },
             record_frozen: false,
+            full_refresh: false,
         };
         let want = run_reaction(&prob, cfg);
         let got = run_spec(&prob, cfg, &PolicySpec::FixedLastK { k, threshold });
@@ -255,6 +256,7 @@ fn budgeted_never_exceeds_token_budget() {
                     noise_seed: seed ^ 0xB00C,
                     reaction: Reaction::None,
                     record_frozen: false,
+                    full_refresh: false,
                 };
                 let res = run_spec(
                     &prob,
@@ -306,6 +308,7 @@ fn tight_budget_reverts_less_than_uncapped() {
         noise_seed: 8,
         reaction: Reaction::None,
         record_frozen: false,
+        full_refresh: false,
     };
     let (k, threshold) = (5, 0.05);
     let uncapped = run_spec(&prob, cfg, &PolicySpec::FixedLastK { k, threshold });
@@ -340,6 +343,7 @@ fn cooldown_zero_is_transparent_and_infinite_fires_once() {
         noise_seed: 6,
         reaction: Reaction::None,
         record_frozen: false,
+        full_refresh: false,
     };
     let inner = PolicySpec::FixedLastK {
         k: 4,
@@ -380,6 +384,7 @@ fn adaptive_k_is_valid_on_all_datasets() {
             noise_seed: 41,
             reaction: Reaction::None,
             record_frozen: true,
+            full_refresh: false,
         };
         let res = run_spec(
             &prob,

@@ -76,6 +76,7 @@ fn prop_reactive_validity_grid() {
                         noise_seed: seed ^ 0xBEEF,
                         reaction,
                         record_frozen: true,
+                        full_refresh: false,
                     };
                     let mut rc = ReactiveCoordinator::new(
                         policy,
@@ -116,6 +117,7 @@ fn prop_reactive_validity_other_heuristics() {
                     threshold: 0.15,
                 },
                 record_frozen: true,
+                full_refresh: false,
             };
             let mut rc = ReactiveCoordinator::new(Policy::LastK(2), kind.make(seed), cfg);
             let res = rc.run(&prob);
@@ -147,6 +149,7 @@ fn prop_deadline_aware_validity_grid() {
             noise_seed: seed ^ 0xDEAD,
             reaction: Reaction::None,
             record_frozen: true,
+            full_refresh: false,
         };
         let spec = PolicySpec::DeadlineAware {
             k: 3,
@@ -188,6 +191,7 @@ fn prop_replan_accounting_is_consistent() {
             threshold: 0.1,
         },
         record_frozen: true,
+        full_refresh: false,
     };
     let mut rc = ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(1), cfg);
     let res = rc.run(&prob);
