@@ -1,0 +1,108 @@
+#!/usr/bin/env python3
+"""Diff a fresh BENCH_hotpath.json against a committed baseline.
+
+Usage:
+    python3 python/bench_diff.py BENCH_baseline.json BENCH_hotpath.json \
+        [--warn-pct 20] [--fail-ratio 2.0]
+
+Each file maps bench-row name -> {"mean": s, "min": s, "max": s,
+"allocs": n} (see rust/benches/perf_hotpath.rs).  For every row present
+in both files the script compares the fresh mean against the baseline
+mean:
+
+  * ratio >= --fail-ratio (default 2.0x)  -> FAIL (exit 1)
+  * ratio >= 1 + --warn-pct/100 (def 20%) -> WARN (exit 0)
+
+Speedups, new rows and removed rows are reported informationally.
+`allocs` regressions (a zero-alloc row that started allocating) are
+warned about but never fail: the column is populated only by
+`--features alloc-count` builds, so a 0 may simply mean "not measured".
+
+A missing baseline file is not an error: benches are environment
+-specific, so a fresh clone has no baseline until a toolchain-equipped
+run commits one (see docs/PERF.md).  The script prints a note and exits
+0 so the CI perf-smoke job stays green until then.
+
+Rows with sub-microsecond baseline means are skipped — at that scale
+timer jitter swamps any real regression.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+MIN_MEAN_S = 1e-6  # ignore rows faster than this: pure timer noise
+
+
+def load(path: str) -> dict:
+    with open(path) as fh:
+        data = json.load(fh)
+    if not isinstance(data, dict):
+        raise SystemExit(f"{path}: expected a JSON object of bench rows")
+    return data
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("fresh", help="freshly generated BENCH_hotpath.json")
+    ap.add_argument("--warn-pct", type=float, default=20.0,
+                    help="warn when the mean regresses by this percent")
+    ap.add_argument("--fail-ratio", type=float, default=2.0,
+                    help="fail when fresh/baseline mean reaches this ratio")
+    args = ap.parse_args()
+
+    try:
+        base = load(args.baseline)
+    except FileNotFoundError:
+        print(f"[bench-diff] no baseline at {args.baseline} — nothing to "
+              "compare (commit one from a toolchain-equipped run to arm "
+              "this gate)")
+        return 0
+    fresh = load(args.fresh)
+
+    warn_ratio = 1.0 + args.warn_pct / 100.0
+    failures: list[str] = []
+    warnings: list[str] = []
+
+    for name in sorted(base):
+        if name not in fresh:
+            print(f"[bench-diff] removed row: {name}")
+            continue
+        b, f = base[name], fresh[name]
+        b_mean, f_mean = float(b.get("mean", 0.0)), float(f.get("mean", 0.0))
+        if b_mean < MIN_MEAN_S:
+            continue
+        ratio = f_mean / b_mean
+        line = f"{name}: {b_mean:.6f}s -> {f_mean:.6f}s ({ratio:.2f}x)"
+        if ratio >= args.fail_ratio:
+            failures.append(line)
+        elif ratio >= warn_ratio:
+            warnings.append(line)
+        b_allocs = int(b.get("allocs", 0))
+        f_allocs = int(f.get("allocs", 0))
+        if b_allocs == 0 and f_allocs > 0:
+            warnings.append(f"{name}: allocs 0 -> {f_allocs} (zero-alloc row "
+                            "started allocating?)")
+
+    for name in sorted(set(fresh) - set(base)):
+        print(f"[bench-diff] new row (no baseline): {name}")
+
+    for line in warnings:
+        print(f"[bench-diff] WARN {line}")
+    for line in failures:
+        print(f"[bench-diff] FAIL {line}")
+
+    if failures:
+        print(f"[bench-diff] {len(failures)} row(s) regressed "
+              f">= {args.fail_ratio:.1f}x vs {args.baseline}")
+        return 1
+    n = len([k for k in base if k in fresh])
+    print(f"[bench-diff] OK: {n} shared row(s), {len(warnings)} warning(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -113,10 +113,10 @@ fn insertion_vs_append() {
         let mut gap_filled = 0usize;
         let mut total = 0usize;
         for v in 0..prob.network.n_nodes() {
-            let slots = res.schedule.timelines().node_slots(v);
-            total += slots.len();
-            for w in slots.windows(2) {
-                if w[0].gid.graph > w[1].gid.graph {
+            let gids = res.schedule.timelines().slot_gids(v);
+            total += gids.len();
+            for w in gids.windows(2) {
+                if w[0].graph > w[1].graph {
                     gap_filled += 1;
                 }
             }

@@ -18,7 +18,7 @@
 mod util;
 
 use dts::config::ExperimentConfig;
-use dts::coordinator::{Coordinator, Policy, Variant};
+use dts::coordinator::{run_reference, Coordinator, Policy, Variant};
 use dts::experiments::run_sweep_parallel;
 use dts::graph::Gid;
 use dts::json;
@@ -28,9 +28,13 @@ use dts::schedulers::SchedulerKind;
 use dts::sim::{Reaction, ReactiveCoordinator, SimConfig};
 use dts::workloads::Dataset;
 
-/// Collected (name, mean, min, max) rows for the JSON dump.
+/// Collected (name, mean, min, max, allocs) rows for the JSON dump.
+/// `allocs` is the heap-allocation count of one measured run (the
+/// §Layout observability column) — it reads 0 unless the bench is built
+/// with `--features alloc-count`, which registers the counting
+/// allocator from `dts::alloc_count`.
 struct Recorder {
-    rows: Vec<(String, f64, f64, f64)>,
+    rows: Vec<(String, f64, f64, f64, u64)>,
 }
 
 impl Recorder {
@@ -39,21 +43,29 @@ impl Recorder {
     }
 
     fn report(&mut self, name: &str, mean: f64, min: f64, max: f64) {
+        self.report_allocs(name, mean, min, max, 0);
+    }
+
+    fn report_allocs(&mut self, name: &str, mean: f64, min: f64, max: f64, allocs: u64) {
         util::report(name, mean, min, max);
-        self.rows.push((name.to_string(), mean, min, max));
+        if allocs > 0 {
+            eprintln!("    allocs/run: {allocs}");
+        }
+        self.rows.push((name.to_string(), mean, min, max, allocs));
     }
 
     fn to_json(&self) -> json::Value {
         json::obj(
             self.rows
                 .iter()
-                .map(|(name, mean, min, max)| {
+                .map(|(name, mean, min, max, allocs)| {
                     (
                         name.as_str(),
                         json::obj(vec![
                             ("mean", json::num(*mean)),
                             ("min", json::num(*min)),
                             ("max", json::num(*max)),
+                            ("allocs", json::num(*allocs as f64)),
                         ]),
                     )
                 })
@@ -108,11 +120,17 @@ fn main() {
                 ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
             std::hint::black_box(rc.run(&prob));
         });
-        rec.report(
+        let allocs = {
+            let mut rc =
+                ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
+            rc.run(&prob).replan_allocs
+        };
+        rec.report_allocs(
             &format!("reactive 5P-HEFT σ0.3 {name} synthetic×100"),
             mean,
             min,
             max,
+            allocs,
         );
     }
 
@@ -136,11 +154,17 @@ fn main() {
                 ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
             std::hint::black_box(rc.run(&prob));
         });
-        rec.report(
+        let allocs = {
+            let mut rc =
+                ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
+            rc.run(&prob).replan_allocs
+        };
+        rec.report_allocs(
             &format!("refresh σ0.3 {name} 5P-HEFT L3@0.25 synthetic×100"),
             mean,
             min,
             max,
+            allocs,
         );
     }
 
@@ -178,11 +202,50 @@ fn main() {
                 ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
             std::hint::black_box(rc.run(&big));
         });
-        rec.report(
+        let allocs = {
+            let mut rc =
+                ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
+            rc.run(&big).replan_allocs
+        };
+        rec.report_allocs(
             &format!("scale {label} 5P-HEFT σ0.3 L3@0.25"),
             mean,
             min,
             max,
+            allocs,
+        );
+    }
+
+    // 1b'''. memory-layout A/B (§Layout): the retained AoS/map reference
+    // coordinator — fresh composite `Problem` allocation and
+    // FxHashMap-keyed schedule per arrival — vs the production
+    // CSR/SoA/dense-id workspace path.  Both produce bit-identical
+    // schedules (pinned by rust/tests/layout_dense.rs), so the time and
+    // `allocs` deltas are pure memory-layout work.  Build with
+    // `--features alloc-count` to populate the allocs column.
+    for (name, soa) in [("aos-ref", false), ("soa", true)] {
+        let run_once = || {
+            if soa {
+                let mut c = Coordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0));
+                std::hint::black_box(c.run(&prob).schedule.n_assigned())
+            } else {
+                let (schedule, _) =
+                    run_reference(Policy::LastK(5), SchedulerKind::Heft.make(0), &prob);
+                std::hint::black_box(schedule.n_assigned())
+            }
+        };
+        let (mean, min, max) = util::time_it(1, 3, || {
+            run_once();
+        });
+        let a0 = dts::alloc_count::alloc_count();
+        run_once();
+        let allocs = dts::alloc_count::alloc_count() - a0;
+        rec.report_allocs(
+            &format!("layout {name} 5P-HEFT synthetic×100"),
+            mean,
+            min,
+            max,
+            allocs,
         );
     }
 

@@ -34,7 +34,7 @@ fn random_problem(n: usize, seed: u64) -> Problem {
             }
         }
     }
-    Problem { tasks }
+    Problem::from_tasks(tasks)
 }
 
 fn main() {

@@ -1,0 +1,94 @@
+//! Allocation-accounting harness (§Perf, PR 6).
+//!
+//! A thin counting wrapper around the system allocator, registered as
+//! the `#[global_allocator]` **only** in the crate's own unit-test build
+//! (`cfg(test)`) or when the `alloc-count` feature is enabled (used by
+//! `cargo bench --features alloc-count` to populate the `allocs` column
+//! of `BENCH_hotpath.json`).  Plain release builds keep the untouched
+//! system allocator.
+//!
+//! The counter is thread-local, so parallel test threads don't pollute
+//! each other's deltas: the zero-allocation steady-state pin
+//! (`coordinator::tests::workspace_steady_state_allocates_nothing`)
+//! measures exactly the allocations of its own thread.
+//!
+//! Usage: snapshot [`alloc_count()`] before and after the region of
+//! interest; the difference is the number of `alloc`/`realloc`/
+//! `alloc_zeroed` calls made by this thread (deallocations are not
+//! counted — a steady-state region that frees but never allocates is
+//! already in trouble elsewhere).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Number of heap allocations made by the current thread so far (0 if
+/// the counting allocator is not registered — i.e. outside `cfg(test)`
+/// builds and builds without the `alloc-count` feature).
+pub fn alloc_count() -> u64 {
+    ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+#[inline]
+fn bump() {
+    // try_with: TLS may be unavailable during thread teardown; losing a
+    // count there is fine (nothing measures across teardown).
+    let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+/// Counting pass-through over [`System`].
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[cfg(any(test, feature = "alloc-count"))]
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_this_threads_allocations() {
+        let before = alloc_count();
+        let v: Vec<u64> = Vec::with_capacity(32);
+        let after = alloc_count();
+        assert!(after > before, "allocation was counted");
+        drop(v);
+        assert_eq!(alloc_count(), after, "dealloc not counted");
+    }
+
+    #[test]
+    fn no_alloc_region_measures_zero() {
+        let mut v: Vec<u64> = Vec::with_capacity(8);
+        let before = alloc_count();
+        for i in 0..8 {
+            v.push(i); // within capacity: no allocation
+        }
+        let after = alloc_count();
+        assert_eq!(after - before, 0);
+    }
+}

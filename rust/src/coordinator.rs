@@ -13,8 +13,10 @@
 //! * [`Policy::LastK`] — revert pending tasks of the K most recently
 //!   arrived graphs only (KP-NAME, the paper's Last-K model).
 
+use std::sync::Arc;
 use std::time::Instant;
 
+use crate::dense::{DenseIds, DenseMap};
 use crate::graph::{Gid, TaskGraph};
 use crate::metrics::MetricRow;
 use crate::network::Network;
@@ -98,6 +100,16 @@ impl DynamicProblem {
     pub fn total_tasks(&self) -> usize {
         self.graphs.iter().map(|(_, g)| g.n_tasks()).sum()
     }
+
+    /// The `Gid ↔ DenseId` bijection over every task of every graph
+    /// (§Perf, PR 6): built once per problem; the coordinator and the
+    /// reactive runtime index flat arrays with it instead of hashing
+    /// gids on the hot path.
+    pub fn dense_ids(&self) -> Arc<DenseIds> {
+        Arc::new(DenseIds::from_counts(
+            self.graphs.iter().map(|(_, g)| g.n_tasks()),
+        ))
+    }
 }
 
 /// Per-arrival trace record.
@@ -140,19 +152,38 @@ impl DynamicResult {
 /// of up-to-thousands-of-task problems.  The workspace keeps the task
 /// vector (including every task's `preds`/`succs` allocations), the
 /// pending-set buffer and the `Gid → index` map alive across arrivals,
-/// so steady-state builds perform no heap allocation at all.  The
-/// produced [`Problem`] is bit-identical to [`build_composite`]'s (see
-/// the `workspace_builder_matches_reference` test).
+/// so steady-state builds perform no heap allocation at all (pinned by
+/// the `workspace_steady_state_allocates_nothing` test against the
+/// counting allocator).  The produced [`Problem`] is bit-identical to
+/// [`build_composite`]'s (see the `workspace_builder_matches_reference`
+/// test).
+///
+/// §Perf (PR 6): the `Gid → composite index` lookup is an epoch-stamped
+/// [`DenseMap`] over the problem's [`DenseIds`] universe instead of a
+/// hash map — clearing it per arrival is one epoch bump, and each parent
+/// probe is a flat array read.
 #[derive(Default)]
 pub struct CompositeWorkspace {
     pending: Vec<Gid>,
-    index: crate::fasthash::FxHashMap<Gid, usize>,
+    ids: Arc<DenseIds>,
+    index: DenseMap<u32>,
     problem: Problem,
 }
 
 impl CompositeWorkspace {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// (Re)bind the dense-id universe to `prob` if the cached one does
+    /// not already cover exactly its graphs.  Steady state (same problem
+    /// across arrivals) is a cheap `matches` scan, no allocation.
+    fn ensure_ids(&mut self, prob: &DynamicProblem) {
+        if !self.ids.matches(prob.graphs.iter().map(|(_, g)| g.n_tasks())) {
+            self.ids = Arc::new(DenseIds::from_counts(
+                prob.graphs.iter().map(|(_, g)| g.n_tasks()),
+            ));
+        }
     }
 
     /// Assemble the composite [`Problem`] for `pending` in place: pending
@@ -179,9 +210,10 @@ impl CompositeWorkspace {
         schedule: &Schedule,
         floor: f64,
     ) -> &Problem {
-        self.index.clear();
+        self.ensure_ids(prob);
+        self.index.reset(self.ids.len());
         for (i, &g) in pending.iter().enumerate() {
-            self.index.insert(g, i);
+            self.index.insert(self.ids.ix(g), i as u32);
         }
 
         let tasks = &mut self.problem.tasks;
@@ -210,7 +242,8 @@ impl CompositeWorkspace {
             let g = &prob.graphs[gid.graph as usize].1;
             for &(p, data) in g.predecessors(gid.task as usize) {
                 let pgid = Gid::new(gid.graph as usize, p);
-                if let Some(&pidx) = self.index.get(&pgid) {
+                if let Some(&pidx) = self.index.get(self.ids.ix(pgid)) {
+                    let pidx = pidx as usize;
                     tasks[ci].preds.push(Pred::Pending { idx: pidx, data });
                     tasks[pidx].succs.push((ci, data));
                 } else {
@@ -226,6 +259,9 @@ impl CompositeWorkspace {
             }
         }
 
+        // refresh the derived CSR/SoA views (clear-and-push into retained
+        // capacity — no steady-state allocation)
+        self.problem.rebuild_views();
         &self.problem
     }
 }
@@ -267,7 +303,9 @@ impl Coordinator {
     /// against removals mid-schedule).
     pub fn run(&mut self, prob: &DynamicProblem) -> DynamicResult {
         let n_nodes = prob.network.n_nodes();
-        let mut schedule = Schedule::new(n_nodes);
+        // dense-backed schedule: assignment lookups on the revert scan and
+        // the Fixed-parent probes are flat array reads, not gid hashes
+        let mut schedule = Schedule::new_dense(n_nodes, prob.dense_ids());
         let mut events = Vec::with_capacity(prob.graphs.len());
         let mut total_rt = 0.0;
 
@@ -351,8 +389,10 @@ pub fn composite_of(pending: &[Gid], prob: &DynamicProblem) -> Problem {
 /// This is the allocating reference builder, kept for cold paths
 /// ([`composite_of`]) and as the differential-testing oracle for
 /// [`CompositeWorkspace::build`], which produces identical problems
-/// without reallocating per arrival.
-fn build_composite(pending: &[Gid], prob: &DynamicProblem, schedule: &Schedule) -> Problem {
+/// without reallocating per arrival.  `pub` (hidden) so integration
+/// tests can differential-test the dense layout against it.
+#[doc(hidden)]
+pub fn build_composite(pending: &[Gid], prob: &DynamicProblem, schedule: &Schedule) -> Problem {
     let index: crate::fasthash::FxHashMap<Gid, usize> =
         pending.iter().enumerate().map(|(i, &g)| (g, i)).collect();
 
@@ -392,7 +432,53 @@ fn build_composite(pending: &[Gid], prob: &DynamicProblem, schedule: &Schedule) 
         }
     }
 
-    Problem { tasks }
+    Problem::from_tasks(tasks)
+}
+
+/// The pre-workspace coordinator loop (fresh composite allocation + full
+/// timeline clone + map-backed schedule + assign-based merge), kept
+/// verbatim as the differential oracle for the zero-realloc in-place hot
+/// path and for the dense-id/CSR layout (`layout_dense` integration
+/// test, `layout` bench A/B rows).  Returns the final schedule plus
+/// `(n_pending, n_reverted)` per arrival.
+#[doc(hidden)]
+pub fn run_reference(
+    policy: Policy,
+    mut scheduler: Box<dyn Scheduler>,
+    prob: &DynamicProblem,
+) -> (Schedule, Vec<(usize, usize)>) {
+    let mut schedule = Schedule::new(prob.network.n_nodes());
+    let mut events = Vec::new();
+    for i in 0..prob.graphs.len() {
+        let (arrival, _) = prob.graphs[i];
+        let window = policy.window(i);
+        let mut pending: Vec<Gid> = Vec::new();
+        for j in (i - window)..i {
+            let g = &prob.graphs[j].1;
+            for t in 0..g.n_tasks() {
+                let gid = Gid::new(j, t);
+                if let Some(a) = schedule.get(gid) {
+                    if a.start >= arrival - EPS {
+                        schedule.unassign(gid);
+                        pending.push(gid);
+                    }
+                }
+            }
+        }
+        let n_reverted = pending.len();
+        let g_new = &prob.graphs[i].1;
+        for t in 0..g_new.n_tasks() {
+            pending.push(Gid::new(i, t));
+        }
+        let problem = build_composite(&pending, prob, &schedule);
+        let mut scratch = schedule.timelines().clone();
+        let assignments = scheduler.schedule(&problem, &prob.network, &mut scratch);
+        for (idx, a) in assignments.iter().enumerate() {
+            schedule.assign(problem.tasks[idx].gid, *a);
+        }
+        events.push((problem.n_tasks(), n_reverted));
+    }
+    (schedule, events)
 }
 
 // --------------------------------------------------------------- variants
@@ -608,48 +694,6 @@ mod tests {
         DynamicProblem::new(net, graphs)
     }
 
-    /// The pre-workspace coordinator loop (fresh composite allocation +
-    /// full timeline clone + assign-based merge), kept verbatim as the
-    /// differential oracle for the zero-realloc in-place hot path.
-    fn run_reference(
-        policy: Policy,
-        mut scheduler: Box<dyn Scheduler>,
-        prob: &DynamicProblem,
-    ) -> (Schedule, Vec<(usize, usize)>) {
-        let mut schedule = Schedule::new(prob.network.n_nodes());
-        let mut events = Vec::new();
-        for i in 0..prob.graphs.len() {
-            let (arrival, _) = prob.graphs[i];
-            let window = policy.window(i);
-            let mut pending: Vec<Gid> = Vec::new();
-            for j in (i - window)..i {
-                let g = &prob.graphs[j].1;
-                for t in 0..g.n_tasks() {
-                    let gid = Gid::new(j, t);
-                    if let Some(a) = schedule.get(gid) {
-                        if a.start >= arrival - EPS {
-                            schedule.unassign(gid);
-                            pending.push(gid);
-                        }
-                    }
-                }
-            }
-            let n_reverted = pending.len();
-            let g_new = &prob.graphs[i].1;
-            for t in 0..g_new.n_tasks() {
-                pending.push(Gid::new(i, t));
-            }
-            let problem = build_composite(&pending, prob, &schedule);
-            let mut scratch = schedule.timelines().clone();
-            let assignments = scheduler.schedule(&problem, &prob.network, &mut scratch);
-            for (idx, a) in assignments.iter().enumerate() {
-                schedule.assign(problem.tasks[idx].gid, *a);
-            }
-            events.push((problem.n_tasks(), n_reverted));
-        }
-        (schedule, events)
-    }
-
     fn assignment_sig(s: &Schedule) -> Vec<(Gid, usize, u64, u64)> {
         let mut v: Vec<(Gid, usize, u64, u64)> = s
             .iter()
@@ -692,6 +736,31 @@ mod tests {
             let fast = ws.build(pending, &prob, &schedule);
             assert_eq!(fast, &reference);
         }
+    }
+
+    #[test]
+    fn workspace_steady_state_allocates_nothing() {
+        // Satellite pin (PR 6): once warm, a composite rebuild on the
+        // workspace path performs ZERO heap allocations — the arenas,
+        // SoA columns, pred/succ vectors, and the epoch-stamped index
+        // all reuse retained capacity.  Counted by the thread-local
+        // counting allocator registered under cfg(test).
+        use crate::alloc_count::alloc_count;
+        let prob = random_problem(7, 6, 3);
+        let schedule = Schedule::new(3);
+        let pending: Vec<Gid> = (0..prob.graphs.len())
+            .flat_map(|j| {
+                (0..prob.graphs[j].1.n_tasks()).map(move |t| Gid::new(j, t))
+            })
+            .collect();
+        let mut ws = CompositeWorkspace::new();
+        // warm builds: grow every retained buffer to its high-water mark
+        ws.build(&pending, &prob, &schedule);
+        ws.build(&pending, &prob, &schedule);
+        let before = alloc_count();
+        ws.build(&pending, &prob, &schedule);
+        let delta = alloc_count() - before;
+        assert_eq!(delta, 0, "steady-state composite build allocated {delta}x");
     }
 
     #[test]

@@ -1,0 +1,299 @@
+//! Dense task ids and epoch-stamped dense containers (§Perf, PR 6).
+//!
+//! The dynamic problem identifies tasks by [`Gid`] (graph, task) pairs,
+//! which the hot paths used to hash on every probe.  A [`DenseIds`]
+//! bijection assigns every task of a [`crate::coordinator::DynamicProblem`]
+//! a contiguous `u32` — `id = offsets[graph] + task` — built **once** per
+//! problem, after which the coordinator, simulator, and schedule layers
+//! index flat arrays instead of hashing.  `FxHashMap` survives only at
+//! API boundaries (trace I/O, metrics, golden fixtures).
+//!
+//! [`DenseMap`] / [`DenseSet`] are the companion scratch containers: a
+//! value array plus a `u32` stamp array, where "present" means
+//! `stamp[i] == epoch`.  Clearing is a single epoch bump (O(1)), so the
+//! per-replan scratch state (revert sets, cone entries, composite index)
+//! resets without touching memory — and without allocating.
+
+use crate::graph::Gid;
+
+/// Dense per-problem task id (see [`DenseIds`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DenseId(pub u32);
+
+/// The `Gid ↔ DenseId` bijection for one dynamic problem: graphs are laid
+/// out back-to-back in arrival order, tasks in graph order, so
+/// `id(gid) = offsets[gid.graph] + gid.task` and `gid(id)` is a flat
+/// array read.
+#[derive(Clone, Debug, Default)]
+pub struct DenseIds {
+    /// per-graph base offset; `offsets[n_graphs]` == total task count
+    offsets: Vec<u32>,
+    /// inverse map: dense id → Gid
+    gids: Vec<Gid>,
+}
+
+impl DenseIds {
+    /// Build from per-graph task counts (in graph-index order).
+    pub fn from_counts<I: IntoIterator<Item = usize>>(counts: I) -> Self {
+        let mut offsets = Vec::new();
+        let mut gids = Vec::new();
+        let mut base = 0u32;
+        offsets.push(0);
+        for (g, n) in counts.into_iter().enumerate() {
+            for t in 0..n {
+                gids.push(Gid::new(g, t));
+            }
+            base += n as u32;
+            offsets.push(base);
+        }
+        Self { offsets, gids }
+    }
+
+    /// Total number of tasks in the bijection.
+    pub fn len(&self) -> usize {
+        self.gids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gids.is_empty()
+    }
+
+    pub fn n_graphs(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    /// Dense id of `gid` (panics if `gid` is outside the problem).
+    #[inline]
+    pub fn id(&self, gid: Gid) -> DenseId {
+        let d = self.offsets[gid.graph as usize] + gid.task;
+        debug_assert!(
+            (d as usize) < self.gids.len()
+                && (gid.graph as usize + 1) < self.offsets.len()
+                && d < self.offsets[gid.graph as usize + 1],
+            "gid {gid} outside the dense bijection"
+        );
+        DenseId(d)
+    }
+
+    /// Dense id of `gid` as a raw index.
+    #[inline]
+    pub fn ix(&self, gid: Gid) -> usize {
+        self.id(gid).0 as usize
+    }
+
+    /// Gid of dense id `d`.
+    #[inline]
+    pub fn gid(&self, d: DenseId) -> Gid {
+        self.gids[d.0 as usize]
+    }
+
+    /// Borrowed Gid of raw dense index `d` (for iterators that must yield
+    /// `&Gid`).
+    #[inline]
+    pub fn gid_ref(&self, d: usize) -> &Gid {
+        &self.gids[d]
+    }
+
+    /// All gids in dense order.
+    pub fn gids(&self) -> &[Gid] {
+        &self.gids
+    }
+
+    /// Does this bijection cover exactly the given per-graph task counts?
+    pub fn matches<I: IntoIterator<Item = usize>>(&self, counts: I) -> bool {
+        let mut g = 0usize;
+        for n in counts {
+            if g + 1 >= self.offsets.len()
+                || (self.offsets[g + 1] - self.offsets[g]) as usize != n
+            {
+                return false;
+            }
+            g += 1;
+        }
+        g + 1 == self.offsets.len()
+    }
+}
+
+/// Epoch-stamped dense set over dense ids: O(1) clear via epoch bump,
+/// zero steady-state allocations once sized.
+#[derive(Clone, Debug, Default)]
+pub struct DenseSet {
+    stamp: Vec<u32>,
+    epoch: u32,
+}
+
+impl DenseSet {
+    /// Clear and (re)size for a universe of `len` ids.
+    pub fn reset(&mut self, len: usize) {
+        if self.stamp.len() != len {
+            self.stamp.clear();
+            self.stamp.resize(len, 0);
+            self.epoch = 1;
+            return;
+        }
+        if self.epoch == u32::MAX {
+            for s in &mut self.stamp {
+                *s = 0;
+            }
+            self.epoch = 1;
+        } else {
+            self.epoch += 1;
+        }
+    }
+
+    /// Insert; returns true if newly inserted.
+    #[inline]
+    pub fn insert(&mut self, i: usize) -> bool {
+        let s = &mut self.stamp[i];
+        let fresh = *s != self.epoch;
+        *s = self.epoch;
+        fresh
+    }
+
+    #[inline]
+    pub fn contains(&self, i: usize) -> bool {
+        self.stamp[i] == self.epoch
+    }
+}
+
+/// Epoch-stamped dense map over dense ids (same discipline as
+/// [`DenseSet`]; values are only meaningful where the stamp matches).
+#[derive(Clone, Debug, Default)]
+pub struct DenseMap<T> {
+    stamp: Vec<u32>,
+    vals: Vec<T>,
+    epoch: u32,
+}
+
+impl<T: Clone + Default> DenseMap<T> {
+    /// Clear and (re)size for a universe of `len` ids.
+    pub fn reset(&mut self, len: usize) {
+        if self.stamp.len() != len {
+            self.stamp.clear();
+            self.stamp.resize(len, 0);
+            self.vals.clear();
+            self.vals.resize(len, T::default());
+            self.epoch = 1;
+            return;
+        }
+        if self.epoch == u32::MAX {
+            for s in &mut self.stamp {
+                *s = 0;
+            }
+            self.epoch = 1;
+        } else {
+            self.epoch += 1;
+        }
+    }
+
+    #[inline]
+    pub fn insert(&mut self, i: usize, v: T) {
+        self.stamp[i] = self.epoch;
+        self.vals[i] = v;
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> Option<&T> {
+        if self.stamp[i] == self.epoch {
+            Some(&self.vals[i])
+        } else {
+            None
+        }
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, i: usize) -> Option<&mut T> {
+        if self.stamp[i] == self.epoch {
+            Some(&mut self.vals[i])
+        } else {
+            None
+        }
+    }
+
+    #[inline]
+    pub fn contains_key(&self, i: usize) -> bool {
+        self.stamp[i] == self.epoch
+    }
+
+    /// Remove; returns true if it was present.
+    #[inline]
+    pub fn remove(&mut self, i: usize) -> bool {
+        let present = self.stamp[i] == self.epoch;
+        if present {
+            // epoch 0 is never current (reset starts at 1)
+            self.stamp[i] = 0;
+        }
+        present
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bijection_round_trips() {
+        let ids = DenseIds::from_counts([3, 0, 2]);
+        assert_eq!(ids.len(), 5);
+        assert_eq!(ids.n_graphs(), 3);
+        for d in 0..ids.len() {
+            let gid = ids.gid(DenseId(d as u32));
+            assert_eq!(ids.id(gid), DenseId(d as u32));
+            assert_eq!(*ids.gid_ref(d), gid);
+        }
+        assert_eq!(ids.id(Gid::new(2, 1)), DenseId(4));
+        assert_eq!(ids.gid(DenseId(2)), Gid::new(0, 2));
+        assert!(ids.matches([3, 0, 2]));
+        assert!(!ids.matches([3, 1, 2]));
+        assert!(!ids.matches([3, 0]));
+        assert!(!ids.matches([3, 0, 2, 1]));
+    }
+
+    #[test]
+    fn dense_set_epoch_clear() {
+        let mut s = DenseSet::default();
+        s.reset(4);
+        assert!(s.insert(1));
+        assert!(!s.insert(1));
+        assert!(s.contains(1) && !s.contains(0));
+        s.reset(4);
+        assert!(!s.contains(1), "epoch bump clears");
+        assert!(s.insert(1));
+        s.reset(8);
+        assert!(!s.contains(1), "resize clears");
+    }
+
+    #[test]
+    fn dense_map_insert_get_remove() {
+        let mut m: DenseMap<u32> = DenseMap::default();
+        m.reset(3);
+        assert_eq!(m.get(0), None);
+        m.insert(0, 7);
+        m.insert(2, 9);
+        assert_eq!(m.get(0), Some(&7));
+        assert!(m.contains_key(2));
+        if let Some(v) = m.get_mut(2) {
+            *v += 1;
+        }
+        assert_eq!(m.get(2), Some(&10));
+        assert!(m.remove(0));
+        assert!(!m.remove(0));
+        assert_eq!(m.get(0), None);
+        m.reset(3);
+        assert_eq!(m.get(2), None, "epoch bump clears");
+    }
+
+    #[test]
+    fn dense_set_epoch_wrap_is_safe() {
+        let mut s = DenseSet::default();
+        s.reset(2);
+        s.insert(0);
+        // force the wrap path
+        s.epoch = u32::MAX;
+        s.stamp[1] = u32::MAX; // pretend 1 was inserted at MAX epoch
+        assert!(s.contains(1));
+        s.reset(2);
+        assert!(!s.contains(0) && !s.contains(1));
+        assert_eq!(s.epoch, 1);
+    }
+}

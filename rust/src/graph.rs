@@ -160,6 +160,116 @@ impl TaskGraph {
     }
 }
 
+/// Compressed-sparse-row adjacency arena (§Perf, PR 6): one flat
+/// `edges`/`comm` pair shared by every row, with `offsets[i]..offsets[i+1]`
+/// delimiting row `i`.  Rebuilding is clear-and-push, so a warm arena
+/// reaches a steady state where refills allocate nothing — the
+/// `CompositeWorkspace` keeps three of these (pending preds, fixed preds
+/// via [`FixedArena`], and succs) alive across arrivals/replans.
+///
+/// Rows are closed explicitly: push the row's edges, then `close_row()`.
+/// `offsets` therefore has `n_rows + 1` entries and `offsets[0] == 0`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GraphArena {
+    /// row boundaries: row `i` spans `offsets[i]..offsets[i+1]`
+    pub offsets: Vec<u32>,
+    /// flat endpoint column (task indices)
+    pub edges: Vec<u32>,
+    /// flat data-size / comm-cost column, parallel to `edges`
+    pub comm: Vec<f64>,
+}
+
+impl GraphArena {
+    /// Reset to an empty arena with zero rows, retaining capacity.
+    pub fn reset(&mut self) {
+        self.offsets.clear();
+        self.offsets.push(0);
+        self.edges.clear();
+        self.comm.clear();
+    }
+
+    /// Append one edge to the currently open row.
+    #[inline]
+    pub fn push(&mut self, edge: u32, comm: f64) {
+        self.edges.push(edge);
+        self.comm.push(comm);
+    }
+
+    /// Close the current row (must be called once per row, in row order).
+    #[inline]
+    pub fn close_row(&mut self) {
+        self.offsets.push(self.edges.len() as u32);
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    /// Number of edges in row `i`.
+    #[inline]
+    pub fn degree(&self, i: usize) -> usize {
+        (self.offsets[i + 1] - self.offsets[i]) as usize
+    }
+
+    /// Row `i` as parallel `(endpoints, comm)` slices.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let a = self.offsets[i] as usize;
+        let b = self.offsets[i + 1] as usize;
+        (&self.edges[a..b], &self.comm[a..b])
+    }
+}
+
+/// CSR arena for *fixed* (committed) predecessors: each entry carries the
+/// committed parent's `(node, finish, data)` triple instead of a task
+/// index.  Same row protocol as [`GraphArena`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FixedArena {
+    pub offsets: Vec<u32>,
+    pub node: Vec<u32>,
+    pub finish: Vec<f64>,
+    pub data: Vec<f64>,
+}
+
+impl FixedArena {
+    /// Reset to an empty arena with zero rows, retaining capacity.
+    pub fn reset(&mut self) {
+        self.offsets.clear();
+        self.offsets.push(0);
+        self.node.clear();
+        self.finish.clear();
+        self.data.clear();
+    }
+
+    #[inline]
+    pub fn push(&mut self, node: u32, finish: f64, data: f64) {
+        self.node.push(node);
+        self.finish.push(finish);
+        self.data.push(data);
+    }
+
+    #[inline]
+    pub fn close_row(&mut self) {
+        self.offsets.push(self.node.len() as u32);
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    /// Row `i` as parallel `(node, finish, data)` slices.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64], &[f64]) {
+        let a = self.offsets[i] as usize;
+        let b = self.offsets[i + 1] as usize;
+        (
+            &self.node[a..b],
+            &self.finish[a..b],
+            &self.data[a..b],
+        )
+    }
+}
+
 /// Builder enforcing DAG validity.
 #[derive(Clone, Debug)]
 pub struct GraphBuilder {
@@ -442,6 +552,42 @@ mod tests {
         b.task(1.0);
         b.weight(f64::INFINITY);
         assert!(matches!(b.build(), Err(GraphError::NonPositiveWeight(_))));
+    }
+
+    #[test]
+    fn graph_arena_rows_round_trip() {
+        let mut a = GraphArena::default();
+        a.reset();
+        a.push(1, 2.0);
+        a.push(2, 4.0);
+        a.close_row();
+        a.close_row(); // empty row
+        a.push(0, 1.5);
+        a.close_row();
+        assert_eq!(a.n_rows(), 3);
+        assert_eq!(a.degree(0), 2);
+        assert_eq!(a.degree(1), 0);
+        assert_eq!(a.row(0), (&[1u32, 2][..], &[2.0, 4.0][..]));
+        assert_eq!(a.row(2), (&[0u32][..], &[1.5][..]));
+        // reset retains nothing visible but starts a fresh row set
+        a.reset();
+        assert_eq!(a.n_rows(), 0);
+    }
+
+    #[test]
+    fn fixed_arena_rows_round_trip() {
+        let mut a = FixedArena::default();
+        a.reset();
+        a.close_row(); // task 0: no fixed preds
+        a.push(3, 10.0, 0.5);
+        a.push(1, 7.0, 0.0);
+        a.close_row();
+        assert_eq!(a.n_rows(), 2);
+        let (nodes, fin, data) = a.row(1);
+        assert_eq!(nodes, &[3, 1]);
+        assert_eq!(fin, &[10.0, 7.0]);
+        assert_eq!(data, &[0.5, 0.0]);
+        assert_eq!(a.row(0).0.len(), 0);
     }
 
     #[test]

@@ -41,10 +41,12 @@
 //! `dts policy` — see the top-level `README.md` for the full CLI
 //! reference and `docs/METRICS.md` for the metric glossary).
 
+pub mod alloc_count;
 pub mod analysis;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod dense;
 pub mod experiments;
 pub mod fasthash;
 pub mod gantt;

@@ -32,12 +32,7 @@ pub fn realize(
     // per-node execution order = planned start order
     let mut order: Vec<Vec<Gid>> = vec![Vec::new(); n_nodes];
     for v in 0..n_nodes {
-        order[v] = planned
-            .timelines()
-            .node_slots(v)
-            .iter()
-            .map(|s| s.gid)
-            .collect();
+        order[v] = planned.timelines().slot_gids(v).to_vec();
     }
     let factors: crate::fasthash::FxHashMap<Gid, f64> = planned
         .iter()

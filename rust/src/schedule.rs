@@ -6,6 +6,9 @@
 //! timelines with the per-task assignment map and is the object the
 //! dynamic coordinator mutates as graphs arrive and (partially) preempt.
 
+use std::sync::Arc;
+
+use crate::dense::DenseIds;
 use crate::fasthash::FxHashMap;
 use crate::graph::{Gid, TaskGraph};
 use crate::network::Network;
@@ -29,7 +32,13 @@ pub struct Assignment {
     pub finish: f64,
 }
 
-/// Per-node sorted interval lists.
+/// Per-node sorted interval lists, stored **structure-of-arrays**
+/// (§Perf, PR 6): per node, parallel `starts`/`finishes`/`gids` columns
+/// instead of a `Vec<Slot>`.  The cursor probes, `find_idx`/`remove_at`
+/// binary searches, and `earliest_start` gap scans each touch only the
+/// one or two f64 columns they need — one cache line per step instead
+/// of striding over 24-byte AoS slots.  [`Slot`] survives as the value
+/// type handed across the API ([`Timelines::slot`], [`Timelines::insert`]).
 ///
 /// §Perf: the structure doubles as its own **undo-log scratch** (the
 /// `TimelineScratch` design): [`Timelines::begin_txn`] starts journaling
@@ -40,7 +49,12 @@ pub struct Assignment {
 /// the master timelines inside such a transaction instead of cloning.
 #[derive(Clone, Debug, Default)]
 pub struct Timelines {
-    slots: Vec<Vec<Slot>>,
+    /// per-node slot start times, sorted ascending
+    starts: Vec<Vec<f64>>,
+    /// per-node slot finish times (monotone too: slots don't overlap)
+    finishes: Vec<Vec<f64>>,
+    /// per-node slot owners, parallel to `starts`
+    gids: Vec<Vec<Gid>>,
     /// insertion journal `(node, gid, start)`; recording only while
     /// `txn_active` (the journal Vec is retained across transactions so
     /// steady-state arrivals allocate nothing).
@@ -51,38 +65,81 @@ pub struct Timelines {
 impl Timelines {
     pub fn new(n_nodes: usize) -> Self {
         Self {
-            slots: vec![Vec::new(); n_nodes],
+            starts: vec![Vec::new(); n_nodes],
+            finishes: vec![Vec::new(); n_nodes],
+            gids: vec![Vec::new(); n_nodes],
             journal: Vec::new(),
             txn_active: false,
         }
     }
 
     pub fn n_nodes(&self) -> usize {
-        self.slots.len()
+        self.starts.len()
     }
 
-    pub fn node_slots(&self, v: usize) -> &[Slot] {
-        &self.slots[v]
+    /// Number of slots on node `v`.
+    #[inline]
+    pub fn n_slots(&self, v: usize) -> usize {
+        self.starts[v].len()
+    }
+
+    /// Slot `i` of node `v`, assembled from the columns.
+    #[inline]
+    pub fn slot(&self, v: usize, i: usize) -> Slot {
+        Slot {
+            start: self.starts[v][i],
+            finish: self.finishes[v][i],
+            gid: self.gids[v][i],
+        }
+    }
+
+    /// Start-time column of node `v` (sorted ascending).
+    #[inline]
+    pub fn starts(&self, v: usize) -> &[f64] {
+        &self.starts[v]
+    }
+
+    /// Finish-time column of node `v` (monotone: slots don't overlap).
+    #[inline]
+    pub fn finishes(&self, v: usize) -> &[f64] {
+        &self.finishes[v]
+    }
+
+    /// Owner column of node `v`, parallel to [`starts`](Self::starts).
+    #[inline]
+    pub fn slot_gids(&self, v: usize) -> &[Gid] {
+        &self.gids[v]
+    }
+
+    /// Iterate node `v`'s slots as assembled [`Slot`] values.
+    pub fn iter_slots(&self, v: usize) -> impl Iterator<Item = Slot> + '_ {
+        (0..self.n_slots(v)).map(move |i| self.slot(v, i))
+    }
+
+    /// Node `v`'s slots as an owned Vec (tests / tooling; allocates).
+    pub fn slots_vec(&self, v: usize) -> Vec<Slot> {
+        self.iter_slots(v).collect()
     }
 
     /// Insert an interval, keeping the node's list sorted by start.
     /// Panics in debug builds if it overlaps an existing slot.
     pub fn insert(&mut self, v: usize, slot: Slot) {
-        let list = &mut self.slots[v];
-        let idx = list.partition_point(|s| s.start < slot.start);
+        let idx = self.starts[v].partition_point(|&s| s < slot.start);
         debug_assert!(
-            idx == 0 || list[idx - 1].finish <= slot.start + EPS,
+            idx == 0 || self.finishes[v][idx - 1] <= slot.start + EPS,
             "overlap with previous slot on node {v}: {:?} vs {:?}",
-            list[idx - 1],
+            self.slot(v, idx - 1),
             slot
         );
         debug_assert!(
-            idx == list.len() || slot.finish <= list[idx].start + EPS,
+            idx == self.starts[v].len() || slot.finish <= self.starts[v][idx] + EPS,
             "overlap with next slot on node {v}: {:?} vs {:?}",
-            list[idx],
+            self.slot(v, idx),
             slot
         );
-        list.insert(idx, slot);
+        self.starts[v].insert(idx, slot.start);
+        self.finishes[v].insert(idx, slot.finish);
+        self.gids[v].insert(idx, slot.gid);
         if self.txn_active {
             self.journal.push((v, slot.gid, slot.start));
         }
@@ -127,13 +184,15 @@ impl Timelines {
     }
 
     /// Remove the slot owned by `gid` on node `v`; true if found.
-    /// O(n) scan — prefer [`remove_at`](Self::remove_at) when the slot's
-    /// start time is known (every [`Assignment`] carries it).
+    /// O(n) scan — retained only as a test reference; every production
+    /// caller knows the slot's start time (it's on the owning
+    /// [`Assignment`]) and goes through [`remove_at`](Self::remove_at)
+    /// or [`remove_idx`](Self::remove_idx).
+    #[cfg(test)]
     pub fn remove(&mut self, v: usize, gid: Gid) -> bool {
         debug_assert!(!self.txn_active, "removal inside a timeline transaction");
-        let list = &mut self.slots[v];
-        if let Some(i) = list.iter().position(|s| s.gid == gid) {
-            list.remove(i);
+        if let Some(i) = self.gids[v].iter().position(|&g| g == gid) {
+            self.remove_idx(v, i);
             true
         } else {
             false
@@ -141,48 +200,49 @@ impl Timelines {
     }
 
     /// Remove the slot owned by `gid` on node `v` whose start time is
-    /// `start`, locating it by binary search on the sorted slot list —
-    /// O(log n + equal-start run) instead of [`remove`](Self::remove)'s
-    /// linear scan.  A `gid` present at a *different* start is a caller
-    /// bug (every caller reads `start` off the owning [`Assignment`]):
-    /// debug builds assert on it, release builds report a miss.
+    /// `start`, locating it by binary search on the sorted start column —
+    /// O(log n + equal-start run) instead of a linear scan.  A `gid`
+    /// present at a *different* start is a caller bug (every caller reads
+    /// `start` off the owning [`Assignment`]): debug builds assert on it,
+    /// release builds report a miss.
     pub fn remove_at(&mut self, v: usize, gid: Gid, start: f64) -> bool {
         debug_assert!(!self.txn_active, "removal inside a timeline transaction");
-        let list = &mut self.slots[v];
         // first slot that could share this start (EPS guard for safety;
         // starts are stored bit-exact from the owning Assignment)
-        let mut i = list.partition_point(|s| s.start < start - EPS);
-        while i < list.len() && list[i].start <= start + EPS {
-            if list[i].gid == gid {
-                list.remove(i);
+        let mut i = self.starts[v].partition_point(|&s| s < start - EPS);
+        while i < self.starts[v].len() && self.starts[v][i] <= start + EPS {
+            if self.gids[v][i] == gid {
+                self.starts[v].remove(i);
+                self.finishes[v].remove(i);
+                self.gids[v].remove(i);
                 return true;
             }
             i += 1;
         }
         debug_assert!(
-            !list.iter().any(|s| s.gid == gid),
+            !self.gids[v].iter().any(|&g| g == gid),
             "remove_at({v}, {gid}, {start}): slot exists at a different start"
         );
         false
     }
 
     /// Index of the slot owned by `gid` on node `v` whose start time is
-    /// `start`, by binary search on the sorted slot list (the lookup
+    /// `start`, by binary search on the sorted start column (the lookup
     /// half of [`remove_at`](Self::remove_at)).  The belief refresh uses
     /// it to turn a task's [`Assignment`] into a slot-list position —
     /// the per-gid slot cursor of the dirty-cone seeding — without
     /// scanning the node.
     pub fn find_idx(&self, v: usize, gid: Gid, start: f64) -> Option<usize> {
-        let list = &self.slots[v];
-        let mut i = list.partition_point(|s| s.start < start - EPS);
-        while i < list.len() && list[i].start <= start + EPS {
-            if list[i].gid == gid {
+        let starts = &self.starts[v];
+        let mut i = starts.partition_point(|&s| s < start - EPS);
+        while i < starts.len() && starts[i] <= start + EPS {
+            if self.gids[v][i] == gid {
                 return Some(i);
             }
             i += 1;
         }
         debug_assert!(
-            !list.iter().any(|s| s.gid == gid),
+            !self.gids[v].iter().any(|&g| g == gid),
             "find_idx({v}, {gid}, {start}): slot exists at a different start"
         );
         None
@@ -195,7 +255,10 @@ impl Timelines {
     /// O(1) per slot — no interior shift ever happens.
     pub fn remove_idx(&mut self, v: usize, idx: usize) -> Slot {
         debug_assert!(!self.txn_active, "removal inside a timeline transaction");
-        self.slots[v].remove(idx)
+        let start = self.starts[v].remove(idx);
+        let finish = self.finishes[v].remove(idx);
+        let gid = self.gids[v].remove(idx);
+        Slot { start, finish, gid }
     }
 
     /// Append a slot at the **tail** of node `v` — O(1), skipping
@@ -205,14 +268,15 @@ impl Timelines {
     /// old full refresh disappears.  Panics in debug builds if the slot
     /// does not belong at the tail.
     pub fn push_tail(&mut self, v: usize, slot: Slot) {
-        let list = &mut self.slots[v];
-        if let Some(last) = list.last() {
+        if let Some(&last_finish) = self.finishes[v].last() {
             debug_assert!(
-                last.finish <= slot.start + EPS,
-                "push_tail on node {v}: {slot:?} overlaps tail {last:?}"
+                last_finish <= slot.start + EPS,
+                "push_tail on node {v}: {slot:?} overlaps tail finishing {last_finish}"
             );
         }
-        list.push(slot);
+        self.starts[v].push(slot.start);
+        self.finishes[v].push(slot.finish);
+        self.gids[v].push(slot.gid);
         if self.txn_active {
             self.journal.push((v, slot.gid, slot.start));
         }
@@ -226,38 +290,95 @@ impl Timelines {
     /// placement (the candidate already clears them), so the scan starts
     /// at the first slot with `finish > ready`, found by binary search.
     /// Slot lists are sorted by start and non-overlapping, so `finish` is
-    /// monotone too and `partition_point` applies.
+    /// monotone too and `partition_point` applies.  The gap scan reads
+    /// only the two f64 columns — the SoA layout keeps it cache-dense.
     pub fn earliest_start(&self, v: usize, ready: f64, dur: f64) -> f64 {
-        let list = &self.slots[v];
-        let from = list.partition_point(|s| s.finish <= ready);
+        let starts = &self.starts[v];
+        let finishes = &self.finishes[v];
+        let from = finishes.partition_point(|&f| f <= ready);
         let mut candidate = ready;
-        for s in &list[from..] {
-            if candidate + dur <= s.start + EPS {
+        for i in from..starts.len() {
+            if candidate + dur <= starts[i] + EPS {
                 return candidate;
             }
-            candidate = candidate.max(s.finish);
+            candidate = candidate.max(finishes[i]);
         }
         candidate
     }
 
     /// Tail-append start (non-insertion variant): max(ready, last finish).
     pub fn append_start(&self, v: usize, ready: f64) -> f64 {
-        let tail = self.slots[v].last().map_or(0.0, |s| s.finish);
+        let tail = self.finishes[v].last().copied().unwrap_or(0.0);
         ready.max(tail)
     }
 
     /// Total busy time on node `v`.
     pub fn busy_time(&self, v: usize) -> f64 {
-        self.slots[v].iter().map(|s| s.finish - s.start).sum()
+        self.starts[v]
+            .iter()
+            .zip(&self.finishes[v])
+            .map(|(&s, &f)| f - s)
+            .sum()
     }
 
     /// Latest finish across all nodes (0 when empty).
     pub fn max_finish(&self) -> f64 {
-        self.slots
+        self.finishes
             .iter()
             .flat_map(|l| l.last())
-            .map(|s| s.finish)
+            .copied()
             .fold(0.0, f64::max)
+    }
+}
+
+/// Task → placement storage behind [`Schedule`].
+///
+/// §Perf (PR 6): the coordinator hot path knows the dense-id universe of
+/// its composite up front ([`DenseIds`]), so the per-replan schedule uses
+/// a flat `Vec<Option<Assignment>>` indexed by dense id — no hashing, no
+/// rehash growth, O(1) lookups on the cursor/EFT path.  The map variant
+/// survives at API boundaries (hand-built schedules, validators, tests)
+/// where no dense universe exists.
+#[derive(Clone, Debug)]
+enum AssignStore {
+    Map(FxHashMap<Gid, Assignment>),
+    Dense {
+        ids: Arc<DenseIds>,
+        slots: Vec<Option<Assignment>>,
+        n: usize,
+    },
+}
+
+impl Default for AssignStore {
+    fn default() -> Self {
+        AssignStore::Map(FxHashMap::default())
+    }
+}
+
+/// Iterator over `(gid, assignment)` pairs for either store variant.
+enum AssignIter<'a> {
+    Map(std::collections::hash_map::Iter<'a, Gid, Assignment>),
+    Dense {
+        ids: &'a DenseIds,
+        iter: std::iter::Enumerate<std::slice::Iter<'a, Option<Assignment>>>,
+    },
+}
+
+impl<'a> Iterator for AssignIter<'a> {
+    type Item = (&'a Gid, &'a Assignment);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        match self {
+            AssignIter::Map(it) => it.next(),
+            AssignIter::Dense { ids, iter } => {
+                for (d, s) in iter.by_ref() {
+                    if let Some(a) = s.as_ref() {
+                        return Some((ids.gid_ref(d), a));
+                    }
+                }
+                None
+            }
+        }
     }
 }
 
@@ -265,14 +386,53 @@ impl Timelines {
 #[derive(Clone, Debug, Default)]
 pub struct Schedule {
     timelines: Timelines,
-    assign: FxHashMap<Gid, Assignment>,
+    assign: AssignStore,
 }
 
 impl Schedule {
     pub fn new(n_nodes: usize) -> Self {
         Self {
             timelines: Timelines::new(n_nodes),
-            assign: FxHashMap::default(),
+            assign: AssignStore::default(),
+        }
+    }
+
+    /// Dense-backed schedule over a known task universe: assignments live
+    /// in a flat vector indexed by [`DenseIds`] position.  Lookups and
+    /// updates for any gid in the universe are O(1) array probes; a gid
+    /// outside the universe panics (debug) — the coordinator constructs
+    /// the universe from the same composite it schedules.
+    pub fn new_dense(n_nodes: usize, ids: Arc<DenseIds>) -> Self {
+        let slots = vec![None; ids.len()];
+        Self {
+            timelines: Timelines::new(n_nodes),
+            assign: AssignStore::Dense { ids, slots, n: 0 },
+        }
+    }
+
+    fn insert_assign(&mut self, gid: Gid, a: Assignment) -> Option<Assignment> {
+        match &mut self.assign {
+            AssignStore::Map(map) => map.insert(gid, a),
+            AssignStore::Dense { ids, slots, n } => {
+                let prev = slots[ids.ix(gid)].replace(a);
+                if prev.is_none() {
+                    *n += 1;
+                }
+                prev
+            }
+        }
+    }
+
+    fn remove_assign(&mut self, gid: Gid) -> Option<Assignment> {
+        match &mut self.assign {
+            AssignStore::Map(map) => map.remove(&gid),
+            AssignStore::Dense { ids, slots, n } => {
+                let prev = slots[ids.ix(gid)].take();
+                if prev.is_some() {
+                    *n -= 1;
+                }
+                prev
+            }
         }
     }
 
@@ -295,25 +455,37 @@ impl Schedule {
     /// [`timelines_mut`](Self::timelines_mut)).  Panics if the task is
     /// already assigned.
     pub fn record(&mut self, gid: Gid, a: Assignment) {
-        let prev = self.assign.insert(gid, a);
+        let prev = self.insert_assign(gid, a);
         assert!(prev.is_none(), "task {gid} assigned twice");
     }
 
     pub fn get(&self, gid: Gid) -> Option<&Assignment> {
-        self.assign.get(&gid)
+        match &self.assign {
+            AssignStore::Map(map) => map.get(&gid),
+            AssignStore::Dense { ids, slots, .. } => slots[ids.ix(gid)].as_ref(),
+        }
     }
 
     pub fn n_assigned(&self) -> usize {
-        self.assign.len()
+        match &self.assign {
+            AssignStore::Map(map) => map.len(),
+            AssignStore::Dense { n, .. } => *n,
+        }
     }
 
     pub fn iter(&self) -> impl Iterator<Item = (&Gid, &Assignment)> {
-        self.assign.iter()
+        match &self.assign {
+            AssignStore::Map(map) => AssignIter::Map(map.iter()),
+            AssignStore::Dense { ids, slots, .. } => AssignIter::Dense {
+                ids,
+                iter: slots.iter().enumerate(),
+            },
+        }
     }
 
     /// Record a placement (task must not already be assigned).
     pub fn assign(&mut self, gid: Gid, a: Assignment) {
-        let prev = self.assign.insert(gid, a);
+        let prev = self.insert_assign(gid, a);
         assert!(prev.is_none(), "task {gid} assigned twice");
         self.timelines.insert(
             a.node,
@@ -330,7 +502,7 @@ impl Schedule {
     /// (§Perf: preemption-heavy policies unassign thousands of tasks per
     /// run; the old linear `position` scan dominated Last-K reverts).
     pub fn unassign(&mut self, gid: Gid) -> Option<Assignment> {
-        let a = self.assign.remove(&gid)?;
+        let a = self.remove_assign(gid)?;
         let removed = self.timelines.remove_at(a.node, gid, a.start);
         debug_assert!(removed, "assignment map and timelines out of sync");
         Some(a)
@@ -344,9 +516,9 @@ impl Schedule {
     /// per-gid [`unassign`](Self::unassign) would pay a `partition_point`
     /// plus an interior `Vec::remove` shift for every evicted slot.
     pub fn unassign_tail(&mut self, v: usize, from: usize) {
-        while self.timelines.slots[v].len() > from {
-            let slot = self.timelines.remove_idx(v, self.timelines.slots[v].len() - 1);
-            let removed = self.assign.remove(&slot.gid);
+        while self.timelines.n_slots(v) > from {
+            let slot = self.timelines.remove_idx(v, self.timelines.n_slots(v) - 1);
+            let removed = self.remove_assign(slot.gid);
             debug_assert!(
                 removed.is_some(),
                 "assignment map and timelines out of sync for {}",
@@ -360,7 +532,7 @@ impl Schedule {
     /// re-derived start clears the node's running tail), using
     /// [`Timelines::push_tail`] instead of the sorted insert.
     pub fn assign_tail(&mut self, gid: Gid, a: Assignment) {
-        let prev = self.assign.insert(gid, a);
+        let prev = self.insert_assign(gid, a);
         assert!(prev.is_none(), "task {gid} assigned twice");
         self.timelines.push_tail(
             a.node,
@@ -418,12 +590,13 @@ pub fn validate(
 
     // 3. no overlap per node
     for v in 0..schedule.timelines().n_nodes() {
-        let slots = schedule.timelines().node_slots(v);
-        for w in slots.windows(2) {
-            if w[0].finish > w[1].start + EPS {
+        let tl = schedule.timelines();
+        for i in 1..tl.n_slots(v) {
+            if tl.finishes(v)[i - 1] > tl.starts(v)[i] + EPS {
+                let (a, b) = (tl.slot(v, i - 1), tl.slot(v, i));
                 out.push(Violation(format!(
                     "overlap on node {v}: {} [{}, {}] vs {} [{}, {}]",
-                    w[0].gid, w[0].start, w[0].finish, w[1].gid, w[1].start, w[1].finish
+                    a.gid, a.start, a.finish, b.gid, b.start, b.finish
                 )));
             }
         }
@@ -497,11 +670,10 @@ mod tests {
         tl.insert(0, Slot { start: 5.0, finish: 6.0, gid: gid(1) });
         tl.insert(0, Slot { start: 0.0, finish: 2.0, gid: gid(0) });
         tl.insert(0, Slot { start: 2.0, finish: 4.0, gid: gid(2) });
-        let starts: Vec<f64> = tl.node_slots(0).iter().map(|s| s.start).collect();
-        assert_eq!(starts, vec![0.0, 2.0, 5.0]);
+        assert_eq!(tl.starts(0), &[0.0, 2.0, 5.0]);
         assert!(tl.remove(0, gid(2)));
         assert!(!tl.remove(0, gid(2)));
-        assert_eq!(tl.node_slots(0).len(), 2);
+        assert_eq!(tl.n_slots(0), 2);
         assert!((tl.busy_time(0) - 3.0).abs() < 1e-12);
         assert_eq!(tl.max_finish(), 6.0);
     }
@@ -515,10 +687,10 @@ mod tests {
         }
         assert!(tl.remove_at(0, gid(37), 74.0));
         assert!(!tl.remove_at(0, gid(37), 74.0), "already removed");
-        assert_eq!(tl.node_slots(0).len(), 99);
+        assert_eq!(tl.n_slots(0), 99);
         // wrong gid at an occupied start: not removed
         assert!(!tl.remove_at(0, gid(999), 10.0));
-        assert_eq!(tl.node_slots(0).len(), 99);
+        assert_eq!(tl.n_slots(0), 99);
     }
 
     #[test]
@@ -531,7 +703,7 @@ mod tests {
         assert!(tl.remove_at(0, gid(1), 5.0));
         assert!(tl.remove_at(0, gid(2), 5.0));
         assert!(tl.remove_at(0, gid(0), 5.0));
-        assert!(tl.node_slots(0).is_empty());
+        assert_eq!(tl.n_slots(0), 0);
     }
 
     #[test]
@@ -559,13 +731,13 @@ mod tests {
             a.insert(0, slot);
             b.push_tail(0, slot);
         }
-        assert_eq!(a.node_slots(0), b.node_slots(0));
+        assert_eq!(a.slots_vec(0), b.slots_vec(0));
         // journaling applies to tail pushes too
         b.begin_txn();
         b.push_tail(0, Slot { start: 20.0, finish: 21.0, gid: gid(9) });
         assert_eq!(b.txn_len(), 1);
         b.rollback_txn();
-        assert_eq!(b.node_slots(0), a.node_slots(0));
+        assert_eq!(b.slots_vec(0), a.slots_vec(0));
     }
 
     #[test]
@@ -577,7 +749,7 @@ mod tests {
         }
         s.assign(gid(10), Assignment { node: 1, start: 0.0, finish: 4.0 });
         s.unassign_tail(0, 2);
-        assert_eq!(s.timelines().node_slots(0).len(), 2);
+        assert_eq!(s.timelines().n_slots(0), 2);
         assert_eq!(s.n_assigned(), 3);
         for i in 0..2 {
             assert!(s.get(gid(i)).is_some());
@@ -588,9 +760,9 @@ mod tests {
         assert!(s.get(gid(10)).is_some(), "other nodes untouched");
         // from == len is a no-op; re-adding via assign_tail round-trips
         s.unassign_tail(0, 2);
-        assert_eq!(s.timelines().node_slots(0).len(), 2);
+        assert_eq!(s.timelines().n_slots(0), 2);
         s.assign_tail(gid(7), Assignment { node: 0, start: 9.0, finish: 9.5 });
-        assert_eq!(s.timelines().node_slots(0).last().unwrap().gid, gid(7));
+        assert_eq!(*s.timelines().slot_gids(0).last().unwrap(), gid(7));
         assert_eq!(s.get(gid(7)).unwrap().start, 9.0);
     }
 
@@ -604,14 +776,14 @@ mod tests {
         assert_eq!(tl.txn_len(), 2);
         tl.rollback_txn();
         assert_eq!(tl.txn_len(), 0);
-        assert_eq!(tl.node_slots(0).len(), 1, "pre-txn slot survives");
-        assert_eq!(tl.node_slots(0)[0].gid, gid(0));
-        assert!(tl.node_slots(1).is_empty());
+        assert_eq!(tl.n_slots(0), 1, "pre-txn slot survives");
+        assert_eq!(tl.slot(0, 0).gid, gid(0));
+        assert_eq!(tl.n_slots(1), 0);
         // a fresh transaction can commit
         tl.begin_txn();
         tl.insert(1, Slot { start: 1.0, finish: 2.0, gid: gid(3) });
         tl.commit_txn();
-        assert_eq!(tl.node_slots(1).len(), 1);
+        assert_eq!(tl.n_slots(1), 1);
     }
 
     #[test]
@@ -628,9 +800,9 @@ mod tests {
         );
         s2.record(gid(0), a);
         assert_eq!(s1.get(gid(0)), s2.get(gid(0)));
-        assert_eq!(s1.timelines().node_slots(0), s2.timelines().node_slots(0));
+        assert_eq!(s1.timelines().slots_vec(0), s2.timelines().slots_vec(0));
         assert_eq!(s2.unassign(gid(0)), Some(a));
-        assert!(s2.timelines().node_slots(0).is_empty());
+        assert_eq!(s2.timelines().n_slots(0), 0);
     }
 
     #[test]
@@ -642,8 +814,42 @@ mod tests {
         assert_eq!(s.n_assigned(), 1);
         assert_eq!(s.unassign(gid(0)), Some(a));
         assert_eq!(s.n_assigned(), 0);
-        assert_eq!(s.timelines().node_slots(1).len(), 0);
+        assert_eq!(s.timelines().n_slots(1), 0);
         assert_eq!(s.unassign(gid(0)), None);
+    }
+
+    #[test]
+    fn dense_store_matches_map_store() {
+        // same operation sequence against both backends → same observable
+        // state (get / n_assigned / sorted iter / timelines).
+        let ids = Arc::new(DenseIds::from_counts([3usize, 2]));
+        let mut dense = Schedule::new_dense(2, ids);
+        let mut map = Schedule::new(2);
+        let tasks = [Gid::new(0, 0), Gid::new(0, 2), Gid::new(1, 1), Gid::new(0, 1)];
+        for (k, &g) in tasks.iter().enumerate() {
+            let a = Assignment { node: k % 2, start: k as f64, finish: k as f64 + 0.5 };
+            dense.assign(g, a);
+            map.assign(g, a);
+        }
+        assert_eq!(dense.n_assigned(), map.n_assigned());
+        assert_eq!(dense.get(Gid::new(1, 0)), None);
+        for &g in &tasks {
+            assert_eq!(dense.get(g), map.get(g));
+        }
+        let sig = |s: &Schedule| {
+            let mut v: Vec<(Gid, usize, u64)> =
+                s.iter().map(|(&g, a)| (g, a.node, a.start.to_bits())).collect();
+            v.sort();
+            v
+        };
+        assert_eq!(sig(&dense), sig(&map));
+        assert_eq!(dense.unassign(Gid::new(0, 2)), map.unassign(Gid::new(0, 2)));
+        assert_eq!(dense.unassign(Gid::new(0, 2)), None);
+        assert_eq!(dense.n_assigned(), map.n_assigned());
+        assert_eq!(sig(&dense), sig(&map));
+        for v in 0..2 {
+            assert_eq!(dense.timelines().slots_vec(v), map.timelines().slots_vec(v));
+        }
     }
 
     #[test]

@@ -15,7 +15,9 @@ use crate::network::Network;
 use crate::schedule::{Assignment, Slot, Timelines};
 
 use super::common::{EftRows, EftScratch};
-use super::{Pred, Problem, Scheduler};
+#[cfg(test)]
+use super::Pred;
+use super::{Problem, Scheduler};
 
 /// Shared ready-queue driver: `place` picks the (task, assignment) to
 /// commit from the current ready set.  Ready-time rows are cached in a
@@ -29,16 +31,7 @@ fn drive(
 ) -> Vec<Assignment> {
     let n = prob.n_tasks();
     let mut partial: Vec<Option<Assignment>> = vec![None; n];
-    let mut missing: Vec<usize> = prob
-        .tasks
-        .iter()
-        .map(|t| {
-            t.preds
-                .iter()
-                .filter(|p| matches!(p, Pred::Pending { .. }))
-                .count()
-        })
-        .collect();
+    let mut missing: Vec<usize> = (0..n).map(|i| prob.n_pending_preds(i)).collect();
     let mut ready: Vec<usize> = (0..n).filter(|&i| missing[i] == 0).collect();
     let mut rows = EftRows::new(n, net.n_nodes());
     let mut scratch = EftScratch::new();
@@ -53,13 +46,14 @@ fn drive(
             Slot {
                 start: a.start,
                 finish: a.finish,
-                gid: prob.tasks[i].gid,
+                gid: prob.gid_col[i],
             },
         );
         partial[i] = Some(a);
         placed += 1;
         ready.retain(|&x| x != i);
-        for &(c, _) in &prob.tasks[i].succs {
+        for &c in prob.succs_of(i).0 {
+            let c = c as usize;
             missing[c] -= 1;
             if missing[c] == 0 {
                 rows.fill(prob, c, net, &partial, &mut scratch);
@@ -89,12 +83,12 @@ impl Scheduler for Met {
             // first ready task (FIFO by gid for determinism), fastest node
             let &i = ready
                 .iter()
-                .min_by_key(|&&i| prob.tasks[i].gid)
+                .min_by_key(|&&i| prob.gid_col[i])
                 .unwrap();
             let v = (0..net.n_nodes())
                 .min_by(|&a, &b| {
-                    net.exec_time(prob.tasks[i].cost, a)
-                        .partial_cmp(&net.exec_time(prob.tasks[i].cost, b))
+                    net.exec_time(prob.cost_col[i], a)
+                        .partial_cmp(&net.exec_time(prob.cost_col[i], b))
                         .unwrap()
                         .then(a.cmp(&b))
                 })
@@ -121,7 +115,7 @@ impl Scheduler for Olb {
         drive(prob, net, timelines, |ready, prob, net, tl, rows| {
             let &i = ready
                 .iter()
-                .min_by_key(|&&i| prob.tasks[i].gid)
+                .min_by_key(|&&i| prob.gid_col[i])
                 .unwrap();
             // node where the task can *start* soonest (availability only —
             // execution speed deliberately ignored when choosing)
@@ -163,7 +157,7 @@ impl Scheduler for Etf {
                         Some((bi, ba)) => {
                             a.start < ba.start
                                 || (a.start == ba.start
-                                    && prob.tasks[i].gid < prob.tasks[*bi].gid)
+                                    && prob.gid_col[i] < prob.gid_col[*bi])
                         }
                     };
                     if better {

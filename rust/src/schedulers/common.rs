@@ -24,17 +24,12 @@ impl Ord for OrdF64 {
     }
 }
 
-/// Kahn topological order over the *pending* dependency structure.
+/// Kahn topological order over the *pending* dependency structure
+/// (reads the CSR views — callers that mutate `Problem::tasks` must
+/// `rebuild_views()` first).
 pub fn topo_order(prob: &Problem) -> Vec<usize> {
     let n = prob.n_tasks();
-    let mut indeg = vec![0usize; n];
-    for (i, t) in prob.tasks.iter().enumerate() {
-        indeg[i] = t
-            .preds
-            .iter()
-            .filter(|p| matches!(p, Pred::Pending { .. }))
-            .count();
-    }
+    let mut indeg: Vec<usize> = (0..n).map(|i| prob.n_pending_preds(i)).collect();
     let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
     let mut out = Vec::with_capacity(n);
     let mut head = 0;
@@ -42,7 +37,8 @@ pub fn topo_order(prob: &Problem) -> Vec<usize> {
         let i = queue[head];
         head += 1;
         out.push(i);
-        for &(c, _) in &prob.tasks[i].succs {
+        for &c in prob.succs_of(i).0 {
+            let c = c as usize;
             indeg[c] -= 1;
             if indeg[c] == 0 {
                 queue.push(c);
@@ -67,18 +63,18 @@ pub fn components(prob: &Problem) -> Vec<usize> {
         label[s] = next;
         stack.push(s);
         while let Some(i) = stack.pop() {
-            for &(c, _) in &prob.tasks[i].succs {
+            for &c in prob.succs_of(i).0 {
+                let c = c as usize;
                 if label[c] == usize::MAX {
                     label[c] = next;
                     stack.push(c);
                 }
             }
-            for p in &prob.tasks[i].preds {
-                if let Pred::Pending { idx, .. } = p {
-                    if label[*idx] == usize::MAX {
-                        label[*idx] = next;
-                        stack.push(*idx);
-                    }
+            for &p in prob.pending_preds_of(i).0 {
+                let p = p as usize;
+                if label[p] == usize::MAX {
+                    label[p] = next;
+                    stack.push(p);
                 }
             }
         }
@@ -193,6 +189,12 @@ impl EftScratch {
 
     /// Gather task `i`'s parent triples and compute its ready time on
     /// every node.  Pending parents must already be placed in `partial`.
+    ///
+    /// Reads the CSR views (pending preds, then fixed preds) — a
+    /// different parent order than the reference interleaved walk, which
+    /// is bit-safe because the per-node ready time is a max over finite
+    /// non-negative arrivals (see [`Problem`] docs) and pinned by the
+    /// `cached_eft_matches_reference` test.
     pub fn load(
         &mut self,
         prob: &Problem,
@@ -200,22 +202,19 @@ impl EftScratch {
         net: &Network,
         partial: &[Option<Assignment>],
     ) {
-        let t = &prob.tasks[i];
         self.parents.clear();
-        for p in &t.preds {
-            match *p {
-                Pred::Pending { idx, data } => {
-                    let a = partial[idx].expect("pending parent not yet placed");
-                    self.parents.push((a.node, a.finish, data));
-                }
-                Pred::Fixed { node, finish, data } => {
-                    self.parents.push((node, finish, data));
-                }
-            }
+        let (pidx, pdata) = prob.pending_preds_of(i);
+        for (&p, &data) in pidx.iter().zip(pdata) {
+            let a = partial[p as usize].expect("pending parent not yet placed");
+            self.parents.push((a.node, a.finish, data));
+        }
+        let (fnode, ffinish, fdata) = prob.fixed_preds_of(i);
+        for k in 0..fnode.len() {
+            self.parents.push((fnode[k] as usize, ffinish[k], fdata[k]));
         }
         let n = net.n_nodes();
         self.ready.clear();
-        self.ready.resize(n, t.ready);
+        self.ready.resize(n, prob.ready_col[i]);
         for &(u, finish, data) in &self.parents {
             let row = net.comm_row(u);
             for (v, r) in self.ready.iter_mut().enumerate() {
@@ -295,7 +294,7 @@ impl EftRows {
         i: usize,
         v: usize,
     ) -> Assignment {
-        eft_at(self.ready_on(i, v), prob.tasks[i].cost, v, net, timelines)
+        eft_at(self.ready_on(i, v), prob.cost_col[i], v, net, timelines)
     }
 }
 
@@ -309,7 +308,7 @@ pub fn eft_on_node_cached(
     net: &Network,
     timelines: &Timelines,
 ) -> Assignment {
-    eft_at(scratch.ready_on(v), prob.tasks[i].cost, v, net, timelines)
+    eft_at(scratch.ready_on(v), prob.cost_col[i], v, net, timelines)
 }
 
 /// Minimum-EFT placement of the task loaded into `scratch` across all
@@ -337,14 +336,13 @@ pub fn min_eft_cached(
 pub fn mean_costs(prob: &Problem, net: &Network) -> (Vec<f64>, Vec<Vec<(usize, f64)>>) {
     let inv_speed = net.mean_inv_speed();
     let inv_link = net.mean_inv_link();
-    let w: Vec<f64> = prob.tasks.iter().map(|t| t.cost * inv_speed).collect();
-    let succ_costs: Vec<Vec<(usize, f64)>> = prob
-        .tasks
-        .iter()
-        .map(|t| {
-            t.succs
-                .iter()
-                .map(|&(c, data)| (c, data * inv_link))
+    let w: Vec<f64> = prob.cost_col.iter().map(|&c| c * inv_speed).collect();
+    let succ_costs: Vec<Vec<(usize, f64)>> = (0..prob.n_tasks())
+        .map(|i| {
+            let (sidx, sdata) = prob.succs_of(i);
+            sidx.iter()
+                .zip(sdata)
+                .map(|(&c, &data)| (c as usize, data * inv_link))
                 .collect()
         })
         .collect();
@@ -403,6 +401,7 @@ mod tests {
                 .collect();
             p.tasks.push(t);
         }
+        p.rebuild_views();
         let labels = components(&p);
         assert_eq!(labels[0], labels[3]);
         assert_eq!(labels[4], labels[7]);
@@ -492,6 +491,7 @@ mod tests {
                     });
                 }
             }
+            prob.rebuild_views();
 
             let order = topo_order(&prob);
             let mut tl_ref = Timelines::new(n_nodes);

@@ -14,7 +14,9 @@ use crate::schedule::{Assignment, Slot, Timelines};
 
 use super::common::{components, eft_on_node_cached, min_eft_cached, EftScratch, OrdF64};
 use super::rank::RankProvider;
-use super::{Pred, Problem, Scheduler};
+#[cfg(test)]
+use super::Pred;
+use super::{Problem, Scheduler};
 
 /// Relative tolerance when testing priority equality along the CP.
 /// Wide enough to absorb the f32 round-trip of the XLA rank provider
@@ -58,11 +60,7 @@ impl<R: RankProvider> Cpop<R> {
                 if comp[i] != c {
                     continue;
                 }
-                let has_pending_pred = prob.tasks[i]
-                    .preds
-                    .iter()
-                    .any(|p| matches!(p, Pred::Pending { .. }));
-                if !has_pending_pred {
+                if prob.n_pending_preds(i) == 0 {
                     if entry.map_or(true, |e| priority[i] > priority[e]) {
                         entry = Some(i);
                     }
@@ -74,7 +72,8 @@ impl<R: RankProvider> Cpop<R> {
             // walk down through successors whose priority equals cp_val
             loop {
                 let mut next: Option<usize> = None;
-                for &(s, _) in &prob.tasks[cur].succs {
+                for &s in prob.succs_of(cur).0 {
+                    let s = s as usize;
                     if (priority[s] - cp_val).abs() <= CP_TOL * (1.0 + cp_val.abs()) {
                         next = Some(s);
                         break;
@@ -104,7 +103,7 @@ impl<R: RankProvider> Cpop<R> {
             if is_cp[i] {
                 cp_tasks[comp[i]].push(i);
                 cp_value[comp[i]] = cp_value[comp[i]].max(priority[i]);
-                cp_cost[comp[i]] += prob.tasks[i].cost;
+                cp_cost[comp[i]] += prob.cost_col[i];
             }
         }
         let mut cp_node = vec![0usize; n_comp];
@@ -151,21 +150,12 @@ impl<R: RankProvider> Scheduler for Cpop<R> {
         let (is_cp, cp_node) = self.critical_paths(prob, net, timelines, &priority, &comp);
 
         let mut partial: Vec<Option<Assignment>> = vec![None; n];
-        let mut missing: Vec<usize> = prob
-            .tasks
-            .iter()
-            .map(|t| {
-                t.preds
-                    .iter()
-                    .filter(|p| matches!(p, Pred::Pending { .. }))
-                    .count()
-            })
-            .collect();
+        let mut missing: Vec<usize> = (0..n).map(|i| prob.n_pending_preds(i)).collect();
         let mut heap: BinaryHeap<(OrdF64, std::cmp::Reverse<crate::graph::Gid>, usize)> =
             BinaryHeap::new();
         for i in 0..n {
             if missing[i] == 0 {
-                heap.push((OrdF64(priority[i]), std::cmp::Reverse(prob.tasks[i].gid), i));
+                heap.push((OrdF64(priority[i]), std::cmp::Reverse(prob.gid_col[i]), i));
             }
         }
 
@@ -183,15 +173,16 @@ impl<R: RankProvider> Scheduler for Cpop<R> {
                 Slot {
                     start: a.start,
                     finish: a.finish,
-                    gid: prob.tasks[i].gid,
+                    gid: prob.gid_col[i],
                 },
             );
             partial[i] = Some(a);
             placed += 1;
-            for &(c, _) in &prob.tasks[i].succs {
+            for &c in prob.succs_of(i).0 {
+                let c = c as usize;
                 missing[c] -= 1;
                 if missing[c] == 0 {
-                    heap.push((OrdF64(priority[c]), std::cmp::Reverse(prob.tasks[c].gid), c));
+                    heap.push((OrdF64(priority[c]), std::cmp::Reverse(prob.gid_col[c]), c));
                 }
             }
         }

@@ -16,7 +16,9 @@ use crate::schedule::{Assignment, Slot, Timelines};
 
 use super::common::{min_eft_cached, EftScratch, OrdF64};
 use super::rank::RankProvider;
-use super::{Pred, Problem, Scheduler};
+#[cfg(test)]
+use super::Pred;
+use super::{Problem, Scheduler};
 
 pub struct Heft<R: RankProvider> {
     ranks: R,
@@ -48,22 +50,13 @@ impl<R: RankProvider> Scheduler for Heft<R> {
         let mut partial: Vec<Option<Assignment>> = vec![None; n];
 
         // pending-parent counters; ready tasks enter the priority heap.
-        let mut missing: Vec<usize> = prob
-            .tasks
-            .iter()
-            .map(|t| {
-                t.preds
-                    .iter()
-                    .filter(|p| matches!(p, Pred::Pending { .. }))
-                    .count()
-            })
-            .collect();
+        let mut missing: Vec<usize> = (0..n).map(|i| prob.n_pending_preds(i)).collect();
         // max-heap on (rank, reversed gid) → deterministic tie-break.
         let mut heap: BinaryHeap<(OrdF64, std::cmp::Reverse<crate::graph::Gid>, usize)> =
             BinaryHeap::new();
         for i in 0..n {
             if missing[i] == 0 {
-                heap.push((OrdF64(ranks.up[i]), std::cmp::Reverse(prob.tasks[i].gid), i));
+                heap.push((OrdF64(ranks.up[i]), std::cmp::Reverse(prob.gid_col[i]), i));
             }
         }
 
@@ -77,15 +70,16 @@ impl<R: RankProvider> Scheduler for Heft<R> {
                 Slot {
                     start: a.start,
                     finish: a.finish,
-                    gid: prob.tasks[i].gid,
+                    gid: prob.gid_col[i],
                 },
             );
             partial[i] = Some(a);
             placed += 1;
-            for &(c, _) in &prob.tasks[i].succs {
+            for &c in prob.succs_of(i).0 {
+                let c = c as usize;
                 missing[c] -= 1;
                 if missing[c] == 0 {
-                    heap.push((OrdF64(ranks.up[c]), std::cmp::Reverse(prob.tasks[c].gid), c));
+                    heap.push((OrdF64(ranks.up[c]), std::cmp::Reverse(prob.gid_col[c]), c));
                 }
             }
         }
@@ -158,6 +152,7 @@ mod tests {
             finish: 9.0,
             data: 0.0,
         });
+        prob.rebuild_views();
         let net = Network::homogeneous(2);
         let mut tl = Timelines::new(2);
         let out = heft().schedule(&prob, &net, &mut tl);

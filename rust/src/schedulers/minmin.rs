@@ -9,7 +9,9 @@ use crate::schedule::{Assignment, Slot, Timelines};
 use super::common::{EftRows, EftScratch};
 #[cfg(test)]
 use super::common::min_eft;
-use super::{Pred, Problem, Scheduler};
+#[cfg(test)]
+use super::Pred;
+use super::{Problem, Scheduler};
 
 pub struct MinMin;
 
@@ -47,16 +49,7 @@ pub(super) fn schedule_mct(
     let n = prob.n_tasks();
     let n_nodes = net.n_nodes();
     let mut partial: Vec<Option<Assignment>> = vec![None; n];
-    let mut missing: Vec<usize> = prob
-        .tasks
-        .iter()
-        .map(|t| {
-            t.preds
-                .iter()
-                .filter(|p| matches!(p, Pred::Pending { .. }))
-                .count()
-        })
-        .collect();
+    let mut missing: Vec<usize> = (0..n).map(|i| prob.n_pending_preds(i)).collect();
 
     // flattened ready×node EFT cache + per-task best placement, plus the
     // per-task ready-time rows (parents are final once a task is ready,
@@ -111,10 +104,10 @@ pub(super) fn schedule_mct(
             let (a, c) = (best[i], best[ready[pick]]);
             let better = if pick_max {
                 a.finish > c.finish
-                    || (a.finish == c.finish && prob.tasks[i].gid < prob.tasks[ready[pick]].gid)
+                    || (a.finish == c.finish && prob.gid_col[i] < prob.gid_col[ready[pick]])
             } else {
                 a.finish < c.finish
-                    || (a.finish == c.finish && prob.tasks[i].gid < prob.tasks[ready[pick]].gid)
+                    || (a.finish == c.finish && prob.gid_col[i] < prob.gid_col[ready[pick]])
             };
             if better {
                 pick = k;
@@ -127,14 +120,15 @@ pub(super) fn schedule_mct(
             Slot {
                 start: a.start,
                 finish: a.finish,
-                gid: prob.tasks[i].gid,
+                gid: prob.gid_col[i],
             },
         );
         partial[i] = Some(a);
         placed += 1;
 
         // newly ready successors get full rows
-        for &(c, _) in &prob.tasks[i].succs {
+        for &c in prob.succs_of(i).0 {
+            let c = c as usize;
             missing[c] -= 1;
             if missing[c] == 0 {
                 ready.push(c);

@@ -8,7 +8,7 @@
 //! packs around, and as [`Pred::Fixed`] dependency constraints carrying
 //! the committed parent's node and finish time.
 
-use crate::graph::Gid;
+use crate::graph::{FixedArena, Gid, GraphArena};
 use crate::network::Network;
 use crate::schedule::{Assignment, Timelines};
 
@@ -53,14 +53,125 @@ pub struct PTask {
 }
 
 /// The merged multi-component instance handed to a heuristic.
-#[derive(Clone, Debug, Default, PartialEq)]
+///
+/// Two representations coexist (§Perf, PR 6):
+///
+/// * the **builder/reference view** `tasks` — per-task `preds`/`succs`
+///   Vecs, walked by the retained reference implementations
+///   (`ready_time`, `min_eft`, `schedule_mct_naive`) that pin the fast
+///   paths bit-exact;
+/// * the **CSR/SoA view** — flat [`GraphArena`]s for pending preds and
+///   succs, a [`FixedArena`] for committed parents, and
+///   cost/ready/gid columns — derived from `tasks` by
+///   [`Problem::rebuild_views`] and read by every hot scheduler loop.
+///
+/// Construct via [`Problem::from_tasks`] (or call `rebuild_views()`
+/// after mutating `tasks` directly); the derived views are rebuilt
+/// clear-and-push, so a warm `CompositeWorkspace` refills them without
+/// allocating.
+///
+/// Splitting each task's interleaved pred list into a pending CSR and a
+/// fixed CSR reorders the parents a hot path visits — which is
+/// bit-safe: data-ready times are `max`-folds over finite, non-negative
+/// arrival times (no NaN, no -0.0), and `f64::max` over such a multiset
+/// is order-independent.  The `cached_eft_matches_reference` property
+/// test pins this against the interleaved reference walk.
+#[derive(Clone, Debug, Default)]
 pub struct Problem {
     pub tasks: Vec<PTask>,
+    /// CSR of pending predecessors: row `i` = (parent idx, data) pairs.
+    pub pending_preds: GraphArena,
+    /// CSR of pending successors: row `i` = (child idx, data) pairs.
+    pub succs: GraphArena,
+    /// CSR of fixed (committed) predecessors: row `i` = (node, finish,
+    /// data) triples.
+    pub fixed: FixedArena,
+    /// SoA column of compute costs `c(t)`.
+    pub cost_col: Vec<f64>,
+    /// SoA column of earliest permissible starts (graph arrivals).
+    pub ready_col: Vec<f64>,
+    /// SoA column of global task ids.
+    pub gid_col: Vec<Gid>,
+}
+
+/// Equality is defined on the builder view only — the CSR/SoA views are
+/// derived state (and deliberately don't affect comparisons between a
+/// freshly-built reference problem and a warm workspace one).
+impl PartialEq for Problem {
+    fn eq(&self, other: &Self) -> bool {
+        self.tasks == other.tasks
+    }
 }
 
 impl Problem {
     pub fn n_tasks(&self) -> usize {
         self.tasks.len()
+    }
+
+    /// Build a problem from tasks, deriving the CSR/SoA views.
+    pub fn from_tasks(tasks: Vec<PTask>) -> Self {
+        let mut p = Self {
+            tasks,
+            ..Self::default()
+        };
+        p.rebuild_views();
+        p
+    }
+
+    /// Re-derive the CSR/SoA views from `tasks`.  Clear-and-push: a warm
+    /// problem (the `CompositeWorkspace` one) refills without allocating
+    /// once capacities have grown to the composite's high-water mark.
+    pub fn rebuild_views(&mut self) {
+        self.pending_preds.reset();
+        self.succs.reset();
+        self.fixed.reset();
+        self.cost_col.clear();
+        self.ready_col.clear();
+        self.gid_col.clear();
+        for t in &self.tasks {
+            self.cost_col.push(t.cost);
+            self.ready_col.push(t.ready);
+            self.gid_col.push(t.gid);
+            for p in &t.preds {
+                match *p {
+                    Pred::Pending { idx, data } => self.pending_preds.push(idx as u32, data),
+                    Pred::Fixed { node, finish, data } => {
+                        self.fixed.push(node as u32, finish, data)
+                    }
+                }
+            }
+            self.pending_preds.close_row();
+            self.fixed.close_row();
+            for &(c, d) in &t.succs {
+                self.succs.push(c as u32, d);
+            }
+            self.succs.close_row();
+        }
+    }
+
+    /// Number of *pending* predecessors of task `i` (O(1) via the CSR).
+    #[inline]
+    pub fn n_pending_preds(&self, i: usize) -> usize {
+        self.pending_preds.degree(i)
+    }
+
+    /// Pending predecessors of task `i` as parallel (idx, data) slices.
+    #[inline]
+    pub fn pending_preds_of(&self, i: usize) -> (&[u32], &[f64]) {
+        self.pending_preds.row(i)
+    }
+
+    /// Fixed predecessors of task `i` as parallel (node, finish, data)
+    /// slices.
+    #[inline]
+    pub fn fixed_preds_of(&self, i: usize) -> (&[u32], &[f64], &[f64]) {
+        self.fixed.row(i)
+    }
+
+    /// Pending successors of task `i` as parallel (idx, data) slices.
+    #[inline]
+    pub fn succs_of(&self, i: usize) -> (&[u32], &[f64]) {
+        self.succs.row(i)
     }
 }
 
@@ -179,6 +290,6 @@ pub(crate) mod testutil {
                 tasks[c].preds.push(Pred::Pending { idx: t, data: d });
             }
         }
-        Problem { tasks }
+        Problem::from_tasks(tasks)
     }
 }

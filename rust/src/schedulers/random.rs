@@ -7,8 +7,10 @@ use crate::network::Network;
 use crate::prng::Xoshiro256pp;
 use crate::schedule::{Assignment, Slot, Timelines};
 
-use super::common::eft_on_node;
-use super::{Pred, Problem, Scheduler};
+use super::common::{eft_on_node_cached, EftScratch};
+#[cfg(test)]
+use super::Pred;
+use super::{Problem, Scheduler};
 
 pub struct RandomScheduler {
     rng: Xoshiro256pp,
@@ -35,35 +37,31 @@ impl Scheduler for RandomScheduler {
     ) -> Vec<Assignment> {
         let n = prob.n_tasks();
         let mut partial: Vec<Option<Assignment>> = vec![None; n];
-        let mut missing: Vec<usize> = prob
-            .tasks
-            .iter()
-            .map(|t| {
-                t.preds
-                    .iter()
-                    .filter(|p| matches!(p, Pred::Pending { .. }))
-                    .count()
-            })
-            .collect();
+        let mut missing: Vec<usize> = (0..n).map(|i| prob.n_pending_preds(i)).collect();
         let mut ready: Vec<usize> = (0..n).filter(|&i| missing[i] == 0).collect();
 
         let mut placed = 0;
+        let mut scratch = EftScratch::new();
         while !ready.is_empty() {
             let pick = self.rng.below(ready.len());
             let i = ready.swap_remove(pick);
             let v = self.rng.below(net.n_nodes());
-            let a = eft_on_node(prob, i, v, net, timelines, &partial);
+            // cached scratch path — bit-identical to the reference
+            // `eft_on_node` (see `cached_eft_matches_reference`)
+            scratch.load(prob, i, net, &partial);
+            let a = eft_on_node_cached(&scratch, prob, i, v, net, timelines);
             timelines.insert(
                 a.node,
                 Slot {
                     start: a.start,
                     finish: a.finish,
-                    gid: prob.tasks[i].gid,
+                    gid: prob.gid_col[i],
                 },
             );
             partial[i] = Some(a);
             placed += 1;
-            for &(c, _) in &prob.tasks[i].succs {
+            for &c in prob.succs_of(i).0 {
+                let c = c as usize;
                 missing[c] -= 1;
                 if missing[c] == 0 {
                     ready.push(c);

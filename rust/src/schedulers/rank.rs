@@ -131,6 +131,7 @@ mod tests {
         let g2 = b2.build().unwrap();
         let p2 = problem_from_graph(&g2, 1, 0.0);
         prob.tasks.extend(p2.tasks);
+        prob.rebuild_views();
         let net = Network::homogeneous(1);
         let r = NativeRanks.ranks(&prob, &net);
         assert!((r.up[0] - 10.0).abs() < 1e-12);
@@ -148,6 +149,7 @@ mod tests {
             finish: 1000.0,
             data: 50.0,
         });
+        prob.rebuild_views();
         let net = Network::homogeneous(2);
         let r = NativeRanks.ranks(&prob, &net);
         assert!((r.up[0] - 3.0).abs() < 1e-12);

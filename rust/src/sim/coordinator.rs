@@ -93,10 +93,11 @@
 //! configuration — or the same run embedded in a parallel sweep — are
 //! bit-identical.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::{CompositeWorkspace, DynamicProblem, Policy};
-use crate::fasthash::{FxHashMap, FxHashSet};
+use crate::dense::{DenseIds, DenseMap, DenseSet};
 use crate::graph::Gid;
 use crate::metrics::{ideal_response, MetricRow, PreemptionCost};
 use crate::policy::{Decision, FinishObservation, PreemptionPolicy, ScopeOrder};
@@ -199,6 +200,13 @@ pub struct SimResult {
     /// this stays within the Σ tasks × 2 + graphs reservation the heap
     /// never reallocated.
     pub events_peak: usize,
+    /// Heap allocations performed inside replan passes, summed across
+    /// the run — counted by [`crate::alloc_count`]'s thread-local
+    /// counting allocator, so it is non-zero only in builds where that
+    /// allocator is registered (`cfg(test)` or the `alloc-count`
+    /// feature; always 0 otherwise).  The memory-layout observability
+    /// counter: `allocs` columns in BENCH_hotpath.json come from here.
+    pub replan_allocs: u64,
 }
 
 impl SimResult {
@@ -240,6 +248,17 @@ impl SimResult {
         self.replans.iter().map(|r| r.n_refreshed).sum()
     }
 
+    /// Mean heap allocations per replan pass (see
+    /// [`SimResult::replan_allocs`]; 0.0 when no replan ever ran or the
+    /// counting allocator is not registered).
+    pub fn allocs_per_replan(&self) -> f64 {
+        if self.replans.is_empty() {
+            0.0
+        } else {
+            self.replan_allocs as f64 / self.replans.len() as f64
+        }
+    }
+
     /// The run's preemption-cost accounting (replans, reverted tasks,
     /// replan wall time) for the policy sweep's figure tables.
     pub fn preemption_cost(&self) -> PreemptionCost {
@@ -264,10 +283,16 @@ struct Sim<'a> {
     plan: Schedule,
     /// The **truth**: realized starts/finishes (durations include noise).
     realized: Schedule,
-    completed: FxHashSet<Gid>,
+    /// Dense-id universe of the whole instance, shared with the
+    /// dense-backed `plan`/`realized` stores — every per-task state
+    /// column below is indexed by `ids.ix(gid)` instead of hashing.
+    ids: Arc<DenseIds>,
+    /// completion flag per task (dense-indexed)
+    completed: Vec<bool>,
     /// finish the coordinator expected when it dispatched each task
-    /// (realized start + estimated duration)
-    expected_finish: FxHashMap<Gid, f64>,
+    /// (realized start + estimated duration); dense-indexed, meaningful
+    /// only for dispatched tasks
+    expected_finish: Vec<f64>,
     node_running: Vec<Option<Gid>>,
     /// realized finish of the last task dispatched to each node
     node_free: Vec<f64>,
@@ -294,6 +319,9 @@ struct Sim<'a> {
     replans: Vec<ReplanRecord>,
     sched_runtime_s: f64,
     replan_wall_s: f64,
+    /// heap allocations inside replan passes (see
+    /// [`SimResult::replan_allocs`])
+    replan_allocs: u64,
     /// peak queue length seen so far (pre-reservation instrumentation)
     events_peak: usize,
     /// resolved refresh mode: [`SimConfig::full_refresh`] or the
@@ -310,7 +338,9 @@ struct Sim<'a> {
     node_tail: Vec<f64>,
     to_remove: Vec<Gid>,
     fix: Vec<(Gid, Assignment)>,
-    revert_set: FxHashSet<Gid>,
+    /// epoch-stamped dense membership of the current revert set (reset
+    /// is an O(1) epoch bump — no per-refresh clearing walk)
+    revert_set: DenseSet,
     /// urgency-ranked `(belief slack, graph)` scratch of the
     /// deadline-urgency scope selection
     urgency: Vec<(f64, usize)>,
@@ -325,8 +355,9 @@ struct Sim<'a> {
     /// divergence-candidate scratch (sorted + deduped per refresh)
     cand: Vec<Gid>,
     /// cone membership: task → (node, per-node cone position, unplaced
-    /// blockers) for the readiness worklist
-    cone: FxHashMap<Gid, ConeEntry>,
+    /// blockers) for the readiness worklist; epoch-stamped dense map
+    /// keyed by `ids.ix(gid)`
+    cone: DenseMap<ConeEntry>,
     /// readiness worklist of cone positions `(node, cone index)`
     ready: Vec<(u32, u32)>,
     /// nodes whose slot lists the current replan touched — the cursor
@@ -339,6 +370,7 @@ struct Sim<'a> {
 /// (`node`, position `pos` in that node's captured cone order) and how
 /// many unplaced blockers — its in-cone node predecessor plus its
 /// in-cone graph predecessors — still gate its re-derivation.
+#[derive(Clone, Copy, Default)]
 struct ConeEntry {
     node: u32,
     pos: u32,
@@ -377,14 +409,17 @@ impl<'a> Sim<'a> {
         for (i, (arrival, _)) in prob.graphs.iter().enumerate() {
             queue.push(*arrival, SimEvent::GraphArrival { idx: i });
         }
+        let ids = prob.dense_ids();
+        let nt = ids.len();
         Sim {
             prob,
             cfg,
             noise: StableNoise::new(cfg.noise_std, cfg.noise_seed),
-            plan: Schedule::new(n),
-            realized: Schedule::new(n),
-            completed: FxHashSet::default(),
-            expected_finish: FxHashMap::default(),
+            plan: Schedule::new_dense(n, ids.clone()),
+            realized: Schedule::new_dense(n, ids.clone()),
+            ids,
+            completed: vec![false; nt],
+            expected_finish: vec![0.0; nt],
             node_running: vec![None; n],
             node_free: vec![0.0; n],
             node_epoch: vec![0; n],
@@ -397,6 +432,7 @@ impl<'a> Sim<'a> {
             replans: Vec::new(),
             sched_runtime_s: 0.0,
             replan_wall_s: 0.0,
+            replan_allocs: 0,
             events_peak: 0,
             full_refresh: cfg.full_refresh || full_refresh_forced(),
             dirty_dispatched: Vec::new(),
@@ -405,13 +441,13 @@ impl<'a> Sim<'a> {
             node_tail: vec![0.0; n],
             to_remove: Vec::new(),
             fix: Vec::new(),
-            revert_set: FxHashSet::default(),
+            revert_set: DenseSet::default(),
             urgency: Vec::new(),
             dirty_from: vec![usize::MAX; n],
             scan_from: vec![usize::MAX; n],
             node_stack: Vec::new(),
             cand: Vec::new(),
-            cone: FxHashMap::default(),
+            cone: DenseMap::default(),
             ready: Vec::new(),
             touched: vec![false; n],
         }
@@ -486,17 +522,18 @@ impl<'a> Sim<'a> {
             if self.node_running[v].is_some() {
                 continue;
             }
-            let Some(slot) = self.plan.timelines().node_slots(v).get(self.cursor[v]) else {
+            let c = self.cursor[v];
+            if c >= self.plan.timelines().n_slots(v) {
                 continue;
-            };
-            let gid = slot.gid;
+            }
+            let gid = self.plan.timelines().slot_gids(v)[c];
             debug_assert!(!self.dispatched(gid), "cursor points at a dispatched task");
             let (arrival, g) = &self.prob.graphs[gid.graph as usize];
             let mut start = arrival.max(self.node_free[v]);
             let mut ready = true;
             for &(p, data) in g.predecessors(gid.task as usize) {
                 let pgid = Gid::new(gid.graph as usize, p);
-                if !self.completed.contains(&pgid) {
+                if !self.completed[self.ids.ix(pgid)] {
                     ready = false;
                     break;
                 }
@@ -557,8 +594,10 @@ impl<'a> Sim<'a> {
     /// per replan, with the O(rounds × nodes) round-robin re-derive.
     fn refresh_belief_full(&mut self, now: f64, revert: &[Gid]) -> usize {
         let n = self.n_nodes();
-        self.revert_set.clear();
-        self.revert_set.extend(revert.iter().copied());
+        self.revert_set.reset(self.ids.len());
+        for &g in revert {
+            self.revert_set.insert(self.ids.ix(g));
+        }
         // the incremental seed journal restarts from the refreshed state
         self.dirty_dispatched.clear();
         // every node is rebuilt — recompute every cursor afterwards
@@ -568,11 +607,11 @@ impl<'a> Sim<'a> {
         self.to_remove.clear();
         for v in 0..n {
             self.refresh_order[v].clear();
-            for s in self.plan.timelines().node_slots(v) {
-                if self.realized.get(s.gid).is_none() {
-                    self.to_remove.push(s.gid);
-                    if !self.revert_set.contains(&s.gid) {
-                        self.refresh_order[v].push(s.gid);
+            for &gid in self.plan.timelines().slot_gids(v) {
+                if self.realized.get(gid).is_none() {
+                    self.to_remove.push(gid);
+                    if !self.revert_set.contains(self.ids.ix(gid)) {
+                        self.refresh_order[v].push(gid);
                     }
                 }
             }
@@ -588,13 +627,13 @@ impl<'a> Sim<'a> {
         let mut fix = std::mem::take(&mut self.fix);
         for (gid, pa) in self.plan.iter() {
             let ra = self.realized.get(*gid).unwrap();
-            let truth = if self.completed.contains(gid) {
+            let truth = if self.completed[self.ids.ix(*gid)] {
                 *ra
             } else {
                 Assignment {
                     node: ra.node,
                     start: ra.start,
-                    finish: self.expected_finish[gid].max(now),
+                    finish: self.expected_finish[self.ids.ix(*gid)].max(now),
                 }
             };
             if *pa != truth {
@@ -620,9 +659,10 @@ impl<'a> Sim<'a> {
             self.node_tail[v] = self
                 .plan
                 .timelines()
-                .node_slots(v)
+                .finishes(v)
                 .last()
-                .map_or(0.0, |s| s.finish);
+                .copied()
+                .unwrap_or(0.0);
         }
         let n_refreshed = remaining;
         let mut placed_any = true;
@@ -676,13 +716,13 @@ impl<'a> Sim<'a> {
     /// start with finish `max(expected, now)` (no future-peeking).
     fn truth_of(&self, gid: Gid, now: f64) -> Assignment {
         let ra = self.realized.get(gid).unwrap();
-        if self.completed.contains(&gid) {
+        if self.completed[self.ids.ix(gid)] {
             *ra
         } else {
             Assignment {
                 node: ra.node,
                 start: ra.start,
-                finish: self.expected_finish[&gid].max(now),
+                finish: self.expected_finish[self.ids.ix(gid)].max(now),
             }
         }
     }
@@ -704,8 +744,10 @@ impl<'a> Sim<'a> {
         }
 
         let n = self.n_nodes();
-        self.revert_set.clear();
-        self.revert_set.extend(revert.iter().copied());
+        self.revert_set.reset(self.ids.len());
+        for &g in revert {
+            self.revert_set.insert(self.ids.ix(g));
+        }
         let mut dirty_from = std::mem::take(&mut self.dirty_from);
         let mut scan_from = std::mem::take(&mut self.scan_from);
         let mut stack = std::mem::take(&mut self.node_stack);
@@ -736,9 +778,9 @@ impl<'a> Sim<'a> {
         // node's pending suffix: one O(1) probe at the cursor suffices —
         // the suffix-closure covers the rest of the run.
         for v in 0..n {
-            let slots = self.plan.timelines().node_slots(v);
+            let tl = self.plan.timelines();
             let c = self.cursor[v];
-            if c < slots.len() && slots[c].start < now {
+            if c < tl.n_slots(v) && tl.starts(v)[c] < now {
                 lower(&mut dirty_from, &mut stack, v, c);
             }
         }
@@ -773,13 +815,12 @@ impl<'a> Sim<'a> {
             debug_assert!(c > 0, "fix on a node with no dispatched prefix");
             // dispatched-tail seed: the first pending slot chains off the
             // last dispatched finish; re-derive the suffix if it moved
-            let slots = self.plan.timelines().node_slots(v);
-            let old_tail = slots[c - 1].finish;
+            let old_tail = self.plan.timelines().finishes(v)[c - 1];
             let new_tail = match self.node_running[v] {
-                Some(g) => self.expected_finish[&g].max(now),
+                Some(g) => self.expected_finish[self.ids.ix(g)].max(now),
                 None => self.node_free[v],
             };
-            if old_tail != new_tail && c < slots.len() {
+            if old_tail != new_tail && c < self.plan.timelines().n_slots(v) {
                 lower(&mut dirty_from, &mut stack, v, c);
             }
             // graph-successor seeds: only a *finish* change can move a
@@ -790,7 +831,7 @@ impl<'a> Sim<'a> {
                 let g = &self.prob.graphs[gid.graph as usize].1;
                 for &(s, _) in g.successors(gid.task as usize) {
                     let sgid = Gid::new(gid.graph as usize, s);
-                    if self.revert_set.contains(&sgid) || self.dispatched(sgid) {
+                    if self.revert_set.contains(self.ids.ix(sgid)) || self.dispatched(sgid) {
                         continue;
                     }
                     let Some(sa) = self.plan.get(sgid) else {
@@ -812,27 +853,26 @@ impl<'a> Sim<'a> {
         // is walked once, however often the suffix grows.
         while let Some(v) = stack.pop() {
             let lo = dirty_from[v];
-            let hi = scan_from[v].min(self.plan.timelines().node_slots(v).len());
+            let hi = scan_from[v].min(self.plan.timelines().n_slots(v));
             if lo >= hi {
                 continue;
             }
             scan_from[v] = lo;
             for idx in lo..hi {
-                let slot = self.plan.timelines().node_slots(v)[idx];
-                let gid = slot.gid;
+                let gid = self.plan.timelines().slot_gids(v)[idx];
                 debug_assert!(
                     !self.dispatched(gid),
                     "dirty cone reached the dispatched prefix on node {v}"
                 );
                 let g = &self.prob.graphs[gid.graph as usize].1;
-                if self.revert_set.contains(&gid) {
+                if self.revert_set.contains(self.ids.ix(gid)) {
                     // a reverted task's pending successors are reverted
                     // with it (reverts are graph-granular), so there is
                     // nothing to propagate to
                     debug_assert!(
                         g.successors(gid.task as usize).iter().all(|&(s, _)| {
                             let sgid = Gid::new(gid.graph as usize, s);
-                            self.revert_set.contains(&sgid) || self.dispatched(sgid)
+                            self.revert_set.contains(self.ids.ix(sgid)) || self.dispatched(sgid)
                         }),
                         "reverted {gid} leaves a kept pending successor"
                     );
@@ -840,7 +880,7 @@ impl<'a> Sim<'a> {
                 }
                 for &(s, _) in g.successors(gid.task as usize) {
                     let sgid = Gid::new(gid.graph as usize, s);
-                    if self.revert_set.contains(&sgid) || self.dispatched(sgid) {
+                    if self.revert_set.contains(self.ids.ix(sgid)) || self.dispatched(sgid) {
                         continue;
                     }
                     let Some(sa) = self.plan.get(sgid) else {
@@ -862,14 +902,14 @@ impl<'a> Sim<'a> {
         for v in 0..n {
             self.refresh_order[v].clear();
             let from = dirty_from[v];
-            if from >= self.plan.timelines().node_slots(v).len() {
+            if from >= self.plan.timelines().n_slots(v) {
                 continue;
             }
             debug_assert!(from >= self.cursor[v], "cone overlaps dispatched prefix");
             self.touched[v] = true;
-            for s in &self.plan.timelines().node_slots(v)[from..] {
-                if !self.revert_set.contains(&s.gid) {
-                    self.refresh_order[v].push(s.gid);
+            for &gid in &self.plan.timelines().slot_gids(v)[from..] {
+                if !self.revert_set.contains(self.ids.ix(gid)) {
+                    self.refresh_order[v].push(gid);
                 }
             }
             n_kept += self.refresh_order[v].len();
@@ -896,11 +936,11 @@ impl<'a> Sim<'a> {
         // oracle's O(rounds × nodes) round-robin): a task is ready once
         // its in-cone node predecessor and in-cone graph predecessors
         // are placed; everything else reads final values from the plan.
-        self.cone.clear();
+        self.cone.reset(self.ids.len());
         for v in 0..n {
             for (j, &gid) in self.refresh_order[v].iter().enumerate() {
                 self.cone.insert(
-                    gid,
+                    self.ids.ix(gid),
                     ConeEntry {
                         node: v as u32,
                         pos: j as u32,
@@ -915,12 +955,12 @@ impl<'a> Sim<'a> {
                 let mut extra = 0u32;
                 for &(p, _) in g.predecessors(gid.task as usize) {
                     let pgid = Gid::new(gid.graph as usize, p);
-                    if self.cone.contains_key(&pgid) {
+                    if self.cone.contains_key(self.ids.ix(pgid)) {
                         extra += 1;
                     }
                 }
                 if extra > 0 {
-                    self.cone.get_mut(&gid).unwrap().blockers += extra;
+                    self.cone.get_mut(self.ids.ix(gid)).unwrap().blockers += extra;
                 }
             }
         }
@@ -932,11 +972,12 @@ impl<'a> Sim<'a> {
             self.node_tail[v] = self
                 .plan
                 .timelines()
-                .node_slots(v)
+                .finishes(v)
                 .last()
-                .map_or(0.0, |s| s.finish);
+                .copied()
+                .unwrap_or(0.0);
             for (j, &gid) in self.refresh_order[v].iter().enumerate() {
-                if self.cone[&gid].blockers == 0 {
+                if self.cone.get(self.ids.ix(gid)).unwrap().blockers == 0 {
                     self.ready.push((v as u32, j as u32));
                 }
             }
@@ -970,7 +1011,7 @@ impl<'a> Sim<'a> {
             placed += 1;
             if (j as usize) + 1 < self.refresh_order[v].len() {
                 let ngid = self.refresh_order[v][j as usize + 1];
-                let e = self.cone.get_mut(&ngid).unwrap();
+                let e = self.cone.get_mut(self.ids.ix(ngid)).unwrap();
                 e.blockers -= 1;
                 if e.blockers == 0 {
                     self.ready.push((e.node, e.pos));
@@ -978,7 +1019,7 @@ impl<'a> Sim<'a> {
             }
             for &(s, _) in g.successors(gid.task as usize) {
                 let sgid = Gid::new(gid.graph as usize, s);
-                if let Some(e) = self.cone.get_mut(&sgid) {
+                if let Some(e) = self.cone.get_mut(self.ids.ix(sgid)) {
                     e.blockers -= 1;
                     if e.blockers == 0 {
                         self.ready.push((e.node, e.pos));
@@ -1015,13 +1056,13 @@ impl<'a> Sim<'a> {
                 continue;
             }
             self.touched[v] = false;
-            let slots = self.plan.timelines().node_slots(v);
+            let gids = self.plan.timelines().slot_gids(v);
             let mut c = 0;
-            while c < slots.len() && self.realized.get(slots[c].gid).is_some() {
+            while c < gids.len() && self.realized.get(gids[c]).is_some() {
                 c += 1;
             }
             debug_assert!(
-                slots[c..].iter().all(|s| self.realized.get(s.gid).is_none()),
+                gids[c..].iter().all(|&g| self.realized.get(g).is_none()),
                 "dispatched tasks are not a slot-order prefix on node {v}"
             );
             self.cursor[v] = c;
@@ -1144,7 +1185,7 @@ impl ReactiveCoordinator {
                             finish: t + rdur,
                         },
                     );
-                    sim.expected_finish.insert(gid, t + est);
+                    sim.expected_finish[sim.ids.ix(gid)] = t + est;
                     sim.node_running[node] = Some(gid);
                     sim.pending_start[node] = None; // decision consumed
                     sim.node_free[node] = t + rdur;
@@ -1158,11 +1199,11 @@ impl ReactiveCoordinator {
                 }
                 SimEvent::TaskFinish { gid } => {
                     let a = *sim.realized.get(gid).unwrap();
-                    sim.completed.insert(gid);
+                    sim.completed[sim.ids.ix(gid)] = true;
                     debug_assert_eq!(sim.node_running[a.node], Some(gid));
                     sim.node_running[a.node] = None;
                     sim.dirty_dispatched.push(gid);
-                    let expected = sim.expected_finish[&gid];
+                    let expected = sim.expected_finish[sim.ids.ix(gid)];
                     let lateness = t - expected;
                     sim.log.push(SimLogEntry {
                         time: t,
@@ -1261,6 +1302,7 @@ impl ReactiveCoordinator {
             sched_runtime_s: sim.sched_runtime_s,
             replan_wall_s: sim.replan_wall_s,
             events_peak: sim.events_peak,
+            replan_allocs: sim.replan_allocs,
         }
     }
 
@@ -1301,6 +1343,7 @@ impl ReactiveCoordinator {
         max_reverted: usize,
     ) -> Option<usize> {
         let wall0 = Instant::now();
+        let allocs0 = crate::alloc_count::alloc_count();
         self.pending.clear();
         let mut pending = std::mem::take(&mut self.pending);
         let push_graph = |sim: &Sim<'_>, pending: &mut Vec<Gid>, j: usize| {
@@ -1406,6 +1449,9 @@ impl ReactiveCoordinator {
 
         let wall_s = wall0.elapsed().as_secs_f64();
         sim.replan_wall_s += wall_s;
+        // counts 0 unless the counting allocator is registered (test
+        // builds or `--features alloc-count`)
+        sim.replan_allocs += crate::alloc_count::alloc_count() - allocs0;
 
         sim.log.push(SimLogEntry {
             time: now,

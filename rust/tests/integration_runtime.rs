@@ -47,7 +47,7 @@ fn random_problem(n: usize, seed: u64) -> Problem {
             }
         }
     }
-    Problem { tasks }
+    Problem::from_tasks(tasks)
 }
 
 #[test]
@@ -195,7 +195,7 @@ fn composite_height_drives_convergence() {
             tasks[c].preds.push(Pred::Pending { idx: t, data: d });
         }
     }
-    let prob = Problem { tasks };
+    let prob = Problem::from_tasks(tasks);
     assert_eq!(composite_height(&prob), n);
     let net = Network::homogeneous(4);
     let native = NativeRanks.ranks(&prob, &net);
@@ -264,7 +264,7 @@ fn slack_analysis_identifies_adversarial_root() {
             tasks[c].preds.push(dts::schedulers::Pred::Pending { idx: t, data: d });
         }
     }
-    let prob2 = Problem { tasks };
+    let prob2 = Problem::from_tasks(tasks);
     let r = dts::analysis::slack_analysis(&prob2, &prob.network);
     let crit = r.critical_tasks(1e-9);
     assert_eq!(crit[0], 0, "heavy root must lead the critical list");

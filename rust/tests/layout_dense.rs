@@ -1,0 +1,84 @@
+//! §Layout integration pins (PR 6): the dense-id universe is a true
+//! `Gid ↔ DenseId` bijection on every dataset, and the CSR/SoA/dense-id
+//! production coordinator is bit-exact against the retained AoS/map
+//! reference implementation on every heuristic — the memory-layout
+//! overhaul may change *how* the hot path computes, never *what*.
+
+use dts::coordinator::{run_reference, Coordinator, Policy};
+use dts::graph::Gid;
+use dts::schedule::Schedule;
+use dts::schedulers::SchedulerKind;
+use dts::workloads::Dataset;
+
+const DATASETS: [Dataset; 4] = [
+    Dataset::Synthetic,
+    Dataset::RiotBench,
+    Dataset::WfCommons,
+    Dataset::Adversarial,
+];
+
+fn sig(s: &Schedule) -> Vec<(Gid, usize, u64, u64)> {
+    let mut v: Vec<(Gid, usize, u64, u64)> = s
+        .iter()
+        .map(|(g, a)| (*g, a.node, a.start.to_bits(), a.finish.to_bits()))
+        .collect();
+    v.sort();
+    v
+}
+
+/// Property: `DenseIds` round-trips every task of the instance exactly
+/// once — `gid → id → gid` is the identity, the dense indices cover
+/// `0..len` without collision, and the flat `gids()` column agrees with
+/// the per-index accessor.
+#[test]
+fn dense_id_bijection_roundtrips_on_all_datasets() {
+    for dataset in DATASETS {
+        for scale in [1usize, 8] {
+            let prob = dataset.instance(scale, 42);
+            let ids = prob.dense_ids();
+            assert_eq!(ids.len(), prob.total_tasks(), "{dataset:?}×{scale}");
+            assert_eq!(ids.n_graphs(), prob.graphs.len());
+            assert!(ids.matches(prob.graphs.iter().map(|(_, g)| g.n_tasks())));
+            let mut seen = vec![false; ids.len()];
+            for (j, (_, g)) in prob.graphs.iter().enumerate() {
+                for t in 0..g.n_tasks() {
+                    let gid = Gid::new(j, t);
+                    let d = ids.id(gid);
+                    assert_eq!(ids.gid(d), gid, "{dataset:?}×{scale} {gid}");
+                    let ix = ids.ix(gid);
+                    assert_eq!(ix, d.0 as usize);
+                    assert!(!seen[ix], "{dataset:?}×{scale}: dense index {ix} collides");
+                    seen[ix] = true;
+                    assert_eq!(*ids.gid_ref(ix), gid);
+                    assert_eq!(ids.gids()[ix], gid);
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "dense indices must cover 0..len");
+        }
+    }
+}
+
+/// Differential: the production coordinator (arena-built CSR composite,
+/// SoA columns, dense-id schedule store, SoA timelines) is bit-exact
+/// against the retained allocating reference coordinator for every
+/// heuristic in the extended grid, on every dataset, for both a
+/// windowed and a fully preemptive policy.
+#[test]
+fn dense_layout_matches_map_reference_on_every_heuristic() {
+    for dataset in DATASETS {
+        let prob = dataset.instance(6, 11);
+        for kind in SchedulerKind::EXTENDED {
+            for policy in [Policy::LastK(3), Policy::Preemptive] {
+                let (want, _) = run_reference(policy, kind.make(0), &prob);
+                let mut c = Coordinator::new(policy, kind.make(0));
+                let got = c.run(&prob);
+                assert_eq!(
+                    sig(&got.schedule),
+                    sig(&want),
+                    "{dataset:?} {policy:?} {}",
+                    kind.name()
+                );
+            }
+        }
+    }
+}
