@@ -20,6 +20,7 @@ mod util;
 use dts::config::ExperimentConfig;
 use dts::coordinator::{run_reference, Coordinator, Policy, Variant};
 use dts::experiments::run_sweep_parallel;
+use dts::federation::FederatedCoordinator;
 use dts::graph::Gid;
 use dts::json;
 use dts::policy::PolicySpec;
@@ -214,6 +215,54 @@ fn main() {
             max,
             allocs,
         );
+
+        // 1b'''(a). federated-sharding A/B (§Federation): the same
+        // composite under the monolithic coordinator wrapped as one
+        // shard vs a 4-shard federation (admission + 4 shard-local
+        // coordinators over 4 worker threads).  The shard-1 row pays
+        // only the partition/admit/merge wrapper (it is bit-identical
+        // to the `scale` row above — pinned by rust/tests/federation.rs),
+        // so the shard-4 delta reads as pure federation win: shard-local
+        // replans over 4× smaller beliefs, run in parallel.
+        for shards in [1usize, 4] {
+            let fed = FederatedCoordinator::new(
+                Policy::LastK(5),
+                SchedulerKind::Heft,
+                0,
+                cfg,
+                shards,
+            )
+            .with_jobs(4);
+            let (mean, min, max) = util::time_it(0, 1, || {
+                std::hint::black_box(fed.run(&big));
+            });
+            rec.report(
+                &format!("shard {shards} 5P-HEFT σ0.3 L3@0.25 scale {label}"),
+                mean,
+                min,
+                max,
+            );
+        }
+
+        // 1b''''. the 10⁶-task federated composite (§Federation, paper
+        // scale only): ~120k synthetic graphs ≈ 1M tasks — far past what
+        // one global belief can replan interactively — split across 4
+        // clusters.  Quick scale skips it (minutes of wall time).
+        if util::scale() == "paper" {
+            let huge = Dataset::Synthetic.instance(120_000, 1);
+            eprintln!(
+                "[bench] 1M row: {} graphs, {} tasks",
+                huge.graphs.len(),
+                huge.total_tasks()
+            );
+            let fed =
+                FederatedCoordinator::new(Policy::LastK(5), SchedulerKind::Heft, 0, cfg, 4)
+                    .with_jobs(4);
+            let (mean, min, max) = util::time_it(0, 1, || {
+                std::hint::black_box(fed.run(&huge));
+            });
+            rec.report("scale 1M shard 4 5P-HEFT σ0.3 L3@0.25", mean, min, max);
+        }
     }
 
     // 1b'''. memory-layout A/B (§Layout): the retained AoS/map reference

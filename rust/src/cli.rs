@@ -79,11 +79,12 @@ USAGE:
                  [--jobs N]   (N worker threads; deterministic at any N)
   dts simulate   --dataset <d|all> [--graphs N] [--scale M] [--trials T] [--seed S]
                  [--variant 5P-HEFT] [--noise 0.0,0.3] [--threshold 0.25,none]
-                 [--k 3] [--weighted [pareto|classes]] [--deadline-slack F]
-                 [--arrival poisson|bursty] [--burst-size 4]
+                 [--k 3] [--shards S] [--weighted [pareto|classes]]
+                 [--deadline-slack F] [--arrival poisson|bursty] [--burst-size 4]
                  [--jobs N] [--csv out.csv] [--json out.json]
                  [--trace out.json]
-                 (reactive runtime: realized durations, straggler Last-K)
+                 (reactive runtime: realized durations, straggler Last-K;
+                  --shards S > 1 federates the node pool into S clusters)
   dts policy     --dataset <d|all> [--graphs N] [--scale M] [--trials T] [--seed S]
                  [--variant 5P-HEFT] [--noise 0.3] [--k 1,3,5]
                  [--threshold 0.25] [--budget none,1.0] [--burst 4]
@@ -384,6 +385,18 @@ fn cmd_simulate(args: &Args) -> i32 {
         return 2;
     }
     let k = args.usize_flag("k", 3);
+    // --shards is validated explicitly (usize_flag silently falls back to
+    // the default on garbage, which would mask a typo'd shard count)
+    let shards = match args.flag("shards") {
+        None => 1,
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                eprintln!("error: --shards must be a positive integer, got '{s}'");
+                return 2;
+            }
+        },
+    };
     let Ok(scenario) = scenario_of(args) else {
         return 2;
     };
@@ -421,17 +434,20 @@ fn cmd_simulate(args: &Args) -> i32 {
             variant,
             scenario: scenario.clone(),
             scenarios: scenarios.clone(),
+            shards,
         };
         let n_cells = cfg.trials * cfg.scenarios.len();
         let jobs = args.usize_flag("jobs", 1).clamp(1, n_cells.max(1));
         eprintln!(
-            "simulate: {} × {} scenarios × {} trials ({} graphs, {}, workload {}, {} job{})",
+            "simulate: {} × {} scenarios × {} trials ({} graphs, {}, workload {}, {} shard{}, {} job{})",
             dataset.name(),
             cfg.scenarios.len(),
             cfg.trials,
             cfg.n_graphs,
             variant.label(),
             cfg.scenario.label(),
+            shards,
+            if shards == 1 { "" } else { "s" },
             jobs,
             if jobs == 1 { "" } else { "s" }
         );
@@ -972,6 +988,19 @@ mod tests {
     }
 
     #[test]
+    fn simulate_shards_smoke() {
+        // federated path: the node pool split across 2 clusters, cells
+        // fanned out over 2 workers
+        assert_eq!(
+            main_with(&argv(
+                "simulate --dataset synthetic --graphs 5 --trials 1 \
+                 --noise 0.3 --threshold 0.25 --k 2 --shards 2 --jobs 2"
+            )),
+            0
+        );
+    }
+
+    #[test]
     fn simulate_rejects_bad_input() {
         assert_eq!(main_with(&argv("simulate --dataset nope")), 2);
         assert_eq!(main_with(&argv("simulate")), 2);
@@ -993,6 +1022,16 @@ mod tests {
         );
         assert_eq!(
             main_with(&argv("simulate --dataset synthetic --variant WAT")),
+            2
+        );
+        // --shards must be an explicit positive integer (usize_flag's
+        // silent default would otherwise mask both of these)
+        assert_eq!(
+            main_with(&argv("simulate --dataset synthetic --shards 0")),
+            2
+        );
+        assert_eq!(
+            main_with(&argv("simulate --dataset synthetic --shards two")),
             2
         );
     }

@@ -393,6 +393,10 @@ pub struct SimSweepConfig {
     pub variant: Variant,
     pub scenario: Scenario,
     pub scenarios: Vec<SimScenario>,
+    /// Node-pool shard count for the federated runtime
+    /// ([`crate::federation`]); 1 = the monolithic reactive coordinator
+    /// (bit-identical to pre-federation sweeps).
+    pub shards: usize,
 }
 
 /// One (trial, scenario) cell: realized metrics of the reactive run
@@ -474,6 +478,14 @@ fn planned_row(cfg: &SimSweepConfig, prob: &DynamicProblem, trial: usize) -> Met
 /// Run one (trial, scenario) cell.  Every realized schedule is checked
 /// operationally by [`crate::sim::replay`]; an error is a hard panic —
 /// the harness must never report numbers from an invalid execution.
+/// With `cfg.shards > 1` the cell runs the federated runtime
+/// ([`crate::federation::FederatedCoordinator`]) instead of the
+/// monolithic coordinator; the merged global schedule is replay-checked
+/// against the **original** problem (sub-networks copy speeds/links
+/// verbatim, so shard-local validity implies global validity — the
+/// replay proves it rather than assuming it).  The planned baseline
+/// stays the monolithic static coordinator either way: realized-vs-
+/// planned degradation then reads as the full sharding A/B.
 fn run_sim_cell(
     cfg: &SimSweepConfig,
     prob: &DynamicProblem,
@@ -489,28 +501,64 @@ fn run_sim_cell(
         record_frozen: false,
         full_refresh: false,
     };
-    let mut rc = ReactiveCoordinator::new(
-        cfg.variant.policy,
-        cfg.variant.kind.make(seed ^ 0x5EED),
-        sim_cfg,
-    );
-    let res = rc.run(prob);
-    assert_eq!(res.schedule.n_assigned(), prob.total_tasks());
-    let rep = crate::sim::replay(&res.schedule, &prob.graphs, &prob.network);
-    assert!(
-        rep.errors.is_empty(),
-        "invalid realized schedule from {} under {} on {} trial {trial}: {:?}",
-        cfg.variant.label(),
-        scenario.label(),
-        cfg.dataset.name(),
-        &rep.errors[..rep.errors.len().min(3)]
-    );
+    let (realized, n_replans, n_straggler_replans, n_reverted, n_assigned) = if cfg.shards > 1 {
+        let fed = crate::federation::FederatedCoordinator::new(
+            cfg.variant.policy,
+            cfg.variant.kind,
+            seed ^ 0x5EED,
+            sim_cfg,
+            cfg.shards,
+        );
+        let res = fed.run(prob);
+        let row = res.metrics(prob);
+        let rep = crate::sim::replay(&res.schedule, &prob.graphs, &prob.network);
+        assert!(
+            rep.errors.is_empty(),
+            "invalid federated schedule ({} shards) from {} under {} on {} trial {trial}: {:?}",
+            cfg.shards,
+            cfg.variant.label(),
+            scenario.label(),
+            cfg.dataset.name(),
+            &rep.errors[..rep.errors.len().min(3)]
+        );
+        (
+            row,
+            res.n_replans(),
+            res.n_straggler_replans(),
+            res.n_reverted_total(),
+            res.schedule.n_assigned(),
+        )
+    } else {
+        let mut rc = ReactiveCoordinator::new(
+            cfg.variant.policy,
+            cfg.variant.kind.make(seed ^ 0x5EED),
+            sim_cfg,
+        );
+        let res = rc.run(prob);
+        let rep = crate::sim::replay(&res.schedule, &prob.graphs, &prob.network);
+        assert!(
+            rep.errors.is_empty(),
+            "invalid realized schedule from {} under {} on {} trial {trial}: {:?}",
+            cfg.variant.label(),
+            scenario.label(),
+            cfg.dataset.name(),
+            &rep.errors[..rep.errors.len().min(3)]
+        );
+        (
+            res.metrics(prob),
+            res.n_replans(),
+            res.n_straggler_replans(),
+            res.n_reverted_total(),
+            res.schedule.n_assigned(),
+        )
+    };
+    assert_eq!(n_assigned, prob.total_tasks());
     SimCell {
-        realized: res.metrics(prob),
+        realized,
         planned: *planned,
-        n_replans: res.n_replans(),
-        n_straggler_replans: res.n_straggler_replans(),
-        n_reverted: res.n_reverted_total(),
+        n_replans,
+        n_straggler_replans,
+        n_reverted,
     }
 }
 
@@ -704,6 +752,7 @@ impl SimSweepResult {
                 label.clone(),
                 format!("{}", sc.noise_std),
                 sc.reaction.label(),
+                format!("{}", self.config.shards),
             ];
             for m in Metric::ALL {
                 row.push(format!("{}", self.realized_mean(si, m)));
@@ -737,6 +786,7 @@ impl SimSweepResult {
             "scenario",
             "noise_std",
             "reaction",
+            "shards",
             "total_makespan",
             "mean_makespan",
             "mean_flowtime",
@@ -799,6 +849,7 @@ impl SimSweepResult {
                     ("trials", json::num(self.config.trials as f64)),
                     ("seed", json::num(self.config.seed as f64)),
                     ("load", json::num(self.config.load)),
+                    ("shards", json::num(self.config.shards as f64)),
                 ]),
             ),
             (
@@ -1369,7 +1420,33 @@ mod tests {
                     },
                 },
             ],
+            shards: 1,
         }
+    }
+
+    /// A sharded sweep produces complete, replay-valid cells (the
+    /// federated branch of [`run_sim_cell`]) and stays bit-identical
+    /// across thread counts — migrations and all.
+    #[test]
+    fn sharded_sim_sweep_runs_and_is_jobs_deterministic() {
+        let mut cfg = tiny_sim_cfg();
+        cfg.shards = 3;
+        let serial = run_sim_sweep_parallel(&cfg, 1);
+        let parallel = run_sim_sweep_parallel(&cfg, 4);
+        assert_eq!(serial.rows.len(), 2);
+        let sig = |c: &SimCell| {
+            (
+                c.realized.total_makespan.to_bits(),
+                c.realized.mean_stretch.to_bits(),
+                c.n_replans,
+                c.n_straggler_replans,
+                c.n_reverted,
+            )
+        };
+        for (a, b) in serial.rows.iter().flatten().zip(parallel.rows.iter().flatten()) {
+            assert_eq!(sig(a), sig(b));
+        }
+        assert!(serial.to_csv().lines().next().unwrap().contains("shards"));
     }
 
     #[test]

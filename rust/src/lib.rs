@@ -30,6 +30,11 @@
 //!   (fixed Last-K, AIMD-adaptive, token-budgeted, cooldown-wrapped,
 //!   deadline-urgency-scoped) driving the reactive coordinator
 //!   ([`policy`]);
+//! * **federated multi-cluster sharding** — the node pool partitioned
+//!   into clusters, one reactive coordinator per shard, a deterministic
+//!   best-fit admission layer and cross-shard work-stealing migration;
+//!   one shard reproduces the monolithic coordinator bit-exactly
+//!   ([`federation`]);
 //! * an **XLA/PJRT runtime** that executes the AOT-compiled JAX+Pallas
 //!   rank kernels from `artifacts/` on the scheduling hot path
 //!   ([`runtime`]);
@@ -49,6 +54,7 @@ pub mod coordinator;
 pub mod dense;
 pub mod experiments;
 pub mod fasthash;
+pub mod federation;
 pub mod gantt;
 pub mod graph;
 pub mod json;

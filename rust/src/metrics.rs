@@ -245,13 +245,18 @@ pub fn weighted_jain(xs: &[f64], ws: &[f64]) -> f64 {
 /// The deadline axes of one run, computed over the **deadline-bearing**
 /// graphs only ([`TaskGraph::deadline`]): per-graph tardiness is
 /// `max(0, finish − deadline)` where `finish` is the graph's last task
-/// completion.  A workload with no deadlines (the paper's setting) is
+/// completion.  A deadline-bearing graph with **no** finish (dropped or
+/// never admitted — possible once an admission layer is in play) counts
+/// as **missed**: it joins the miss-rate denominator and numerator, but
+/// contributes no tardiness sample (its tardiness is undefined without a
+/// finish time).  A workload with no deadlines (the paper's setting) is
 /// **vacuously on-time** — every axis reads 0.0 — so turning the axes on
 /// never perturbs deadline-free sweeps.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct DeadlineSummary {
     /// fraction of deadline-bearing graphs finishing strictly after
-    /// their deadline (`tardiness > 0`) ∈ [0, 1]
+    /// their deadline (`tardiness > 0`) **or never finishing at all**
+    /// ∈ [0, 1]
     pub miss_rate: f64,
     /// mean per-graph tardiness
     pub mean_tardiness: f64,
@@ -263,31 +268,47 @@ pub struct DeadlineSummary {
 }
 
 /// Compute the [`DeadlineSummary`] of a finished schedule.  Graphs
-/// without a deadline, or with no scheduled task, contribute nothing.
+/// without a deadline contribute nothing; a deadline-bearing graph with
+/// no scheduled task counts as **missed** (it can never meet its
+/// deadline) but contributes no tardiness sample — see
+/// `docs/METRICS.md` for the convention.  On fully-scheduled input the
+/// result is bit-identical to the pre-admission accounting.
 pub fn deadline_summary(schedule: &Schedule, problem: &[(f64, TaskGraph)]) -> DeadlineSummary {
     let mut tard = Vec::new();
     let mut weights = Vec::new();
     let mut missed = 0usize;
+    let mut n_deadline = 0usize;
     for (gi, (_, g)) in problem.iter().enumerate() {
         let Some(deadline) = g.deadline() else {
             continue;
         };
-        let Some(finish) = graph_finish(schedule, gi, g) else {
-            continue;
-        };
-        let t = (finish - deadline).max(0.0);
-        if t > 0.0 {
-            missed += 1;
+        n_deadline += 1;
+        match graph_finish(schedule, gi, g) {
+            Some(finish) => {
+                let t = (finish - deadline).max(0.0);
+                if t > 0.0 {
+                    missed += 1;
+                }
+                tard.push(t);
+                weights.push(g.weight());
+            }
+            // A deadline-bearing graph that never finishes (dropped or
+            // unadmitted) is a miss, not vacuously on-time; its
+            // tardiness is undefined, so it joins the miss-rate
+            // denominator/numerator but not the tardiness means.
+            None => missed += 1,
         }
-        tard.push(t);
-        weights.push(g.weight());
     }
-    if tard.is_empty() {
+    if n_deadline == 0 {
         return DeadlineSummary::default();
     }
     DeadlineSummary {
-        miss_rate: missed as f64 / tard.len() as f64,
-        mean_tardiness: tard.iter().sum::<f64>() / tard.len() as f64,
+        miss_rate: missed as f64 / n_deadline as f64,
+        mean_tardiness: if tard.is_empty() {
+            0.0
+        } else {
+            tard.iter().sum::<f64>() / tard.len() as f64
+        },
         max_tardiness: tard.iter().copied().fold(0.0, f64::max),
         weighted_tardiness: weighted_mean(&tard, &weights),
     }
@@ -482,6 +503,10 @@ pub struct PreemptionCost {
     pub straggler_replans: usize,
     /// previously scheduled tasks reverted across all replans
     pub reverted_tasks: usize,
+    /// whole *pending* graphs migrated across shards by the federation
+    /// layer's rebalancing pass ([`crate::federation`]); always 0 for
+    /// monolithic (single-coordinator) runs
+    pub migrations: usize,
     /// wall-clock seconds inside replan passes (belief refresh + base
     /// heuristic + bookkeeping) — the runtime price of reacting
     pub replan_wall_s: f64,
@@ -739,11 +764,12 @@ mod tests {
     }
 
     #[test]
-    fn deadline_summary_skips_unscheduled_graphs() {
+    fn deadline_summary_counts_unscheduled_graphs_as_missed() {
         let (mut s, mut p, _) = setup();
         p[0].1.set_deadline(0.0);
         p[1].1.set_deadline(0.0);
-        // drop g2 entirely: only g1 contributes
+        // drop g2 entirely: it still counts as a miss, but only g1
+        // contributes a tardiness sample
         s.unassign(Gid::new(1, 0));
         s.unassign(Gid::new(1, 1));
         let dl = deadline_summary(&s, &p);
@@ -752,11 +778,46 @@ mod tests {
     }
 
     #[test]
+    fn unscheduled_deadline_graph_is_a_miss_not_vacuously_on_time() {
+        // The discriminating case for the dropped-graph convention:
+        // g1 meets a generous deadline, g2 never runs.  The old
+        // accounting skipped g2 and read 0.0 misses; now it is 1 miss
+        // out of 2 deadline-bearing graphs, with no tardiness sample.
+        let (mut s, mut p, _) = setup();
+        p[0].1.set_deadline(100.0); // finishes at 4 → met
+        p[1].1.set_deadline(0.0); // never scheduled → missed
+        s.unassign(Gid::new(1, 0));
+        s.unassign(Gid::new(1, 1));
+        let dl = deadline_summary(&s, &p);
+        assert_eq!(dl.miss_rate, 0.5);
+        assert_eq!(dl.mean_tardiness, 0.0);
+        assert_eq!(dl.max_tardiness, 0.0);
+        assert_eq!(dl.weighted_tardiness, 0.0);
+    }
+
+    #[test]
+    fn all_deadline_graphs_unscheduled_is_total_miss() {
+        let (mut s, mut p, _) = setup();
+        p[0].1.set_deadline(1.0);
+        p[1].1.set_deadline(1.0);
+        for gi in 0..2 {
+            s.unassign(Gid::new(gi, 0));
+            s.unassign(Gid::new(gi, 1));
+        }
+        let dl = deadline_summary(&s, &p);
+        assert_eq!(dl.miss_rate, 1.0);
+        assert_eq!(dl.mean_tardiness, 0.0);
+        assert_eq!(dl.max_tardiness, 0.0);
+        assert_eq!(dl.weighted_tardiness, 0.0);
+    }
+
+    #[test]
     fn preemption_cost_defaults_to_zero() {
         let c = PreemptionCost::default();
         assert_eq!(c.replans, 0);
         assert_eq!(c.straggler_replans, 0);
         assert_eq!(c.reverted_tasks, 0);
+        assert_eq!(c.migrations, 0);
         assert_eq!(c.replan_wall_s, 0.0);
     }
 

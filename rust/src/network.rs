@@ -136,6 +136,33 @@ impl Network {
         acc / (n * (n - 1)) as f64
     }
 
+    /// The induced sub-network over `nodes` (order preserved): speeds
+    /// and link strengths are copied **verbatim**, so every
+    /// [`Network::exec_time`]/[`Network::comm_time`] a scheduler reads
+    /// on the sub-network is bit-identical to the value the full
+    /// network reports for the corresponding global nodes — a schedule
+    /// computed on the sub-network replays exactly on the full network
+    /// after index remapping.  Passing every node in order reproduces
+    /// `self` exactly.  The federation layer ([`crate::federation`])
+    /// uses this to hand each shard its cluster's slice of the pool.
+    ///
+    /// Panics if `nodes` is empty or repeats a node (a repeated node
+    /// would produce a zero off-diagonal link, which `Network::new`
+    /// rejects).
+    pub fn subnetwork(&self, nodes: &[usize]) -> Network {
+        let speed: Vec<f64> = nodes.iter().map(|&v| self.speed[v]).collect();
+        let n = nodes.len();
+        let mut link = vec![0.0; n * n];
+        for (i, &u) in nodes.iter().enumerate() {
+            for (j, &v) in nodes.iter().enumerate() {
+                if i != j {
+                    link[i * n + j] = self.link(u, v);
+                }
+            }
+        }
+        Network::new(speed, link)
+    }
+
     /// Mean of 1/s(v) — cached by hot paths to avoid recomputation.
     pub fn mean_inv_speed(&self) -> f64 {
         self.speed.iter().map(|s| 1.0 / s).sum::<f64>() / self.speed.len() as f64
@@ -236,6 +263,37 @@ mod tests {
     #[should_panic(expected = "positive")]
     fn rejects_zero_speed() {
         Network::new(vec![0.0], vec![0.0]);
+    }
+
+    #[test]
+    fn subnetwork_identity_and_subset() {
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let d = TruncatedGaussian::new(1.0, 0.5, 0.2, 3.0);
+        let net = Network::generate(6, &d, &d, &mut rng);
+        // identity: every node in order reproduces the network bit-exactly
+        let all: Vec<usize> = (0..6).collect();
+        let id = net.subnetwork(&all);
+        for v in 0..6 {
+            assert_eq!(id.speed(v).to_bits(), net.speed(v).to_bits());
+            for u in 0..6 {
+                if u != v {
+                    assert_eq!(id.link(u, v).to_bits(), net.link(u, v).to_bits());
+                }
+            }
+        }
+        // subset: exec/comm times match the global nodes verbatim
+        let nodes = [4usize, 1, 5];
+        let sub = net.subnetwork(&nodes);
+        assert_eq!(sub.n_nodes(), 3);
+        for (i, &u) in nodes.iter().enumerate() {
+            assert_eq!(sub.exec_time(7.0, i).to_bits(), net.exec_time(7.0, u).to_bits());
+            for (j, &v) in nodes.iter().enumerate() {
+                assert_eq!(
+                    sub.comm_time(7.0, i, j).to_bits(),
+                    net.comm_time(7.0, u, v).to_bits()
+                );
+            }
+        }
     }
 
     #[test]

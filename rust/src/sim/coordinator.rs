@@ -261,11 +261,15 @@ impl SimResult {
 
     /// The run's preemption-cost accounting (replans, reverted tasks,
     /// replan wall time) for the policy sweep's figure tables.
+    /// Migrations are a federation-layer concept
+    /// ([`crate::federation::FederationResult::preemption_cost`]); a
+    /// monolithic run always reports 0.
     pub fn preemption_cost(&self) -> PreemptionCost {
         PreemptionCost {
             replans: self.n_replans(),
             straggler_replans: self.n_straggler_replans(),
             reverted_tasks: self.n_reverted_total(),
+            migrations: 0,
             replan_wall_s: self.replan_wall_s,
         }
     }
@@ -467,11 +471,16 @@ impl<'a> Sim<'a> {
     /// candidates — an endangered graph whose work is all dispatched
     /// cannot be helped by preemption, and letting it occupy a window
     /// slot would silently starve graphs the replan *can* still move.
-    /// Graphs without a deadline get `+∞` slack, so they are only
-    /// selected after every deadline-bearing candidate; ties (including
-    /// the all-`∞` case of a deadline-free workload) break toward
-    /// recency.  The ranking is a deterministic function of the belief,
-    /// so sweeps stay bit-identical at any thread count.
+    /// One exception: a deadline-carrying graph with **zero planned
+    /// slots** (possible once admission can defer or drop a graph) has
+    /// no predicted completion at all — it is maximally endangered
+    /// (`−∞` slack), not deadline-less, and stays a candidate so the
+    /// replan that follows can finally place it.  Graphs without a
+    /// deadline get `+∞` slack, so they are only selected after every
+    /// deadline-bearing candidate; ties (including the all-`∞` case of
+    /// a deadline-free workload) break toward recency.  The ranking is
+    /// a deterministic function of the belief, so sweeps stay
+    /// bit-identical at any thread count.
     fn select_urgent(&mut self, k: usize) {
         self.urgency.clear();
         for gi in 0..self.arrived {
@@ -488,12 +497,16 @@ impl<'a> Sim<'a> {
                     revertible |= self.realized.get(gid).is_none();
                 }
             }
-            if !revertible {
+            let no_plan = !fin.is_finite();
+            if !revertible && !(no_plan && g.deadline().is_some()) {
                 continue;
             }
             let slack = match g.deadline() {
                 Some(d) if fin.is_finite() => d - fin,
-                _ => f64::INFINITY,
+                // zero planned slots: no predicted completion exists,
+                // so the graph is maximally endangered, not ∞-slack
+                Some(_) => f64::NEG_INFINITY,
+                None => f64::INFINITY,
             };
             self.urgency.push((slack, gi));
         }
@@ -1863,6 +1876,34 @@ mod tests {
         sim.select_urgent(3);
         let picked: Vec<usize> = sim.urgency.iter().map(|&(_, g)| g).collect();
         assert_eq!(picked, vec![2, 1], "dispatched g0 is not a candidate");
+
+        // A deadline-carrying graph with zero planned slots has no
+        // predicted completion: it is maximally endangered (−∞ slack),
+        // not deadline-less — even against a tight-slack rival.
+        let prob2 = DynamicProblem::new(
+            Network::homogeneous(2),
+            vec![
+                (0.0, one_task("h0", Some(10.0))),
+                (0.0, one_task("h1", Some(50.0))), // never planned
+            ],
+        );
+        let mut sim = Sim::new(&prob2, SimConfig::default());
+        sim.arrived = 2;
+        sim.plan.assign(
+            Gid::new(0, 0),
+            Assignment {
+                node: 0,
+                start: 7.0,
+                finish: 8.0,
+            },
+        );
+        sim.select_urgent(2);
+        let picked: Vec<usize> = sim.urgency.iter().map(|&(_, g)| g).collect();
+        assert_eq!(
+            picked,
+            vec![0, 1],
+            "no-plan deadline graph h1 ranks most endangered (stored last)"
+        );
     }
 
     /// End-to-end: a `DeadlineAware` controller on a deadline-laden

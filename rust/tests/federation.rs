@@ -1,0 +1,199 @@
+//! Integration pins for the **federated sharding layer**
+//! ([`dts::federation`]):
+//!
+//! * the **1-shard differential oracle** — `--shards 1` reproduces the
+//!   monolithic reactive coordinator bit-exactly (schedules, event logs,
+//!   every metric axis) on all four datasets × the extended heuristic
+//!   set;
+//! * **jobs-determinism** — a sharded run is bit-identical at any
+//!   worker count;
+//! * **admission conservation** — every graph runs on exactly one
+//!   shard, and a migrated graph never re-executes realized work (the
+//!   merge would panic on a double assignment);
+//! * the **frozen-prefix invariant per shard** — shard-local replans
+//!   never move a task that already started on that shard.
+
+use dts::coordinator::Policy;
+use dts::federation::FederatedCoordinator;
+use dts::graph::Gid;
+use dts::metrics::{Metric, MetricRow};
+use dts::schedule::Schedule;
+use dts::schedulers::SchedulerKind;
+use dts::sim::{replay, Reaction, ReactiveCoordinator, SimConfig};
+use dts::workloads::Dataset;
+
+fn sig(s: &Schedule) -> Vec<(Gid, usize, u64, u64)> {
+    let mut v: Vec<(Gid, usize, u64, u64)> = s
+        .iter()
+        .map(|(g, a)| (*g, a.node, a.start.to_bits(), a.finish.to_bits()))
+        .collect();
+    v.sort();
+    v
+}
+
+fn reactive_cfg(seed: u64, record_frozen: bool) -> SimConfig {
+    SimConfig {
+        noise_std: 0.3,
+        noise_seed: seed ^ 0xA11CE,
+        reaction: Reaction::LastK {
+            k: 3,
+            threshold: 0.25,
+        },
+        record_frozen,
+        full_refresh: false,
+    }
+}
+
+/// DIFFERENTIAL ORACLE: one shard ≡ the monolithic coordinator, bit for
+/// bit — schedule, realized-event log, and all 15 metric axes — on all
+/// four datasets across the extended heuristic set.
+#[test]
+fn one_shard_is_bit_identical_to_monolithic() {
+    for (di, dataset) in Dataset::ALL.iter().enumerate() {
+        for (ki, kind) in SchedulerKind::EXTENDED.iter().enumerate() {
+            let seed = 700 + 61 * di as u64 + 13 * ki as u64;
+            let prob = dataset.instance(6, seed);
+            let cfg = reactive_cfg(seed, false);
+            let ctx = format!("{} {}", dataset.name(), kind.name());
+
+            let mut mono =
+                ReactiveCoordinator::new(Policy::LastK(5), kind.make(seed ^ 0x5EED), cfg);
+            let m = mono.run(&prob);
+            let fed = FederatedCoordinator::new(Policy::LastK(5), *kind, seed ^ 0x5EED, cfg, 1);
+            let f = fed.run(&prob);
+
+            assert_eq!(f.shard_nodes.len(), 1, "{ctx}");
+            assert_eq!(sig(&m.schedule), sig(&f.schedule), "{ctx}: schedule diverged");
+            assert_eq!(m.log.len(), f.log.len(), "{ctx}: log length diverged");
+            for (i, (a, b)) in m.log.iter().zip(f.log.iter()).enumerate() {
+                assert_eq!(a.time.to_bits(), b.time.to_bits(), "{ctx}: log[{i}] time");
+                assert_eq!(a.kind, b.kind, "{ctx}: log[{i}] kind");
+            }
+            // every metric axis, bitwise (runtime pinned so the one
+            // wall-clock axis compares too)
+            let mm = MetricRow::compute(&m.schedule, &prob.graphs, &prob.network, 0.0);
+            let fm = MetricRow::compute(&f.schedule, &prob.graphs, &prob.network, 0.0);
+            for metric in Metric::ALL {
+                assert_eq!(
+                    mm.get(metric).to_bits(),
+                    fm.get(metric).to_bits(),
+                    "{ctx}: {metric:?} diverged"
+                );
+            }
+            // replan/revert accounting agrees as well
+            assert_eq!(m.n_replans(), f.n_replans(), "{ctx}");
+            assert_eq!(m.n_reverted_total(), f.n_reverted_total(), "{ctx}");
+            assert!(f.admission.migrations.is_empty(), "{ctx}: S=1 migrated");
+        }
+    }
+}
+
+/// A 4-shard run is bit-identical at any worker count (the shard
+/// fan-out uses the same deterministic work-queue discipline as the
+/// sweeps).
+#[test]
+fn sharded_run_is_jobs_deterministic() {
+    for dataset in [Dataset::Synthetic, Dataset::RiotBench] {
+        let prob = dataset.instance(12, 5);
+        let cfg = reactive_cfg(5, false);
+        let run = |jobs: usize| {
+            FederatedCoordinator::new(Policy::LastK(5), SchedulerKind::Heft, 5, cfg, 4)
+                .with_jobs(jobs)
+                .run(&prob)
+        };
+        let base = run(1);
+        for jobs in [2usize, 8] {
+            let r = run(jobs);
+            let ctx = format!("{} jobs={jobs}", dataset.name());
+            assert_eq!(sig(&base.schedule), sig(&r.schedule), "{ctx}: schedule");
+            assert_eq!(base.log, r.log, "{ctx}: log");
+            assert_eq!(base.admission.shard_of, r.admission.shard_of, "{ctx}");
+            assert_eq!(base.admission.migrations, r.admission.migrations, "{ctx}");
+            assert_eq!(base.n_replans(), r.n_replans(), "{ctx}");
+        }
+    }
+}
+
+/// Admission conservation: `shard_graphs` is a partition of the graph
+/// set consistent with `shard_of`, every task is realized exactly once
+/// in the merged schedule (a re-executed task would double-assign and
+/// panic inside the merge), and the merged schedule replays cleanly
+/// against the *original* problem.
+#[test]
+fn admission_conserves_graphs_and_replays() {
+    for (di, dataset) in Dataset::ALL.iter().enumerate() {
+        let seed = 30 + di as u64;
+        let prob = dataset.instance(10, seed);
+        let cfg = reactive_cfg(seed, false);
+        let res = FederatedCoordinator::new(Policy::LastK(5), SchedulerKind::Heft, seed, cfg, 3)
+            .with_jobs(2)
+            .run(&prob);
+        let ctx = dataset.name();
+
+        let mut owner = vec![None; prob.graphs.len()];
+        for (si, graphs) in res.shard_graphs.iter().enumerate() {
+            for &gi in graphs {
+                assert!(owner[gi].is_none(), "{ctx}: graph {gi} on two shards");
+                owner[gi] = Some(si);
+                assert_eq!(res.admission.shard_of[gi], si, "{ctx}: shard_of[{gi}]");
+            }
+        }
+        assert!(owner.iter().all(|o| o.is_some()), "{ctx}: unadmitted graph");
+        for m in &res.admission.migrations {
+            assert_eq!(res.admission.shard_of[m.graph], m.to, "{ctx}: stale record");
+            assert_ne!(m.from, m.to, "{ctx}: self-migration");
+        }
+
+        assert_eq!(
+            res.schedule.n_assigned(),
+            prob.total_tasks(),
+            "{ctx}: merged schedule incomplete"
+        );
+        let rep = replay(&res.schedule, &prob.graphs, &prob.network);
+        assert!(
+            rep.errors.is_empty(),
+            "{ctx}: {:?}",
+            &rep.errors[..rep.errors.len().min(3)]
+        );
+        let cost = res.preemption_cost();
+        assert_eq!(cost.migrations, res.admission.migrations.len(), "{ctx}");
+    }
+}
+
+/// Frozen-prefix invariant per shard: a task that started executing
+/// before a shard-local replan keeps its node and start time — both in
+/// the shard's own schedule and, after index remapping, in the merged
+/// global schedule.
+#[test]
+fn frozen_prefix_holds_per_shard() {
+    let prob = Dataset::Synthetic.instance(12, 17);
+    let cfg = reactive_cfg(17, true);
+    let res = FederatedCoordinator::new(Policy::LastK(5), SchedulerKind::Heft, 17, cfg, 3)
+        .with_jobs(2)
+        .run(&prob);
+    let mut straggler_replans = 0usize;
+    for (si, shard) in res.per_shard.iter().enumerate() {
+        straggler_replans += shard.n_straggler_replans();
+        for rec in &shard.replans {
+            for &(gid, node, start) in &rec.frozen {
+                let a = shard.schedule.get(gid).unwrap();
+                assert_eq!(
+                    (a.node, a.start.to_bits()),
+                    (node, start.to_bits()),
+                    "shard {si}: replan at {} moved started task {gid}",
+                    rec.time
+                );
+                // ... and the merge preserved it in global indices
+                let global = Gid::new(res.shard_graphs[si][gid.graph as usize], gid.task as usize);
+                let ga = res.schedule.get(global).unwrap();
+                assert_eq!(ga.node, res.shard_nodes[si][node], "merge moved {global}");
+                assert_eq!(ga.start.to_bits(), start.to_bits(), "merge shifted {global}");
+            }
+        }
+    }
+    assert_eq!(
+        straggler_replans,
+        res.n_straggler_replans(),
+        "federation sums shard-local straggler replans"
+    );
+}

@@ -120,6 +120,7 @@ fn policy_sweep_reproduces_sim_sweep_lastk_cells() {
             noise_std: noise,
             reaction: Reaction::LastK { k, threshold },
         }],
+        shards: 1,
     };
     let pol_cfg = PolicySweepConfig {
         dataset: Dataset::Synthetic,

@@ -125,6 +125,7 @@ fn default_knobs_sim_sweep_is_bit_stable() {
         variant,
         scenario: Scenario::default(),
         scenarios,
+        shards: 1,
     };
     let serial = run_sim_sweep_parallel(&cfg, 1);
     let par = run_sim_sweep_parallel(&cfg, 4);
