@@ -1,0 +1,212 @@
+#!/usr/bin/env python3
+"""Summarize a `dts-telemetry-v1` NDJSON dump (stdlib only).
+
+Usage:
+    python3 python/telemetry_report.py tele.ndjson [--out report.md]
+
+Input: the file written by `dts simulate|policy --telemetry PATH` —
+one JSON object per line (see docs/OBSERVABILITY.md):
+
+  * a meta line   {"format": "dts-telemetry-v1", "command": ...}
+  * span lines    {"kind": "span", "label", "dataset", "replans",
+                   "refresh_s", "heuristic_s", "bookkeep_s", "wall_s"}
+  * counter lines {"kind": "counter", "key", "value"}
+  * hist lines    {"kind": "hist", "key", "count", "sum", "bins": [...]}
+
+Output (stdout, or --out as GitHub-flavored markdown):
+
+  * the **phase table** — per span (dataset x controller cell group)
+    the replan count and the refresh / heuristic / bookkeeping split of
+    the replan wall time, with per-phase percentages of the wall total;
+  * the **counter table** in canonical key order;
+  * **histogram percentiles** (p50/p90/p99/max) estimated from the
+    log2 bins: bin 0 holds the exact value 0, bin k (1..=40) the
+    half-open range [2^(k-1), 2^k), and the last bin is the +Inf
+    overflow bucket.  A percentile is reported as its bin's inclusive
+    upper edge — an upper bound, exact to the bin resolution.
+
+The phase sums are also reconciled: refresh + heuristic + bookkeep
+must match wall_s per span (tolerance 1e-6 relative); a mismatch means
+a phase was double- or un-counted and the script exits 2.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+HIST_BINS = 42  # keep in sync with rust/src/telemetry/mod.rs
+
+# nanosecond-valued histograms get human-readable percentile units
+WALL_KEYS = {"replan_wall_ns", "refresh_wall_ns", "heuristic_wall_ns",
+             "bookkeep_wall_ns"}
+
+
+def upper_edge(b: int) -> float:
+    """Inclusive upper edge of bin `b` (+inf for the overflow bucket)."""
+    if b == 0:
+        return 0.0
+    if b < HIST_BINS - 1:
+        return float((1 << b) - 1)
+    return float("inf")
+
+
+def percentile_edge(bins: list[int], q: float) -> float:
+    """Upper-bound estimate of quantile `q` from cumulative bin counts."""
+    total = sum(bins)
+    if total == 0:
+        return 0.0
+    target = q * total
+    cum = 0
+    for b, n in enumerate(bins):
+        cum += n
+        if cum >= target and n > 0 or cum >= total:
+            return upper_edge(b)
+    return upper_edge(HIST_BINS - 1)
+
+
+def max_edge(bins: list[int]) -> float:
+    for b in range(len(bins) - 1, -1, -1):
+        if bins[b] > 0:
+            return upper_edge(b)
+    return 0.0
+
+
+def fmt_val(key: str, v: float) -> str:
+    """Render a percentile edge: ns histograms as engineering time."""
+    if v == float("inf"):
+        return "+Inf"
+    if key not in WALL_KEYS:
+        return f"{int(v)}"
+    if v >= 1e9:
+        return f"{v / 1e9:.2f}s"
+    if v >= 1e6:
+        return f"{v / 1e6:.2f}ms"
+    if v >= 1e3:
+        return f"{v / 1e3:.2f}us"
+    return f"{int(v)}ns"
+
+
+def fmt_s(v: float) -> str:
+    return f"{v * 1e3:.3f}"
+
+
+def table(headers: list[str], rows: list[list[str]]) -> str:
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "|".join("---" for _ in headers) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(r) + " |")
+    return "\n".join(out)
+
+
+def parse(path: str):
+    meta, spans, counters, hists = None, [], [], []
+    with open(path) as fh:
+        for ln, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise SystemExit(f"{path}:{ln}: bad JSON line: {e}")
+            if obj.get("format"):
+                meta = obj
+            elif obj.get("kind") == "span":
+                spans.append(obj)
+            elif obj.get("kind") == "counter":
+                counters.append(obj)
+            elif obj.get("kind") == "hist":
+                hists.append(obj)
+    if meta is None or meta.get("format") != "dts-telemetry-v1":
+        raise SystemExit(f"{path}: not a dts-telemetry-v1 document")
+    return meta, spans, counters, hists
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("ndjson", help="telemetry NDJSON from --telemetry")
+    ap.add_argument("--out", help="write the markdown report here "
+                                  "instead of stdout")
+    args = ap.parse_args()
+
+    meta, spans, counters, hists = parse(args.ndjson)
+    parts = [f"# dts telemetry report — `{meta.get('command', '?')}`", ""]
+
+    # ---- phase table ------------------------------------------------
+    parts.append("## Replan phase decomposition (ms, % of wall)")
+    parts.append("")
+    rows, bad = [], []
+    for s in spans:
+        wall = float(s.get("wall_s", 0.0))
+        phases = [float(s.get(k, 0.0))
+                  for k in ("refresh_s", "heuristic_s", "bookkeep_s")]
+        if abs(sum(phases) - wall) > 1e-9 + 1e-6 * abs(wall):
+            bad.append(f"{s.get('dataset')}/{s.get('label')}: "
+                       f"phases {sum(phases)} vs wall {wall}")
+        pct = [f"{p / wall * 100:.1f}%" if wall > 0 else "-" for p in phases]
+        rows.append([
+            str(s.get("dataset", "?")), str(s.get("label", "?")),
+            str(s.get("replans", 0)),
+            f"{fmt_s(phases[0])} ({pct[0]})",
+            f"{fmt_s(phases[1])} ({pct[1]})",
+            f"{fmt_s(phases[2])} ({pct[2]})",
+            fmt_s(wall),
+        ])
+    if rows:
+        parts.append(table(
+            ["dataset", "cell", "replans", "refresh", "heuristic",
+             "bookkeep", "wall"], rows))
+    else:
+        parts.append("*(no span lines)*")
+    parts.append("")
+
+    # ---- counters ---------------------------------------------------
+    parts.append("## Counters")
+    parts.append("")
+    parts.append(table(
+        ["key", "value"],
+        [[str(c.get("key", "?")), str(int(c.get("value", 0)))]
+         for c in counters]))
+    parts.append("")
+
+    # ---- histogram percentiles -------------------------------------
+    parts.append("## Histogram percentiles (log2-binned upper bounds)")
+    parts.append("")
+    hrows = []
+    for h in hists:
+        key = str(h.get("key", "?"))
+        bins = [int(b) for b in h.get("bins", [])]
+        count = int(h.get("count", 0))
+        mean = (float(h.get("sum", 0)) / count) if count else 0.0
+        hrows.append([
+            key, str(count), fmt_val(key, mean),
+            fmt_val(key, percentile_edge(bins, 0.50)),
+            fmt_val(key, percentile_edge(bins, 0.90)),
+            fmt_val(key, percentile_edge(bins, 0.99)),
+            fmt_val(key, max_edge(bins)),
+        ])
+    parts.append(table(
+        ["key", "count", "mean", "p50", "p90", "p99", "max"], hrows))
+    parts.append("")
+
+    report = "\n".join(parts)
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write(report + "\n")
+        print(f"[telemetry-report] wrote {args.out}")
+    else:
+        print(report)
+
+    if bad:
+        print("[telemetry-report] PHASE RECONCILIATION FAILED:",
+              file=sys.stderr)
+        for b in bad:
+            print(f"  {b}", file=sys.stderr)
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

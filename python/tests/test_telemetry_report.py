@@ -1,0 +1,92 @@
+"""Stdlib-only tests for python/telemetry_report.py (no pytest/numpy/jax
+needed — run directly: `python3 python/tests/test_telemetry_report.py`)."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+SCRIPT = os.path.join(REPO, "python", "telemetry_report.py")
+sys.path.insert(0, os.path.join(REPO, "python"))
+
+import telemetry_report as tr  # noqa: E402
+
+
+def ndjson(span_overrides=None):
+    """A minimal valid dts-telemetry-v1 document."""
+    span = {
+        "kind": "span", "label": "sim L3@0.25", "dataset": "synthetic",
+        "replans": 12, "refresh_s": 0.001, "heuristic_s": 0.002,
+        "bookkeep_s": 0.0005, "wall_s": 0.0035,
+    }
+    span.update(span_overrides or {})
+    bins = [0] * tr.HIST_BINS
+    bins[0], bins[3], bins[41] = 2, 5, 1
+    lines = [
+        {"format": "dts-telemetry-v1", "command": "simulate"},
+        span,
+        {"kind": "counter", "key": "replans", "value": 12},
+        {"kind": "counter", "key": "eft_placements", "value": 340},
+        {"kind": "hist", "key": "cone_size", "count": 8, "sum": 42,
+         "bins": bins},
+    ]
+    return "\n".join(json.dumps(x) for x in lines) + "\n"
+
+
+def run_script(text):
+    with tempfile.NamedTemporaryFile("w", suffix=".ndjson",
+                                     delete=False) as fh:
+        fh.write(text)
+        path = fh.name
+    try:
+        return subprocess.run([sys.executable, SCRIPT, path],
+                              capture_output=True, text=True)
+    finally:
+        os.unlink(path)
+
+
+class BinEdges(unittest.TestCase):
+    def test_edges_match_rust_binning(self):
+        # bin 0 = exact zero; bin k upper edge 2^k - 1; last bin +Inf —
+        # keep in sync with Histogram::upper_edge in telemetry/mod.rs.
+        self.assertEqual(tr.upper_edge(0), 0.0)
+        self.assertEqual(tr.upper_edge(1), 1.0)
+        self.assertEqual(tr.upper_edge(5), 31.0)
+        self.assertEqual(tr.upper_edge(tr.HIST_BINS - 1), float("inf"))
+
+    def test_percentiles_are_upper_bounds(self):
+        bins = [0] * tr.HIST_BINS
+        bins[2] = 9   # values in [2, 4)
+        bins[10] = 1  # one outlier in [512, 1024)
+        self.assertEqual(tr.percentile_edge(bins, 0.50), 3.0)
+        self.assertEqual(tr.percentile_edge(bins, 0.99), 1023.0)
+        self.assertEqual(tr.max_edge(bins), 1023.0)
+        self.assertEqual(tr.percentile_edge([0] * tr.HIST_BINS, 0.5), 0.0)
+
+
+class Report(unittest.TestCase):
+    def test_good_document_renders_phase_table(self):
+        r = run_script(ndjson())
+        self.assertEqual(r.returncode, 0, r.stderr)
+        self.assertIn("Replan phase decomposition", r.stdout)
+        self.assertIn("synthetic", r.stdout)
+        self.assertIn("eft_placements", r.stdout)
+        self.assertIn("cone_size", r.stdout)
+        self.assertIn("+Inf", r.stdout)  # overflow bucket max
+
+    def test_phase_mismatch_exits_2(self):
+        r = run_script(ndjson({"wall_s": 9.0}))
+        self.assertEqual(r.returncode, 2)
+        self.assertIn("PHASE RECONCILIATION FAILED", r.stderr)
+
+    def test_wrong_format_rejected(self):
+        r = run_script('{"format": "something-else"}\n')
+        self.assertNotEqual(r.returncode, 0)
+        self.assertIn("not a dts-telemetry-v1", r.stderr)
+
+
+if __name__ == "__main__":
+    unittest.main()

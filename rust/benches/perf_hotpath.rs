@@ -427,6 +427,52 @@ fn main() {
     });
     rec.report("remove_at+reinsert 500 of 2000 slots", mean, min, max);
 
+    // 4b. telemetry primitive ops (§Observability): one counter bump +
+    // one histogram record per iteration — the per-event price of the
+    // registry on the hot paths.  Allocation-free by design (pinned by
+    // the `recording_is_allocation_free` unit test); this row tracks
+    // the time cost.
+    {
+        use dts::telemetry::{self, Counter, Hist};
+        telemetry::reset();
+        let (mean, min, max) = util::time_it(10, 50, || {
+            for i in 0..1000u64 {
+                telemetry::counter_inc(Counter::EftPlacements);
+                telemetry::hist_record(Hist::ConeSize, i);
+            }
+        });
+        telemetry::reset();
+        rec.report("telemetry 1k counter+hist records", mean, min, max);
+
+        // the same reactive run with recording disabled — compare to the
+        // `reactive 5P-HEFT σ0.3 L3@0.25` row above to read the total
+        // enabled-path overhead (should be noise: the sites are branches
+        // on a thread-local bool)
+        let cfg = SimConfig {
+            noise_std: 0.3,
+            noise_seed: 1,
+            reaction: Reaction::LastK {
+                k: 3,
+                threshold: 0.25,
+            },
+            record_frozen: false,
+            full_refresh: false,
+        };
+        telemetry::set_enabled(false);
+        let (mean, min, max) = util::time_it(1, 3, || {
+            let mut rc =
+                ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
+            std::hint::black_box(rc.run(&prob));
+        });
+        telemetry::set_enabled(true);
+        rec.report(
+            "reactive 5P-HEFT σ0.3 L3@0.25 telemetry-off synthetic×100",
+            mean,
+            min,
+            max,
+        );
+    }
+
     // 5. parallel sweep harness scaling (same cells, 1 vs 4 workers)
     let sweep_cfg = ExperimentConfig {
         dataset: Dataset::Synthetic,

@@ -70,6 +70,24 @@ impl Args {
     }
 }
 
+/// Strict count flag: absent → `default`, present → must parse as an
+/// integer `>= min`.  [`Args::usize_flag`] silently falls back to the
+/// default on garbage, which masks typos (`--scale 1O` would quietly
+/// run unscaled); every count-like flag on the sweep commands goes
+/// through here instead.
+fn strict_usize_flag(args: &Args, key: &str, default: usize, min: usize) -> Result<usize, i32> {
+    match args.flag(key) {
+        None => Ok(default),
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= min => Ok(n),
+            _ => {
+                eprintln!("error: --{key} must be an integer >= {min}, got '{s}'");
+                Err(2)
+            }
+        },
+    }
+}
+
 const USAGE: &str = "\
 dts — dynamic task-graph scheduling with controlled preemption
 
@@ -82,9 +100,10 @@ USAGE:
                  [--k 3] [--shards S] [--weighted [pareto|classes]]
                  [--deadline-slack F] [--arrival poisson|bursty] [--burst-size 4]
                  [--jobs N] [--csv out.csv] [--json out.json]
-                 [--trace out.json]
+                 [--trace out.json] [--telemetry out.ndjson]
                  (reactive runtime: realized durations, straggler Last-K;
-                  --shards S > 1 federates the node pool into S clusters)
+                  --shards S > 1 federates the node pool into S clusters;
+                  --telemetry dumps the dts-telemetry-v1 NDJSON snapshot)
   dts policy     --dataset <d|all> [--graphs N] [--scale M] [--trials T] [--seed S]
                  [--variant 5P-HEFT] [--noise 0.3] [--k 1,3,5]
                  [--threshold 0.25] [--budget none,1.0] [--burst 4]
@@ -93,6 +112,7 @@ USAGE:
                  [--weighted [pareto|classes]] [--deadline-slack F]
                  [--arrival poisson|bursty] [--burst-size 4]
                  [--jobs N] [--csv out.csv] [--json out.json]
+                 [--telemetry out.ndjson]
                  (policy engine: joint k × θ × budget sweep with
                   preemption-cost accounting; --deadline-aware adds the
                   urgency-scoped D{k}@{θ} controllers)
@@ -196,14 +216,23 @@ fn cmd_experiment(args: &Args) -> i32 {
         } else {
             ExperimentConfig::paper_default(dataset)
         };
-        c.n_graphs = args.usize_flag("graphs", c.n_graphs);
-        c.trials = args.usize_flag("trials", c.trials);
+        let (Ok(graphs), Ok(trials)) = (
+            strict_usize_flag(args, "graphs", c.n_graphs, 1),
+            strict_usize_flag(args, "trials", c.trials, 1),
+        ) else {
+            return 2;
+        };
+        c.n_graphs = graphs;
+        c.trials = trials;
         c.seed = args.u64_flag("seed", c.seed);
         c
     };
 
     let n_cells = cfg.trials * cfg.variants.len();
-    let jobs = args.usize_flag("jobs", 1).clamp(1, n_cells.max(1));
+    let Ok(jobs_cap) = strict_usize_flag(args, "jobs", 1, 1) else {
+        return 2;
+    };
+    let jobs = jobs_cap.clamp(1, n_cells.max(1));
     eprintln!(
         "sweep: {} × {} variants × {} trials ({} graphs, {} job{})",
         cfg.dataset.name(),
@@ -384,18 +413,11 @@ fn cmd_simulate(args: &Args) -> i32 {
         eprintln!("error: --threshold values must be finite and >= 0 (or 'none')");
         return 2;
     }
-    let k = args.usize_flag("k", 3);
-    // --shards is validated explicitly (usize_flag silently falls back to
-    // the default on garbage, which would mask a typo'd shard count)
-    let shards = match args.flag("shards") {
-        None => 1,
-        Some(s) => match s.parse::<usize>() {
-            Ok(n) if n >= 1 => n,
-            _ => {
-                eprintln!("error: --shards must be a positive integer, got '{s}'");
-                return 2;
-            }
-        },
+    let Ok(k) = strict_usize_flag(args, "k", 3, 1) else {
+        return 2;
+    };
+    let Ok(shards) = strict_usize_flag(args, "shards", 1, 1) else {
+        return 2;
     };
     let Ok(scenario) = scenario_of(args) else {
         return 2;
@@ -412,15 +434,30 @@ fn cmd_simulate(args: &Args) -> i32 {
             });
         }
     }
-    let trials = args.usize_flag("trials", 2);
+    let Ok(trials) = strict_usize_flag(args, "trials", 2, 1) else {
+        return 2;
+    };
     let seed = args.u64_flag("seed", 0);
     // --scale multiplies --graphs: the large-composite stress axis the
     // incremental belief refresh unlocks (e.g. --graphs 100 --scale 12
     // ≈ a 10⁴-task composite at synthetic task counts)
-    let graphs = crate::experiments::scaled_graphs(
-        args.usize_flag("graphs", 16),
-        args.usize_flag("scale", 1),
-    );
+    let (Ok(base_graphs), Ok(scale)) = (
+        strict_usize_flag(args, "graphs", 16, 1),
+        strict_usize_flag(args, "scale", 1, 1),
+    ) else {
+        return 2;
+    };
+    let graphs = crate::experiments::scaled_graphs(base_graphs, scale);
+    let Ok(jobs_cap) = strict_usize_flag(args, "jobs", 1, 1) else {
+        return 2;
+    };
+    // --telemetry: reset the registry so the NDJSON snapshot covers
+    // exactly this invocation's sweeps
+    let telemetry_path = args.flag("telemetry");
+    if telemetry_path.is_some() {
+        crate::telemetry::reset();
+    }
+    let mut tele_spans = Vec::new();
 
     let mut csv_out = String::new();
     let mut json_parts = Vec::new();
@@ -437,7 +474,7 @@ fn cmd_simulate(args: &Args) -> i32 {
             shards,
         };
         let n_cells = cfg.trials * cfg.scenarios.len();
-        let jobs = args.usize_flag("jobs", 1).clamp(1, n_cells.max(1));
+        let jobs = jobs_cap.clamp(1, n_cells.max(1));
         eprintln!(
             "simulate: {} × {} scenarios × {} trials ({} graphs, {}, workload {}, {} shard{}, {} job{})",
             dataset.name(),
@@ -455,7 +492,20 @@ fn cmd_simulate(args: &Args) -> i32 {
         println!("\n## {} — reactive runtime, {}\n", dataset.name(), variant.label());
         println!("{}", result.summary_table());
         append_csv(&mut csv_out, &result.to_csv(), di == 0);
+        if telemetry_path.is_some() {
+            tele_spans.extend(result.telemetry_spans());
+        }
         json_parts.push(result.to_json());
+    }
+
+    if let Some(path) = telemetry_path {
+        let snap = crate::telemetry::snapshot();
+        let doc = crate::telemetry::export::to_ndjson("simulate", &tele_spans, &snap);
+        if let Err(e) = std::fs::write(path, doc) {
+            eprintln!("error writing {path}: {e}");
+            return 1;
+        }
+        eprintln!("wrote {path}");
     }
 
     if let Some(path) = args.flag("csv") {
@@ -647,6 +697,10 @@ fn cmd_policy(args: &Args) -> i32 {
         eprintln!("error: bad --k list (want e.g. 1,3,5)");
         return 2;
     };
+    if ks.iter().any(|&k| k == 0) {
+        eprintln!("error: --k values must be >= 1");
+        return 2;
+    }
     let Some(thresholds) = parse_f64_list(args.flag("threshold").unwrap_or("0.25")) else {
         eprintln!("error: bad --threshold list (want e.g. 0.1,0.25)");
         return 2;
@@ -682,7 +736,9 @@ fn cmd_policy(args: &Args) -> i32 {
         return 2;
     }
     let adaptive = if args.bool_flag("adaptive") {
-        let k_max = args.usize_flag("kmax", 20);
+        let Ok(k_max) = strict_usize_flag(args, "kmax", 20, 1) else {
+            return 2;
+        };
         let target = args
             .flag("target-stretch")
             .and_then(|s| s.parse::<f64>().ok())
@@ -709,13 +765,27 @@ fn cmd_policy(args: &Args) -> i32 {
         deadline_aware,
         cooldown,
     );
-    let trials = args.usize_flag("trials", 2);
+    let Ok(trials) = strict_usize_flag(args, "trials", 2, 1) else {
+        return 2;
+    };
     let seed = args.u64_flag("seed", 0);
     // same --scale semantics as `dts simulate`
-    let graphs = crate::experiments::scaled_graphs(
-        args.usize_flag("graphs", 16),
-        args.usize_flag("scale", 1),
-    );
+    let (Ok(base_graphs), Ok(scale)) = (
+        strict_usize_flag(args, "graphs", 16, 1),
+        strict_usize_flag(args, "scale", 1, 1),
+    ) else {
+        return 2;
+    };
+    let graphs = crate::experiments::scaled_graphs(base_graphs, scale);
+    let Ok(jobs_cap) = strict_usize_flag(args, "jobs", 1, 1) else {
+        return 2;
+    };
+    // --telemetry: same NDJSON export as `dts simulate`
+    let telemetry_path = args.flag("telemetry");
+    if telemetry_path.is_some() {
+        crate::telemetry::reset();
+    }
+    let mut tele_spans = Vec::new();
 
     let mut csv_out = String::new();
     let mut json_parts = Vec::new();
@@ -731,7 +801,7 @@ fn cmd_policy(args: &Args) -> i32 {
             scenarios: scenarios.clone(),
         };
         let n_cells = cfg.trials * cfg.scenarios.len();
-        let jobs = args.usize_flag("jobs", 1).clamp(1, n_cells.max(1));
+        let jobs = jobs_cap.clamp(1, n_cells.max(1));
         eprintln!(
             "policy: {} × {} scenarios × {} trials ({} graphs, {}, workload {}, {} job{})",
             dataset.name(),
@@ -751,9 +821,21 @@ fn cmd_policy(args: &Args) -> i32 {
         );
         println!("{}", result.summary_table());
         append_csv(&mut csv_out, &result.to_csv(), di == 0);
+        if telemetry_path.is_some() {
+            tele_spans.extend(result.telemetry_spans());
+        }
         json_parts.push(result.to_json());
     }
 
+    if let Some(path) = telemetry_path {
+        let snap = crate::telemetry::snapshot();
+        let doc = crate::telemetry::export::to_ndjson("policy", &tele_spans, &snap);
+        if let Err(e) = std::fs::write(path, doc) {
+            eprintln!("error writing {path}: {e}");
+            return 1;
+        }
+        eprintln!("wrote {path}");
+    }
     if let Some(path) = args.flag("csv") {
         if let Err(e) = std::fs::write(path, &csv_out) {
             eprintln!("error writing {path}: {e}");
@@ -1034,6 +1116,54 @@ mod tests {
             main_with(&argv("simulate --dataset synthetic --shards two")),
             2
         );
+    }
+
+    #[test]
+    fn count_flags_reject_garbage() {
+        // the strict parse covers every count-like flag, not just
+        // --shards: a typo'd value must abort, never silently fall back
+        // to the default and change the experiment
+        for bad in [
+            "simulate --dataset synthetic --scale 1O",
+            "simulate --dataset synthetic --scale 0",
+            "simulate --dataset synthetic --jobs x",
+            "simulate --dataset synthetic --jobs 0",
+            "simulate --dataset synthetic --k 0",
+            "simulate --dataset synthetic --k two",
+            "simulate --dataset synthetic --trials 0",
+            "simulate --dataset synthetic --graphs -4",
+            "policy --dataset synthetic --scale 1O",
+            "policy --dataset synthetic --jobs 0",
+            "policy --dataset synthetic --k 0,2",
+            "policy --dataset synthetic --trials x",
+            "policy --dataset synthetic --graphs 0",
+            "policy --dataset synthetic --adaptive --kmax 0",
+            "experiment --dataset synthetic --jobs wat",
+            "experiment --dataset synthetic --graphs 0",
+            "experiment --dataset synthetic --trials -1",
+        ] {
+            assert_eq!(main_with(&argv(bad)), 2, "{bad}");
+        }
+    }
+
+    #[test]
+    fn simulate_telemetry_flag_writes_ndjson() {
+        let path = std::env::temp_dir().join("dts_cli_tele_test.ndjson");
+        let path_s = path.to_str().unwrap();
+        let cmd = format!(
+            "simulate --dataset synthetic --graphs 4 --trials 1 \
+             --noise 0.3 --threshold 0.25 --k 2 --telemetry {path_s}"
+        );
+        assert_eq!(main_with(&argv(&cmd)), 0);
+        let doc = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let first = doc.lines().next().unwrap();
+        assert!(first.contains("dts-telemetry-v1"), "{first}");
+        // meta + 1 span per scenario + full registry snapshot
+        assert!(doc.lines().count() > 1 + 1);
+        assert!(doc.contains("\"kind\":\"span\""));
+        assert!(doc.contains("\"key\":\"replans\""));
+        assert!(doc.contains("\"key\":\"replan_wall_ns\""));
     }
 
     #[test]

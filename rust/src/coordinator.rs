@@ -14,7 +14,6 @@
 //!   arrived graphs only (KP-NAME, the paper's Last-K model).
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::dense::{DenseIds, DenseMap};
 use crate::graph::{Gid, TaskGraph};
@@ -22,6 +21,7 @@ use crate::metrics::MetricRow;
 use crate::network::Network;
 use crate::schedule::{Schedule, EPS};
 use crate::schedulers::{PTask, Pred, Problem, Scheduler, SchedulerKind};
+use crate::telemetry;
 
 /// Preemption policy (§IV).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -340,13 +340,14 @@ impl Coordinator {
             // 3. build the composite problem into the reusable workspace
             let problem = self.ws.build(&pending, prob, &schedule);
 
-            // 4. run the base heuristic in place, timed (§V.E)
+            // 4. run the base heuristic in place, timed (§V.E); the span
+            // lands the reading in the telemetry histogram too
             schedule.timelines_mut().begin_txn();
-            let t0 = Instant::now();
+            let span = telemetry::Span::start(telemetry::Hist::HeuristicWallNs);
             let assignments =
                 self.scheduler
                     .schedule(problem, &prob.network, schedule.timelines_mut());
-            let dt = t0.elapsed().as_secs_f64();
+            let dt = span.finish();
             total_rt += dt;
 
             // 5. record the new placements (their slots are already in the

@@ -119,10 +119,12 @@ pub fn run_sweep_parallel(cfg: &ExperimentConfig, jobs: usize) -> SweepResult {
     let next_cell = AtomicUsize::new(0);
     let mut flat: Vec<Option<MetricRow>> = vec![None; n_cells];
 
+    let tele_on = crate::telemetry::enabled();
     std::thread::scope(|scope| {
         let workers: Vec<_> = (0..jobs.min(n_cells))
             .map(|_| {
                 scope.spawn(|| {
+                    crate::telemetry::set_enabled(tele_on);
                     let mut done: Vec<(usize, MetricRow)> = Vec::new();
                     loop {
                         let cell = next_cell.fetch_add(1, Ordering::Relaxed);
@@ -135,14 +137,16 @@ pub fn run_sweep_parallel(cfg: &ExperimentConfig, jobs: usize) -> SweepResult {
                             instances[trial].get_or_init(|| make_instance(cfg, trial));
                         done.push((cell, run_cell(cfg, prob, trial, &cfg.variants[vi])));
                     }
-                    done
+                    (done, crate::telemetry::take())
                 })
             })
             .collect();
         for w in workers {
-            for (cell, row) in w.join().expect("sweep worker panicked") {
+            let (cells, tele) = w.join().expect("sweep worker panicked");
+            for (cell, row) in cells {
                 flat[cell] = Some(row);
             }
+            crate::telemetry::absorb(&tele);
         }
     });
 
@@ -409,6 +413,10 @@ pub struct SimCell {
     pub n_replans: usize,
     pub n_straggler_replans: usize,
     pub n_reverted: usize,
+    /// Full preemption-cost snapshot of the run, including the PR-8
+    /// phase decomposition (refresh / heuristic / bookkeep wall time)
+    /// and, for federated cells, cross-shard migrations.
+    pub cost: PreemptionCost,
 }
 
 impl SimCell {
@@ -501,7 +509,8 @@ fn run_sim_cell(
         record_frozen: false,
         full_refresh: false,
     };
-    let (realized, n_replans, n_straggler_replans, n_reverted, n_assigned) = if cfg.shards > 1 {
+    let (realized, n_replans, n_straggler_replans, n_reverted, n_assigned, cost) = if cfg.shards > 1
+    {
         let fed = crate::federation::FederatedCoordinator::new(
             cfg.variant.policy,
             cfg.variant.kind,
@@ -527,6 +536,7 @@ fn run_sim_cell(
             res.n_straggler_replans(),
             res.n_reverted_total(),
             res.schedule.n_assigned(),
+            res.preemption_cost(),
         )
     } else {
         let mut rc = ReactiveCoordinator::new(
@@ -550,6 +560,7 @@ fn run_sim_cell(
             res.n_straggler_replans(),
             res.n_reverted_total(),
             res.schedule.n_assigned(),
+            res.preemption_cost(),
         )
     };
     assert_eq!(n_assigned, prob.total_tasks());
@@ -559,6 +570,7 @@ fn run_sim_cell(
         n_replans,
         n_straggler_replans,
         n_reverted,
+        cost,
     }
 }
 
@@ -610,10 +622,15 @@ pub fn run_sim_sweep_parallel(cfg: &SimSweepConfig, jobs: usize) -> SimSweepResu
     let next_cell = AtomicUsize::new(0);
     let mut flat: Vec<Option<SimCell>> = vec![None; n_cells];
 
+    let tele_on = crate::telemetry::enabled();
     std::thread::scope(|scope| {
         let workers: Vec<_> = (0..jobs.min(n_cells))
             .map(|_| {
                 scope.spawn(|| {
+                    // fresh worker thread, fresh telemetry registry;
+                    // inherit the spawner's enable gate and hand the
+                    // accumulated registry back with the results
+                    crate::telemetry::set_enabled(tele_on);
                     let mut done: Vec<(usize, SimCell)> = Vec::new();
                     loop {
                         let cell = next_cell.fetch_add(1, Ordering::Relaxed);
@@ -632,14 +649,20 @@ pub fn run_sim_sweep_parallel(cfg: &SimSweepConfig, jobs: usize) -> SimSweepResu
                             run_sim_cell(cfg, &pair.0, trial, &cfg.scenarios[si], &pair.1),
                         ));
                     }
-                    done
+                    (done, crate::telemetry::take())
                 })
             })
             .collect();
+        // Counters are additive over cells and each cell's counts are
+        // deterministic, so the absorbed totals are independent of the
+        // work-queue assignment; absorbing in worker order keeps the
+        // process itself reproducible.
         for w in workers {
-            for (cell, c) in w.join().expect("sim sweep worker panicked") {
+            let (cells, tele) = w.join().expect("sim sweep worker panicked");
+            for (cell, c) in cells {
                 flat[cell] = Some(c);
             }
+            crate::telemetry::absorb(&tele);
         }
     });
 
@@ -777,6 +800,13 @@ impl SimSweepResult {
             row.push(format!("{replans}"));
             row.push(format!("{stragglers}"));
             row.push(format!("{reverted}"));
+            let phase = |f: &dyn Fn(&SimCell) -> f64| {
+                mean(&self.rows.iter().map(|r| f(&r[si])).collect::<Vec<_>>())
+            };
+            row.push(format!("{}", phase(&|c| c.cost.replan_wall_s)));
+            row.push(format!("{}", phase(&|c| c.cost.refresh_wall_s)));
+            row.push(format!("{}", phase(&|c| c.cost.heuristic_wall_s)));
+            row.push(format!("{}", phase(&|c| c.cost.bookkeep_wall_s)));
             rows.push(row);
         }
         let headers = vec![
@@ -807,6 +837,10 @@ impl SimSweepResult {
             "replans",
             "straggler_replans",
             "reverted_tasks",
+            "replan_wall_s",
+            "refresh_wall_s",
+            "heuristic_wall_s",
+            "bookkeep_wall_s",
         ];
         report::csv(&headers, &rows)
     }
@@ -832,6 +866,22 @@ impl SimSweepResult {
                                     json::num(c.n_straggler_replans as f64),
                                 ),
                                 ("reverted", json::num(c.n_reverted as f64)),
+                                (
+                                    "replan_wall_s",
+                                    json::num(c.cost.replan_wall_s),
+                                ),
+                                (
+                                    "refresh_wall_s",
+                                    json::num(c.cost.refresh_wall_s),
+                                ),
+                                (
+                                    "heuristic_wall_s",
+                                    json::num(c.cost.heuristic_wall_s),
+                                ),
+                                (
+                                    "bookkeep_wall_s",
+                                    json::num(c.cost.bookkeep_wall_s),
+                                ),
                             ])
                         })
                         .collect(),
@@ -858,6 +908,32 @@ impl SimSweepResult {
             ),
             ("trials", json::arr(trials)),
         ])
+    }
+
+    /// One NDJSON [`CellSpan`](crate::telemetry::export::CellSpan) per
+    /// scenario: replan counts and the phase-decomposed replan wall
+    /// time summed across trials (`dts simulate --telemetry`).
+    pub fn telemetry_spans(&self) -> Vec<crate::telemetry::export::CellSpan> {
+        self.labels
+            .iter()
+            .enumerate()
+            .map(|(si, label)| {
+                let mut sp = crate::telemetry::export::CellSpan {
+                    label: format!("{} {}", self.config.variant.label(), label),
+                    dataset: self.config.dataset.name().to_string(),
+                    ..Default::default()
+                };
+                for trial in &self.rows {
+                    let c = &trial[si];
+                    sp.replans += c.n_replans;
+                    sp.refresh_s += c.cost.refresh_wall_s;
+                    sp.heuristic_s += c.cost.heuristic_wall_s;
+                    sp.bookkeep_s += c.cost.bookkeep_wall_s;
+                    sp.wall_s += c.cost.replan_wall_s;
+                }
+                sp
+            })
+            .collect()
     }
 }
 
@@ -1031,10 +1107,12 @@ pub fn run_policy_sweep_parallel(cfg: &PolicySweepConfig, jobs: usize) -> Policy
     let next_cell = AtomicUsize::new(0);
     let mut flat: Vec<Option<PolicyCell>> = vec![None; n_cells];
 
+    let tele_on = crate::telemetry::enabled();
     std::thread::scope(|scope| {
         let workers: Vec<_> = (0..jobs.min(n_cells))
             .map(|_| {
                 scope.spawn(|| {
+                    crate::telemetry::set_enabled(tele_on);
                     let mut done: Vec<(usize, PolicyCell)> = Vec::new();
                     loop {
                         let cell = next_cell.fetch_add(1, Ordering::Relaxed);
@@ -1053,14 +1131,16 @@ pub fn run_policy_sweep_parallel(cfg: &PolicySweepConfig, jobs: usize) -> Policy
                             run_policy_cell(cfg, &pair.0, trial, &cfg.scenarios[si], &pair.1),
                         ));
                     }
-                    done
+                    (done, crate::telemetry::take())
                 })
             })
             .collect();
         for w in workers {
-            for (cell, c) in w.join().expect("policy sweep worker panicked") {
+            let (cells, tele) = w.join().expect("policy sweep worker panicked");
+            for (cell, c) in cells {
                 flat[cell] = Some(c);
             }
+            crate::telemetry::absorb(&tele);
         }
     });
 
@@ -1114,6 +1194,19 @@ impl PolicySweepResult {
             of(&|c| c.straggler_replans as f64),
             of(&|c| c.reverted_tasks as f64),
             of(&|c| c.replan_wall_s),
+        )
+    }
+
+    /// Mean replan-wall phase decomposition for scenario `si`:
+    /// `(refresh_wall_s, heuristic_wall_s, bookkeep_wall_s)` means.
+    pub fn phase_mean(&self, si: usize) -> (f64, f64, f64) {
+        let of = |f: &dyn Fn(&PreemptionCost) -> f64| {
+            mean(&self.rows.iter().map(|r| f(&r[si].cost)).collect::<Vec<_>>())
+        };
+        (
+            of(&|c| c.refresh_wall_s),
+            of(&|c| c.heuristic_wall_s),
+            of(&|c| c.bookkeep_wall_s),
         )
     }
 
@@ -1185,12 +1278,16 @@ impl PolicySweepResult {
                     .collect::<Vec<_>>(),
             );
             let (replans, stragglers, reverted, wall) = self.cost_mean(si);
+            let (refresh, heuristic, bookkeep) = self.phase_mean(si);
             row.push(format!("{planned_mk}"));
             row.push(format!("{}", self.degradation_mean(si)));
             row.push(format!("{replans}"));
             row.push(format!("{stragglers}"));
             row.push(format!("{reverted}"));
             row.push(format!("{wall}"));
+            row.push(format!("{refresh}"));
+            row.push(format!("{heuristic}"));
+            row.push(format!("{bookkeep}"));
             rows.push(row);
         }
         let headers = vec![
@@ -1221,6 +1318,9 @@ impl PolicySweepResult {
             "straggler_replans",
             "reverted_tasks",
             "replan_wall_s",
+            "refresh_wall_s",
+            "heuristic_wall_s",
+            "bookkeep_wall_s",
         ];
         report::csv(&headers, &rows)
     }
@@ -1249,6 +1349,18 @@ impl PolicySweepResult {
                                     json::num(c.cost.reverted_tasks as f64),
                                 ),
                                 ("replan_wall_s", json::num(c.cost.replan_wall_s)),
+                                (
+                                    "refresh_wall_s",
+                                    json::num(c.cost.refresh_wall_s),
+                                ),
+                                (
+                                    "heuristic_wall_s",
+                                    json::num(c.cost.heuristic_wall_s),
+                                ),
+                                (
+                                    "bookkeep_wall_s",
+                                    json::num(c.cost.bookkeep_wall_s),
+                                ),
                             ])
                         })
                         .collect(),
@@ -1274,6 +1386,32 @@ impl PolicySweepResult {
             ),
             ("trials", json::arr(trials)),
         ])
+    }
+
+    /// One NDJSON [`CellSpan`](crate::telemetry::export::CellSpan) per
+    /// controller scenario: replan counts and the phase-decomposed
+    /// replan wall time summed across trials (`dts policy --telemetry`).
+    pub fn telemetry_spans(&self) -> Vec<crate::telemetry::export::CellSpan> {
+        self.labels
+            .iter()
+            .enumerate()
+            .map(|(si, label)| {
+                let mut sp = crate::telemetry::export::CellSpan {
+                    label: format!("{} {}", self.config.variant.label(), label),
+                    dataset: self.config.dataset.name().to_string(),
+                    ..Default::default()
+                };
+                for trial in &self.rows {
+                    let c = &trial[si];
+                    sp.replans += c.cost.replans;
+                    sp.refresh_s += c.cost.refresh_wall_s;
+                    sp.heuristic_s += c.cost.heuristic_wall_s;
+                    sp.bookkeep_s += c.cost.bookkeep_wall_s;
+                    sp.wall_s += c.cost.replan_wall_s;
+                }
+                sp
+            })
+            .collect()
     }
 }
 
@@ -1593,6 +1731,7 @@ mod tests {
             n_replans: 0,
             n_straggler_replans: 0,
             n_reverted: 0,
+            cost: PreemptionCost::default(),
         };
         assert_eq!(empty.degradation(), 1.0);
         let pc = PolicyCell {

@@ -48,6 +48,7 @@ use crate::network::Network;
 use crate::schedule::{Assignment, Schedule};
 use crate::schedulers::SchedulerKind;
 use crate::sim::{ReactiveCoordinator, SimConfig, SimLogEntry, SimLogKind, SimResult};
+use crate::telemetry;
 
 /// Default rebalancing trigger: migrate only when the most loaded
 /// shard's remaining backlog exceeds `MIGRATE_FACTOR ×` the least loaded
@@ -195,6 +196,7 @@ impl FederatedCoordinator {
             admitted[best].push((gi, est_start, g.total_cost() / capacity[best]));
             backlog[best] = best_fin;
             out.shard_of[gi] = best;
+            telemetry::counter_inc(telemetry::Counter::FedAdmissions);
 
             if s < 2 {
                 continue;
@@ -214,6 +216,9 @@ impl FederatedCoordinator {
             if hi == lo || rem(hi) <= MIGRATE_FACTOR * rem(lo) {
                 continue;
             }
+            // a concrete steal candidate pair (overloaded → drained) is
+            // evaluated from here on, whether or not the move happens
+            telemetry::counter_inc(telemetry::Counter::FedStealAttempts);
             // the most recent admission on `hi` migrates iff still
             // pending (projected start not yet reached — it has executed
             // nothing, so nothing realized is ever re-run) and it gains
@@ -234,6 +239,7 @@ impl FederatedCoordinator {
             admitted[lo].push((mg, new_start, new_est));
             backlog[lo] = new_start + new_est;
             out.shard_of[mg] = lo;
+            telemetry::counter_inc(telemetry::Counter::FedMigrations);
             out.migrations.push(MigrationRecord {
                 graph: mg,
                 from: hi,
@@ -273,20 +279,35 @@ impl FederatedCoordinator {
 
         // Shard fan-out: same deterministic work-queue construction as
         // the sweeps — an atomic cursor, results re-collected in shard
-        // order, so any jobs count yields the identical result.
-        let mut results: Vec<Option<SimResult>> = (0..s).map(|_| None).collect();
+        // order, so any jobs count yields the identical result.  Each
+        // shard's coordinator records into its own (thread-local)
+        // telemetry registry; `run_shard` snapshots it, and the
+        // registries travel with the results to be merged shard-ordered
+        // in [`merge`].
+        let mut results: Vec<Option<(SimResult, telemetry::Telemetry)>> =
+            (0..s).map(|_| None).collect();
         let workers = self.jobs.min(s).max(1);
         if workers == 1 {
+            // serial shards share this thread's registry — park what the
+            // admission layer (and any caller) already recorded so each
+            // shard's take() isolates exactly its own activity
+            let parked = telemetry::take();
             for (si, sp) in shard_probs.iter().enumerate() {
                 results[si] = Some(self.run_shard(sp));
             }
+            telemetry::absorb(&parked);
         } else {
+            let tele_on = telemetry::enabled();
             let next = AtomicUsize::new(0);
             std::thread::scope(|scope| {
                 let handles: Vec<_> = (0..workers)
                     .map(|_| {
                         scope.spawn(|| {
-                            let mut done: Vec<(usize, SimResult)> = Vec::new();
+                            // fresh thread, fresh registry; inherit the
+                            // spawner's enable gate
+                            telemetry::set_enabled(tele_on);
+                            let mut done: Vec<(usize, (SimResult, telemetry::Telemetry))> =
+                                Vec::new();
                             loop {
                                 let si = next.fetch_add(1, Ordering::Relaxed);
                                 if si >= s {
@@ -305,17 +326,20 @@ impl FederatedCoordinator {
                 }
             });
         }
-        let per_shard: Vec<SimResult> = results
+        let (per_shard, shard_tele): (Vec<SimResult>, Vec<telemetry::Telemetry>) = results
             .into_iter()
             .map(|r| r.expect("shard not simulated"))
-            .collect();
+            .unzip();
 
-        merge(prob, shard_nodes, shard_graphs, admission, per_shard)
+        merge(prob, shard_nodes, shard_graphs, admission, per_shard, shard_tele)
     }
 
-    fn run_shard(&self, sp: &DynamicProblem) -> SimResult {
+    fn run_shard(&self, sp: &DynamicProblem) -> (SimResult, telemetry::Telemetry) {
         let mut rc = ReactiveCoordinator::new(self.policy, self.kind.make(self.sched_seed), self.cfg);
-        rc.run(sp)
+        let res = rc.run(sp);
+        // snapshot-and-reset: the shard's registry delta rides back with
+        // its result for the deterministic shard-ordered merge
+        (res, telemetry::take())
     }
 }
 
@@ -362,7 +386,17 @@ fn merge(
     shard_graphs: Vec<Vec<usize>>,
     admission: AdmissionOutcome,
     per_shard: Vec<SimResult>,
+    shard_tele: Vec<telemetry::Telemetry>,
 ) -> FederationResult {
+    // Deterministic telemetry merge: element-wise addition in fixed
+    // enum-key order, shards absorbed in shard order into the calling
+    // thread's registry.  Counter totals are independent of the worker
+    // fan-out (addition commutes and per-shard counts are
+    // deterministic); the fixed order makes the *process* reproducible
+    // too, which is what the merge-determinism test pins.
+    for t in &shard_tele {
+        telemetry::absorb(t);
+    }
     let mut schedule = Schedule::new(prob.network.n_nodes());
     for (si, res) in per_shard.iter().enumerate() {
         let nodes = &shard_nodes[si];
@@ -416,6 +450,8 @@ fn merge(
         admission,
         sched_runtime_s: per_shard.iter().map(|r| r.sched_runtime_s).sum(),
         replan_wall_s: per_shard.iter().map(|r| r.replan_wall_s).sum(),
+        refresh_wall_s: per_shard.iter().map(|r| r.refresh_wall_s).sum(),
+        bookkeep_wall_s: per_shard.iter().map(|r| r.bookkeep_wall_s).sum(),
         per_shard,
     }
 }
@@ -441,6 +477,10 @@ pub struct FederationResult {
     pub sched_runtime_s: f64,
     /// Σ shard replan-pass wall time
     pub replan_wall_s: f64,
+    /// Σ shard belief-refresh phase wall time
+    pub refresh_wall_s: f64,
+    /// Σ shard bookkeeping-remainder phase wall time
+    pub bookkeep_wall_s: f64,
     /// each shard coordinator's own result, in shard order
     pub per_shard: Vec<SimResult>,
 }
@@ -489,6 +529,9 @@ impl FederationResult {
             reverted_tasks: self.n_reverted_total(),
             migrations: self.admission.migrations.len(),
             replan_wall_s: self.replan_wall_s,
+            refresh_wall_s: self.refresh_wall_s,
+            heuristic_wall_s: self.sched_runtime_s,
+            bookkeep_wall_s: self.bookkeep_wall_s,
         }
     }
 }

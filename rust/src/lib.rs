@@ -35,6 +35,9 @@
 //!   best-fit admission layer and cross-shard work-stealing migration;
 //!   one shard reproduces the monolithic coordinator bit-exactly
 //!   ([`federation`]);
+//! * an allocation-free **telemetry layer** — deterministic counter /
+//!   log₂-histogram registry, phase-timed replan spans, NDJSON export
+//!   and a Prometheus-style text exposition ([`telemetry`]);
 //! * an **XLA/PJRT runtime** that executes the AOT-compiled JAX+Pallas
 //!   rank kernels from `artifacts/` on the scheduling hot path
 //!   ([`runtime`]);
@@ -69,6 +72,7 @@ pub mod schedule;
 pub mod schedulers;
 pub mod sim;
 pub mod stats;
+pub mod telemetry;
 pub mod trace;
 pub mod workloads;
 

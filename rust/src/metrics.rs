@@ -510,6 +510,15 @@ pub struct PreemptionCost {
     /// wall-clock seconds inside replan passes (belief refresh + base
     /// heuristic + bookkeeping) — the runtime price of reacting
     pub replan_wall_s: f64,
+    /// belief-refresh phase of `replan_wall_s` (seconds)
+    pub refresh_wall_s: f64,
+    /// base-heuristic phase of `replan_wall_s` (seconds) — equals the
+    /// run's `sched_runtime_s`
+    pub heuristic_wall_s: f64,
+    /// bookkeeping remainder of `replan_wall_s` (seconds); the three
+    /// phases reconcile with the total by construction
+    /// (`refresh + heuristic + bookkeep ≈ replan_wall_s`)
+    pub bookkeep_wall_s: f64,
 }
 
 /// Normalize a set of values for one metric: divide by the best value
@@ -819,6 +828,9 @@ mod tests {
         assert_eq!(c.reverted_tasks, 0);
         assert_eq!(c.migrations, 0);
         assert_eq!(c.replan_wall_s, 0.0);
+        assert_eq!(c.refresh_wall_s, 0.0);
+        assert_eq!(c.heuristic_wall_s, 0.0);
+        assert_eq!(c.bookkeep_wall_s, 0.0);
     }
 
     #[test]

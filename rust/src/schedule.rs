@@ -12,6 +12,7 @@ use crate::dense::DenseIds;
 use crate::fasthash::FxHashMap;
 use crate::graph::{Gid, TaskGraph};
 use crate::network::Network;
+use crate::telemetry;
 
 /// Numeric slack for interval comparisons (floating-point scheduling).
 pub const EPS: f64 = 1e-9;
@@ -151,6 +152,7 @@ impl Timelines {
     /// inserts).
     pub fn begin_txn(&mut self) {
         debug_assert!(!self.txn_active, "nested timeline transaction");
+        telemetry::counter_inc(telemetry::Counter::TxnBegin);
         self.journal.clear();
         self.txn_active = true;
     }
@@ -159,6 +161,7 @@ impl Timelines {
     /// stop journaling.
     pub fn commit_txn(&mut self) {
         debug_assert!(self.txn_active, "commit without begin_txn");
+        telemetry::counter_inc(telemetry::Counter::TxnCommit);
         self.journal.clear();
         self.txn_active = false;
     }
@@ -167,6 +170,7 @@ impl Timelines {
     /// newest first, and stop journaling.  O(touched · log n).
     pub fn rollback_txn(&mut self) {
         debug_assert!(self.txn_active, "rollback without begin_txn");
+        telemetry::counter_inc(telemetry::Counter::TxnRollback);
         self.txn_active = false;
         while let Some((v, gid, start)) = self.journal.pop() {
             let removed = self.remove_at(v, gid, start);

@@ -4,6 +4,7 @@
 
 use crate::network::Network;
 use crate::schedule::{Assignment, Timelines};
+use crate::telemetry;
 
 use super::{Pred, Problem};
 
@@ -163,6 +164,9 @@ pub fn min_eft(
             best = Some(a);
         }
     }
+    // one bump per placement *decision* (not per candidate node), to
+    // bound the hot-path accounting cost
+    telemetry::counter_inc(telemetry::Counter::EftPlacements);
     best.expect("network has no nodes")
 }
 
@@ -328,6 +332,8 @@ pub fn min_eft_cached(
             best = Some(a);
         }
     }
+    // one bump per placement decision, mirroring [`min_eft`]
+    telemetry::counter_inc(telemetry::Counter::EftPlacements);
     best.expect("network has no nodes")
 }
 

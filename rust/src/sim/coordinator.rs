@@ -105,6 +105,7 @@ use crate::robustness::StableNoise;
 use crate::schedule::{Assignment, Schedule};
 use crate::schedulers::Scheduler;
 use crate::sim::events::{EventQueue, SimEvent, SimLogEntry, SimLogKind};
+use crate::telemetry;
 
 /// How the coordinator reacts to observed lateness.
 #[derive(Clone, Copy, Debug, PartialEq, Default)]
@@ -172,6 +173,17 @@ pub struct ReplanRecord {
     /// wall-clock seconds this pass spent (belief refresh + base
     /// heuristic + cursor bookkeeping) — the per-replan §V.E cost
     pub wall_s: f64,
+    /// belief-refresh phase of `wall_s` (seconds)
+    pub refresh_s: f64,
+    /// base-heuristic phase of `wall_s` (seconds) — the slice that
+    /// accumulates into [`SimResult::sched_runtime_s`]
+    pub heuristic_s: f64,
+    /// bookkeeping remainder of `wall_s` (seconds): pending collection,
+    /// composite build, journal commit, cursor recompute.  Defined as
+    /// `max(0, wall_s − refresh_s − heuristic_s)` so the three phases
+    /// reconcile with `wall_s` by construction (clamp guards sub-ns
+    /// clock jitter).
+    pub bookkeep_s: f64,
     /// `(gid, node, start)` of every task already dispatched when the
     /// replan fired (empty unless [`SimConfig::record_frozen`]); the
     /// frozen-prefix invariant says each must equal the final realized
@@ -193,8 +205,16 @@ pub struct SimResult {
     /// §V.E: total wall time inside the base heuristic across replans.
     pub sched_runtime_s: f64,
     /// Total wall time of whole replan passes (belief refresh + base
-    /// heuristic + bookkeeping) — a superset of `sched_runtime_s`.
+    /// heuristic + bookkeeping) — a superset of `sched_runtime_s`
+    /// (debug-asserted at run end; see docs/METRICS.md).
     pub replan_wall_s: f64,
+    /// Total wall time of the belief-refresh phase across replans.
+    pub refresh_wall_s: f64,
+    /// Total wall time of the bookkeeping remainder across replans.
+    /// `refresh_wall_s + sched_runtime_s + bookkeep_wall_s` reconciles
+    /// with `replan_wall_s` (tolerance-tested in
+    /// `rust/tests/telemetry.rs`).
+    pub bookkeep_wall_s: f64,
     /// Peak event-queue length observed during the run — instrumentation
     /// for the [`EventQueue::with_capacity`] pre-reservation: whenever
     /// this stays within the Σ tasks × 2 + graphs reservation the heap
@@ -271,6 +291,9 @@ impl SimResult {
             reverted_tasks: self.n_reverted_total(),
             migrations: 0,
             replan_wall_s: self.replan_wall_s,
+            refresh_wall_s: self.refresh_wall_s,
+            heuristic_wall_s: self.sched_runtime_s,
+            bookkeep_wall_s: self.bookkeep_wall_s,
         }
     }
 }
@@ -323,6 +346,8 @@ struct Sim<'a> {
     replans: Vec<ReplanRecord>,
     sched_runtime_s: f64,
     replan_wall_s: f64,
+    refresh_wall_s: f64,
+    bookkeep_wall_s: f64,
     /// heap allocations inside replan passes (see
     /// [`SimResult::replan_allocs`])
     replan_allocs: u64,
@@ -436,6 +461,8 @@ impl<'a> Sim<'a> {
             replans: Vec::new(),
             sched_runtime_s: 0.0,
             replan_wall_s: 0.0,
+            refresh_wall_s: 0.0,
+            bookkeep_wall_s: 0.0,
             replan_allocs: 0,
             events_peak: 0,
             full_refresh: cfg.full_refresh || full_refresh_forced(),
@@ -629,6 +656,7 @@ impl<'a> Sim<'a> {
                 }
             }
         }
+        telemetry::counter_add(telemetry::Counter::ConeEvicted, self.to_remove.len() as u64);
         while let Some(gid) = self.to_remove.pop() {
             self.plan.unassign(gid);
         }
@@ -721,6 +749,7 @@ impl<'a> Sim<'a> {
             remaining, 0,
             "belief refresh deadlocked — pending order inconsistent with deps"
         );
+        telemetry::counter_add(telemetry::Counter::ConeRederived, n_refreshed as u64);
         n_refreshed
     }
 
@@ -772,6 +801,7 @@ impl<'a> Sim<'a> {
 
         // --- seed (a): reverted tasks dirty their node suffix from the
         // evicted slot on (their node successors shift up to the gap)
+        telemetry::counter_add(telemetry::Counter::SeedRevert, revert.len() as u64);
         for &gid in revert {
             let a = self
                 .plan
@@ -794,6 +824,7 @@ impl<'a> Sim<'a> {
             let tl = self.plan.timelines();
             let c = self.cursor[v];
             if c < tl.n_slots(v) && tl.starts(v)[c] < now {
+                telemetry::counter_inc(telemetry::Counter::SeedMovedFloor);
                 lower(&mut dirty_from, &mut stack, v, c);
             }
         }
@@ -822,6 +853,7 @@ impl<'a> Sim<'a> {
                 fix.push((gid, truth));
             }
         }
+        telemetry::counter_add(telemetry::Counter::SeedDivergence, fix.len() as u64);
         for &(gid, truth) in &fix {
             let v = truth.node;
             let c = self.cursor[v];
@@ -926,6 +958,8 @@ impl<'a> Sim<'a> {
                 }
             }
             n_kept += self.refresh_order[v].len();
+            let evicted = self.plan.timelines().n_slots(v) - from;
+            telemetry::counter_add(telemetry::Counter::ConeEvicted, evicted as u64);
             self.plan.unassign_tail(v, from);
         }
         debug_assert!(
@@ -1044,6 +1078,7 @@ impl<'a> Sim<'a> {
             placed, n_kept,
             "belief refresh deadlocked — dirty cone inconsistent with deps"
         );
+        telemetry::counter_add(telemetry::Counter::ConeRederived, n_kept as u64);
 
         fix.clear();
         self.fix = fix;
@@ -1300,12 +1335,26 @@ impl ReactiveCoordinator {
                 }
             }
             sim.events_peak = sim.events_peak.max(sim.queue.len());
+            telemetry::hist_record(
+                telemetry::Hist::EventQueueDepth,
+                sim.queue.len() as u64,
+            );
         }
 
         assert_eq!(
             sim.realized.n_assigned(),
             prob.total_tasks(),
             "reactive runtime deadlocked before completing the workload"
+        );
+        // The heuristic phase is a strict sub-region of every replan
+        // pass, so its accumulated wall time can never exceed the whole
+        // passes' (docs/METRICS.md "⊇ runtime_s"; epsilon covers clock
+        // granularity on platforms with coarse Instants).
+        debug_assert!(
+            sim.sched_runtime_s <= sim.replan_wall_s + 1e-9,
+            "sched_runtime_s {} exceeds replan_wall_s {}",
+            sim.sched_runtime_s,
+            sim.replan_wall_s
         );
 
         SimResult {
@@ -1314,6 +1363,8 @@ impl ReactiveCoordinator {
             replans: sim.replans,
             sched_runtime_s: sim.sched_runtime_s,
             replan_wall_s: sim.replan_wall_s,
+            refresh_wall_s: sim.refresh_wall_s,
+            bookkeep_wall_s: sim.bookkeep_wall_s,
             events_peak: sim.events_peak,
             replan_allocs: sim.replan_allocs,
         }
@@ -1426,7 +1477,9 @@ impl ReactiveCoordinator {
         // belief refresh drops the reverted slots and re-derives the
         // expected times of the affected frozen pending tasks (all of
         // them under the full-refresh oracle, the dirty cone otherwise)
+        let refresh_span = telemetry::Span::start(telemetry::Hist::RefreshWallNs);
         let n_refreshed = sim.refresh_belief(now, &pending);
+        let refresh_s = refresh_span.finish();
 
         if let Some(i) = new_graph {
             let g = &sim.prob.graphs[i].1;
@@ -1439,11 +1492,12 @@ impl ReactiveCoordinator {
             .ws
             .build_floored(&pending, sim.prob, &sim.plan, now);
         sim.plan.timelines_mut().begin_txn();
-        let t0 = Instant::now();
+        let heuristic_span = telemetry::Span::start(telemetry::Hist::HeuristicWallNs);
         let assignments =
             self.scheduler
                 .schedule(problem, &sim.prob.network, sim.plan.timelines_mut());
-        sim.sched_runtime_s += t0.elapsed().as_secs_f64();
+        let heuristic_s = heuristic_span.finish();
+        sim.sched_runtime_s += heuristic_s;
         for (idx, a) in assignments.iter().enumerate() {
             sim.plan.record(problem.tasks[idx].gid, *a);
             sim.touched[a.node] = true;
@@ -1461,10 +1515,23 @@ impl ReactiveCoordinator {
         sim.recompute_cursors();
 
         let wall_s = wall0.elapsed().as_secs_f64();
+        // bookkeeping is the remainder of the pass: pending collection,
+        // composite build, journal commit, cursor recompute (clamped so
+        // the three phases reconcile with `wall_s` by construction)
+        let bookkeep_s = (wall_s - refresh_s - heuristic_s).max(0.0);
         sim.replan_wall_s += wall_s;
+        sim.refresh_wall_s += refresh_s;
+        sim.bookkeep_wall_s += bookkeep_s;
         // counts 0 unless the counting allocator is registered (test
         // builds or `--features alloc-count`)
         sim.replan_allocs += crate::alloc_count::alloc_count() - allocs0;
+        telemetry::counter_inc(telemetry::Counter::Replans);
+        if straggler {
+            telemetry::counter_inc(telemetry::Counter::StragglerReplans);
+        }
+        telemetry::hist_record(telemetry::Hist::ReplanWallNs, (wall_s * 1e9) as u64);
+        telemetry::hist_record(telemetry::Hist::BookkeepWallNs, (bookkeep_s * 1e9) as u64);
+        telemetry::hist_record(telemetry::Hist::ConeSize, n_refreshed as u64);
 
         sim.log.push(SimLogEntry {
             time: now,
@@ -1486,6 +1553,9 @@ impl ReactiveCoordinator {
             n_pending,
             n_refreshed,
             wall_s,
+            refresh_s,
+            heuristic_s,
+            bookkeep_s,
             frozen,
         });
         self.pending = pending;

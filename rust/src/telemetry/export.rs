@@ -1,0 +1,139 @@
+//! NDJSON export (`dts-telemetry-v1`).
+//!
+//! One self-describing JSON object per line:
+//!
+//! * a **meta** line — `{"format":"dts-telemetry-v1","command":…}`;
+//! * **span** lines — one per sweep cell group (dataset × variant):
+//!   replan count plus the phase-decomposed wall totals
+//!   (`refresh_s + heuristic_s + bookkeep_s` reconciles with `wall_s`);
+//! * **counter** lines — `{"kind":"counter","key":…,"value":…}` in
+//!   canonical key order;
+//! * **hist** lines — `{"kind":"hist","key":…,"count":…,"sum":…,
+//!   "bins":[…]}` with the log₂ bin layout of
+//!   [`Histogram`](super::Histogram).
+//!
+//! The stream is append-friendly and cheap to parse with nothing but a
+//! line splitter — `python/telemetry_report.py` (stdlib-only) renders
+//! the phase table and percentile summaries from it.
+
+use super::{Counter, Hist, Telemetry};
+use crate::json::{self, Value};
+
+/// One aggregate span line: the phase-decomposed replan wall time of a
+/// sweep cell group (a dataset × variant row).
+#[derive(Clone, Debug, Default)]
+pub struct CellSpan {
+    /// variant / controller label, e.g. `"5P-HEFT σ0.30 L3@0.25"`
+    pub label: String,
+    /// dataset the cells ran on
+    pub dataset: String,
+    /// replan passes across the group's cells
+    pub replans: usize,
+    /// belief-refresh phase wall seconds
+    pub refresh_s: f64,
+    /// base-heuristic phase wall seconds
+    pub heuristic_s: f64,
+    /// bookkeeping remainder wall seconds
+    pub bookkeep_s: f64,
+    /// whole-pass wall seconds (`≈ refresh + heuristic + bookkeep`)
+    pub wall_s: f64,
+}
+
+fn span_line(s: &CellSpan) -> Value {
+    json::obj(vec![
+        ("kind", json::s("span")),
+        ("label", json::s(&s.label)),
+        ("dataset", json::s(&s.dataset)),
+        ("replans", json::num(s.replans as f64)),
+        ("refresh_s", json::num(s.refresh_s)),
+        ("heuristic_s", json::num(s.heuristic_s)),
+        ("bookkeep_s", json::num(s.bookkeep_s)),
+        ("wall_s", json::num(s.wall_s)),
+    ])
+}
+
+fn counter_line(c: Counter, value: u64) -> Value {
+    json::obj(vec![
+        ("kind", json::s("counter")),
+        ("key", json::s(c.key())),
+        ("value", json::num(value as f64)),
+    ])
+}
+
+fn hist_line(h: Hist, t: &Telemetry) -> Value {
+    let hist = t.hist(h);
+    let bins = hist.bins.iter().map(|&b| json::num(b as f64)).collect();
+    json::obj(vec![
+        ("kind", json::s("hist")),
+        ("key", json::s(h.key())),
+        ("count", json::num(hist.count as f64)),
+        ("sum", json::num(hist.sum as f64)),
+        ("bins", json::arr(bins)),
+    ])
+}
+
+/// Render the full NDJSON document: meta line, span lines, then the
+/// registry snapshot (counters then histograms, canonical key order).
+pub fn to_ndjson(command: &str, spans: &[CellSpan], telemetry: &Telemetry) -> String {
+    let mut out = String::new();
+    let meta = json::obj(vec![
+        ("format", json::s("dts-telemetry-v1")),
+        ("command", json::s(command)),
+    ]);
+    out.push_str(&meta.to_string());
+    out.push('\n');
+    for s in spans {
+        out.push_str(&span_line(s).to_string());
+        out.push('\n');
+    }
+    for c in Counter::ALL {
+        out.push_str(&counter_line(c, telemetry.counter(c)).to_string());
+        out.push('\n');
+    }
+    for h in Hist::ALL {
+        out.push_str(&hist_line(h, telemetry).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::HIST_BINS;
+
+    #[test]
+    fn ndjson_parses_line_by_line_and_keeps_key_order() {
+        let mut t = Telemetry::new();
+        t.merge(&Telemetry::new()); // no-op, keeps t plain
+        let spans = vec![CellSpan {
+            label: "5P-HEFT σ0.30 L3@0.25".into(),
+            dataset: "gaussian".into(),
+            replans: 4,
+            refresh_s: 0.25,
+            heuristic_s: 0.5,
+            bookkeep_s: 0.25,
+            wall_s: 1.0,
+        }];
+        let doc = to_ndjson("simulate", &spans, &t);
+        let lines: Vec<&str> = doc.lines().collect();
+        // meta + 1 span + counters + hists
+        assert_eq!(lines.len(), 1 + 1 + Counter::ALL.len() + Hist::ALL.len());
+        let meta = Value::from_str(lines[0]).unwrap();
+        assert_eq!(meta.get("format").and_then(|v| v.as_str()), Some("dts-telemetry-v1"));
+        assert_eq!(meta.get("command").and_then(|v| v.as_str()), Some("simulate"));
+        let span = Value::from_str(lines[1]).unwrap();
+        assert_eq!(span.get("kind").and_then(|v| v.as_str()), Some("span"));
+        assert_eq!(span.get("replans").and_then(|v| v.as_usize()), Some(4));
+        // counters come out in canonical order
+        let first_counter = Value::from_str(lines[2]).unwrap();
+        assert_eq!(first_counter.get("key").and_then(|v| v.as_str()), Some("replans"));
+        // every line parses; histograms carry the full bin array
+        for line in &lines[2..] {
+            let v = Value::from_str(line).unwrap();
+            if v.get("kind").and_then(|k| k.as_str()) == Some("hist") {
+                assert_eq!(v.get("bins").and_then(|b| b.as_array()).unwrap().len(), HIST_BINS);
+            }
+        }
+    }
+}

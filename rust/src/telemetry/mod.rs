@@ -1,0 +1,490 @@
+//! Telemetry registry (§Observability, PR 8).
+//!
+//! A deterministic, allocation-free counter/histogram registry that the
+//! hot layers (belief refresh, base heuristics, timeline transactions,
+//! the federation admission layer) record into.  Three design rules:
+//!
+//! 1. **Bit-transparency** — recording never feeds a scheduling
+//!    decision.  Schedules, event logs and every schedule-derived
+//!    metric are bit-identical with telemetry enabled or disabled
+//!    (pinned by `rust/tests/telemetry.rs`); wall-clock readings land
+//!    only in telemetry and the `*_wall_s` reporting fields.
+//! 2. **Zero steady-state allocations** — keys are enum-indexed fixed
+//!    arrays (no maps, no `String`s), histograms are pre-allocated
+//!    log₂-binned arrays, and the whole registry lives in const-
+//!    initialized thread-local storage.  The PR-6 pin
+//!    `workspace_steady_state_allocates_nothing` runs with telemetry
+//!    *enabled*.
+//! 3. **Deterministic merge** — a registry is a pair of fixed arrays,
+//!    so merging is element-wise addition in the fixed enum-key order:
+//!    per-shard registries absorbed shard-ordered produce the same
+//!    totals on every run (counters are additive over deterministic
+//!    per-cell work, so even work-stealing sweep workers merge to
+//!    reproducible counts; only the wall-time histograms vary).
+//!
+//! The registry is **thread-local**: each federation shard worker and
+//! each sweep worker accumulates privately and the coordinator absorbs
+//! the snapshots ([`take`] / [`absorb`]) in deterministic order — no
+//! locks on the hot path, ever.
+//!
+//! Export surfaces: NDJSON (`dts-telemetry-v1`, [`export`]) behind
+//! `dts simulate|policy --telemetry PATH`, and a Prometheus-style text
+//! exposition ([`Telemetry::render_text`]) — the scrape surface a
+//! future `dts serve` would mount.  `python/telemetry_report.py`
+//! renders the phase table and histogram percentiles from the NDJSON.
+
+pub mod export;
+pub mod spans;
+
+pub use spans::Span;
+
+use std::cell::{Cell, RefCell};
+
+/// Monotonic event counters, one per instrumented site.  The variant
+/// order is the canonical key order of every export and merge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// replan passes that ran (arrival + straggler)
+    Replans,
+    /// straggler-triggered subset of [`Counter::Replans`]
+    StragglerReplans,
+    /// dirty-cone seeds: tasks reverted by the straggler policy
+    SeedRevert,
+    /// dirty-cone seeds: dispatched tasks whose belief diverged from truth
+    SeedDivergence,
+    /// dirty-cone seeds: belief starts that slid under the replan instant
+    SeedMovedFloor,
+    /// belief slots evicted by a refresh (full or incremental)
+    ConeEvicted,
+    /// belief slots re-derived by a refresh
+    ConeRederived,
+    /// timeline insertion-journal transactions opened
+    TxnBegin,
+    /// transactions committed (insertions kept)
+    TxnCommit,
+    /// transactions rolled back (insertions undone newest-first)
+    TxnRollback,
+    /// min-EFT placement decisions (one per task placed, not per candidate)
+    EftPlacements,
+    /// graphs admitted to a shard by the federation best-fit layer
+    FedAdmissions,
+    /// rebalance iterations that evaluated a steal candidate pair
+    FedStealAttempts,
+    /// pending graphs actually migrated across shards
+    FedMigrations,
+}
+
+impl Counter {
+    /// Every counter, in canonical key order.
+    pub const ALL: [Counter; 14] = [
+        Counter::Replans,
+        Counter::StragglerReplans,
+        Counter::SeedRevert,
+        Counter::SeedDivergence,
+        Counter::SeedMovedFloor,
+        Counter::ConeEvicted,
+        Counter::ConeRederived,
+        Counter::TxnBegin,
+        Counter::TxnCommit,
+        Counter::TxnRollback,
+        Counter::EftPlacements,
+        Counter::FedAdmissions,
+        Counter::FedStealAttempts,
+        Counter::FedMigrations,
+    ];
+
+    /// Stable export key.
+    pub const fn key(self) -> &'static str {
+        match self {
+            Counter::Replans => "replans",
+            Counter::StragglerReplans => "straggler_replans",
+            Counter::SeedRevert => "seed_revert",
+            Counter::SeedDivergence => "seed_divergence",
+            Counter::SeedMovedFloor => "seed_moved_floor",
+            Counter::ConeEvicted => "cone_evicted",
+            Counter::ConeRederived => "cone_rederived",
+            Counter::TxnBegin => "txn_begin",
+            Counter::TxnCommit => "txn_commit",
+            Counter::TxnRollback => "txn_rollback",
+            Counter::EftPlacements => "eft_placements",
+            Counter::FedAdmissions => "fed_admissions",
+            Counter::FedStealAttempts => "fed_steal_attempts",
+            Counter::FedMigrations => "fed_migrations",
+        }
+    }
+}
+
+/// Pre-allocated log₂-binned histograms.  Durations are recorded in
+/// nanoseconds; sizes/depths in their natural unit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Hist {
+    /// whole replan pass wall time (ns)
+    ReplanWallNs,
+    /// belief-refresh phase wall time (ns)
+    RefreshWallNs,
+    /// base-heuristic phase wall time (ns)
+    HeuristicWallNs,
+    /// bookkeeping remainder wall time (ns)
+    BookkeepWallNs,
+    /// dirty-cone size per replan (slots re-derived)
+    ConeSize,
+    /// event-queue depth sampled after each event pop
+    EventQueueDepth,
+}
+
+impl Hist {
+    /// Every histogram, in canonical key order.
+    pub const ALL: [Hist; 6] = [
+        Hist::ReplanWallNs,
+        Hist::RefreshWallNs,
+        Hist::HeuristicWallNs,
+        Hist::BookkeepWallNs,
+        Hist::ConeSize,
+        Hist::EventQueueDepth,
+    ];
+
+    /// Stable export key.
+    pub const fn key(self) -> &'static str {
+        match self {
+            Hist::ReplanWallNs => "replan_wall_ns",
+            Hist::RefreshWallNs => "refresh_wall_ns",
+            Hist::HeuristicWallNs => "heuristic_wall_ns",
+            Hist::BookkeepWallNs => "bookkeep_wall_ns",
+            Hist::ConeSize => "cone_size",
+            Hist::EventQueueDepth => "event_queue_depth",
+        }
+    }
+
+    /// Wall-clock histograms vary run-to-run by nature; everything else
+    /// is deterministic (work counts).  Determinism tests compare only
+    /// the non-wall histograms bin-for-bin.
+    pub const fn is_wall(self) -> bool {
+        matches!(
+            self,
+            Hist::ReplanWallNs | Hist::RefreshWallNs | Hist::HeuristicWallNs | Hist::BookkeepWallNs
+        )
+    }
+}
+
+/// Number of log₂ bins: bin 0 holds the exact value 0, bin `k`
+/// (1 ≤ k ≤ 40) holds values of bit-length `k` — the half-open range
+/// `[2^(k-1), 2^k)` — and the last bin is the +∞ overflow bucket for
+/// values ≥ 2^40 (≈ 18 wall-clock minutes in ns).
+pub const HIST_BINS: usize = 42;
+
+/// A fixed log₂-binned histogram over `u64` samples.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Histogram {
+    pub bins: [u64; HIST_BINS],
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl Histogram {
+    pub const fn new() -> Self {
+        Histogram {
+            bins: [0; HIST_BINS],
+            count: 0,
+            sum: 0,
+        }
+    }
+
+    /// Bin index of `v`: 0 for 0, bit-length for 1..2^40, the overflow
+    /// bucket above.
+    #[inline]
+    pub fn bin_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            let bits = (64 - v.leading_zeros()) as usize;
+            bits.min(HIST_BINS - 1)
+        }
+    }
+
+    /// Inclusive upper edge of bin `b` (`None` = +∞ overflow bucket).
+    pub fn upper_edge(b: usize) -> Option<u64> {
+        if b == 0 {
+            Some(0)
+        } else if b < HIST_BINS - 1 {
+            Some((1u64 << b) - 1)
+        } else {
+            None
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.bins[Self::bin_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.bins.iter_mut().zip(other.bins.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A full registry snapshot: one slot per [`Counter`] and [`Hist`]
+/// variant.  Plain fixed arrays — cloning is a memcpy, merging is
+/// element-wise addition, and the key order is the enum order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Telemetry {
+    counters: [u64; Counter::ALL.len()],
+    hists: [Histogram; Hist::ALL.len()],
+}
+
+impl Telemetry {
+    pub const fn new() -> Self {
+        Telemetry {
+            counters: [0; Counter::ALL.len()],
+            hists: [Histogram::new(); Hist::ALL.len()],
+        }
+    }
+
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    pub fn hist(&self, h: Hist) -> &Histogram {
+        &self.hists[h as usize]
+    }
+
+    /// Element-wise addition in fixed key order — the deterministic
+    /// merge used for per-shard and per-worker registries.
+    pub fn merge(&mut self, other: &Telemetry) {
+        for (a, b) in self.counters.iter_mut().zip(other.counters.iter()) {
+            *a += b;
+        }
+        for (a, b) in self.hists.iter_mut().zip(other.hists.iter()) {
+            a.merge(b);
+        }
+    }
+
+    /// True iff nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counters.iter().all(|&c| c == 0) && self.hists.iter().all(|h| h.count == 0)
+    }
+
+    /// Prometheus-style text exposition — the scrape surface a future
+    /// `dts serve` would mount.  Keys are emitted in canonical enum
+    /// order; histogram buckets are cumulative with inclusive integer
+    /// upper edges and a final `+Inf` bucket.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for c in Counter::ALL {
+            let key = c.key();
+            out.push_str(&format!("# TYPE dts_{key} counter\n"));
+            out.push_str(&format!("dts_{key} {}\n", self.counter(c)));
+        }
+        for h in Hist::ALL {
+            let key = h.key();
+            let hist = self.hist(h);
+            out.push_str(&format!("# TYPE dts_{key} histogram\n"));
+            let mut cum = 0u64;
+            for b in 0..HIST_BINS {
+                cum += hist.bins[b];
+                match Histogram::upper_edge(b) {
+                    Some(le) => {
+                        out.push_str(&format!("dts_{key}_bucket{{le=\"{le}\"}} {cum}\n"));
+                    }
+                    None => {
+                        out.push_str(&format!("dts_{key}_bucket{{le=\"+Inf\"}} {cum}\n"));
+                    }
+                }
+            }
+            out.push_str(&format!("dts_{key}_sum {}\n", hist.sum));
+            out.push_str(&format!("dts_{key}_count {}\n", hist.count));
+        }
+        out
+    }
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+thread_local! {
+    // const-initialized: lives in .tbss, no lazy heap allocation.
+    static REGISTRY: RefCell<Telemetry> = const { RefCell::new(Telemetry::new()) };
+    static ENABLED: Cell<bool> = const { Cell::new(true) };
+}
+
+/// Enable/disable recording on the current thread (default: enabled).
+/// Purely an accounting switch — scheduling behaviour is identical
+/// either way (the bit-identity pin).
+pub fn set_enabled(on: bool) {
+    let _ = ENABLED.try_with(|e| e.set(on));
+}
+
+/// Whether recording is enabled on the current thread.
+pub fn enabled() -> bool {
+    ENABLED.try_with(|e| e.get()).unwrap_or(false)
+}
+
+/// Bump counter `c` by `n` (no-op when disabled).  Allocation-free.
+#[inline]
+pub fn counter_add(c: Counter, n: u64) {
+    if !enabled() {
+        return;
+    }
+    let _ = REGISTRY.try_with(|r| {
+        if let Ok(mut t) = r.try_borrow_mut() {
+            t.counters[c as usize] += n;
+        }
+    });
+}
+
+/// Bump counter `c` by one (no-op when disabled).
+#[inline]
+pub fn counter_inc(c: Counter) {
+    counter_add(c, 1);
+}
+
+/// Record sample `v` into histogram `h` (no-op when disabled).
+/// Allocation-free.
+#[inline]
+pub fn hist_record(h: Hist, v: u64) {
+    if !enabled() {
+        return;
+    }
+    let _ = REGISTRY.try_with(|r| {
+        if let Ok(mut t) = r.try_borrow_mut() {
+            t.hists[h as usize].record(v);
+        }
+    });
+}
+
+/// Clone the current thread's registry.
+pub fn snapshot() -> Telemetry {
+    REGISTRY
+        .try_with(|r| r.borrow().clone())
+        .unwrap_or_else(|_| Telemetry::new())
+}
+
+/// Snapshot **and reset** the current thread's registry — how shard and
+/// sweep workers hand their private registry back to the coordinator.
+pub fn take() -> Telemetry {
+    REGISTRY
+        .try_with(|r| std::mem::replace(&mut *r.borrow_mut(), Telemetry::new()))
+        .unwrap_or_else(|_| Telemetry::new())
+}
+
+/// Merge a snapshot into the current thread's registry (element-wise
+/// addition in fixed key order).
+pub fn absorb(other: &Telemetry) {
+    let _ = REGISTRY.try_with(|r| r.borrow_mut().merge(other));
+}
+
+/// Zero the current thread's registry.
+pub fn reset() {
+    let _ = REGISTRY.try_with(|r| *r.borrow_mut() = Telemetry::new());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bin_edges_zero_powers_of_two_and_overflow() {
+        // 0 lands in the dedicated zero bin.
+        assert_eq!(Histogram::bin_of(0), 0);
+        // 1 = bit-length 1.
+        assert_eq!(Histogram::bin_of(1), 1);
+        // exact powers of two open their own bin: 2^k is the *first*
+        // value of bin k+1 (half-open [2^k, 2^(k+1))).
+        for k in 1..40u32 {
+            let v = 1u64 << k;
+            assert_eq!(Histogram::bin_of(v), (k + 1) as usize, "2^{k}");
+            assert_eq!(Histogram::bin_of(v - 1), k as usize, "2^{k}-1");
+        }
+        // the overflow bucket catches everything from 2^40 up.
+        assert_eq!(Histogram::bin_of(1u64 << 40), HIST_BINS - 1);
+        assert_eq!(Histogram::bin_of(u64::MAX), HIST_BINS - 1);
+        // inclusive upper edges agree with bin_of.
+        assert_eq!(Histogram::upper_edge(0), Some(0));
+        assert_eq!(Histogram::upper_edge(1), Some(1));
+        assert_eq!(Histogram::upper_edge(2), Some(3));
+        assert_eq!(Histogram::upper_edge(HIST_BINS - 1), None);
+    }
+
+    #[test]
+    fn histogram_records_and_merges() {
+        let mut a = Histogram::new();
+        a.record(0);
+        a.record(5);
+        let mut b = Histogram::new();
+        b.record(5);
+        b.record(1u64 << 50);
+        a.merge(&b);
+        assert_eq!(a.count, 4);
+        assert_eq!(a.bins[0], 1);
+        assert_eq!(a.bins[3], 2); // 5 twice: [4, 8)
+        assert_eq!(a.bins[HIST_BINS - 1], 1);
+        assert_eq!(a.sum, 10 + (1u64 << 50));
+    }
+
+    #[test]
+    fn registry_roundtrip_and_enable_gate() {
+        reset();
+        counter_inc(Counter::Replans);
+        counter_add(Counter::ConeEvicted, 7);
+        hist_record(Hist::ConeSize, 3);
+        set_enabled(false);
+        counter_inc(Counter::Replans); // swallowed
+        hist_record(Hist::ConeSize, 3); // swallowed
+        set_enabled(true);
+        let snap = take();
+        assert_eq!(snap.counter(Counter::Replans), 1);
+        assert_eq!(snap.counter(Counter::ConeEvicted), 7);
+        assert_eq!(snap.hist(Hist::ConeSize).count, 1);
+        // take() reset the registry
+        assert!(snapshot().is_empty());
+        // absorb merges back
+        absorb(&snap);
+        absorb(&snap);
+        assert_eq!(snapshot().counter(Counter::ConeEvicted), 14);
+        reset();
+    }
+
+    #[test]
+    fn recording_is_allocation_free() {
+        reset();
+        // warm the TLS slots
+        counter_inc(Counter::TxnBegin);
+        hist_record(Hist::EventQueueDepth, 4);
+        let before = crate::alloc_count::alloc_count();
+        for i in 0..1000u64 {
+            counter_add(Counter::EftPlacements, 1);
+            hist_record(Hist::ConeSize, i);
+        }
+        let after = crate::alloc_count::alloc_count();
+        assert_eq!(after - before, 0, "hot-path recording must not allocate");
+        reset();
+    }
+
+    #[test]
+    fn render_text_lists_keys_in_canonical_order() {
+        let mut t = Telemetry::new();
+        t.counters[Counter::Replans as usize] = 3;
+        t.hists[Hist::ConeSize as usize].record(4);
+        let text = t.render_text();
+        // counters precede histograms; enum order within each block
+        let pos = |needle: &str| text.find(needle).unwrap_or_else(|| panic!("missing {needle}"));
+        assert!(pos("dts_replans 3") < pos("dts_straggler_replans 0"));
+        assert!(pos("dts_fed_migrations") < pos("dts_replan_wall_ns_bucket"));
+        assert!(pos("dts_cone_size_sum 4") < pos("dts_cone_size_count 1"));
+        assert!(text.contains("dts_cone_size_bucket{le=\"+Inf\"} 1\n"));
+    }
+}

@@ -1,0 +1,59 @@
+//! Scoped span timers over the [`Hist`](super::Hist) registry.
+//!
+//! A [`Span`] measures one wall-clock region and lands the elapsed
+//! nanoseconds in a log₂ histogram.  The reading is *returned* to the
+//! caller as seconds so existing `*_wall_s` reporting fields keep their
+//! values from the same clock read — wall time is measured once, used
+//! twice, and never feeds a scheduling decision (the bit-identity
+//! rule in the module docs).
+
+use super::{hist_record, Hist};
+use std::time::Instant;
+
+/// An open span: started at construction, recorded at [`Span::finish`].
+/// Deliberately not `Drop`-based — every instrumented region wants the
+/// elapsed seconds back, so an explicit `finish` keeps the clock read
+/// single and the control flow visible.
+#[derive(Debug)]
+pub struct Span {
+    t0: Instant,
+    hist: Hist,
+}
+
+impl Span {
+    /// Start timing a region destined for histogram `hist`.
+    #[inline]
+    pub fn start(hist: Hist) -> Span {
+        Span {
+            t0: Instant::now(),
+            hist,
+        }
+    }
+
+    /// Stop the clock, record the elapsed nanoseconds into the span's
+    /// histogram (subject to the thread's enable gate), and return the
+    /// elapsed wall seconds from the *same* clock read.
+    #[inline]
+    pub fn finish(self) -> f64 {
+        let elapsed = self.t0.elapsed();
+        hist_record(self.hist, elapsed.as_nanos() as u64);
+        elapsed.as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{reset, snapshot};
+
+    #[test]
+    fn span_records_into_its_histogram() {
+        reset();
+        let s = Span::start(Hist::HeuristicWallNs);
+        let secs = s.finish();
+        assert!(secs >= 0.0);
+        let snap = snapshot();
+        assert_eq!(snap.hist(Hist::HeuristicWallNs).count, 1);
+        reset();
+    }
+}

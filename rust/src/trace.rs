@@ -140,6 +140,8 @@ pub fn sim_to_json(problem: &DynamicProblem, result: &SimResult) -> Value {
         ("n_reverted", json::num(result.n_reverted_total() as f64)),
         ("sched_runtime_s", json::num(result.sched_runtime_s)),
         ("replan_wall_s", json::num(result.replan_wall_s)),
+        ("refresh_wall_s", json::num(result.refresh_wall_s)),
+        ("bookkeep_wall_s", json::num(result.bookkeep_wall_s)),
     ])
 }
 
@@ -157,6 +159,11 @@ pub struct SimTrace {
     pub sched_runtime_s: f64,
     /// total wall time of whole replan passes (0.0 in pre-PR-3 traces)
     pub replan_wall_s: f64,
+    /// belief-refresh phase of `replan_wall_s` (0.0 in pre-PR-8 traces)
+    pub refresh_wall_s: f64,
+    /// bookkeeping phase of `replan_wall_s` (0.0 in pre-PR-8 traces);
+    /// the heuristic phase is `sched_runtime_s` itself
+    pub bookkeep_wall_s: f64,
 }
 
 /// Parse a `dts-sim-trace-v1` document.
@@ -190,6 +197,14 @@ pub fn sim_from_json(v: &Value) -> Result<SimTrace, String> {
             .unwrap_or(0.0),
         replan_wall_s: v
             .get("replan_wall_s")
+            .and_then(|x| x.as_f64())
+            .unwrap_or(0.0),
+        refresh_wall_s: v
+            .get("refresh_wall_s")
+            .and_then(|x| x.as_f64())
+            .unwrap_or(0.0),
+        bookkeep_wall_s: v
+            .get("bookkeep_wall_s")
             .and_then(|x| x.as_f64())
             .unwrap_or(0.0),
     })
@@ -387,6 +402,8 @@ mod tests {
         assert_eq!(trace.n_straggler_replans, res.n_straggler_replans());
         assert_eq!(trace.n_reverted, res.n_reverted_total());
         assert!((trace.replan_wall_s - res.replan_wall_s).abs() < 1e-9);
+        assert!((trace.refresh_wall_s - res.refresh_wall_s).abs() < 1e-9);
+        assert!((trace.bookkeep_wall_s - res.bookkeep_wall_s).abs() < 1e-9);
         for (gid, a) in res.schedule.iter() {
             assert_eq!(trace.schedule.get(*gid), Some(a), "{gid}");
         }

@@ -1,0 +1,400 @@
+//! Acceptance pins for the PR-8 telemetry subsystem
+//! ([`dts::telemetry`]): the registry is an *observer*, never an
+//! actor.
+//!
+//! * **Bit-transparency grid** — all four datasets × the controller
+//!   families {`L3@0.25`, `A3-20`, `D3@0.25`} monolithic, plus the
+//!   federated runtime at shards {1, 4}: realized schedules, event
+//!   logs, replan records, replan-path allocation counts and all 15
+//!   [`Metric::ALL`] axes (at a pinned runtime argument — wall clock is
+//!   the one axis that varies by nature) are byte-identical with
+//!   telemetry enabled vs disabled.
+//! * **Phase reconciliation** — `refresh_s + heuristic_s + bookkeep_s`
+//!   reconciles with `wall_s` per replan record and at run totals
+//!   (`refresh_wall_s + sched_runtime_s + bookkeep_wall_s ≈
+//!   replan_wall_s`), and `sched_runtime_s ≤ replan_wall_s` (the
+//!   superset invariant of docs/METRICS.md).
+//! * **Deterministic merge** — per-shard registries absorbed
+//!   shard-ordered produce identical counters and identical non-wall
+//!   histogram bins run-to-run *and* across worker-thread counts
+//!   (serial vs parallel shard fan-out).
+//!
+//! Telemetry state is thread-local and the test harness runs each test
+//! on its own thread, so `reset`/`set_enabled` here cannot race with
+//! other tests.
+
+use dts::coordinator::{DynamicProblem, Policy};
+use dts::federation::{FederatedCoordinator, FederationResult};
+use dts::graph::Gid;
+use dts::metrics::{Metric, MetricRow};
+use dts::policy::PolicySpec;
+use dts::schedulers::SchedulerKind;
+use dts::sim::{Reaction, ReactiveCoordinator, SimConfig, SimResult};
+use dts::telemetry::{self, Counter, Hist};
+use dts::workloads::Dataset;
+
+/// Straggler driver: the built-in reaction or a policy-engine spec.
+enum Ctl {
+    Reaction(Reaction),
+    Spec(PolicySpec),
+}
+
+fn l3() -> Ctl {
+    Ctl::Reaction(Reaction::LastK {
+        k: 3,
+        threshold: 0.25,
+    })
+}
+
+fn controllers() -> [(&'static str, Ctl); 3] {
+    [
+        ("L3@0.25", l3()),
+        (
+            "A3-20",
+            Ctl::Spec(PolicySpec::AdaptiveK {
+                k0: 3,
+                k_max: 20,
+                threshold: 0.25,
+                target_stretch: 2.0,
+            }),
+        ),
+        (
+            "D3@0.25",
+            Ctl::Spec(PolicySpec::DeadlineAware {
+                k: 3,
+                threshold: 0.25,
+            }),
+        ),
+    ]
+}
+
+fn run_mono(prob: &DynamicProblem, seed: u64, noise_std: f64, ctl: &Ctl) -> SimResult {
+    let mut cfg = SimConfig {
+        noise_std,
+        noise_seed: seed ^ 0xA11CE,
+        reaction: Reaction::None,
+        record_frozen: false,
+        full_refresh: false,
+    };
+    let mut rc = match ctl {
+        Ctl::Reaction(r) => {
+            cfg.reaction = *r;
+            ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(seed), cfg)
+        }
+        Ctl::Spec(spec) => ReactiveCoordinator::with_policy(
+            Policy::LastK(5),
+            SchedulerKind::Heft.make(seed),
+            cfg,
+            spec.make(),
+        ),
+    };
+    rc.run(prob)
+}
+
+fn run_fed(prob: &DynamicProblem, seed: u64, noise_std: f64, shards: usize) -> FederationResult {
+    let cfg = SimConfig {
+        noise_std,
+        noise_seed: seed ^ 0xA11CE,
+        reaction: Reaction::LastK {
+            k: 3,
+            threshold: 0.25,
+        },
+        record_frozen: false,
+        full_refresh: false,
+    };
+    FederatedCoordinator::new(Policy::LastK(5), SchedulerKind::Heft, seed ^ 0x5EED, cfg, shards)
+        .run(prob)
+}
+
+fn sig(s: &dts::schedule::Schedule) -> Vec<(Gid, usize, u64, u64)> {
+    let mut v: Vec<(Gid, usize, u64, u64)> = s
+        .iter()
+        .map(|(g, a)| (*g, a.node, a.start.to_bits(), a.finish.to_bits()))
+        .collect();
+    v.sort();
+    v
+}
+
+/// All 15 metric axes at a pinned runtime argument, as raw bits.
+fn metric_bits(s: &dts::schedule::Schedule, prob: &DynamicProblem) -> Vec<u64> {
+    let row = MetricRow::compute(s, &prob.graphs, &prob.network, 0.0);
+    Metric::ALL.iter().map(|m| row.get(*m).to_bits()).collect()
+}
+
+/// Work-shape signature of a replan record (everything but wall clocks).
+fn replan_sig(r: &dts::sim::ReplanRecord) -> (u64, bool, usize, usize, usize) {
+    (
+        r.time.to_bits(),
+        r.straggler,
+        r.n_reverted,
+        r.n_pending,
+        r.n_refreshed,
+    )
+}
+
+/// THE GRID, monolithic half: 4 datasets × 3 controller families, each
+/// run twice — telemetry enabled (recording verified non-empty) vs
+/// disabled (registry verified untouched) — with schedules, logs,
+/// replan records, allocation counts and all 15 metric axes
+/// byte-identical.
+#[test]
+fn telemetry_on_off_bit_identity_monolithic_grid() {
+    for (di, dataset) in Dataset::ALL.iter().enumerate() {
+        for (ci, (name, ctl)) in controllers().iter().enumerate() {
+            let seed = 4200 + 31 * di as u64 + 7 * ci as u64;
+            let prob = dataset.instance(8, seed);
+            let ctx = format!("{} {name}", dataset.name());
+
+            telemetry::set_enabled(true);
+            telemetry::reset();
+            let on = run_mono(&prob, seed, 0.3, ctl);
+            let recorded = telemetry::take();
+            assert!(!recorded.is_empty(), "{ctx}: nothing recorded");
+            assert_eq!(
+                recorded.counter(Counter::Replans),
+                on.n_replans() as u64,
+                "{ctx}: replan counter disagrees with the run"
+            );
+            assert!(recorded.counter(Counter::EftPlacements) > 0, "{ctx}");
+
+            telemetry::set_enabled(false);
+            let off = run_mono(&prob, seed, 0.3, ctl);
+            assert!(
+                telemetry::snapshot().is_empty(),
+                "{ctx}: disabled run still recorded"
+            );
+            telemetry::set_enabled(true);
+
+            assert_eq!(sig(&on.schedule), sig(&off.schedule), "{ctx}: schedule");
+            assert_eq!(on.log, off.log, "{ctx}: event log");
+            assert_eq!(
+                on.replans.iter().map(replan_sig).collect::<Vec<_>>(),
+                off.replans.iter().map(replan_sig).collect::<Vec<_>>(),
+                "{ctx}: replan records"
+            );
+            assert_eq!(
+                on.replan_allocs, off.replan_allocs,
+                "{ctx}: telemetry changed the replan-path allocation count"
+            );
+            assert_eq!(
+                metric_bits(&on.schedule, &prob),
+                metric_bits(&off.schedule, &prob),
+                "{ctx}: metric axes"
+            );
+        }
+    }
+}
+
+/// THE GRID, federated half: 4 datasets × shards {1, 4}, telemetry on
+/// vs off.  The federated merge path (per-shard registries absorbed
+/// shard-ordered) must be as transparent as the monolithic one, and at
+/// shards > 1 the federation counters must actually fire.
+#[test]
+fn telemetry_on_off_bit_identity_federated_grid() {
+    for (di, dataset) in Dataset::ALL.iter().enumerate() {
+        for &shards in &[1usize, 4] {
+            let seed = 6100 + 17 * di as u64 + shards as u64;
+            let prob = dataset.instance(8, seed);
+            let ctx = format!("{} S{shards}", dataset.name());
+
+            telemetry::set_enabled(true);
+            telemetry::reset();
+            let on = run_fed(&prob, seed, 0.3, shards);
+            let recorded = telemetry::take();
+            assert!(!recorded.is_empty(), "{ctx}: nothing recorded");
+            assert_eq!(
+                recorded.counter(Counter::FedAdmissions),
+                prob.graphs.len() as u64,
+                "{ctx}: every graph is admitted exactly once"
+            );
+
+            telemetry::set_enabled(false);
+            let off = run_fed(&prob, seed, 0.3, shards);
+            assert!(
+                telemetry::snapshot().is_empty(),
+                "{ctx}: disabled run still recorded"
+            );
+            telemetry::set_enabled(true);
+
+            assert_eq!(sig(&on.schedule), sig(&off.schedule), "{ctx}: schedule");
+            assert_eq!(on.log, off.log, "{ctx}: event log");
+            assert_eq!(
+                on.admission.shard_of, off.admission.shard_of,
+                "{ctx}: admission"
+            );
+            assert_eq!(
+                metric_bits(&on.schedule, &prob),
+                metric_bits(&off.schedule, &prob),
+                "{ctx}: metric axes"
+            );
+        }
+    }
+}
+
+/// Phase decomposition adds up: per replan record the three phases
+/// reconcile with the whole-pass wall time (the bookkeeping remainder
+/// is *defined* as the clamped difference, so disagreement beyond f64
+/// rounding means a phase was double- or un-counted), and the run-level
+/// accumulators reconcile the same way.  Also pins the satellite-2
+/// superset invariant `sched_runtime_s ≤ replan_wall_s` and the
+/// registry's view of the same run (replan count, cone-size samples).
+#[test]
+fn phase_decomposition_reconciles() {
+    telemetry::set_enabled(true);
+    telemetry::reset();
+    let prob = Dataset::Synthetic.instance(10, 77);
+    let res = run_mono(&prob, 77, 0.4, &l3());
+    let recorded = telemetry::take();
+    assert!(res.n_replans() > 0, "scenario must replan");
+
+    let mut sum_refresh = 0.0;
+    let mut sum_heuristic = 0.0;
+    let mut sum_bookkeep = 0.0;
+    let mut sum_wall = 0.0;
+    for (i, r) in res.replans.iter().enumerate() {
+        assert!(r.refresh_s >= 0.0 && r.heuristic_s >= 0.0 && r.bookkeep_s >= 0.0);
+        let sum = r.refresh_s + r.heuristic_s + r.bookkeep_s;
+        assert!(
+            (sum - r.wall_s).abs() <= 1e-9 + 1e-9 * r.wall_s,
+            "replan {i}: phases {sum} vs wall {}",
+            r.wall_s
+        );
+        sum_refresh += r.refresh_s;
+        sum_heuristic += r.heuristic_s;
+        sum_bookkeep += r.bookkeep_s;
+        sum_wall += r.wall_s;
+    }
+    // run accumulators agree with the per-record sums...
+    assert!((sum_refresh - res.refresh_wall_s).abs() <= 1e-9 + 1e-9 * sum_wall);
+    assert!((sum_heuristic - res.sched_runtime_s).abs() <= 1e-9 + 1e-9 * sum_wall);
+    assert!((sum_bookkeep - res.bookkeep_wall_s).abs() <= 1e-9 + 1e-9 * sum_wall);
+    assert!((sum_wall - res.replan_wall_s).abs() <= 1e-9 + 1e-9 * sum_wall);
+    // ...and the three phase totals reconcile with the wall total
+    let total = res.refresh_wall_s + res.sched_runtime_s + res.bookkeep_wall_s;
+    assert!(
+        (total - res.replan_wall_s).abs() <= 1e-9 + 1e-6 * res.replan_wall_s,
+        "phase totals {total} vs replan wall {}",
+        res.replan_wall_s
+    );
+    // the superset invariant (docs/METRICS.md): the heuristic phase is
+    // strictly inside the replan pass
+    assert!(res.sched_runtime_s <= res.replan_wall_s + 1e-9);
+    assert!(res.refresh_wall_s + res.bookkeep_wall_s <= res.replan_wall_s + 1e-9);
+
+    // the registry observed the same run: one wall sample and one
+    // cone-size sample per replan pass
+    assert_eq!(recorded.counter(Counter::Replans), res.n_replans() as u64);
+    assert_eq!(recorded.hist(Hist::ReplanWallNs).count, res.n_replans() as u64);
+    assert_eq!(recorded.hist(Hist::ConeSize).count, res.n_replans() as u64);
+    assert!(recorded.hist(Hist::EventQueueDepth).count > 0);
+}
+
+/// Satellite-2 regression: `sched_runtime_s` (base-heuristic phase) can
+/// never exceed `replan_wall_s` (the whole pass it is timed inside), on
+/// every dataset and on the federated runtime.
+#[test]
+fn sched_runtime_never_exceeds_replan_wall() {
+    for (di, dataset) in Dataset::ALL.iter().enumerate() {
+        let seed = 300 + di as u64;
+        let prob = dataset.instance(8, seed);
+        let res = run_mono(&prob, seed, 0.3, &l3());
+        assert!(
+            res.sched_runtime_s <= res.replan_wall_s + 1e-9,
+            "{}: sched {} > replan wall {}",
+            dataset.name(),
+            res.sched_runtime_s,
+            res.replan_wall_s
+        );
+        let fed = run_fed(&prob, seed, 0.3, 2);
+        assert!(
+            fed.sched_runtime_s <= fed.replan_wall_s + 1e-9,
+            "{} federated: sched {} > replan wall {}",
+            dataset.name(),
+            fed.sched_runtime_s,
+            fed.replan_wall_s
+        );
+    }
+}
+
+/// Deterministic per-shard merge: the same federated run repeated
+/// twice — and again across serial vs parallel shard fan-out — lands
+/// identical counters and identical non-wall histograms (bins, counts,
+/// sums).  Only the four wall-time histograms may differ run-to-run.
+#[test]
+fn per_shard_merge_is_deterministic() {
+    let prob = Dataset::Synthetic.instance(10, 11);
+    let run = |jobs: usize| {
+        telemetry::set_enabled(true);
+        telemetry::reset();
+        let fed = FederatedCoordinator::new(
+            Policy::LastK(5),
+            SchedulerKind::Heft,
+            11 ^ 0x5EED,
+            SimConfig {
+                noise_std: 0.3,
+                noise_seed: 11 ^ 0xA11CE,
+                reaction: Reaction::LastK {
+                    k: 3,
+                    threshold: 0.25,
+                },
+                record_frozen: false,
+                full_refresh: false,
+            },
+            3,
+        )
+        .with_jobs(jobs);
+        let _ = fed.run(&prob);
+        telemetry::take()
+    };
+    let a = run(1);
+    let b = run(1);
+    let c = run(2); // worker threads; shard registries absorbed shard-ordered
+    for t in [&b, &c] {
+        for cnt in Counter::ALL {
+            assert_eq!(
+                a.counter(cnt),
+                t.counter(cnt),
+                "counter {} not deterministic",
+                cnt.key()
+            );
+        }
+        for h in Hist::ALL {
+            if h.is_wall() {
+                continue;
+            }
+            assert_eq!(a.hist(h).bins, t.hist(h).bins, "hist {} bins", h.key());
+            assert_eq!(a.hist(h).count, t.hist(h).count, "hist {} count", h.key());
+            assert_eq!(a.hist(h).sum, t.hist(h).sum, "hist {} sum", h.key());
+        }
+    }
+    assert!(a.counter(Counter::FedAdmissions) > 0);
+    assert!(a.counter(Counter::TxnBegin) > 0);
+    assert_eq!(
+        a.counter(Counter::TxnBegin),
+        a.counter(Counter::TxnCommit) + a.counter(Counter::TxnRollback),
+        "every journal transaction either commits or rolls back"
+    );
+}
+
+/// The Prometheus-style exposition renders a merged federated registry
+/// with every key present — the scrape surface stays in lockstep with
+/// the enum registry.
+#[test]
+fn render_text_covers_every_key_after_federated_run() {
+    telemetry::set_enabled(true);
+    telemetry::reset();
+    let prob = Dataset::Synthetic.instance(8, 13);
+    let _ = run_fed(&prob, 13, 0.3, 2);
+    let text = telemetry::take().render_text();
+    for c in Counter::ALL {
+        assert!(text.contains(&format!("dts_{}", c.key())), "{}", c.key());
+    }
+    for h in Hist::ALL {
+        assert!(text.contains(&format!("dts_{}_count", h.key())), "{}", h.key());
+        assert!(
+            text.contains(&format!("dts_{}_bucket{{le=\"+Inf\"}}", h.key())),
+            "{}",
+            h.key()
+        );
+    }
+}
