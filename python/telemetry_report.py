@@ -40,7 +40,7 @@ HIST_BINS = 42  # keep in sync with rust/src/telemetry/mod.rs
 
 # nanosecond-valued histograms get human-readable percentile units
 WALL_KEYS = {"replan_wall_ns", "refresh_wall_ns", "heuristic_wall_ns",
-             "bookkeep_wall_ns"}
+             "bookkeep_wall_ns", "serve_request_ns"}
 
 
 def upper_edge(b: int) -> float:

@@ -6,6 +6,8 @@
 //! * `experiment` — full sweep, printing every figure table
 //! * `simulate`   — reactive runtime sweep (noise × reaction)
 //! * `policy`     — preemption-policy-engine sweep (k × θ × budget)
+//! * `serve`      — streaming scheduler daemon (NDJSON in/out, stdin or TCP)
+//! * `trace`      — trace-file utilities (`--events` prints the event NDJSON)
 //! * `generate`   — emit workload statistics (and optional DOT dumps)
 //! * `validate`   — run + §II-validate + discrete-event replay
 //! * `info`       — version, artifact/bucket status
@@ -22,6 +24,7 @@ use crate::metrics::Metric;
 use crate::policy::PolicySpec;
 use crate::schedule::validate;
 use crate::schedulers::{Cpop, Heft};
+use crate::serve::{Controller, ServeConfig, ServeOptions, ServeServer};
 use crate::sim::{replay, Reaction};
 use crate::workloads::{ArrivalModel, Dataset, DeadlineModel, Scenario, WeightModel};
 use crate::{report, runtime};
@@ -88,6 +91,30 @@ fn strict_usize_flag(args: &Args, key: &str, default: usize, min: usize) -> Resu
     }
 }
 
+/// Strict float flag: absent → `default`, present → must parse as a
+/// finite f64 satisfying `ok`.  The `.and_then(parse).unwrap_or(default)`
+/// idiom silently falls back on garbage, which masks typos (`--burst 4O`
+/// would quietly run at the default burst); every float-valued knob goes
+/// through here instead — same contract as [`strict_usize_flag`].
+fn strict_f64_flag(
+    args: &Args,
+    key: &str,
+    default: f64,
+    constraint: &str,
+    ok: impl Fn(f64) -> bool,
+) -> Result<f64, i32> {
+    match args.flag(key) {
+        None => Ok(default),
+        Some(s) => match s.parse::<f64>() {
+            Ok(x) if x.is_finite() && ok(x) => Ok(x),
+            _ => {
+                eprintln!("error: --{key} must be {constraint}, got '{s}'");
+                Err(2)
+            }
+        },
+    }
+}
+
 const USAGE: &str = "\
 dts — dynamic task-graph scheduling with controlled preemption
 
@@ -116,6 +143,17 @@ USAGE:
                  (policy engine: joint k × θ × budget sweep with
                   preemption-cost accounting; --deadline-aware adds the
                   urgency-scoped D{k}@{θ} controllers)
+  dts serve      --dataset <d> [--graphs N] [--seed S] [--variant 5P-HEFT]
+                 [--noise 0.3] [--k 3] [--threshold 0.25|none]
+                 [--deadline-aware] [--shards S] [--jobs N]
+                 [--listen addr:port] [--snapshot path] [--snapshot-every N]
+                 [--restore path] [--telemetry out.ndjson]
+                 (streaming daemon: dts-serve-v1 NDJSON requests on stdin
+                  or the TCP socket, decision stream out; replaying a
+                  recorded dts-sim-trace-v1 document reproduces the
+                  offline `dts simulate` cell bit-exactly — docs/SERVE.md)
+  dts trace      --events trace.json   (print a recorded trace's events
+                  as NDJSON, one line per event — the serve byte-diff aid)
   dts generate   --dataset <d> [--graphs N] [--seed S] [--dot]
   dts validate   --dataset <d> [--graphs N] [--seed S] [--variant V]
   dts analyze    --dataset <d> [--graphs N] [--seed S] [--variant V]
@@ -134,6 +172,8 @@ pub fn main_with(argv: &[String]) -> i32 {
         Some("experiment") => cmd_experiment(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("policy") => cmd_policy(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("trace") => cmd_trace(&args),
         Some("generate") => cmd_generate(&args),
         Some("validate") => cmd_validate(&args),
         Some("analyze") => cmd_analyze(&args),
@@ -719,34 +759,22 @@ fn cmd_policy(args: &Args) -> i32 {
         eprintln!("error: --budget rates must be finite and > 0 (or 'none')");
         return 2;
     }
-    let burst = args
-        .flag("burst")
-        .and_then(|s| s.parse::<f64>().ok())
-        .unwrap_or(4.0);
-    if !(burst >= 1.0 && burst.is_finite()) {
-        eprintln!("error: --burst must be finite and >= 1");
+    let Ok(burst) = strict_f64_flag(args, "burst", 4.0, "finite and >= 1", |x| x >= 1.0) else {
         return 2;
-    }
-    let cooldown = args
-        .flag("cooldown")
-        .and_then(|s| s.parse::<f64>().ok())
-        .unwrap_or(0.0);
-    if !(cooldown >= 0.0 && cooldown.is_finite()) {
-        eprintln!("error: --cooldown must be finite and >= 0");
+    };
+    let Ok(cooldown) = strict_f64_flag(args, "cooldown", 0.0, "finite and >= 0", |x| x >= 0.0)
+    else {
         return 2;
-    }
+    };
     let adaptive = if args.bool_flag("adaptive") {
         let Ok(k_max) = strict_usize_flag(args, "kmax", 20, 1) else {
             return 2;
         };
-        let target = args
-            .flag("target-stretch")
-            .and_then(|s| s.parse::<f64>().ok())
-            .unwrap_or(2.0);
-        if !(target > 0.0 && target.is_finite()) {
-            eprintln!("error: --target-stretch must be finite and > 0");
+        let Ok(target) =
+            strict_f64_flag(args, "target-stretch", 2.0, "finite and > 0", |x| x > 0.0)
+        else {
             return 2;
-        }
+        };
         Some((k_max, target))
     } else {
         None
@@ -850,6 +878,141 @@ fn cmd_policy(args: &Args) -> i32 {
             return 1;
         }
         eprintln!("wrote {path}");
+    }
+    0
+}
+
+/// Resolve the `dts serve` configuration from the shared flags.  Every
+/// knob goes through the strict parsers — the daemon's config is the
+/// replay-identity contract, so a typo must abort, never silently run a
+/// different instance.
+fn serve_config_of(args: &Args) -> Result<ServeConfig, i32> {
+    let dataset = dataset_of(args)?;
+    let n_graphs = strict_usize_flag(args, "graphs", 16, 1)?;
+    let seed = args.u64_flag("seed", 0);
+    let label = args.flag("variant").unwrap_or("5P-HEFT");
+    let Some(variant) = Variant::parse(label) else {
+        eprintln!("error: bad --variant '{label}'");
+        return Err(2);
+    };
+    let noise_std = strict_f64_flag(args, "noise", 0.3, "finite and >= 0", |x| x >= 0.0)?;
+    let k = strict_usize_flag(args, "k", 3, 1)?;
+    let no_reaction = matches!(args.flag("threshold"), Some(s) if s.eq_ignore_ascii_case("none"));
+    let threshold = if no_reaction {
+        0.0
+    } else {
+        strict_f64_flag(args, "threshold", 0.25, "finite and >= 0 (or 'none')", |x| {
+            x >= 0.0
+        })?
+    };
+    let controller = if args.bool_flag("deadline-aware") {
+        if no_reaction {
+            eprintln!("error: --deadline-aware conflicts with --threshold none");
+            return Err(2);
+        }
+        Controller::Spec(PolicySpec::DeadlineAware { k, threshold })
+    } else if no_reaction {
+        Controller::Reaction(Reaction::None)
+    } else {
+        Controller::Reaction(Reaction::LastK { k, threshold })
+    };
+    let shards = strict_usize_flag(args, "shards", 1, 1)?;
+    let jobs = strict_usize_flag(args, "jobs", 1, 1)?;
+    let scenario = scenario_of(args)?;
+    Ok(ServeConfig {
+        dataset,
+        n_graphs,
+        seed,
+        variant,
+        noise_std,
+        controller,
+        shards,
+        jobs,
+        load: crate::workloads::DEFAULT_LOAD,
+        scenario,
+    })
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let Ok(cfg) = serve_config_of(args) else {
+        return 2;
+    };
+    let Ok(snapshot_every) = strict_usize_flag(args, "snapshot-every", 0, 0) else {
+        return 2;
+    };
+    let opts = ServeOptions {
+        snapshot_path: args.flag("snapshot").map(|s| s.to_string()),
+        snapshot_every: snapshot_every as u64,
+        telemetry_path: args.flag("telemetry").map(|s| s.to_string()),
+        listen: args.flag("listen").map(|s| s.to_string()),
+    };
+    // session-scoped registry: serve counters start at zero, so the
+    // snapshot counter block (and a later restore's seed) is exactly
+    // this session's activity
+    crate::telemetry::reset();
+    let server = match args.flag("restore") {
+        None => ServeServer::new(cfg),
+        Some(path) => {
+            let doc = match std::fs::read_to_string(path) {
+                Ok(d) => d,
+                Err(e) => {
+                    eprintln!("error: cannot read --restore {path}: {e}");
+                    return 2;
+                }
+            };
+            let v = match crate::json::Value::from_str(&doc) {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("error: --restore {path} is not valid JSON: {e}");
+                    return 2;
+                }
+            };
+            match ServeServer::restore(cfg, &v) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("error: --restore {path}: {e}");
+                    return 2;
+                }
+            }
+        }
+    };
+    crate::serve::run(server, &opts)
+}
+
+/// `dts trace --events file.json`: print a recorded `dts-sim-trace-v1`
+/// document's `events` array as NDJSON, one event per line — the exact
+/// bytes `dts serve` streams for the same cell, so
+/// `cmp <(dts trace --events t.json) <(grep decision-lines)` is the
+/// whole CI replay check.
+fn cmd_trace(args: &Args) -> i32 {
+    let Some(path) = args.flag("events") else {
+        eprintln!("error: dts trace requires --events <trace.json>");
+        return 2;
+    };
+    let doc = match std::fs::read_to_string(path) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("error: cannot read {path}: {e}");
+            return 1;
+        }
+    };
+    let v = match crate::json::Value::from_str(&doc) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {path} is not valid JSON: {e}");
+            return 2;
+        }
+    };
+    if v.get("format").and_then(|f| f.as_str()) != Some("dts-sim-trace-v1") {
+        eprintln!("error: {path} is not a dts-sim-trace-v1 document");
+        return 2;
+    }
+    let Some(events) = v.get("events").and_then(|e| e.as_array()) else {
+        eprintln!("error: {path} has no events array");
+        return 2;
+    };
+    for e in events {
+        println!("{e}");
     }
     0
 }
@@ -1144,6 +1307,77 @@ mod tests {
         ] {
             assert_eq!(main_with(&argv(bad)), 2, "{bad}");
         }
+    }
+
+    #[test]
+    fn float_flags_reject_garbage() {
+        // strict parsing extends to every float-valued knob: a typo'd
+        // `--noise 0.3O` (or a silent `--burst 4O` fallback) must abort
+        // with exit 2, never quietly change the experiment
+        for bad in [
+            "simulate --dataset synthetic --noise 0.3O",
+            "policy --dataset synthetic --noise 0.3O",
+            "simulate --dataset synthetic --threshold 0.2S",
+            "policy --dataset synthetic --burst 4O",
+            "policy --dataset synthetic --burst x",
+            "policy --dataset synthetic --cooldown 1O",
+            "policy --dataset synthetic --cooldown wat",
+            "policy --dataset synthetic --adaptive --target-stretch 2O",
+            "policy --dataset synthetic --adaptive --target-stretch inf",
+            "policy --dataset synthetic --deadline-slack 1.5x",
+        ] {
+            assert_eq!(main_with(&argv(bad)), 2, "{bad}");
+        }
+    }
+
+    #[test]
+    fn serve_rejects_bad_flags() {
+        // every serve flag resolves strictly before any stdin is read,
+        // so the reject paths are testable without a session
+        for bad in [
+            "serve",
+            "serve --dataset nope",
+            "serve --dataset synthetic --noise 0.3O",
+            "serve --dataset synthetic --noise -0.1",
+            "serve --dataset synthetic --threshold wat",
+            "serve --dataset synthetic --k 0",
+            "serve --dataset synthetic --k two",
+            "serve --dataset synthetic --graphs 0",
+            "serve --dataset synthetic --shards two",
+            "serve --dataset synthetic --jobs 0",
+            "serve --dataset synthetic --snapshot-every x",
+            "serve --dataset synthetic --variant WAT",
+            "serve --dataset synthetic --deadline-aware --threshold none",
+            "serve --dataset synthetic --restore /nonexistent/snapshot.json",
+        ] {
+            assert_eq!(main_with(&argv(bad)), 2, "{bad}");
+        }
+    }
+
+    #[test]
+    fn trace_subcommand_requires_events() {
+        assert_eq!(main_with(&argv("trace")), 2);
+        assert_eq!(main_with(&argv("trace --events /nonexistent.json")), 1);
+    }
+
+    #[test]
+    fn trace_events_prints_trace_event_lines() {
+        // record a trace, then `dts trace --events` must print its
+        // events array verbatim, one JSON object per line — the helper
+        // the CI serve-smoke byte-diff is built on
+        let path = std::env::temp_dir().join("dts_cli_trace_events_test.json");
+        let path_s = path.to_str().unwrap();
+        let cmd = format!(
+            "simulate --dataset synthetic --graphs 4 --trials 1 \
+             --noise 0.3 --threshold 0.25 --k 2 --trace {path_s}"
+        );
+        assert_eq!(main_with(&argv(&cmd)), 0);
+        let doc = std::fs::read_to_string(&path).unwrap();
+        let v = crate::json::Value::from_str(&doc).unwrap();
+        let n_events = v.get("events").unwrap().as_array().unwrap().len();
+        assert!(n_events > 0);
+        assert_eq!(main_with(&argv(&format!("trace --events {path_s}"))), 0);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

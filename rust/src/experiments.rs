@@ -442,8 +442,9 @@ fn degradation_ratio(realized: f64, planned: f64) -> f64 {
 }
 
 /// The full [`MetricRow`] as a JSON object — shared by the sim and
-/// policy sweep dumps.
-fn metric_row_json(r: &MetricRow) -> Value {
+/// policy sweep dumps and by the `dts serve` epoch summary (the
+/// 15-metric block replay tests compare bit-for-bit).
+pub fn metric_row_json(r: &MetricRow) -> Value {
     json::obj(vec![
         ("total_makespan", json::num(r.total_makespan)),
         ("mean_makespan", json::num(r.mean_makespan)),

@@ -45,6 +45,7 @@ use crate::coordinator::{DynamicProblem, Policy};
 use crate::graph::Gid;
 use crate::metrics::{MetricRow, PreemptionCost};
 use crate::network::Network;
+use crate::policy::PolicySpec;
 use crate::schedule::{Assignment, Schedule};
 use crate::schedulers::SchedulerKind;
 use crate::sim::{ReactiveCoordinator, SimConfig, SimLogEntry, SimLogKind, SimResult};
@@ -91,6 +92,14 @@ pub struct FederatedCoordinator {
     cfg: SimConfig,
     shards: usize,
     jobs: usize,
+    /// Optional preemption-policy controller.  When set, each shard
+    /// coordinator is built through
+    /// [`ReactiveCoordinator::with_policy`]`(…, spec.make())` instead of
+    /// the built-in `cfg.reaction` trigger — the federated counterpart
+    /// of the `dts policy` engine cells, and the construction the
+    /// 1-shard oracle in `rust/tests/serve_snapshot.rs` pins against
+    /// the monolithic `with_policy` run.
+    spec: Option<PolicySpec>,
 }
 
 impl FederatedCoordinator {
@@ -111,7 +120,18 @@ impl FederatedCoordinator {
             cfg,
             shards,
             jobs: 1,
+            spec: None,
         }
+    }
+
+    /// Drive every shard through a [`PolicySpec`] controller instead of
+    /// the built-in `cfg.reaction` trigger.  Each shard gets a fresh
+    /// controller instance (`spec.make()`), so controller state —
+    /// AIMD windows, budget tokens, cooldowns — stays shard-local,
+    /// matching the shard-local replan discipline.
+    pub fn with_controller(mut self, spec: PolicySpec) -> Self {
+        self.spec = Some(spec);
+        self
     }
 
     /// Worker threads for the shard fan-out (default 1 = serial).  The
@@ -122,15 +142,21 @@ impl FederatedCoordinator {
         self
     }
 
-    /// `S4 5P-HEFT σ0.30 L3@0.25` style label.
+    /// `S4 5P-HEFT σ0.30 L3@0.25` style label.  With a
+    /// [`Self::with_controller`] spec the reaction slot shows the
+    /// controller's label instead (`S4 5P-HEFT σ0.30 D3@0.25`).
     pub fn label(&self) -> String {
+        let reaction = match &self.spec {
+            Some(spec) => spec.label(),
+            None => self.cfg.reaction.label(),
+        };
         format!(
             "S{} {}-{} σ{:.2} {}",
             self.shards,
             self.policy.label(),
             self.kind.name(),
             self.cfg.noise_std,
-            self.cfg.reaction.label()
+            reaction
         )
     }
 
@@ -335,7 +361,17 @@ impl FederatedCoordinator {
     }
 
     fn run_shard(&self, sp: &DynamicProblem) -> (SimResult, telemetry::Telemetry) {
-        let mut rc = ReactiveCoordinator::new(self.policy, self.kind.make(self.sched_seed), self.cfg);
+        let mut rc = match &self.spec {
+            Some(spec) => ReactiveCoordinator::with_policy(
+                self.policy,
+                self.kind.make(self.sched_seed),
+                self.cfg,
+                spec.make(),
+            ),
+            None => {
+                ReactiveCoordinator::new(self.policy, self.kind.make(self.sched_seed), self.cfg)
+            }
+        };
         let res = rc.run(sp);
         // snapshot-and-reset: the shard's registry delta rides back with
         // its result for the deterministic shard-ordered merge

@@ -38,6 +38,10 @@
 //! * an allocation-free **telemetry layer** — deterministic counter /
 //!   log₂-histogram registry, phase-timed replan spans, NDJSON export
 //!   and a Prometheus-style text exposition ([`telemetry`]);
+//! * a **streaming scheduler daemon** — NDJSON graph-arrival requests
+//!   in (stdin or TCP), dispatch/replan/finish decisions out, periodic
+//!   snapshot/restore, pinned bit-exact against the offline sim
+//!   ([`serve`]);
 //! * an **XLA/PJRT runtime** that executes the AOT-compiled JAX+Pallas
 //!   rank kernels from `artifacts/` on the scheduling hot path
 //!   ([`runtime`]);
@@ -70,6 +74,7 @@ pub mod robustness;
 pub mod runtime;
 pub mod schedule;
 pub mod schedulers;
+pub mod serve;
 pub mod sim;
 pub mod stats;
 pub mod telemetry;

@@ -1,0 +1,1071 @@
+//! `dts serve` — a long-lived streaming scheduler daemon (the
+//! millions-of-users front door of ROADMAP direction 1).
+//!
+//! The server wraps the reactive runtime in an NDJSON request/response
+//! loop: graph-arrival requests come in on stdin (or a TCP socket via
+//! `--listen addr:port`), dispatch/replan/finish decisions stream out,
+//! and the state journal snapshots to disk for kill/restore recovery.
+//! Protocol schemas live in `docs/SERVE.md`; the wire parsing in
+//! [`protocol`], the journal format in [`snapshot`].
+//!
+//! ## The replay bit-identity guarantee
+//!
+//! The offline sim is *one client of the same runtime*: feeding a
+//! recorded `dts-sim-trace-v1` document (or the equivalent `arrive`
+//! ops) followed by `{"op":"run"}` reproduces the offline
+//! `dts simulate` cell **bit-exactly** — the decision stream is
+//! byte-identical to the trace's `events` array (both sides serialize
+//! through [`crate::trace::sim_event_json`]), and the epoch summary
+//! carries the same 15-metric block to the bit.  This holds because the
+//! server regenerates the identical instance
+//! (`dataset.instance_scenario(n_graphs, seed, load, …)`) and builds
+//! the identical coordinator (`noise_seed = seed ^ 0xA11CE`, scheduler
+//! seed `seed ^ 0x5EED`) the offline harness builds
+//! ([`crate::experiments`]'s `run_sim_cell`).  Pinned by
+//! `rust/tests/serve_replay.rs` and the CI `serve-smoke` byte-diff.
+//!
+//! ## Epochs (virtual-clock batches)
+//!
+//! Arrivals accumulate in a **pending** set; `{"op":"run"}` (or the
+//! EOF/shutdown drain) closes the batch and runs it as one *epoch*: a
+//! discrete-event simulation over the pending graphs at their recorded
+//! arrival times, streamed out as decision lines plus a summary.  An
+//! epoch over the full instance reproduces the offline run bit-exactly;
+//! a partial epoch is its own closed virtual-clock world (noise is
+//! keyed by epoch-local graph index, exactly as a smaller offline
+//! instance would be).  Controller state (AIMD windows, budget tokens)
+//! is epoch-scoped: each epoch builds a fresh coordinator, which is
+//! precisely what makes the journal snapshot/restore exact — no
+//! coordinator internals ever need serializing.
+//!
+//! ## Drain and crash semantics
+//!
+//! EOF on stdin and `{"op":"shutdown"}` drain gracefully: the pending
+//! epoch is flushed (decisions + 15-metric summary), a final snapshot
+//! is journaled, telemetry exports, and a `bye` line closes the
+//! session.  `{"op":"quit"}` is the *crash simulation*: exit
+//! immediately, no drain, no extra snapshot — restore then resumes from
+//! the last journaled state and continues bit-identically to an
+//! uninterrupted session (`rust/tests/serve_snapshot.rs`).  The
+//! zero-dependency build has no signal-handler facility, so SIGTERM is
+//! not caught: the periodic journal (`--snapshot-every N`) is the
+//! recovery story for hard kills, and EOF/`shutdown` are the graceful
+//! paths (docs/SERVE.md).
+//!
+//! ## Per-request latency accounting
+//!
+//! Every handled request line runs under a
+//! [`Hist::ServeRequestNs`] span; `serve_requests` / `serve_errors` /
+//! `serve_arrivals` / `serve_snapshots` counters land in the same
+//! registry as the replan-phase spans, export through `--telemetry`
+//! (one [`CellSpan`] per epoch), and answer `{"op":"stats"}` inline.
+
+pub mod protocol;
+pub mod snapshot;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+
+use crate::coordinator::{DynamicProblem, Variant};
+use crate::experiments::metric_row_json;
+use crate::federation::FederatedCoordinator;
+use crate::json::{self, Value};
+use crate::metrics::MetricRow;
+use crate::policy::PolicySpec;
+use crate::sim::{
+    Reaction, ReactiveCoordinator, SimConfig, SimLogEntry, SimLogKind, SimResult,
+};
+use crate::telemetry::{self, export::CellSpan, Counter, Hist, Span};
+use crate::trace;
+use crate::workloads::{Dataset, Scenario};
+
+pub use protocol::{error_line, parse_request, Reject, Request, FORMAT};
+
+/// How the server reacts to stragglers: the built-in
+/// [`Reaction`] trigger (mirrors `dts simulate`) or a
+/// [`PolicySpec`] controller (mirrors `dts policy`; fresh instance per
+/// epoch and per shard).
+#[derive(Clone, Debug)]
+pub enum Controller {
+    Reaction(Reaction),
+    Spec(PolicySpec),
+}
+
+impl Controller {
+    pub fn label(&self) -> String {
+        match self {
+            Controller::Reaction(r) => r.label(),
+            Controller::Spec(s) => s.label(),
+        }
+    }
+}
+
+/// Everything that shapes the instance and the coordinator — the
+/// server-side half of the replay bit-identity contract.  Two servers
+/// with equal configs are interchangeable; the snapshot journal embeds
+/// this block and restore refuses a mismatch.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub dataset: Dataset,
+    pub n_graphs: usize,
+    pub seed: u64,
+    pub variant: Variant,
+    pub noise_std: f64,
+    pub controller: Controller,
+    /// 1 = monolithic [`ReactiveCoordinator`]; >1 = [`FederatedCoordinator`]
+    pub shards: usize,
+    /// shard fan-out threads (federated only; bit-identical at any value)
+    pub jobs: usize,
+    pub load: f64,
+    pub scenario: Scenario,
+}
+
+impl ServeConfig {
+    /// The identical [`SimConfig`] the offline harness builds for this
+    /// cell (`noise_seed = seed ^ 0xA11CE` — the replay contract).
+    pub fn sim_config(&self) -> SimConfig {
+        SimConfig {
+            noise_std: self.noise_std,
+            noise_seed: self.seed ^ 0xA11CE,
+            reaction: match &self.controller {
+                Controller::Reaction(r) => *r,
+                Controller::Spec(_) => Reaction::None,
+            },
+            record_frozen: false,
+            full_refresh: false,
+        }
+    }
+
+    /// Session label, matching the epoch coordinator's own label
+    /// (`5P-HEFT σ0.30 L3@0.25`, `S4 …` when federated).
+    pub fn label(&self) -> String {
+        let core = format!(
+            "{} σ{:.2} {}",
+            self.variant.label(),
+            self.noise_std,
+            self.controller.label()
+        );
+        if self.shards > 1 {
+            format!("S{} {}", self.shards, core)
+        } else {
+            core
+        }
+    }
+}
+
+/// What the request loop should do after a handled line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flow {
+    Continue,
+    /// hard stop, no drain (crash simulation)
+    Quit,
+    /// graceful drain then stop
+    Shutdown,
+}
+
+/// How a pump session ended (one stdin session, or one TCP connection).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionEnd {
+    /// input exhausted (stdin EOF → drain; TCP connection close → keep
+    /// serving)
+    Eof,
+    Quit,
+    Shutdown,
+}
+
+/// One epoch's realized outcome, ready for emission.
+struct EpochOutcome {
+    label: String,
+    log: Vec<SimLogEntry>,
+    metrics: MetricRow,
+    n_replans: usize,
+    n_straggler_replans: usize,
+    n_reverted: usize,
+    sched_runtime_s: f64,
+    replan_wall_s: f64,
+    refresh_wall_s: f64,
+    bookkeep_wall_s: f64,
+}
+
+/// The daemon's resumable state: the regenerated instance plus the
+/// admission journal.  [`handle_line`](Self::handle_line) is pure with
+/// respect to I/O (response lines land in the caller's buffer), which
+/// is what the property suites drive directly.
+pub struct ServeServer {
+    cfg: ServeConfig,
+    instance: DynamicProblem,
+    /// per-graph admitted flag (duplicate detection)
+    arrived: Vec<bool>,
+    /// admitted-not-yet-run global graph indices, in admission order
+    pending: Vec<usize>,
+    /// completed epochs' global graph lists
+    epochs: Vec<Vec<usize>>,
+    /// non-empty request lines handled (1-based error-line numbering;
+    /// snapshot-carried)
+    lines_handled: u64,
+    requests: u64,
+    errors: u64,
+    arrivals: u64,
+    snapshots: u64,
+    /// one telemetry span per completed epoch (`--telemetry` export)
+    epoch_spans: Vec<CellSpan>,
+    /// set by `{"op":"snapshot"}`; the I/O loop takes it and writes
+    snapshot_requested: bool,
+    /// whether a `--snapshot` path is configured (ops reject otherwise)
+    can_snapshot: bool,
+}
+
+impl ServeServer {
+    /// Fresh server: regenerate the instance and start an empty journal.
+    pub fn new(cfg: ServeConfig) -> ServeServer {
+        let instance = cfg.dataset.instance_scenario(
+            cfg.n_graphs,
+            cfg.seed,
+            cfg.load,
+            None,
+            &cfg.scenario,
+        );
+        let n = instance.graphs.len();
+        ServeServer {
+            cfg,
+            instance,
+            arrived: vec![false; n],
+            pending: Vec::new(),
+            epochs: Vec::new(),
+            lines_handled: 0,
+            requests: 0,
+            errors: 0,
+            arrivals: 0,
+            snapshots: 0,
+            epoch_spans: Vec::new(),
+            snapshot_requested: false,
+            can_snapshot: false,
+        }
+    }
+
+    /// Resume from a `dts-serve-snapshot-v1` document: re-mark the
+    /// journal, restore the line counter, and seed the telemetry
+    /// registry with the stored counter block (so final totals equal an
+    /// uninterrupted session's).  Fails on config mismatch or a journal
+    /// inconsistent with the instance.
+    pub fn restore(cfg: ServeConfig, doc: &Value) -> Result<ServeServer, String> {
+        let st = snapshot::parse(doc, &cfg)?;
+        let mut server = ServeServer::new(cfg);
+        for (ei, epoch) in st.epochs.iter().enumerate() {
+            for &gi in epoch {
+                server.mark_arrived(gi, &format!("epoch {ei}"))?;
+            }
+        }
+        for &gi in &st.pending {
+            server.mark_arrived(gi, "pending")?;
+        }
+        server.epochs = st.epochs;
+        server.pending = st.pending;
+        server.lines_handled = st.lines_handled;
+        for &(c, v) in &st.counters {
+            telemetry::counter_add(c, v);
+            match c {
+                Counter::ServeRequests => server.requests = v,
+                Counter::ServeErrors => server.errors = v,
+                Counter::ServeArrivals => server.arrivals = v,
+                Counter::ServeSnapshots => server.snapshots = v,
+                _ => {}
+            }
+        }
+        Ok(server)
+    }
+
+    fn mark_arrived(&mut self, gi: usize, what: &str) -> Result<(), String> {
+        if gi >= self.arrived.len() {
+            return Err(format!(
+                "snapshot {what}: graph {gi} out of range (instance has {})",
+                self.arrived.len()
+            ));
+        }
+        if self.arrived[gi] {
+            return Err(format!("snapshot {what}: graph {gi} listed twice"));
+        }
+        self.arrived[gi] = true;
+        Ok(())
+    }
+
+    /// Enable `{"op":"snapshot"}` (a `--snapshot` path is configured).
+    pub fn set_can_snapshot(&mut self, on: bool) {
+        self.can_snapshot = on;
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    pub fn n_graphs(&self) -> usize {
+        self.arrived.len()
+    }
+
+    pub fn lines_handled(&self) -> u64 {
+        self.lines_handled
+    }
+
+    pub fn pending(&self) -> &[usize] {
+        &self.pending
+    }
+
+    pub fn epochs(&self) -> &[Vec<usize>] {
+        &self.epochs
+    }
+
+    pub fn epoch_spans(&self) -> &[CellSpan] {
+        &self.epoch_spans
+    }
+
+    /// Take-and-clear the `{"op":"snapshot"}` request flag.
+    pub fn take_snapshot_requested(&mut self) -> bool {
+        std::mem::take(&mut self.snapshot_requested)
+    }
+
+    /// Deterministic digest of the coordinator-relevant state — the
+    /// "state untouched on error" oracle of the ingest property suite.
+    pub fn state_fingerprint(&self) -> String {
+        format!(
+            "epochs={:?} pending={:?} arrivals={} lines_handled_excl_errors={}",
+            self.epochs,
+            self.pending,
+            self.arrivals,
+            self.requests - self.errors
+        )
+    }
+
+    /// The session-opening line.
+    pub fn hello_line(&self) -> String {
+        json::obj(vec![
+            ("kind", json::s("hello")),
+            ("format", json::s(FORMAT)),
+            ("dataset", json::s(self.cfg.dataset.name())),
+            ("graphs", json::num(self.n_graphs() as f64)),
+            ("n_nodes", json::num(self.instance.network.n_nodes() as f64)),
+            ("label", json::s(&self.cfg.label())),
+            ("epochs", json::num(self.epochs.len() as f64)),
+            ("pending", json::num(self.pending.len() as f64)),
+            ("line", json::num(self.lines_handled as f64)),
+        ])
+        .to_string()
+    }
+
+    /// Handle one raw input line: parse, apply, and append every
+    /// response line to `out`.  Whitespace-only lines are ignored;
+    /// every other line is counted, timed under the `serve_request`
+    /// span, and yields at least one response line (ack, error, or a
+    /// decision stream + summary).
+    pub fn handle_line(&mut self, raw: &str, out: &mut Vec<String>) -> Flow {
+        let line = raw.trim();
+        if line.is_empty() {
+            return Flow::Continue;
+        }
+        let span = Span::start(Hist::ServeRequestNs);
+        self.lines_handled += 1;
+        self.requests += 1;
+        telemetry::counter_inc(Counter::ServeRequests);
+        let flow = match parse_request(line) {
+            Err(rej) => {
+                self.reject(&rej, out);
+                Flow::Continue
+            }
+            Ok(req) => self.apply(req, out),
+        };
+        span.finish();
+        flow
+    }
+
+    fn reject(&mut self, rej: &Reject, out: &mut Vec<String>) {
+        self.errors += 1;
+        telemetry::counter_inc(Counter::ServeErrors);
+        out.push(error_line(self.lines_handled, rej));
+    }
+
+    fn apply(&mut self, req: Request, out: &mut Vec<String>) -> Flow {
+        match req {
+            Request::Arrive { graph } => {
+                if let Err(rej) = self.admit(graph) {
+                    self.reject(&rej, out);
+                } else {
+                    out.push(
+                        json::obj(vec![
+                            ("kind", json::s("ack")),
+                            ("op", json::s("arrive")),
+                            ("graph", json::num(graph as f64)),
+                            ("pending", json::num(self.pending.len() as f64)),
+                        ])
+                        .to_string(),
+                    );
+                }
+                Flow::Continue
+            }
+            Request::Trace(doc) => {
+                match self.admit_trace(&doc) {
+                    Err(rej) => self.reject(&rej, out),
+                    Ok(admitted) => out.push(
+                        json::obj(vec![
+                            ("kind", json::s("ack")),
+                            ("op", json::s("trace")),
+                            ("admitted", json::num(admitted as f64)),
+                            ("pending", json::num(self.pending.len() as f64)),
+                        ])
+                        .to_string(),
+                    ),
+                }
+                Flow::Continue
+            }
+            Request::Run => {
+                self.run_epoch(out);
+                Flow::Continue
+            }
+            Request::Snapshot => {
+                if !self.can_snapshot {
+                    self.reject(
+                        &Reject::new("snapshot", "no --snapshot path configured"),
+                        out,
+                    );
+                } else {
+                    self.snapshot_requested = true;
+                    out.push(
+                        json::obj(vec![
+                            ("kind", json::s("ack")),
+                            ("op", json::s("snapshot")),
+                            ("epochs", json::num(self.epochs.len() as f64)),
+                            ("pending", json::num(self.pending.len() as f64)),
+                        ])
+                        .to_string(),
+                    );
+                }
+                Flow::Continue
+            }
+            Request::Stats => {
+                out.push(self.stats_line());
+                Flow::Continue
+            }
+            Request::Quit => Flow::Quit,
+            Request::Shutdown => Flow::Shutdown,
+        }
+    }
+
+    fn admit(&mut self, graph: usize) -> Result<(), Reject> {
+        if graph >= self.arrived.len() {
+            return Err(Reject::new(
+                "range",
+                format!(
+                    "graph {graph} out of range (instance has {} graphs)",
+                    self.arrived.len()
+                ),
+            ));
+        }
+        if self.arrived[graph] {
+            return Err(Reject::new(
+                "duplicate",
+                format!("graph {graph} already admitted"),
+            ));
+        }
+        self.arrived[graph] = true;
+        self.pending.push(graph);
+        self.arrivals += 1;
+        telemetry::counter_inc(Counter::ServeArrivals);
+        Ok(())
+    }
+
+    /// Validate a recorded trace against this server's instance, then
+    /// admit every graph (all-or-nothing: any mismatch or duplicate
+    /// leaves the journal untouched).
+    fn admit_trace(&mut self, doc: &Value) -> Result<usize, Reject> {
+        trace::sim_from_json(doc).map_err(|e| Reject::new("trace", e))?;
+        let tn = doc
+            .get("n_nodes")
+            .and_then(|x| x.as_usize())
+            .unwrap_or(usize::MAX);
+        if tn != self.instance.network.n_nodes() {
+            return Err(Reject::new(
+                "trace",
+                format!(
+                    "trace has {tn} nodes, instance has {}",
+                    self.instance.network.n_nodes()
+                ),
+            ));
+        }
+        let graphs = doc
+            .get("graphs")
+            .and_then(|g| g.as_array())
+            .ok_or_else(|| Reject::new("trace", "missing graphs array"))?;
+        if graphs.len() != self.instance.graphs.len() {
+            return Err(Reject::new(
+                "trace",
+                format!(
+                    "trace has {} graphs, instance has {}",
+                    graphs.len(),
+                    self.instance.graphs.len()
+                ),
+            ));
+        }
+        for (i, tg) in graphs.iter().enumerate() {
+            let (arrival, g) = &self.instance.graphs[i];
+            let ta = tg.get("arrival").and_then(|x| x.as_f64());
+            if ta != Some(*arrival) {
+                return Err(Reject::new(
+                    "trace",
+                    format!(
+                        "graph {i}: trace arrival {ta:?} != instance arrival {arrival}"
+                    ),
+                ));
+            }
+            let tt = tg.get("n_tasks").and_then(|x| x.as_usize());
+            if tt != Some(g.n_tasks()) {
+                return Err(Reject::new(
+                    "trace",
+                    format!(
+                        "graph {i}: trace n_tasks {tt:?} != instance n_tasks {}",
+                        g.n_tasks()
+                    ),
+                ));
+            }
+            if self.arrived[i] {
+                return Err(Reject::new(
+                    "duplicate",
+                    format!("graph {i} already admitted; trace replay needs a fresh session"),
+                ));
+            }
+        }
+        for i in 0..graphs.len() {
+            self.arrived[i] = true;
+            self.pending.push(i);
+        }
+        self.arrivals += graphs.len() as u64;
+        telemetry::counter_add(Counter::ServeArrivals, graphs.len() as u64);
+        Ok(graphs.len())
+    }
+
+    /// Close the pending batch and run it as one epoch, streaming the
+    /// decision lines and the 15-metric summary into `out`.
+    fn run_epoch(&mut self, out: &mut Vec<String>) {
+        if self.pending.is_empty() {
+            out.push(
+                json::obj(vec![
+                    ("kind", json::s("ack")),
+                    ("op", json::s("run")),
+                    ("pending", json::num(0.0)),
+                ])
+                .to_string(),
+            );
+            return;
+        }
+        let mut idxs = std::mem::take(&mut self.pending);
+        // Epoch problem in ascending global index = recorded-arrival
+        // order (instances are arrival-sorted), so a full-instance epoch
+        // is field-for-field the offline problem.
+        idxs.sort_unstable();
+        let sub = self.subproblem(&idxs);
+        let o = self.run_coordinator(&sub);
+        for e in &o.log {
+            let remapped = remap_entry(e, &idxs);
+            out.push(trace::sim_event_json(&remapped).to_string());
+        }
+        let epoch = self.epochs.len();
+        out.push(
+            json::obj(vec![
+                ("kind", json::s("summary")),
+                ("epoch", json::num(epoch as f64)),
+                ("label", json::s(&o.label)),
+                (
+                    "graphs",
+                    json::arr(idxs.iter().map(|&i| json::num(i as f64)).collect()),
+                ),
+                ("n_events", json::num(o.log.len() as f64)),
+                ("n_replans", json::num(o.n_replans as f64)),
+                (
+                    "n_straggler_replans",
+                    json::num(o.n_straggler_replans as f64),
+                ),
+                ("n_reverted", json::num(o.n_reverted as f64)),
+                ("metrics", metric_row_json(&o.metrics)),
+            ])
+            .to_string(),
+        );
+        self.epoch_spans.push(CellSpan {
+            label: o.label,
+            dataset: self.cfg.dataset.name().to_string(),
+            replans: o.n_replans,
+            refresh_s: o.refresh_wall_s,
+            heuristic_s: o.sched_runtime_s,
+            bookkeep_s: o.bookkeep_wall_s,
+            wall_s: o.replan_wall_s,
+        });
+        self.epochs.push(idxs);
+    }
+
+    fn subproblem(&self, idxs: &[usize]) -> DynamicProblem {
+        let graphs = idxs
+            .iter()
+            .map(|&i| self.instance.graphs[i].clone())
+            .collect();
+        DynamicProblem::new(self.instance.network.clone(), graphs)
+    }
+
+    /// Build and run the epoch coordinator — the exact offline
+    /// construction (`run_sim_cell` / `run_policy_cell`), which is the
+    /// whole replay contract.
+    fn run_coordinator(&self, sub: &DynamicProblem) -> EpochOutcome {
+        let sim_cfg = self.cfg.sim_config();
+        let sched_seed = self.cfg.seed ^ 0x5EED;
+        if self.cfg.shards > 1 {
+            let mut fed = FederatedCoordinator::new(
+                self.cfg.variant.policy,
+                self.cfg.variant.kind,
+                sched_seed,
+                sim_cfg,
+                self.cfg.shards,
+            )
+            .with_jobs(self.cfg.jobs);
+            if let Controller::Spec(spec) = &self.cfg.controller {
+                fed = fed.with_controller(spec.clone());
+            }
+            let label = fed.label();
+            let res = fed.run(sub);
+            let metrics = res.metrics(sub);
+            EpochOutcome {
+                label,
+                n_replans: res.n_replans(),
+                n_straggler_replans: res.n_straggler_replans(),
+                n_reverted: res.n_reverted_total(),
+                sched_runtime_s: res.sched_runtime_s,
+                replan_wall_s: res.replan_wall_s,
+                refresh_wall_s: res.refresh_wall_s,
+                bookkeep_wall_s: res.bookkeep_wall_s,
+                log: res.log,
+                metrics,
+            }
+        } else {
+            let scheduler = self.cfg.variant.kind.make(sched_seed);
+            let mut rc = match &self.cfg.controller {
+                Controller::Spec(spec) => ReactiveCoordinator::with_policy(
+                    self.cfg.variant.policy,
+                    scheduler,
+                    sim_cfg,
+                    spec.make(),
+                ),
+                Controller::Reaction(_) => {
+                    ReactiveCoordinator::new(self.cfg.variant.policy, scheduler, sim_cfg)
+                }
+            };
+            let label = rc.label();
+            let res: SimResult = rc.run(sub);
+            let metrics = res.metrics(sub);
+            EpochOutcome {
+                label,
+                n_replans: res.n_replans(),
+                n_straggler_replans: res.n_straggler_replans(),
+                n_reverted: res.n_reverted_total(),
+                sched_runtime_s: res.sched_runtime_s,
+                replan_wall_s: res.replan_wall_s,
+                refresh_wall_s: res.refresh_wall_s,
+                bookkeep_wall_s: res.bookkeep_wall_s,
+                log: res.log,
+                metrics,
+            }
+        }
+    }
+
+    /// One-line JSON snapshot of the telemetry registry + session state.
+    fn stats_line(&self) -> String {
+        let t = telemetry::snapshot();
+        let counters: Vec<(&str, Value)> = Counter::ALL
+            .iter()
+            .map(|&c| (c.key(), json::num(t.counter(c) as f64)))
+            .collect();
+        json::obj(vec![
+            ("kind", json::s("stats")),
+            ("epochs", json::num(self.epochs.len() as f64)),
+            ("pending", json::num(self.pending.len() as f64)),
+            ("line", json::num(self.lines_handled as f64)),
+            ("counters", json::obj(counters)),
+        ])
+        .to_string()
+    }
+
+    /// Graceful drain: flush the pending epoch (decisions + summary),
+    /// then the session-closing `bye` line.
+    pub fn drain(&mut self, out: &mut Vec<String>) {
+        if !self.pending.is_empty() {
+            self.run_epoch(out);
+        }
+        out.push(
+            json::obj(vec![
+                ("kind", json::s("bye")),
+                ("epochs", json::num(self.epochs.len() as f64)),
+                ("requests", json::num(self.requests as f64)),
+                ("errors", json::num(self.errors as f64)),
+            ])
+            .to_string(),
+        );
+    }
+
+    /// The journal document.  The `serve_snapshots` counter is bumped
+    /// *after* serialization (see [`write_snapshot`]), so the stored
+    /// block never counts the write in flight — which is exactly what
+    /// makes an interrupted+restored session's counter totals equal an
+    /// uninterrupted one's.
+    pub fn snapshot_json(&self) -> Value {
+        let t = telemetry::snapshot();
+        let counters: Vec<(&str, Value)> = Counter::ALL
+            .iter()
+            .map(|&c| (c.key(), json::num(t.counter(c) as f64)))
+            .collect();
+        json::obj(vec![
+            ("format", json::s(snapshot::FORMAT)),
+            ("config", snapshot::config_json(&self.cfg)),
+            (
+                "epochs",
+                json::arr(
+                    self.epochs
+                        .iter()
+                        .map(|e| json::arr(e.iter().map(|&i| json::num(i as f64)).collect()))
+                        .collect(),
+                ),
+            ),
+            (
+                "pending",
+                json::arr(self.pending.iter().map(|&i| json::num(i as f64)).collect()),
+            ),
+            ("lines_handled", json::num(self.lines_handled as f64)),
+            ("counters", json::obj(counters)),
+        ])
+    }
+
+    /// Record one journal write (counter mirror + registry).
+    pub fn note_snapshot_written(&mut self) {
+        self.snapshots += 1;
+        telemetry::counter_inc(Counter::ServeSnapshots);
+    }
+}
+
+/// Remap an epoch-local log entry into the client's global graph
+/// indices (identity for a full-instance epoch — the replay case).
+fn remap_entry(e: &SimLogEntry, orig: &[usize]) -> SimLogEntry {
+    use crate::graph::Gid;
+    let rg = |gid: Gid| Gid::new(orig[gid.graph as usize], gid.task as usize);
+    let kind = match e.kind {
+        SimLogKind::Arrival { graph } => SimLogKind::Arrival { graph: orig[graph] },
+        SimLogKind::Start { gid, node } => SimLogKind::Start { gid: rg(gid), node },
+        SimLogKind::Finish {
+            gid,
+            node,
+            lateness,
+        } => SimLogKind::Finish {
+            gid: rg(gid),
+            node,
+            lateness,
+        },
+        k @ SimLogKind::Replan { .. } => k,
+    };
+    SimLogEntry { time: e.time, kind }
+}
+
+// ----------------------------------------------------------- I/O loops
+
+/// Daemon options that live outside the resumable state: where the
+/// journal and telemetry export go, and the optional TCP listener.
+#[derive(Clone, Debug, Default)]
+pub struct ServeOptions {
+    pub snapshot_path: Option<String>,
+    /// journal after every N handled request lines (0 = only on
+    /// `{"op":"snapshot"}` and at graceful exit)
+    pub snapshot_every: u64,
+    pub telemetry_path: Option<String>,
+    pub listen: Option<String>,
+}
+
+/// Serialize the journal, write it, then count the write.
+fn write_snapshot(server: &mut ServeServer, path: &str) -> bool {
+    let doc = server.snapshot_json().to_string();
+    match std::fs::write(path, doc + "\n") {
+        Ok(()) => {
+            server.note_snapshot_written();
+            true
+        }
+        Err(e) => {
+            eprintln!("dts serve: cannot write snapshot {path}: {e}");
+            false
+        }
+    }
+}
+
+/// Drive one line-delimited session (stdin, or one TCP connection):
+/// responses stream out per request, the journal writes on its cadence.
+fn pump<R: BufRead, W: Write>(
+    server: &mut ServeServer,
+    reader: R,
+    w: &mut W,
+    opts: &ServeOptions,
+) -> std::io::Result<SessionEnd> {
+    let mut out = Vec::new();
+    for line in reader.lines() {
+        let line = line?;
+        out.clear();
+        let before = server.lines_handled();
+        let flow = server.handle_line(&line, &mut out);
+        for l in &out {
+            writeln!(w, "{l}")?;
+        }
+        w.flush()?;
+        let handled = server.lines_handled() != before;
+        let requested = server.take_snapshot_requested();
+        if let Some(path) = &opts.snapshot_path {
+            let periodic = handled
+                && opts.snapshot_every > 0
+                && server.lines_handled() % opts.snapshot_every == 0;
+            if requested || periodic {
+                write_snapshot(server, &path.clone());
+            }
+        }
+        match flow {
+            Flow::Continue => {}
+            Flow::Quit => return Ok(SessionEnd::Quit),
+            Flow::Shutdown => return Ok(SessionEnd::Shutdown),
+        }
+    }
+    Ok(SessionEnd::Eof)
+}
+
+/// Graceful-exit tail: drain, final journal write, telemetry export.
+fn graceful_finish<W: Write>(
+    server: &mut ServeServer,
+    w: &mut W,
+    opts: &ServeOptions,
+) -> std::io::Result<()> {
+    let mut out = Vec::new();
+    server.drain(&mut out);
+    for l in &out {
+        writeln!(w, "{l}")?;
+    }
+    w.flush()?;
+    if let Some(path) = &opts.snapshot_path {
+        write_snapshot(server, &path.clone());
+    }
+    if let Some(path) = &opts.telemetry_path {
+        let doc = telemetry::export::to_ndjson(
+            "serve",
+            server.epoch_spans(),
+            &telemetry::snapshot(),
+        );
+        if let Err(e) = std::fs::write(path, doc) {
+            eprintln!("dts serve: cannot write telemetry {path}: {e}");
+        }
+    }
+    Ok(())
+}
+
+/// Run the daemon to completion; returns the process exit code.
+pub fn run(mut server: ServeServer, opts: &ServeOptions) -> i32 {
+    server.set_can_snapshot(opts.snapshot_path.is_some());
+    match &opts.listen {
+        None => run_stdio(&mut server, opts),
+        Some(addr) => run_tcp(&mut server, &addr.clone(), opts),
+    }
+}
+
+fn run_stdio(server: &mut ServeServer, opts: &ServeOptions) -> i32 {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut w = stdout.lock();
+    if writeln!(w, "{}", server.hello_line()).and_then(|_| w.flush()).is_err() {
+        return 1;
+    }
+    match pump(server, stdin.lock(), &mut w, opts) {
+        Ok(SessionEnd::Quit) => 0,
+        Ok(SessionEnd::Eof) | Ok(SessionEnd::Shutdown) => {
+            match graceful_finish(server, &mut w, opts) {
+                Ok(()) => 0,
+                Err(e) => {
+                    eprintln!("dts serve: {e}");
+                    1
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("dts serve: {e}");
+            1
+        }
+    }
+}
+
+/// TCP mode: sequential connections share one server state.  A
+/// connection close is *not* a drain (the journal persists across
+/// clients); `{"op":"shutdown"}` drains to the requesting connection
+/// and stops the listener, `{"op":"quit"}` hard-stops.
+fn run_tcp(server: &mut ServeServer, addr: &str, opts: &ServeOptions) -> i32 {
+    let listener = match TcpListener::bind(addr) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("dts serve: cannot bind {addr}: {e}");
+            return 1;
+        }
+    };
+    for conn in listener.incoming() {
+        let stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("dts serve: accept failed: {e}");
+                continue;
+            }
+        };
+        let mut w = match stream.try_clone() {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("dts serve: cannot clone stream: {e}");
+                continue;
+            }
+        };
+        if writeln!(w, "{}", server.hello_line()).and_then(|_| w.flush()).is_err() {
+            continue;
+        }
+        match pump(server, BufReader::new(stream), &mut w, opts) {
+            Ok(SessionEnd::Eof) | Err(_) => continue,
+            Ok(SessionEnd::Quit) => return 0,
+            Ok(SessionEnd::Shutdown) => {
+                return match graceful_finish(server, &mut w, opts) {
+                    Ok(()) => 0,
+                    Err(e) => {
+                        eprintln!("dts serve: {e}");
+                        1
+                    }
+                };
+            }
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::DEFAULT_LOAD;
+
+    fn cfg(shards: usize) -> ServeConfig {
+        ServeConfig {
+            dataset: Dataset::Synthetic,
+            n_graphs: 4,
+            seed: 7,
+            variant: Variant::parse("5P-HEFT").unwrap(),
+            noise_std: 0.3,
+            controller: Controller::Reaction(Reaction::LastK {
+                k: 3,
+                threshold: 0.25,
+            }),
+            shards,
+            jobs: 1,
+            load: DEFAULT_LOAD,
+            scenario: Scenario::default(),
+        }
+    }
+
+    fn lines_of(server: &mut ServeServer, input: &str) -> Vec<String> {
+        let mut out = Vec::new();
+        for l in input.lines() {
+            server.handle_line(l, &mut out);
+        }
+        out
+    }
+
+    #[test]
+    fn arrive_run_summary_roundtrip() {
+        let mut s = ServeServer::new(cfg(1));
+        let out = lines_of(
+            &mut s,
+            "{\"op\":\"arrive\",\"graph\":0}\n{\"op\":\"arrive\",\"graph\":1}\n\
+             {\"op\":\"arrive\",\"graph\":2}\n{\"op\":\"arrive\",\"graph\":3}\n{\"op\":\"run\"}",
+        );
+        // 4 acks, then events, then exactly one summary
+        assert!(out[0].contains("\"kind\":\"ack\""));
+        let summaries: Vec<&String> =
+            out.iter().filter(|l| l.contains("\"kind\":\"summary\"")).collect();
+        assert_eq!(summaries.len(), 1);
+        let v = Value::from_str(summaries[0]).unwrap();
+        assert_eq!(v.get("epoch").and_then(|x| x.as_usize()), Some(0));
+        let m = v.get("metrics").unwrap().as_object().unwrap();
+        assert_eq!(m.len(), 15, "the 15-metric block");
+        assert_eq!(s.epochs().len(), 1);
+        assert!(s.pending().is_empty());
+    }
+
+    #[test]
+    fn label_matches_coordinator_label() {
+        let c = cfg(1);
+        assert_eq!(c.label(), "5P-HEFT σ0.30 L3@0.25");
+        let c4 = cfg(4);
+        assert_eq!(c4.label(), "S4 5P-HEFT σ0.30 L3@0.25");
+    }
+
+    #[test]
+    fn errors_leave_state_untouched() {
+        let mut s = ServeServer::new(cfg(1));
+        let mut out = Vec::new();
+        s.handle_line("{\"op\":\"arrive\",\"graph\":0}", &mut out);
+        let fp = s.state_fingerprint();
+        for bad in [
+            "garbage",
+            "{\"op\":\"arrive\",\"graph\":99}",
+            "{\"op\":\"arrive\",\"graph\":0}",
+            "{\"op\":\"nope\"}",
+        ] {
+            let mut eout = Vec::new();
+            s.handle_line(bad, &mut eout);
+            assert_eq!(eout.len(), 1, "{bad}");
+            assert!(eout[0].contains("\"kind\":\"error\""), "{bad} → {eout:?}");
+            assert_eq!(s.state_fingerprint(), fp, "{bad}");
+        }
+    }
+
+    #[test]
+    fn empty_run_is_an_idempotent_ack() {
+        let mut s = ServeServer::new(cfg(1));
+        let mut out = Vec::new();
+        assert_eq!(s.handle_line("{\"op\":\"run\"}", &mut out), Flow::Continue);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].contains("\"op\":\"run\""));
+        assert!(s.epochs().is_empty());
+    }
+
+    #[test]
+    fn quit_and_shutdown_flow() {
+        let mut s = ServeServer::new(cfg(1));
+        let mut out = Vec::new();
+        assert_eq!(s.handle_line("{\"op\":\"quit\"}", &mut out), Flow::Quit);
+        assert_eq!(s.handle_line("{\"op\":\"shutdown\"}", &mut out), Flow::Shutdown);
+    }
+
+    #[test]
+    fn drain_flushes_pending_and_says_bye() {
+        let mut s = ServeServer::new(cfg(1));
+        let mut out = Vec::new();
+        s.handle_line("{\"op\":\"arrive\",\"graph\":2}", &mut out);
+        out.clear();
+        s.drain(&mut out);
+        assert!(out.iter().any(|l| l.contains("\"kind\":\"summary\"")));
+        assert!(out.last().unwrap().contains("\"kind\":\"bye\""));
+        // events of the partial epoch report the client's graph id
+        assert!(out.iter().any(|l| l.contains("\"graph\":2")));
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrips_journal() {
+        let mut s = ServeServer::new(cfg(1));
+        s.set_can_snapshot(true);
+        let mut out = Vec::new();
+        s.handle_line("{\"op\":\"arrive\",\"graph\":1}", &mut out);
+        s.handle_line("{\"op\":\"arrive\",\"graph\":0}", &mut out);
+        s.handle_line("{\"op\":\"run\"}", &mut out);
+        s.handle_line("{\"op\":\"arrive\",\"graph\":3}", &mut out);
+        let doc = s.snapshot_json();
+        let r = ServeServer::restore(cfg(1), &doc).unwrap();
+        assert_eq!(r.epochs(), s.epochs());
+        assert_eq!(r.pending(), s.pending());
+        assert_eq!(r.lines_handled(), s.lines_handled());
+        // config divergence is refused
+        assert!(ServeServer::restore(cfg(4), &doc).is_err());
+    }
+}

@@ -1,0 +1,216 @@
+//! The `dts-serve-v1` wire protocol: NDJSON request parsing and the
+//! structured response/error line builders.
+//!
+//! One JSON object per line in both directions.  Requests are either an
+//! **op object** (`{"op":"arrive","graph":3}`, `{"op":"run"}`, …) or a
+//! whole recorded `dts-sim-trace-v1` document on a single line (replay
+//! ingestion).  Every response line carries a `"kind"` discriminator;
+//! the decision stream (kinds `arrival`/`start`/`finish`/`replan`) is
+//! byte-identical to the offline trace's `events` array entries
+//! ([`crate::trace::sim_event_json`]), which is what lets the CI
+//! serve-smoke job diff the two with `cmp`.
+//!
+//! **Hardening contract** (pinned by `rust/tests/serve_ingest.rs`):
+//! parsing never panics, every malformed line maps to exactly one
+//! [`Reject`] with a stable `code`, and a rejected line leaves server
+//! state untouched.  The full schema is documented in `docs/SERVE.md`.
+
+use crate::json::{self, Value};
+
+/// Protocol format tag carried by the hello line.
+pub const FORMAT: &str = "dts-serve-v1";
+
+/// A parsed request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Admit one graph of the server's instance into the pending epoch.
+    Arrive { graph: usize },
+    /// A whole `dts-sim-trace-v1` document: validate it against the
+    /// server's instance and admit every graph (replay ingestion).
+    Trace(Value),
+    /// Run the pending epoch to completion on the virtual clock,
+    /// streaming decisions out.
+    Run,
+    /// Journal a `dts-serve-snapshot-v1` document to the configured
+    /// snapshot path.
+    Snapshot,
+    /// One-line JSON snapshot of the telemetry registry + server state.
+    Stats,
+    /// Hard stop *without* drain — the crash-simulation half of the
+    /// snapshot/restore workflow.
+    Quit,
+    /// Graceful drain: flush the pending epoch, emit the final summary
+    /// and bye lines, then exit.
+    Shutdown,
+}
+
+/// A structured rejection: stable machine code + human reason.  Becomes
+/// one `{"kind":"error",…}` line; documented codes in `docs/SERVE.md`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Reject {
+    /// `parse` | `shape` | `op` | `field` | `range` | `duplicate` |
+    /// `trace` | `snapshot`
+    pub code: &'static str,
+    pub reason: String,
+}
+
+impl Reject {
+    pub fn new(code: &'static str, reason: impl Into<String>) -> Reject {
+        Reject {
+            code,
+            reason: reason.into(),
+        }
+    }
+}
+
+/// Parse one request line (already non-empty and trimmed).  Pure
+/// syntax/shape validation — instance-dependent checks (graph range,
+/// duplicates, trace/instance agreement) live on the server, which owns
+/// the instance.
+pub fn parse_request(line: &str) -> Result<Request, Reject> {
+    let v = Value::from_str(line).map_err(|e| Reject::new("parse", e.to_string()))?;
+    if v.as_object().is_none() {
+        return Err(Reject::new("shape", "request must be a JSON object"));
+    }
+    if let Some(fmt) = v.get("format") {
+        return match fmt.as_str() {
+            Some("dts-sim-trace-v1") => Ok(Request::Trace(v)),
+            Some(other) => Err(Reject::new(
+                "shape",
+                format!("unsupported document format {other:?}"),
+            )),
+            None => Err(Reject::new("shape", "\"format\" must be a string")),
+        };
+    }
+    let op = match v.get("op") {
+        Some(op) => op
+            .as_str()
+            .ok_or_else(|| Reject::new("shape", "\"op\" must be a string"))?,
+        None => return Err(Reject::new("shape", "missing \"op\" (or \"format\")")),
+    };
+    match op {
+        "arrive" => {
+            let graph = v
+                .get("graph")
+                .ok_or_else(|| Reject::new("field", "arrive: missing \"graph\""))?;
+            Ok(Request::Arrive {
+                graph: graph_index(graph)?,
+            })
+        }
+        "run" => Ok(Request::Run),
+        "snapshot" => Ok(Request::Snapshot),
+        "stats" => Ok(Request::Stats),
+        "quit" => Ok(Request::Quit),
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(Reject::new("op", format!("unknown op {other:?}"))),
+    }
+}
+
+/// A graph id must be a non-negative integer-valued JSON number (no
+/// floats, no strings, no `-1`), small enough to index a `Vec`.
+fn graph_index(v: &Value) -> Result<usize, Reject> {
+    let x = v
+        .as_f64()
+        .ok_or_else(|| Reject::new("field", "\"graph\" must be a number"))?;
+    if !x.is_finite() || x.fract() != 0.0 || x < 0.0 || x >= u32::MAX as f64 {
+        return Err(Reject::new(
+            "field",
+            format!("\"graph\" must be a non-negative integer, got {x}"),
+        ));
+    }
+    Ok(x as usize)
+}
+
+/// The `{"kind":"error",…}` record a rejected line produces.  `line` is
+/// the 1-based request-line number within the session (snapshot-carried,
+/// so numbering continues across a restore).
+pub fn error_line(line_no: u64, rej: &Reject) -> String {
+    json::obj(vec![
+        ("kind", json::s("error")),
+        ("line", json::num(line_no as f64)),
+        ("code", json::s(rej.code)),
+        ("reason", json::s(&rej.reason)),
+    ])
+    .to_string()
+}
+
+/// Fuzz entry point (`--features fuzz`): feeding arbitrary bytes through
+/// the request parser must never panic — invalid UTF-8 and garbage both
+/// land in `Err`.  A libFuzzer harness would call this from its
+/// `fuzz_target!` body; the ingest property suite drives it with a
+/// deterministic byte generator in the meantime.
+#[cfg(feature = "fuzz")]
+pub fn fuzz_ingest_line(data: &[u8]) {
+    if let Ok(s) = std::str::from_utf8(data) {
+        let _ = parse_request(s.trim());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_op() {
+        assert_eq!(
+            parse_request(r#"{"op":"arrive","graph":3}"#).unwrap(),
+            Request::Arrive { graph: 3 }
+        );
+        assert_eq!(parse_request(r#"{"op":"run"}"#).unwrap(), Request::Run);
+        assert_eq!(
+            parse_request(r#"{"op":"snapshot"}"#).unwrap(),
+            Request::Snapshot
+        );
+        assert_eq!(parse_request(r#"{"op":"stats"}"#).unwrap(), Request::Stats);
+        assert_eq!(parse_request(r#"{"op":"quit"}"#).unwrap(), Request::Quit);
+        assert_eq!(
+            parse_request(r#"{"op":"shutdown"}"#).unwrap(),
+            Request::Shutdown
+        );
+    }
+
+    #[test]
+    fn trace_documents_route_by_format() {
+        let doc = r#"{"format":"dts-sim-trace-v1","n_nodes":2}"#;
+        assert!(matches!(
+            parse_request(doc).unwrap(),
+            Request::Trace(_)
+        ));
+        assert_eq!(
+            parse_request(r#"{"format":"dts-trace-v1"}"#).unwrap_err().code,
+            "shape"
+        );
+    }
+
+    #[test]
+    fn rejects_carry_stable_codes() {
+        for (line, code) in [
+            ("{", "parse"),
+            ("not json", "parse"),
+            ("[1,2]", "shape"),
+            ("42", "shape"),
+            (r#"{"graph":1}"#, "shape"),
+            (r#"{"op":7}"#, "shape"),
+            (r#"{"op":"frobnicate"}"#, "op"),
+            (r#"{"op":"arrive"}"#, "field"),
+            (r#"{"op":"arrive","graph":"3"}"#, "field"),
+            (r#"{"op":"arrive","graph":1.5}"#, "field"),
+            (r#"{"op":"arrive","graph":-1}"#, "field"),
+            (r#"{"op":"arrive","graph":1e300}"#, "field"),
+            (r#"{"format":17}"#, "shape"),
+        ] {
+            let rej = parse_request(line).unwrap_err();
+            assert_eq!(rej.code, code, "line {line:?} → {rej:?}");
+        }
+    }
+
+    #[test]
+    fn error_lines_are_single_json_objects() {
+        let l = error_line(9, &Reject::new("parse", "bad \"thing\""));
+        let v = Value::from_str(&l).unwrap();
+        assert_eq!(v.get("kind").and_then(|k| k.as_str()), Some("error"));
+        assert_eq!(v.get("line").and_then(|k| k.as_usize()), Some(9));
+        assert_eq!(v.get("code").and_then(|k| k.as_str()), Some("parse"));
+        assert!(!l.contains('\n'));
+    }
+}

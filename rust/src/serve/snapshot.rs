@@ -1,0 +1,215 @@
+//! `dts-serve-snapshot-v1`: periodic journal of the server's resumable
+//! state.
+//!
+//! The server is event-sourced: its entire state is (a) the instance
+//! configuration — regenerable bit-exactly from
+//! `dataset × n_graphs × seed × scenario` — and (b) the admission
+//! journal (which graphs each completed epoch ran, which are pending),
+//! plus the session line counter and the telemetry counter block.  A
+//! snapshot therefore stores *no* coordinator internals: restore
+//! regenerates the instance, replays the journal bookkeeping, seeds the
+//! telemetry counters, and the next `run` proceeds bit-identically to
+//! an uninterrupted session (pinned by `rust/tests/serve_snapshot.rs`
+//! across the dataset × controller × shards grid).
+//!
+//! Restore refuses a snapshot whose `config` block differs from the
+//! CLI-resolved configuration (exit 2) — the journal is only meaningful
+//! against the exact same instance.  Wall-clock histograms are *not*
+//! carried (they vary run-to-run by nature); the counter block is, so
+//! restored counter totals equal the uninterrupted run's.
+
+use super::{Controller, ServeConfig};
+use crate::json::{self, Value};
+use crate::sim::Reaction;
+use crate::telemetry::Counter;
+
+/// Snapshot format tag.
+pub const FORMAT: &str = "dts-serve-snapshot-v1";
+
+/// The controller knob as JSON — compared by `Value` equality on
+/// restore, so every expressible controller round-trips without a
+/// bespoke deserializer.
+pub fn controller_json(c: &Controller) -> Value {
+    match c {
+        Controller::Reaction(Reaction::None) => {
+            json::obj(vec![("type", json::s("reaction-none"))])
+        }
+        Controller::Reaction(Reaction::LastK { k, threshold }) => json::obj(vec![
+            ("type", json::s("lastk")),
+            ("k", json::num(*k as f64)),
+            ("threshold", json::num(*threshold)),
+        ]),
+        // PolicySpec labels encode every parameter of every controller
+        // family distinctly (L/A/B/C/D prefixes + parameter lists), so
+        // label equality is configuration equality here.
+        Controller::Spec(spec) => json::obj(vec![
+            ("type", json::s("policy")),
+            ("label", json::s(&spec.label())),
+        ]),
+    }
+}
+
+/// The full configuration block.  Every field that shapes the instance
+/// or the coordinator construction is present; restore requires the
+/// stored block to equal the CLI-resolved one field-for-field.
+pub fn config_json(cfg: &ServeConfig) -> Value {
+    json::obj(vec![
+        ("dataset", json::s(cfg.dataset.name())),
+        ("graphs", json::num(cfg.n_graphs as f64)),
+        ("seed", json::num(cfg.seed as f64)),
+        ("variant", json::s(&cfg.variant.label())),
+        ("noise", json::num(cfg.noise_std)),
+        ("controller", controller_json(&cfg.controller)),
+        ("shards", json::num(cfg.shards as f64)),
+        ("jobs", json::num(cfg.jobs as f64)),
+        ("load", json::num(cfg.load)),
+        ("scenario", json::s(&cfg.scenario.label())),
+    ])
+}
+
+/// The restorable state parsed out of a snapshot document.
+#[derive(Clone, Debug, Default)]
+pub struct SnapshotState {
+    /// completed epochs' global graph lists, in epoch order
+    pub epochs: Vec<Vec<usize>>,
+    /// pending (admitted, not yet run) graphs in admission order
+    pub pending: Vec<usize>,
+    /// request lines handled before the snapshot (error-line numbering
+    /// continues from here)
+    pub lines_handled: u64,
+    /// telemetry counter block as of the snapshot (pre-increment for
+    /// the snapshot being written, so an interrupted+restored session
+    /// totals exactly like an uninterrupted one)
+    pub counters: Vec<(Counter, u64)>,
+}
+
+fn usize_array(v: &Value, what: &str) -> Result<Vec<usize>, String> {
+    v.as_array()
+        .ok_or_else(|| format!("{what} must be an array"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| format!("{what} entries must be integers")))
+        .collect()
+}
+
+/// Parse and validate a snapshot against the expected configuration.
+pub fn parse(doc: &Value, expect: &ServeConfig) -> Result<SnapshotState, String> {
+    match doc.get("format").and_then(|f| f.as_str()) {
+        Some(f) if f == FORMAT => {}
+        other => return Err(format!("not a {FORMAT} document (format = {other:?})")),
+    }
+    let stored = doc.get("config").ok_or("missing config block")?;
+    let expected = config_json(expect);
+    if *stored != expected {
+        return Err(format!(
+            "snapshot config mismatch: snapshot was taken with {stored}, \
+             but the command line resolves to {expected}"
+        ));
+    }
+    let epochs = doc
+        .get("epochs")
+        .ok_or("missing epochs")?
+        .as_array()
+        .ok_or("epochs must be an array")?
+        .iter()
+        .map(|e| usize_array(e, "epoch"))
+        .collect::<Result<Vec<_>, _>>()?;
+    let pending = usize_array(doc.get("pending").ok_or("missing pending")?, "pending")?;
+    let lines_handled = doc
+        .get("lines_handled")
+        .and_then(|x| x.as_f64())
+        .ok_or("missing lines_handled")? as u64;
+    let cobj = doc
+        .get("counters")
+        .and_then(|c| c.as_object())
+        .ok_or("missing counters")?;
+    let mut counters = Vec::new();
+    for c in Counter::ALL {
+        if let Some(v) = cobj.get(c.key()).and_then(|x| x.as_f64()) {
+            counters.push((c, v as u64));
+        }
+    }
+    Ok(SnapshotState {
+        epochs,
+        pending,
+        lines_handled,
+        counters,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Variant;
+    use crate::policy::PolicySpec;
+    use crate::workloads::{Dataset, Scenario, DEFAULT_LOAD};
+
+    fn cfg() -> ServeConfig {
+        ServeConfig {
+            dataset: Dataset::Synthetic,
+            n_graphs: 4,
+            seed: 42,
+            variant: Variant::parse("5P-HEFT").unwrap(),
+            noise_std: 0.3,
+            controller: Controller::Reaction(Reaction::LastK {
+                k: 3,
+                threshold: 0.25,
+            }),
+            shards: 1,
+            jobs: 1,
+            load: DEFAULT_LOAD,
+            scenario: Scenario::default(),
+        }
+    }
+
+    #[test]
+    fn config_value_roundtrips_and_detects_mismatch() {
+        let a = cfg();
+        let doc = json::obj(vec![
+            ("format", json::s(FORMAT)),
+            ("config", config_json(&a)),
+            ("epochs", json::arr(vec![json::arr(vec![json::num(0.0)])])),
+            ("pending", json::arr(vec![json::num(2.0)])),
+            ("lines_handled", json::num(5.0)),
+            (
+                "counters",
+                json::obj(vec![("serve_requests", json::num(5.0))]),
+            ),
+        ]);
+        let st = parse(&doc, &a).unwrap();
+        assert_eq!(st.epochs, vec![vec![0]]);
+        assert_eq!(st.pending, vec![2]);
+        assert_eq!(st.lines_handled, 5);
+        assert_eq!(st.counters, vec![(Counter::ServeRequests, 5)]);
+
+        // any config divergence is refused
+        let mut b = cfg();
+        b.seed = 43;
+        assert!(parse(&doc, &b).unwrap_err().contains("mismatch"));
+        let mut c = cfg();
+        c.controller = Controller::Spec(PolicySpec::DeadlineAware {
+            k: 3,
+            threshold: 0.25,
+        });
+        assert!(parse(&doc, &c).unwrap_err().contains("mismatch"));
+    }
+
+    #[test]
+    fn controller_encodings_are_distinct() {
+        let lastk = controller_json(&Controller::Reaction(Reaction::LastK {
+            k: 3,
+            threshold: 0.25,
+        }));
+        let fixed = controller_json(&Controller::Spec(PolicySpec::FixedLastK {
+            k: 3,
+            threshold: 0.25,
+        }));
+        let dl = controller_json(&Controller::Spec(PolicySpec::DeadlineAware {
+            k: 3,
+            threshold: 0.25,
+        }));
+        let none = controller_json(&Controller::Reaction(Reaction::None));
+        assert_ne!(lastk, fixed);
+        assert_ne!(fixed, dl);
+        assert_ne!(lastk, none);
+    }
+}

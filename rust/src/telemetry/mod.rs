@@ -28,9 +28,10 @@
 //! locks on the hot path, ever.
 //!
 //! Export surfaces: NDJSON (`dts-telemetry-v1`, [`export`]) behind
-//! `dts simulate|policy --telemetry PATH`, and a Prometheus-style text
-//! exposition ([`Telemetry::render_text`]) — the scrape surface a
-//! future `dts serve` would mount.  `python/telemetry_report.py`
+//! `dts simulate|policy|serve --telemetry PATH`, and a Prometheus-style
+//! text exposition ([`Telemetry::render_text`]); `dts serve`
+//! additionally answers `{"op":"stats"}` with a single-line JSON
+//! snapshot of the same registry.  `python/telemetry_report.py`
 //! renders the phase table and histogram percentiles from the NDJSON.
 
 pub mod export;
@@ -72,11 +73,19 @@ pub enum Counter {
     FedStealAttempts,
     /// pending graphs actually migrated across shards
     FedMigrations,
+    /// NDJSON request lines handled by `dts serve` (valid or not)
+    ServeRequests,
+    /// malformed/rejected serve request lines (structured error records)
+    ServeErrors,
+    /// graph arrivals admitted by the serve ingest path
+    ServeArrivals,
+    /// snapshot files written by the serve journal
+    ServeSnapshots,
 }
 
 impl Counter {
     /// Every counter, in canonical key order.
-    pub const ALL: [Counter; 14] = [
+    pub const ALL: [Counter; 18] = [
         Counter::Replans,
         Counter::StragglerReplans,
         Counter::SeedRevert,
@@ -91,6 +100,10 @@ impl Counter {
         Counter::FedAdmissions,
         Counter::FedStealAttempts,
         Counter::FedMigrations,
+        Counter::ServeRequests,
+        Counter::ServeErrors,
+        Counter::ServeArrivals,
+        Counter::ServeSnapshots,
     ];
 
     /// Stable export key.
@@ -110,6 +123,10 @@ impl Counter {
             Counter::FedAdmissions => "fed_admissions",
             Counter::FedStealAttempts => "fed_steal_attempts",
             Counter::FedMigrations => "fed_migrations",
+            Counter::ServeRequests => "serve_requests",
+            Counter::ServeErrors => "serve_errors",
+            Counter::ServeArrivals => "serve_arrivals",
+            Counter::ServeSnapshots => "serve_snapshots",
         }
     }
 }
@@ -130,17 +147,20 @@ pub enum Hist {
     ConeSize,
     /// event-queue depth sampled after each event pop
     EventQueueDepth,
+    /// per-request decision latency in `dts serve` (ns, wall)
+    ServeRequestNs,
 }
 
 impl Hist {
     /// Every histogram, in canonical key order.
-    pub const ALL: [Hist; 6] = [
+    pub const ALL: [Hist; 7] = [
         Hist::ReplanWallNs,
         Hist::RefreshWallNs,
         Hist::HeuristicWallNs,
         Hist::BookkeepWallNs,
         Hist::ConeSize,
         Hist::EventQueueDepth,
+        Hist::ServeRequestNs,
     ];
 
     /// Stable export key.
@@ -152,6 +172,7 @@ impl Hist {
             Hist::BookkeepWallNs => "bookkeep_wall_ns",
             Hist::ConeSize => "cone_size",
             Hist::EventQueueDepth => "event_queue_depth",
+            Hist::ServeRequestNs => "serve_request_ns",
         }
     }
 
@@ -161,7 +182,11 @@ impl Hist {
     pub const fn is_wall(self) -> bool {
         matches!(
             self,
-            Hist::ReplanWallNs | Hist::RefreshWallNs | Hist::HeuristicWallNs | Hist::BookkeepWallNs
+            Hist::ReplanWallNs
+                | Hist::RefreshWallNs
+                | Hist::HeuristicWallNs
+                | Hist::BookkeepWallNs
+                | Hist::ServeRequestNs
         )
     }
 }
@@ -275,8 +300,8 @@ impl Telemetry {
         self.counters.iter().all(|&c| c == 0) && self.hists.iter().all(|h| h.count == 0)
     }
 
-    /// Prometheus-style text exposition — the scrape surface a future
-    /// `dts serve` would mount.  Keys are emitted in canonical enum
+    /// Prometheus-style text exposition — the scrape surface a `dts
+    /// serve` deployment mounts.  Keys are emitted in canonical enum
     /// order; histogram buckets are cumulative with inclusive integer
     /// upper edges and a final `+Inf` bucket.
     pub fn render_text(&self) -> String {

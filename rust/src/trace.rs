@@ -12,7 +12,7 @@ use crate::coordinator::{DynamicProblem, DynamicResult, EventLog};
 use crate::graph::Gid;
 use crate::json::{self, Value};
 use crate::schedule::{Assignment, Schedule};
-use crate::sim::{SimLogKind, SimResult};
+use crate::sim::{SimLogEntry, SimLogKind, SimResult};
 
 /// Graph summaries shared by both trace formats.  Scenario-axis fields
 /// (importance weight, deadline) are emitted only when non-default, so
@@ -85,47 +85,51 @@ pub fn to_json(problem: &DynamicProblem, result: &DynamicResult) -> Value {
     ])
 }
 
+/// Serialize one realized-log entry exactly as `sim_to_json` embeds it
+/// in the trace `events` array.  `dts serve` emits each decision line
+/// through this same function, which is what makes the server's
+/// decision stream byte-identical to the offline trace's event log
+/// (pinned by `rust/tests/serve_replay.rs` and the CI serve-smoke
+/// diff).
+pub fn sim_event_json(e: &SimLogEntry) -> Value {
+    let mut fields = vec![("time", json::num(e.time))];
+    match e.kind {
+        SimLogKind::Arrival { graph } => {
+            fields.push(("kind", json::s("arrival")));
+            fields.push(("graph", json::num(graph as f64)));
+        }
+        SimLogKind::Start { gid, node } => {
+            fields.push(("kind", json::s("start")));
+            fields.push(("graph", json::num(gid.graph as f64)));
+            fields.push(("task", json::num(gid.task as f64)));
+            fields.push(("node", json::num(node as f64)));
+        }
+        SimLogKind::Finish { gid, node, lateness } => {
+            fields.push(("kind", json::s("finish")));
+            fields.push(("graph", json::num(gid.graph as f64)));
+            fields.push(("task", json::num(gid.task as f64)));
+            fields.push(("node", json::num(node as f64)));
+            fields.push(("lateness", json::num(lateness)));
+        }
+        SimLogKind::Replan {
+            straggler,
+            n_reverted,
+            n_pending,
+        } => {
+            fields.push(("kind", json::s("replan")));
+            fields.push(("straggler", Value::Bool(straggler)));
+            fields.push(("reverted", json::num(n_reverted as f64)));
+            fields.push(("pending", json::num(n_pending as f64)));
+        }
+    }
+    json::obj(fields)
+}
+
 /// Serialize a reactive simulated run: the realized-event log (arrivals,
 /// observed starts/finishes with lateness, replans) plus the realized
 /// schedule.
 pub fn sim_to_json(problem: &DynamicProblem, result: &SimResult) -> Value {
-    let events = result
-        .log
-        .iter()
-        .map(|e| {
-            let mut fields = vec![("time", json::num(e.time))];
-            match e.kind {
-                SimLogKind::Arrival { graph } => {
-                    fields.push(("kind", json::s("arrival")));
-                    fields.push(("graph", json::num(graph as f64)));
-                }
-                SimLogKind::Start { gid, node } => {
-                    fields.push(("kind", json::s("start")));
-                    fields.push(("graph", json::num(gid.graph as f64)));
-                    fields.push(("task", json::num(gid.task as f64)));
-                    fields.push(("node", json::num(node as f64)));
-                }
-                SimLogKind::Finish { gid, node, lateness } => {
-                    fields.push(("kind", json::s("finish")));
-                    fields.push(("graph", json::num(gid.graph as f64)));
-                    fields.push(("task", json::num(gid.task as f64)));
-                    fields.push(("node", json::num(node as f64)));
-                    fields.push(("lateness", json::num(lateness)));
-                }
-                SimLogKind::Replan {
-                    straggler,
-                    n_reverted,
-                    n_pending,
-                } => {
-                    fields.push(("kind", json::s("replan")));
-                    fields.push(("straggler", Value::Bool(straggler)));
-                    fields.push(("reverted", json::num(n_reverted as f64)));
-                    fields.push(("pending", json::num(n_pending as f64)));
-                }
-            }
-            json::obj(fields)
-        })
-        .collect();
+    let events = result.log.iter().map(sim_event_json).collect();
     json::obj(vec![
         ("format", json::s("dts-sim-trace-v1")),
         ("n_nodes", json::num(problem.network.n_nodes() as f64)),

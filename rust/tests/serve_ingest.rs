@@ -1,0 +1,230 @@
+//! Ingest hardening: the `dts serve` request loop never panics and
+//! never corrupts coordinator state, no matter what bytes arrive.
+//!
+//! A deterministic [`Xoshiro256pp`]-driven generator produces thousands
+//! of malformed lines — truncated JSON, printable byte soup, wrong
+//! shapes, unknown ops, bad graph ids, out-of-range and duplicate
+//! arrivals, foreign trace documents — and the suite pins the error
+//! schema documented in `docs/SERVE.md`:
+//!
+//! * every bad line yields **exactly one** `{"kind":"error",…}` record,
+//!   itself a single-line JSON object with a stable `code` from the
+//!   documented set and the 1-based request-line number;
+//! * server state (journal, pending set, arrival count) is untouched —
+//!   [`ServeServer::state_fingerprint`] is the oracle;
+//! * a valid request stream interleaved with malformed lines produces
+//!   the **identical** epoch output as the clean stream.
+//!
+//! The same parser is exposed as a fuzz entry point behind the `fuzz`
+//! feature (`dts::serve::protocol::fuzz_ingest_line`); this suite is the
+//! fuzzer-free CI stand-in driving the identical code path.
+
+use dts::coordinator::Variant;
+use dts::json::Value;
+use dts::prng::Xoshiro256pp;
+use dts::serve::{parse_request, Controller, ServeConfig, ServeServer};
+use dts::sim::Reaction;
+use dts::workloads::{Dataset, Scenario, DEFAULT_LOAD};
+
+const GRAPHS: usize = 5;
+
+/// Documented error codes (docs/SERVE.md) — the closed set every
+/// rejection must map into.
+const CODES: [&str; 8] = [
+    "parse",
+    "shape",
+    "op",
+    "field",
+    "range",
+    "duplicate",
+    "trace",
+    "snapshot",
+];
+
+fn cfg() -> ServeConfig {
+    ServeConfig {
+        dataset: Dataset::Synthetic,
+        n_graphs: GRAPHS,
+        seed: 3,
+        variant: Variant::parse("5P-HEFT").unwrap(),
+        noise_std: 0.3,
+        controller: Controller::Reaction(Reaction::LastK {
+            k: 3,
+            threshold: 0.25,
+        }),
+        shards: 1,
+        jobs: 1,
+        load: DEFAULT_LOAD,
+        scenario: Scenario::default(),
+    }
+}
+
+/// One malformed request line.  `dup_graph` is a graph id the server has
+/// already admitted (for the duplicate class).
+fn bad_line(rng: &mut Xoshiro256pp, dup_graph: usize) -> String {
+    match rng.below(9) {
+        // strict prefix of a valid request: never valid JSON
+        0 => {
+            let full = r#"{"op":"arrive","graph":3}"#;
+            let cut = 1 + rng.below(full.len() - 1);
+            full[..cut].to_string()
+        }
+        // printable byte soup ('!'..='z': no whitespace, so never
+        // skipped as blank; at best parses as a bare non-object)
+        1 => {
+            let len = 1 + rng.below(40);
+            (0..len)
+                .map(|_| (b'!' + rng.below(90) as u8) as char)
+                .collect()
+        }
+        // valid JSON, wrong shape
+        2 => match rng.below(3) {
+            0 => format!("[{}]", rng.below(100)),
+            1 => format!("{}", rng.below(100)),
+            _ => "\"a string\"".to_string(),
+        },
+        // unknown op (prefixed so it can never collide with a real one)
+        3 => {
+            let len = 1 + rng.below(6);
+            let tail: String = (0..len)
+                .map(|_| (b'a' + rng.below(26) as u8) as char)
+                .collect();
+            format!("{{\"op\":\"x{tail}\"}}")
+        }
+        // arrive with an invalid graph value
+        4 => {
+            let bad = ["-1", "1.5", "\"3\"", "1e300", "null", "true"];
+            format!(
+                "{{\"op\":\"arrive\",\"graph\":{}}}",
+                bad[rng.below(bad.len())]
+            )
+        }
+        // missing op / non-string op
+        5 => match rng.below(2) {
+            0 => format!("{{\"graph\":{}}}", rng.below(10)),
+            _ => format!("{{\"op\":{}}}", rng.below(10)),
+        },
+        // out-of-range arrival (valid request, instance rejects)
+        6 => format!("{{\"op\":\"arrive\",\"graph\":{}}}", GRAPHS + rng.below(1000)),
+        // duplicate arrival
+        7 => format!("{{\"op\":\"arrive\",\"graph\":{dup_graph}}}"),
+        // trace-routed documents: foreign formats and invalid traces
+        _ => match rng.below(3) {
+            0 => "{\"format\":\"dts-trace-v9\"}".to_string(),
+            1 => "{\"format\":17}".to_string(),
+            _ => "{\"format\":\"dts-sim-trace-v1\",\"n_nodes\":3}".to_string(),
+        },
+    }
+}
+
+#[test]
+fn malformed_lines_yield_one_error_and_leave_state_untouched() {
+    let mut server = ServeServer::new(cfg());
+    let mut out = Vec::new();
+    // admit one graph so the duplicate class has a target
+    server.handle_line("{\"op\":\"arrive\",\"graph\":0}", &mut out);
+    let fingerprint = server.state_fingerprint();
+
+    let mut rng = Xoshiro256pp::seed_from_u64(0xBAD_1E57);
+    let mut seen_codes = std::collections::BTreeSet::new();
+    for i in 0..2000 {
+        let line = bad_line(&mut rng, 0);
+        let before = server.lines_handled();
+        let mut eout = Vec::new();
+        server.handle_line(&line, &mut eout);
+        assert_eq!(eout.len(), 1, "iter {i}: line {line:?} → {eout:?}");
+        let v = Value::from_str(&eout[0])
+            .unwrap_or_else(|e| panic!("iter {i}: error record not JSON ({e}): {}", eout[0]));
+        assert_eq!(
+            v.get("kind").and_then(|k| k.as_str()),
+            Some("error"),
+            "iter {i}: {line:?} → {}",
+            eout[0]
+        );
+        let code = v.get("code").and_then(|c| c.as_str()).unwrap().to_string();
+        assert!(CODES.contains(&code.as_str()), "iter {i}: code {code:?}");
+        seen_codes.insert(code);
+        assert_eq!(
+            v.get("line").and_then(|l| l.as_usize()),
+            Some(before as usize + 1),
+            "iter {i}: error line number"
+        );
+        assert!(v.get("reason").and_then(|r| r.as_str()).is_some());
+        assert_eq!(
+            server.state_fingerprint(),
+            fingerprint,
+            "iter {i}: state mutated by {line:?}"
+        );
+    }
+    // the generator must actually exercise the documented code space
+    for code in ["parse", "shape", "op", "field", "range", "duplicate", "trace"] {
+        assert!(seen_codes.contains(code), "generator never produced {code:?}");
+    }
+}
+
+#[test]
+fn snapshot_without_path_is_a_structured_error() {
+    let mut server = ServeServer::new(cfg());
+    let mut out = Vec::new();
+    server.handle_line("{\"op\":\"snapshot\"}", &mut out);
+    assert_eq!(out.len(), 1);
+    assert!(out[0].contains("\"code\":\"snapshot\""), "{}", out[0]);
+}
+
+#[test]
+fn parser_never_panics_on_byte_soup() {
+    // the fuzz_ingest_line contract, minus the feature gate: arbitrary
+    // printable strings through the request parser land in Ok or Err,
+    // never a panic
+    let mut rng = Xoshiro256pp::seed_from_u64(0xF0CC_F00D);
+    for _ in 0..20_000 {
+        let len = rng.below(60);
+        let line: String = (0..len)
+            .map(|_| (b' ' + rng.below(95) as u8) as char)
+            .collect();
+        let _ = parse_request(line.trim());
+    }
+}
+
+#[test]
+fn interleaved_garbage_does_not_perturb_the_epoch() {
+    // clean session
+    let mut clean = ServeServer::new(cfg());
+    let mut clean_out = Vec::new();
+    for g in 0..GRAPHS {
+        clean.handle_line(&format!("{{\"op\":\"arrive\",\"graph\":{g}}}"), &mut clean_out);
+    }
+    clean.handle_line("{\"op\":\"run\"}", &mut clean_out);
+
+    // same valid stream with malformed lines interspersed
+    let mut dirty = ServeServer::new(cfg());
+    let mut dirty_out = Vec::new();
+    let mut rng = Xoshiro256pp::seed_from_u64(0xD1271);
+    for g in 0..GRAPHS {
+        for _ in 0..rng.below(3) {
+            let mut junk = Vec::new();
+            dirty.handle_line(&bad_line(&mut rng, 0), &mut junk);
+        }
+        dirty.handle_line(&format!("{{\"op\":\"arrive\",\"graph\":{g}}}"), &mut dirty_out);
+    }
+    let mut junk = Vec::new();
+    dirty.handle_line(&bad_line(&mut rng, 0), &mut junk);
+    dirty.handle_line("{\"op\":\"run\"}", &mut dirty_out);
+
+    // identical acks, decision stream and summary — except the summary
+    // itself which is identical too (epoch numbering is by successful
+    // epochs, not by line count)
+    assert_eq!(clean_out, dirty_out);
+    assert_eq!(clean.epochs(), dirty.epochs());
+}
+
+#[test]
+fn whitespace_lines_are_ignored_entirely() {
+    let mut server = ServeServer::new(cfg());
+    let mut out = Vec::new();
+    for blank in ["", "   ", "\t", "  \t  "] {
+        server.handle_line(blank, &mut out);
+    }
+    assert!(out.is_empty());
+    assert_eq!(server.lines_handled(), 0);
+}

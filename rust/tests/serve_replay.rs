@@ -1,0 +1,283 @@
+//! Replay bit-identity: the streaming daemon is *the offline sim with a
+//! wire protocol*.  Feeding a recorded cell through [`ServeServer`] —
+//! either as individual `arrive` ops or as the whole recorded
+//! `dts-sim-trace-v1` document — and closing the epoch reproduces the
+//! offline run **bit-exactly**:
+//!
+//! * the decision stream equals the offline event log line-for-line
+//!   (both sides serialize through [`dts::trace::sim_event_json`]);
+//! * the epoch summary's 15-metric block equals the offline
+//!   [`metric_row_json`] to the bit;
+//! * replan counts and revert totals agree.
+//!
+//! The grid covers every dataset, monolithic and federated (`--shards
+//! 4`), and federated at `--jobs 1` vs `--jobs 2` (shard fan-out must
+//! not leak into the stream).  This is the same invariant the CI
+//! `serve-smoke` job checks end-to-end with `cmp` over the real binary.
+
+use dts::coordinator::Variant;
+use dts::experiments::metric_row_json;
+use dts::federation::FederatedCoordinator;
+use dts::json::Value;
+use dts::serve::{Controller, ServeConfig, ServeServer};
+use dts::sim::{Reaction, ReactiveCoordinator, SimConfig};
+use dts::trace::{sim_event_json, sim_to_json};
+use dts::workloads::{Dataset, Scenario, DEFAULT_LOAD};
+
+const SEED: u64 = 11;
+const GRAPHS: usize = 6;
+
+fn serve_cfg(dataset: Dataset, shards: usize, jobs: usize) -> ServeConfig {
+    ServeConfig {
+        dataset,
+        n_graphs: GRAPHS,
+        seed: SEED,
+        variant: Variant::parse("5P-HEFT").unwrap(),
+        noise_std: 0.3,
+        controller: Controller::Reaction(Reaction::LastK {
+            k: 3,
+            threshold: 0.25,
+        }),
+        shards,
+        jobs,
+        load: DEFAULT_LOAD,
+        scenario: Scenario::default(),
+    }
+}
+
+fn sim_cfg() -> SimConfig {
+    SimConfig {
+        noise_std: 0.3,
+        noise_seed: SEED ^ 0xA11CE,
+        reaction: Reaction::LastK {
+            k: 3,
+            threshold: 0.25,
+        },
+        record_frozen: false,
+        full_refresh: false,
+    }
+}
+
+/// The offline cell: event lines (serialized exactly as the trace
+/// exporter does) + the 15-metric block as a parsed JSON value.
+fn offline(dataset: Dataset, shards: usize, jobs: usize) -> (Vec<String>, Value, usize) {
+    let prob = dataset.instance_scenario(GRAPHS, SEED, DEFAULT_LOAD, None, &Scenario::default());
+    let variant = Variant::parse("5P-HEFT").unwrap();
+    if shards > 1 {
+        let fed = FederatedCoordinator::new(
+            variant.policy,
+            variant.kind,
+            SEED ^ 0x5EED,
+            sim_cfg(),
+            shards,
+        )
+        .with_jobs(jobs);
+        let res = fed.run(&prob);
+        let events = res.log.iter().map(|e| sim_event_json(e).to_string()).collect();
+        let metrics =
+            Value::from_str(&metric_row_json(&res.metrics(&prob)).to_string()).unwrap();
+        (events, metrics, res.n_replans())
+    } else {
+        let mut rc = ReactiveCoordinator::new(
+            variant.policy,
+            variant.kind.make(SEED ^ 0x5EED),
+            sim_cfg(),
+        );
+        let res = rc.run(&prob);
+        let events = res.log.iter().map(|e| sim_event_json(e).to_string()).collect();
+        let metrics =
+            Value::from_str(&metric_row_json(&res.metrics(&prob)).to_string()).unwrap();
+        (events, metrics, res.n_replans())
+    }
+}
+
+/// Filter the serve output down to the decision stream.
+fn decision_lines(out: &[String]) -> Vec<String> {
+    out.iter()
+        .filter(|l| {
+            let v = Value::from_str(l).unwrap();
+            matches!(
+                v.get("kind").and_then(|k| k.as_str()),
+                Some("arrival") | Some("start") | Some("finish") | Some("replan")
+            )
+        })
+        .cloned()
+        .collect()
+}
+
+fn summary_of(out: &[String]) -> Value {
+    let line = out
+        .iter()
+        .find(|l| l.contains("\"kind\":\"summary\""))
+        .expect("no summary line");
+    Value::from_str(line).unwrap()
+}
+
+/// Feed the full instance as `arrive` ops + `run`, return the output.
+fn serve_full_session(cfg: ServeConfig) -> Vec<String> {
+    let mut server = ServeServer::new(cfg);
+    let mut out = Vec::new();
+    for g in 0..GRAPHS {
+        server.handle_line(&format!("{{\"op\":\"arrive\",\"graph\":{g}}}"), &mut out);
+    }
+    server.handle_line("{\"op\":\"run\"}", &mut out);
+    out
+}
+
+fn assert_replay(dataset: Dataset, shards: usize, jobs: usize) {
+    let (events, metrics, n_replans) = offline(dataset, shards, jobs);
+    let out = serve_full_session(serve_cfg(dataset, shards, jobs));
+    let got = decision_lines(&out);
+    assert_eq!(
+        got.len(),
+        events.len(),
+        "{} S{shards} j{jobs}: decision-line count",
+        dataset.name()
+    );
+    for (i, (g, e)) in got.iter().zip(&events).enumerate() {
+        assert_eq!(g, e, "{} S{shards} j{jobs}: event {i}", dataset.name());
+    }
+    let summary = summary_of(&out);
+    assert_eq!(
+        summary.get("metrics").unwrap(),
+        &metrics,
+        "{} S{shards} j{jobs}: 15-metric block",
+        dataset.name()
+    );
+    assert_eq!(
+        summary.get("n_replans").and_then(|x| x.as_usize()),
+        Some(n_replans),
+        "{} S{shards} j{jobs}: replan count",
+        dataset.name()
+    );
+}
+
+#[test]
+fn replay_monolithic_all_datasets() {
+    for d in Dataset::ALL {
+        assert_replay(d, 1, 1);
+    }
+}
+
+#[test]
+fn replay_federated_all_datasets() {
+    for d in Dataset::ALL {
+        assert_replay(d, 4, 1);
+    }
+}
+
+#[test]
+fn replay_federated_jobs_independent() {
+    // --jobs only fans shard work over threads; the stream is pinned
+    // identical at any value
+    for d in Dataset::ALL {
+        let one = serve_full_session(serve_cfg(d, 4, 1));
+        let two = serve_full_session(serve_cfg(d, 4, 2));
+        assert_eq!(one, two, "{}: jobs 1 vs 2", d.name());
+    }
+}
+
+#[test]
+fn trace_document_feed_replays_bit_exactly() {
+    // the CI path: record the offline trace, feed the whole document as
+    // one request line, run — the decision stream must equal the
+    // document's own events array, entry for entry (print ∘ parse is
+    // idempotent, so string equality IS byte equality)
+    for d in Dataset::ALL {
+        let prob = d.instance_scenario(GRAPHS, SEED, DEFAULT_LOAD, None, &Scenario::default());
+        let variant = Variant::parse("5P-HEFT").unwrap();
+        let mut rc = ReactiveCoordinator::new(
+            variant.policy,
+            variant.kind.make(SEED ^ 0x5EED),
+            sim_cfg(),
+        );
+        let res = rc.run(&prob);
+        let doc = sim_to_json(&prob, &res).to_string();
+        assert!(!doc.contains('\n'), "trace document must be one line");
+
+        let mut server = ServeServer::new(serve_cfg(d, 1, 1));
+        let mut out = Vec::new();
+        server.handle_line(&doc, &mut out);
+        assert!(
+            out[0].contains("\"kind\":\"ack\"") && out[0].contains("\"admitted\":6"),
+            "{}: trace ack, got {}",
+            d.name(),
+            out[0]
+        );
+        server.handle_line("{\"op\":\"run\"}", &mut out);
+
+        let reparsed = Value::from_str(&doc).unwrap();
+        let want: Vec<String> = reparsed
+            .get("events")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|e| e.to_string())
+            .collect();
+        assert_eq!(decision_lines(&out), want, "{}", d.name());
+    }
+}
+
+#[test]
+fn trace_feed_rejects_foreign_instance() {
+    // a trace recorded under a different seed describes a different
+    // instance: the server must refuse it wholesale and stay pristine
+    let d = Dataset::Synthetic;
+    let prob = d.instance_scenario(GRAPHS, 99, DEFAULT_LOAD, None, &Scenario::default());
+    let variant = Variant::parse("5P-HEFT").unwrap();
+    let mut rc = ReactiveCoordinator::new(
+        variant.policy,
+        variant.kind.make(99 ^ 0x5EED),
+        SimConfig {
+            noise_seed: 99 ^ 0xA11CE,
+            ..sim_cfg()
+        },
+    );
+    let res = rc.run(&prob);
+    let doc = sim_to_json(&prob, &res).to_string();
+
+    let mut server = ServeServer::new(serve_cfg(d, 1, 1));
+    let mut out = Vec::new();
+    server.handle_line(&doc, &mut out);
+    assert_eq!(out.len(), 1);
+    assert!(out[0].contains("\"kind\":\"error\""), "{}", out[0]);
+    assert!(out[0].contains("\"code\":\"trace\""), "{}", out[0]);
+    assert!(server.pending().is_empty());
+}
+
+#[test]
+fn partial_epochs_compose_the_full_graph_set() {
+    // splitting the instance across two epochs is NOT the offline run
+    // (each epoch is its own virtual-clock world) but must cover every
+    // graph exactly once and produce one summary per epoch
+    let mut server = ServeServer::new(serve_cfg(Dataset::Synthetic, 1, 1));
+    let mut out = Vec::new();
+    for g in [0usize, 2, 4] {
+        server.handle_line(&format!("{{\"op\":\"arrive\",\"graph\":{g}}}"), &mut out);
+    }
+    server.handle_line("{\"op\":\"run\"}", &mut out);
+    for g in [1usize, 3, 5] {
+        server.handle_line(&format!("{{\"op\":\"arrive\",\"graph\":{g}}}"), &mut out);
+    }
+    server.handle_line("{\"op\":\"run\"}", &mut out);
+    assert_eq!(server.epochs().len(), 2);
+    assert_eq!(server.epochs()[0], vec![0, 2, 4]);
+    assert_eq!(server.epochs()[1], vec![1, 3, 5]);
+    let summaries: Vec<&String> = out
+        .iter()
+        .filter(|l| l.contains("\"kind\":\"summary\""))
+        .collect();
+    assert_eq!(summaries.len(), 2);
+    // epoch decision lines carry the client's global graph ids
+    let second_epoch_graphs: Vec<usize> = Value::from_str(summaries[1])
+        .unwrap()
+        .get("graphs")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap())
+        .collect();
+    assert_eq!(second_epoch_graphs, vec![1, 3, 5]);
+}

@@ -1,0 +1,221 @@
+//! Snapshot/restore bit-identity: killing a `dts serve` session at any
+//! request boundary and restoring from the journal continues
+//! **bit-identically** to an uninterrupted session.
+//!
+//! The grid covers every dataset × {`L3@0.25` reactive trigger,
+//! `D3@0.25` deadline-aware policy controller} × shards {1, 4}.  For
+//! each cell the canonical request script (two epochs, a stats probe, a
+//! graceful drain) is replayed with an interruption at **every** split
+//! point: prefix on server #1 → `snapshot_json` → simulated process
+//! death (registry reset) → [`ServeServer::restore`] on a fresh server →
+//! suffix + drain.  The concatenated output must equal the
+//! uninterrupted session's byte-for-byte — including the `stats` line's
+//! telemetry counter block, which is why the journal carries the counter
+//! snapshot and restore re-seeds the registry.
+//!
+//! Also pins the federated controller oracle: a 1-shard
+//! [`FederatedCoordinator`] with a [`PolicySpec`] controller reproduces
+//! the monolithic `ReactiveCoordinator::with_policy` run bit-exactly
+//! (the `with_controller` builder is `dts serve --shards --deadline-aware`'s
+//! engine, so the oracle anchors the whole federated serve grid).
+
+use dts::coordinator::Variant;
+use dts::experiments::metric_row_json;
+use dts::federation::FederatedCoordinator;
+use dts::policy::PolicySpec;
+use dts::serve::{Controller, ServeConfig, ServeServer};
+use dts::sim::{Reaction, ReactiveCoordinator, SimConfig};
+use dts::telemetry;
+use dts::workloads::{Dataset, Scenario, DEFAULT_LOAD};
+
+const SEED: u64 = 5;
+const GRAPHS: usize = 6;
+
+fn cfg(dataset: Dataset, controller: Controller, shards: usize) -> ServeConfig {
+    ServeConfig {
+        dataset,
+        n_graphs: GRAPHS,
+        seed: SEED,
+        variant: Variant::parse("5P-HEFT").unwrap(),
+        noise_std: 0.3,
+        controller,
+        shards,
+        jobs: if shards > 1 { 2 } else { 1 },
+        load: DEFAULT_LOAD,
+        scenario: Scenario::default(),
+    }
+}
+
+fn controllers() -> [Controller; 2] {
+    [
+        Controller::Reaction(Reaction::LastK {
+            k: 3,
+            threshold: 0.25,
+        }),
+        Controller::Spec(PolicySpec::DeadlineAware {
+            k: 3,
+            threshold: 0.25,
+        }),
+    ]
+}
+
+/// The canonical session script: two epochs, a stats probe at the end.
+fn script() -> Vec<String> {
+    let mut reqs: Vec<String> = (0..3)
+        .map(|g| format!("{{\"op\":\"arrive\",\"graph\":{g}}}"))
+        .collect();
+    reqs.push("{\"op\":\"run\"}".to_string());
+    for g in 3..GRAPHS {
+        reqs.push(format!("{{\"op\":\"arrive\",\"graph\":{g}}}"));
+    }
+    reqs.push("{\"op\":\"run\"}".to_string());
+    reqs.push("{\"op\":\"stats\"}".to_string());
+    reqs
+}
+
+fn uninterrupted(cfg: &ServeConfig) -> Vec<String> {
+    telemetry::reset();
+    let mut server = ServeServer::new(cfg.clone());
+    let mut out = Vec::new();
+    for r in script() {
+        server.handle_line(&r, &mut out);
+    }
+    server.drain(&mut out);
+    out
+}
+
+/// Run the script with a kill/restore at request boundary `split`.
+fn interrupted(cfg: &ServeConfig, split: usize) -> Vec<String> {
+    telemetry::reset();
+    let reqs = script();
+    let mut server = ServeServer::new(cfg.clone());
+    let mut out = Vec::new();
+    for r in &reqs[..split] {
+        server.handle_line(r, &mut out);
+    }
+    let journal = server.snapshot_json();
+    drop(server);
+    // simulated process death: the restored session starts with a fresh
+    // telemetry registry, exactly like a new `dts serve --restore`
+    telemetry::reset();
+    let mut restored = ServeServer::restore(cfg.clone(), &journal)
+        .unwrap_or_else(|e| panic!("restore at split {split}: {e}"));
+    for r in &reqs[split..] {
+        restored.handle_line(r, &mut out);
+    }
+    restored.drain(&mut out);
+    out
+}
+
+#[test]
+fn restore_is_bit_identical_at_every_split_point() {
+    let n_reqs = script().len();
+    for dataset in Dataset::ALL {
+        for controller in controllers() {
+            for shards in [1usize, 4] {
+                let c = cfg(dataset, controller.clone(), shards);
+                let full = uninterrupted(&c);
+                for split in 1..n_reqs {
+                    let resumed = interrupted(&c, split);
+                    assert_eq!(
+                        resumed,
+                        full,
+                        "{} {} S{shards}: split {split}",
+                        dataset.name(),
+                        controller.label()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn restore_rejects_mismatched_config() {
+    let base = cfg(Dataset::Synthetic, controllers()[0].clone(), 1);
+    telemetry::reset();
+    let mut server = ServeServer::new(base.clone());
+    let mut out = Vec::new();
+    server.handle_line("{\"op\":\"arrive\",\"graph\":0}", &mut out);
+    let journal = server.snapshot_json();
+
+    // every divergent knob refuses
+    let mut other_seed = base.clone();
+    other_seed.seed = SEED + 1;
+    assert!(ServeServer::restore(other_seed, &journal).is_err());
+
+    let mut other_shards = base.clone();
+    other_shards.shards = 4;
+    assert!(ServeServer::restore(other_shards, &journal).is_err());
+
+    let mut other_controller = base.clone();
+    other_controller.controller = controllers()[1].clone();
+    assert!(ServeServer::restore(other_controller, &journal).is_err());
+
+    // the matching config restores
+    assert!(ServeServer::restore(base, &journal).is_ok());
+}
+
+#[test]
+fn snapshot_roundtrips_through_ndjson_text() {
+    // the journal travels through a file in production: print → parse →
+    // restore must behave identically to restoring the in-memory value
+    let c = cfg(Dataset::RiotBench, controllers()[1].clone(), 4);
+    telemetry::reset();
+    let mut server = ServeServer::new(c.clone());
+    let mut out = Vec::new();
+    for r in &script()[..5] {
+        server.handle_line(r, &mut out);
+    }
+    let doc = server.snapshot_json();
+    let text = doc.to_string();
+    let reparsed = dts::json::Value::from_str(&text).unwrap();
+    assert_eq!(doc, reparsed, "snapshot print∘parse must be idempotent");
+    telemetry::reset();
+    let restored = ServeServer::restore(c, &reparsed).unwrap();
+    assert_eq!(restored.epochs(), server.epochs());
+    assert_eq!(restored.pending(), server.pending());
+    assert_eq!(restored.lines_handled(), server.lines_handled());
+}
+
+#[test]
+fn one_shard_federated_controller_matches_monolithic() {
+    // the with_controller oracle: S1 + PolicySpec ≡ monolithic
+    // with_policy, bit for bit (events and the 15-metric block)
+    let prob = Dataset::Synthetic.instance_scenario(
+        GRAPHS,
+        SEED,
+        DEFAULT_LOAD,
+        None,
+        &Scenario::default(),
+    );
+    let variant = Variant::parse("5P-HEFT").unwrap();
+    let spec = PolicySpec::DeadlineAware {
+        k: 3,
+        threshold: 0.25,
+    };
+    let sim_cfg = SimConfig {
+        noise_std: 0.3,
+        noise_seed: SEED ^ 0xA11CE,
+        reaction: Reaction::None,
+        record_frozen: false,
+        full_refresh: false,
+    };
+    let fed = FederatedCoordinator::new(variant.policy, variant.kind, SEED ^ 0x5EED, sim_cfg, 1)
+        .with_controller(spec.clone());
+    assert!(fed.label().contains("D3@0.25"), "{}", fed.label());
+    let fres = fed.run(&prob);
+    let mut rc = ReactiveCoordinator::with_policy(
+        variant.policy,
+        variant.kind.make(SEED ^ 0x5EED),
+        sim_cfg,
+        spec.make(),
+    );
+    let mres = rc.run(&prob);
+    assert_eq!(fres.log, mres.log, "event logs diverge");
+    assert_eq!(
+        metric_row_json(&fres.metrics(&prob)).to_string(),
+        metric_row_json(&mres.metrics(&prob)).to_string(),
+        "metric rows diverge"
+    );
+}
