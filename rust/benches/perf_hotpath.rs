@@ -115,6 +115,7 @@ fn main() {
             reaction,
             record_frozen: false,
             full_refresh: false,
+            faults: dts::sim::FaultConfig::NONE,
         };
         let (mean, min, max) = util::time_it(1, 3, || {
             let mut rc =
@@ -149,6 +150,7 @@ fn main() {
             },
             record_frozen: false,
             full_refresh: full,
+            faults: dts::sim::FaultConfig::NONE,
         };
         let (mean, min, max) = util::time_it(1, 3, || {
             let mut rc =
@@ -197,6 +199,7 @@ fn main() {
             },
             record_frozen: false,
             full_refresh: false,
+            faults: dts::sim::FaultConfig::NONE,
         };
         let (mean, min, max) = util::time_it(0, 1, || {
             let mut rc =
@@ -327,6 +330,7 @@ fn main() {
             reaction: Reaction::None,
             record_frozen: false,
             full_refresh: false,
+            faults: dts::sim::FaultConfig::NONE,
         };
         let label = spec.label();
         let (mean, min, max) = util::time_it(1, 3, || {
@@ -368,6 +372,7 @@ fn main() {
             reaction: Reaction::None,
             record_frozen: false,
             full_refresh: false,
+            faults: dts::sim::FaultConfig::NONE,
         };
         let label = spec.label();
         let (mean, min, max) = util::time_it(1, 3, || {
@@ -457,6 +462,7 @@ fn main() {
             },
             record_frozen: false,
             full_refresh: false,
+            faults: dts::sim::FaultConfig::NONE,
         };
         telemetry::set_enabled(false);
         let (mean, min, max) = util::time_it(1, 3, || {

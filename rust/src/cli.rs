@@ -115,6 +115,52 @@ fn strict_f64_flag(
     }
 }
 
+/// Resolve the shared fault-injection flags (`--mtbf`, `--mttr`,
+/// `--fault-seed`) of `dts simulate`, `dts policy`, and `dts serve`.
+/// No flags = [`FaultConfig::NONE`] (bit-identical to pre-fault runs).
+/// `--mtbf` and `--mttr` must come together and satisfy
+/// [`FaultModel::validate`]; a lone `--fault-seed` is a typo (it would
+/// silently run fault-free), so it aborts too.
+fn fault_config_of(args: &Args) -> Result<crate::sim::FaultConfig, i32> {
+    use crate::sim::{FaultConfig, FaultModel, DEFAULT_FAULT_SEED};
+    let mtbf = args.flag("mtbf");
+    let mttr = args.flag("mttr");
+    let seed = args.flag("fault-seed");
+    if mtbf.is_none() && mttr.is_none() {
+        if seed.is_some() {
+            eprintln!("error: --fault-seed requires --mtbf and --mttr");
+            return Err(2);
+        }
+        return Ok(FaultConfig::NONE);
+    }
+    if mtbf.is_none() || mttr.is_none() {
+        eprintln!("error: --mtbf and --mttr must be given together");
+        return Err(2);
+    }
+    let mtbf = strict_f64_flag(args, "mtbf", 0.0, "finite and > 0", |x| x > 0.0)?;
+    let mttr = strict_f64_flag(args, "mttr", 0.0, "finite and > 0", |x| x > 0.0)?;
+    let model = FaultModel::Crash { mtbf, mttr };
+    if let Err(e) = model.validate() {
+        eprintln!("error: {e}");
+        return Err(2);
+    }
+    let seed = match seed {
+        None => DEFAULT_FAULT_SEED,
+        Some(s) => match s.parse::<u64>() {
+            Ok(v) => v,
+            Err(_) => {
+                eprintln!("error: --fault-seed must be a non-negative integer, got '{s}'");
+                return Err(2);
+            }
+        },
+    };
+    Ok(FaultConfig {
+        model,
+        seed,
+        node_base: 0,
+    })
+}
+
 const USAGE: &str = "\
 dts — dynamic task-graph scheduling with controlled preemption
 
@@ -128,9 +174,12 @@ USAGE:
                  [--deadline-slack F] [--arrival poisson|bursty] [--burst-size 4]
                  [--jobs N] [--csv out.csv] [--json out.json]
                  [--trace out.json] [--telemetry out.ndjson]
+                 [--mtbf S --mttr S [--fault-seed N]]
                  (reactive runtime: realized durations, straggler Last-K;
                   --shards S > 1 federates the node pool into S clusters;
-                  --telemetry dumps the dts-telemetry-v1 NDJSON snapshot)
+                  --telemetry dumps the dts-telemetry-v1 NDJSON snapshot;
+                  --mtbf/--mttr inject deterministic node crash/restart
+                  faults — docs/FAULTS.md)
   dts policy     --dataset <d|all> [--graphs N] [--scale M] [--trials T] [--seed S]
                  [--variant 5P-HEFT] [--noise 0.3] [--k 1,3,5]
                  [--threshold 0.25] [--budget none,1.0] [--burst 4]
@@ -140,6 +189,7 @@ USAGE:
                  [--arrival poisson|bursty] [--burst-size 4]
                  [--jobs N] [--csv out.csv] [--json out.json]
                  [--telemetry out.ndjson]
+                 [--mtbf S --mttr S [--fault-seed N]]
                  (policy engine: joint k × θ × budget sweep with
                   preemption-cost accounting; --deadline-aware adds the
                   urgency-scoped D{k}@{θ} controllers)
@@ -148,6 +198,7 @@ USAGE:
                  [--deadline-aware] [--shards S] [--jobs N]
                  [--listen addr:port] [--snapshot path] [--snapshot-every N]
                  [--restore path] [--telemetry out.ndjson]
+                 [--max-line-bytes N] [--mtbf S --mttr S [--fault-seed N]]
                  (streaming daemon: dts-serve-v1 NDJSON requests on stdin
                   or the TCP socket, decision stream out; replaying a
                   recorded dts-sim-trace-v1 document reproduces the
@@ -462,6 +513,9 @@ fn cmd_simulate(args: &Args) -> i32 {
     let Ok(scenario) = scenario_of(args) else {
         return 2;
     };
+    let Ok(faults) = fault_config_of(args) else {
+        return 2;
+    };
     let mut scenarios = Vec::new();
     for &sigma in &noise {
         for th in &thresholds {
@@ -512,6 +566,7 @@ fn cmd_simulate(args: &Args) -> i32 {
             scenario: scenario.clone(),
             scenarios: scenarios.clone(),
             shards,
+            faults,
         };
         let n_cells = cfg.trials * cfg.scenarios.len();
         let jobs = jobs_cap.clamp(1, n_cells.max(1));
@@ -589,6 +644,7 @@ fn cmd_simulate(args: &Args) -> i32 {
             reaction: sc.reaction,
             record_frozen: false,
             full_refresh: false,
+            faults,
         };
         let mut rc = crate::sim::ReactiveCoordinator::new(
             variant.policy,
@@ -783,6 +839,9 @@ fn cmd_policy(args: &Args) -> i32 {
     let Ok(scenario) = scenario_of(args) else {
         return 2;
     };
+    let Ok(faults) = fault_config_of(args) else {
+        return 2;
+    };
     let scenarios = policy_grid(
         &noise,
         &ks,
@@ -827,6 +886,7 @@ fn cmd_policy(args: &Args) -> i32 {
             variant,
             scenario: scenario.clone(),
             scenarios: scenarios.clone(),
+            faults,
         };
         let n_cells = cfg.trials * cfg.scenarios.len();
         let jobs = jobs_cap.clamp(1, n_cells.max(1));
@@ -919,6 +979,7 @@ fn serve_config_of(args: &Args) -> Result<ServeConfig, i32> {
     let shards = strict_usize_flag(args, "shards", 1, 1)?;
     let jobs = strict_usize_flag(args, "jobs", 1, 1)?;
     let scenario = scenario_of(args)?;
+    let faults = fault_config_of(args)?;
     Ok(ServeConfig {
         dataset,
         n_graphs,
@@ -930,6 +991,7 @@ fn serve_config_of(args: &Args) -> Result<ServeConfig, i32> {
         jobs,
         load: crate::workloads::DEFAULT_LOAD,
         scenario,
+        faults,
     })
 }
 
@@ -940,11 +1002,20 @@ fn cmd_serve(args: &Args) -> i32 {
     let Ok(snapshot_every) = strict_usize_flag(args, "snapshot-every", 0, 0) else {
         return 2;
     };
+    let Ok(max_line_bytes) = strict_usize_flag(
+        args,
+        "max-line-bytes",
+        crate::serve::DEFAULT_MAX_LINE_BYTES,
+        1,
+    ) else {
+        return 2;
+    };
     let opts = ServeOptions {
         snapshot_path: args.flag("snapshot").map(|s| s.to_string()),
         snapshot_every: snapshot_every as u64,
         telemetry_path: args.flag("telemetry").map(|s| s.to_string()),
         listen: args.flag("listen").map(|s| s.to_string()),
+        max_line_bytes,
     };
     // session-scoped registry: serve counters start at zero, so the
     // snapshot counter block (and a later restore's seed) is exactly
@@ -1328,6 +1399,64 @@ mod tests {
         ] {
             assert_eq!(main_with(&argv(bad)), 2, "{bad}");
         }
+    }
+
+    #[test]
+    fn fault_flags_parse_strictly() {
+        use crate::sim::{FaultConfig, FaultModel, DEFAULT_FAULT_SEED};
+        // no flags: disabled, bit-identical to pre-fault runs
+        let a = parse_args(&argv("simulate --dataset synthetic"));
+        assert_eq!(fault_config_of(&a).unwrap(), FaultConfig::NONE);
+        // both flags arm the crash model, default jitter seed
+        let a = parse_args(&argv("simulate --dataset synthetic --mtbf 50 --mttr 5"));
+        let fc = fault_config_of(&a).unwrap();
+        assert_eq!(fc.model, FaultModel::Crash { mtbf: 50.0, mttr: 5.0 });
+        assert_eq!(fc.seed, DEFAULT_FAULT_SEED);
+        assert_eq!(fc.node_base, 0);
+        let a = parse_args(&argv(
+            "simulate --dataset synthetic --mtbf 50 --mttr 5 --fault-seed 9",
+        ));
+        assert_eq!(fault_config_of(&a).unwrap().seed, 9);
+        // strict rejects: lone flags, garbage, non-positive parameters
+        for bad in [
+            "simulate --dataset synthetic --mtbf 50",
+            "simulate --dataset synthetic --mttr 5",
+            "simulate --dataset synthetic --fault-seed 9",
+            "simulate --dataset synthetic --mtbf 5O --mttr 5",
+            "simulate --dataset synthetic --mtbf 50 --mttr 0",
+            "simulate --dataset synthetic --mtbf -50 --mttr 5",
+            "simulate --dataset synthetic --mtbf 50 --mttr 5 --fault-seed -1",
+            "simulate --dataset synthetic --mtbf 50 --mttr 5 --fault-seed x",
+        ] {
+            let a = parse_args(&argv(bad));
+            assert!(fault_config_of(&a).is_err(), "{bad}");
+            assert_eq!(main_with(&argv(bad)), 2, "{bad}");
+        }
+        // the reject propagates on policy and serve too
+        assert_eq!(main_with(&argv("policy --dataset synthetic --mtbf 50")), 2);
+        assert_eq!(main_with(&argv("serve --dataset synthetic --mttr 5")), 2);
+        assert_eq!(
+            main_with(&argv("serve --dataset synthetic --max-line-bytes 0")),
+            2
+        );
+    }
+
+    #[test]
+    fn simulate_faults_smoke() {
+        assert_eq!(
+            main_with(&argv(
+                "simulate --dataset synthetic --graphs 5 --trials 1 \
+                 --noise 0.3 --threshold 0.25 --k 2 --mtbf 50 --mttr 5"
+            )),
+            0
+        );
+        assert_eq!(
+            main_with(&argv(
+                "policy --dataset synthetic --graphs 4 --trials 1 --noise 0.3 \
+                 --k 2 --threshold 0.25 --budget none --mtbf 40 --mttr 4"
+            )),
+            0
+        );
     }
 
     #[test]

@@ -268,6 +268,12 @@ impl SweepResult {
             "weighted_tardiness_raw",
             "runtime_norm",
             "runtime_raw",
+            "wasted_work_s_norm",
+            "wasted_work_s_raw",
+            "n_reexecuted_norm",
+            "n_reexecuted_raw",
+            "mean_recovery_latency_norm",
+            "mean_recovery_latency_raw",
         ];
         report::csv(&headers, &rows)
     }
@@ -401,6 +407,9 @@ pub struct SimSweepConfig {
     /// ([`crate::federation`]); 1 = the monolithic reactive coordinator
     /// (bit-identical to pre-federation sweeps).
     pub shards: usize,
+    /// Fault injection ([`crate::sim::FaultConfig::NONE`] = bit-identical
+    /// to pre-fault sweeps); applied to every cell of the sweep.
+    pub faults: crate::sim::FaultConfig,
 }
 
 /// One (trial, scenario) cell: realized metrics of the reactive run
@@ -443,7 +452,8 @@ fn degradation_ratio(realized: f64, planned: f64) -> f64 {
 
 /// The full [`MetricRow`] as a JSON object — shared by the sim and
 /// policy sweep dumps and by the `dts serve` epoch summary (the
-/// 15-metric block replay tests compare bit-for-bit).
+/// 18-metric block replay tests compare bit-for-bit; the last three are
+/// the fault axes, 0.0 on fault-free runs).
 pub fn metric_row_json(r: &MetricRow) -> Value {
     json::obj(vec![
         ("total_makespan", json::num(r.total_makespan)),
@@ -461,6 +471,9 @@ pub fn metric_row_json(r: &MetricRow) -> Value {
         ("max_tardiness", json::num(r.max_tardiness)),
         ("weighted_tardiness", json::num(r.weighted_tardiness)),
         ("runtime_s", json::num(r.runtime_s)),
+        ("wasted_work_s", json::num(r.wasted_work_s)),
+        ("n_reexecuted", json::num(r.n_reexecuted)),
+        ("mean_recovery_latency", json::num(r.mean_recovery_latency)),
     ])
 }
 
@@ -509,6 +522,7 @@ fn run_sim_cell(
         reaction: scenario.reaction,
         record_frozen: false,
         full_refresh: false,
+        faults: cfg.faults,
     };
     let (realized, n_replans, n_straggler_replans, n_reverted, n_assigned, cost) = if cfg.shards > 1
     {
@@ -833,6 +847,9 @@ impl SimSweepResult {
             "max_tardiness",
             "weighted_tardiness",
             "runtime_s",
+            "wasted_work_s",
+            "n_reexecuted",
+            "mean_recovery_latency",
             "planned_total_makespan",
             "degradation",
             "replans",
@@ -973,6 +990,9 @@ pub struct PolicySweepConfig {
     /// bit-exactly
     pub scenario: Scenario,
     pub scenarios: Vec<PolicyScenario>,
+    /// Fault injection ([`crate::sim::FaultConfig::NONE`] = bit-identical
+    /// to pre-fault sweeps); applied to every cell of the sweep.
+    pub faults: crate::sim::FaultConfig,
 }
 
 /// One (trial, scenario) cell of the policy sweep: realized metrics,
@@ -1031,6 +1051,7 @@ fn run_policy_cell(
         reaction: Reaction::None,
         record_frozen: false,
         full_refresh: false,
+        faults: cfg.faults,
     };
     let mut rc = ReactiveCoordinator::with_policy(
         cfg.variant.policy,
@@ -1313,6 +1334,9 @@ impl PolicySweepResult {
             "max_tardiness",
             "weighted_tardiness",
             "runtime_s",
+            "wasted_work_s",
+            "n_reexecuted",
+            "mean_recovery_latency",
             "planned_total_makespan",
             "degradation",
             "replans",
@@ -1560,6 +1584,7 @@ mod tests {
                 },
             ],
             shards: 1,
+            faults: crate::sim::FaultConfig::NONE,
         }
     }
 
@@ -1785,6 +1810,7 @@ mod tests {
                     },
                 },
             ],
+            faults: crate::sim::FaultConfig::NONE,
         }
     }
 

@@ -48,7 +48,9 @@ use crate::network::Network;
 use crate::policy::PolicySpec;
 use crate::schedule::{Assignment, Schedule};
 use crate::schedulers::SchedulerKind;
-use crate::sim::{ReactiveCoordinator, SimConfig, SimLogEntry, SimLogKind, SimResult};
+use crate::sim::{
+    FaultConfig, Faults, ReactiveCoordinator, SimConfig, SimLogEntry, SimLogKind, SimResult,
+};
 use crate::telemetry;
 
 /// Default rebalancing trigger: migrate only when the most loaded
@@ -194,10 +196,34 @@ impl FederatedCoordinator {
     /// same trade the dispatched-prefix rule makes shard-locally.  At
     /// most one move per arrival, so the pass is O(graphs × shards).
     pub fn admit(prob: &DynamicProblem, shard_nodes: &[Vec<usize>]) -> AdmissionOutcome {
+        Self::admit_with_faults(prob, shard_nodes, &FaultConfig::NONE)
+    }
+
+    /// [`Self::admit`] with a fault model in view: under a crash model
+    /// each shard's projected capacity is discounted by its nodes'
+    /// availability, computed from the **same pure crash/recovery
+    /// windows the shard simulators will draw** — so a cluster facing
+    /// long outages attracts proportionally less work and sheds graphs
+    /// to its peers at admission time.  A pure function of the instance
+    /// and `(fault_seed, node)`: deterministic, `--jobs`-independent,
+    /// and with [`FaultConfig::NONE`] (or a Degrade model, which costs
+    /// time but not whole nodes) every discount is exactly 1.0 — the
+    /// placement is then bit-identical to [`Self::admit`].
+    pub fn admit_with_faults(
+        prob: &DynamicProblem,
+        shard_nodes: &[Vec<usize>],
+        fc: &FaultConfig,
+    ) -> AdmissionOutcome {
         let s = shard_nodes.len();
+        let faults = Faults::new(*fc);
         let capacity: Vec<f64> = shard_nodes
             .iter()
-            .map(|nodes| nodes.iter().map(|&v| prob.network.speed(v)).sum())
+            .map(|nodes| {
+                nodes
+                    .iter()
+                    .map(|&v| prob.network.speed(v) * node_availability(&faults, v))
+                    .sum()
+            })
             .collect();
         // per-shard admitted stack: (global graph idx, est_start, est_time)
         let mut admitted: Vec<Vec<(usize, f64, f64)>> = vec![Vec::new(); s];
@@ -283,7 +309,7 @@ impl FederatedCoordinator {
         let n_nodes = prob.network.n_nodes();
         let shard_nodes = Self::partition_nodes(n_nodes, self.shards);
         let s = shard_nodes.len();
-        let admission = Self::admit(prob, &shard_nodes);
+        let admission = Self::admit_with_faults(prob, &shard_nodes, &self.cfg.faults);
 
         // Per-shard problems.  Graphs are pushed in global arrival order
         // (prob.graphs is arrival-sorted and gi ascends), so the stable
@@ -319,7 +345,7 @@ impl FederatedCoordinator {
             // shard's take() isolates exactly its own activity
             let parked = telemetry::take();
             for (si, sp) in shard_probs.iter().enumerate() {
-                results[si] = Some(self.run_shard(sp));
+                results[si] = Some(self.run_shard(sp, shard_nodes[si][0]));
             }
             telemetry::absorb(&parked);
         } else {
@@ -339,7 +365,7 @@ impl FederatedCoordinator {
                                 if si >= s {
                                     break;
                                 }
-                                done.push((si, self.run_shard(&shard_probs[si])));
+                                done.push((si, self.run_shard(&shard_probs[si], shard_nodes[si][0])));
                             }
                             done
                         })
@@ -360,16 +386,24 @@ impl FederatedCoordinator {
         merge(prob, shard_nodes, shard_graphs, admission, per_shard, shard_tele)
     }
 
-    fn run_shard(&self, sp: &DynamicProblem) -> (SimResult, telemetry::Telemetry) {
+    /// `node_base` is the shard's first **global** node id (partitions
+    /// are contiguous): shifting the fault identity space by it makes
+    /// the shard draw, for its local node `v`, exactly the windows the
+    /// monolithic run draws for global node `base + v` — crash instants
+    /// stay a pure function of `(fault_seed, global node)` however the
+    /// pool is sharded.
+    fn run_shard(&self, sp: &DynamicProblem, node_base: usize) -> (SimResult, telemetry::Telemetry) {
+        let mut cfg = self.cfg;
+        cfg.faults.node_base += node_base;
         let mut rc = match &self.spec {
             Some(spec) => ReactiveCoordinator::with_policy(
                 self.policy,
                 self.kind.make(self.sched_seed),
-                self.cfg,
+                cfg,
                 spec.make(),
             ),
             None => {
-                ReactiveCoordinator::new(self.policy, self.kind.make(self.sched_seed), self.cfg)
+                ReactiveCoordinator::new(self.policy, self.kind.make(self.sched_seed), cfg)
             }
         };
         let res = rc.run(sp);
@@ -408,6 +442,41 @@ fn remap_kind(kind: SimLogKind, nodes: &[usize], graphs: &[usize]) -> SimLogKind
             n_reverted,
             n_pending,
         },
+        SimLogKind::NodeDown { node, wasted } => SimLogKind::NodeDown {
+            node: nodes[node],
+            wasted,
+        },
+        SimLogKind::NodeUp { node, downtime } => SimLogKind::NodeUp {
+            node: nodes[node],
+            downtime,
+        },
+        SimLogKind::Kill { gid, node, wasted } => SimLogKind::Kill {
+            gid: rg(gid),
+            node: nodes[node],
+            wasted,
+        },
+    }
+}
+
+/// Long-run healthy fraction of a **global** node under the drawn crash
+/// windows: 1.0 without a crash model, otherwise measured over the
+/// node's first few jittered windows — a pure function of
+/// `(fault_seed, node)`, so admission stays deterministic at any
+/// `--jobs` count.
+fn node_availability(faults: &Faults, node: usize) -> f64 {
+    const WINDOWS: usize = 4;
+    let Some((_, horizon)) = faults.window(node, WINDOWS - 1) else {
+        return 1.0; // None / Degrade: whole nodes are never lost
+    };
+    let mut downtime = 0.0;
+    for k in 0..WINDOWS {
+        let (down, up) = faults.window(node, k).expect("window below horizon");
+        downtime += up - down;
+    }
+    if horizon > 0.0 {
+        ((horizon - downtime) / horizon).max(0.0)
+    } else {
+        1.0
     }
 }
 
@@ -525,12 +594,54 @@ impl FederationResult {
     /// Metric row of the merged global execution (same computation the
     /// monolithic [`SimResult::metrics`] performs).
     pub fn metrics(&self, prob: &DynamicProblem) -> MetricRow {
-        MetricRow::compute(
+        let mut row = MetricRow::compute(
             &self.schedule,
             &prob.graphs,
             &prob.network,
             self.sched_runtime_s,
-        )
+        );
+        // fault accounting is runtime state (killed attempts leave no
+        // slot in the merged schedule) — summed across shards, all-zero
+        // when faults are off
+        row.wasted_work_s = self.wasted_work_s();
+        row.n_reexecuted = self.n_reexecuted() as f64;
+        row.mean_recovery_latency = self.mean_recovery_latency();
+        row
+    }
+
+    /// Σ shard simulated seconds lost to crash-killed attempts.
+    pub fn wasted_work_s(&self) -> f64 {
+        self.per_shard.iter().map(|r| r.wasted_work_s).sum()
+    }
+
+    /// Σ shard running attempts killed by crashes.
+    pub fn n_killed(&self) -> usize {
+        self.per_shard.iter().map(|r| r.n_killed).sum()
+    }
+
+    /// Σ shard tasks that completed on a retry after a kill.
+    pub fn n_reexecuted(&self) -> usize {
+        self.per_shard.iter().map(|r| r.n_reexecuted).sum()
+    }
+
+    /// Σ shard failure-triggered replans.
+    pub fn n_failure_replans(&self) -> usize {
+        self.per_shard.iter().map(|r| r.n_failure_replans()).sum()
+    }
+
+    /// Mean node downtime per recovery across the whole pool (0.0 when
+    /// no node ever recovered).
+    pub fn mean_recovery_latency(&self) -> f64 {
+        let n: usize = self.per_shard.iter().map(|r| r.n_recoveries).sum();
+        if n == 0 {
+            0.0
+        } else {
+            self.per_shard
+                .iter()
+                .map(|r| r.recovery_total_s)
+                .sum::<f64>()
+                / n as f64
+        }
     }
 
     pub fn n_replans(&self) -> usize {
@@ -678,6 +789,7 @@ mod tests {
             },
             record_frozen: false,
             full_refresh: false,
+            faults: crate::sim::FaultConfig::NONE,
         };
         let fed = FederatedCoordinator::new(Policy::LastK(5), SchedulerKind::Heft, 1, cfg, 3)
             .with_jobs(2);

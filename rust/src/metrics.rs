@@ -348,6 +348,18 @@ pub struct MetricRow {
     /// scheduler wall-clock runtime in seconds (§V.E), filled by the
     /// dynamic coordinator.
     pub runtime_s: f64,
+    /// simulated seconds of partial execution lost to crash-killed
+    /// attempts ([`crate::sim::faults`]); 0.0 on fault-free runs —
+    /// filled by the reactive coordinator, not derivable from the
+    /// finished schedule (killed attempts leave no slot behind)
+    pub wasted_work_s: f64,
+    /// tasks that completed on a retry after a crash killed an earlier
+    /// attempt (stored as f64 so the row stays a flat numeric record;
+    /// always integral)
+    pub n_reexecuted: f64,
+    /// mean node downtime per recovery in simulated seconds (0.0 when
+    /// no node recovered)
+    pub mean_recovery_latency: f64,
 }
 
 impl MetricRow {
@@ -383,6 +395,11 @@ impl MetricRow {
             max_tardiness: dl.max_tardiness,
             weighted_tardiness: dl.weighted_tardiness,
             runtime_s,
+            // fault accounting is runtime state, not schedule-derived;
+            // the reactive coordinator overwrites these after compute()
+            wasted_work_s: 0.0,
+            n_reexecuted: 0.0,
+            mean_recovery_latency: 0.0,
         }
     }
 
@@ -403,6 +420,9 @@ impl MetricRow {
             Metric::MaxTardiness => self.max_tardiness,
             Metric::WeightedTardiness => self.weighted_tardiness,
             Metric::Runtime => self.runtime_s,
+            Metric::WastedWork => self.wasted_work_s,
+            Metric::Reexecuted => self.n_reexecuted,
+            Metric::RecoveryLatency => self.mean_recovery_latency,
         }
     }
 }
@@ -425,10 +445,16 @@ pub enum Metric {
     MaxTardiness,
     WeightedTardiness,
     Runtime,
+    /// simulated seconds lost to crash-killed attempts
+    WastedWork,
+    /// tasks re-executed after a crash killed an earlier attempt
+    Reexecuted,
+    /// mean node downtime per recovery (simulated seconds)
+    RecoveryLatency,
 }
 
 impl Metric {
-    pub const ALL: [Metric; 15] = [
+    pub const ALL: [Metric; 18] = [
         Metric::TotalMakespan,
         Metric::MeanMakespan,
         Metric::MeanFlowtime,
@@ -444,6 +470,9 @@ impl Metric {
         Metric::MaxTardiness,
         Metric::WeightedTardiness,
         Metric::Runtime,
+        Metric::WastedWork,
+        Metric::Reexecuted,
+        Metric::RecoveryLatency,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -463,6 +492,9 @@ impl Metric {
             Metric::MaxTardiness => "max_tardiness",
             Metric::WeightedTardiness => "weighted_tardiness",
             Metric::Runtime => "runtime",
+            Metric::WastedWork => "wasted_work_s",
+            Metric::Reexecuted => "n_reexecuted",
+            Metric::RecoveryLatency => "mean_recovery_latency",
         }
     }
 
@@ -479,7 +511,9 @@ impl Metric {
     /// than normalized to the per-trial best, per the paper's Fig 7/8e
     /// convention for utilization.  The deadline miss rate is a bounded
     /// fraction, so it joins the raw set; tardiness is an absolute time
-    /// and normalizes like the makespan axes.
+    /// and normalizes like the makespan axes.  The fault axes are raw
+    /// too: on fault-free sweeps every variant reads 0.0, and dividing
+    /// by a zero best would degenerate the normalization.
     pub fn reported_raw(&self) -> bool {
         matches!(
             self,
@@ -487,6 +521,9 @@ impl Metric {
                 | Metric::JainFairness
                 | Metric::WeightedJain
                 | Metric::DeadlineMissRate
+                | Metric::WastedWork
+                | Metric::Reexecuted
+                | Metric::RecoveryLatency
         )
     }
 }
@@ -637,7 +674,18 @@ mod tests {
         assert!(!Metric::MeanTardiness.reported_raw());
         assert!(!Metric::MaxTardiness.reported_raw());
         assert!(!Metric::WeightedTardiness.reported_raw());
-        assert_eq!(Metric::ALL.len(), 15);
+        assert_eq!(Metric::ALL.len(), 18);
+        // fault axes: lower is better, reported raw (zero on fault-free
+        // sweeps, so per-trial-best normalization would divide by zero)
+        assert!(Metric::WastedWork.lower_is_better());
+        assert!(Metric::Reexecuted.lower_is_better());
+        assert!(Metric::RecoveryLatency.lower_is_better());
+        assert!(Metric::WastedWork.reported_raw());
+        assert!(Metric::Reexecuted.reported_raw());
+        assert!(Metric::RecoveryLatency.reported_raw());
+        assert_eq!(row.get(Metric::WastedWork), 0.0);
+        assert_eq!(row.get(Metric::Reexecuted), 0.0);
+        assert_eq!(row.get(Metric::RecoveryLatency), 0.0);
     }
 
     #[test]

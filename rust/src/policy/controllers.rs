@@ -5,7 +5,9 @@
 //! functions of their observation history, so any sweep that drives
 //! them is bit-identical at any thread count.
 
-use super::{Decision, FinishObservation, PreemptionPolicy, Scope, ScopeOrder};
+use super::{
+    Decision, FailureObservation, FinishObservation, PreemptionPolicy, Scope, ScopeOrder,
+};
 
 /// The no-reaction baseline: never preempts on stragglers (arrival-time
 /// preemption still runs per the §IV policy).  Equivalent to the PR-2
@@ -185,10 +187,15 @@ impl PreemptionPolicy for Budgeted {
     }
 
     fn on_replan(&mut self, _time: f64, n_reverted: usize) {
-        // the coordinator capped the revert at ⌊tokens⌋, so the balance
-        // stays non-negative
+        // a replan this controller fired was capped at ⌊tokens⌋, so its
+        // charge keeps the balance non-negative — but crash-forced
+        // failure replans are uncapped and charged too (the
+        // parsimonious accounting of arXiv:2605.23255: forced reverts
+        // are still preemption work), so the bucket may overdraw.  A
+        // negative balance simply suppresses fires until the refill
+        // repays the debt; `burst + rate × elapsed` stays the hard
+        // ceiling on *voluntary* reverts.
         self.tokens -= n_reverted as f64;
-        debug_assert!(self.tokens >= -1e-9, "token bucket overdrawn: {}", self.tokens);
     }
 }
 
@@ -226,6 +233,47 @@ impl PreemptionPolicy for DeadlineAware {
         } else {
             Decision::Hold
         }
+    }
+}
+
+/// The failure-recovery controller: straggler behavior identical to
+/// [`FixedLastK`] (`lateness > θ × estimate`, Last-K recency scope), and
+/// on every node crash — after the coordinator's forced replan already
+/// recovered the orphaned work — it reverts the `k` most
+/// **deadline-endangered** incomplete graphs as *extra* scope
+/// ([`ScopeOrder::DeadlineUrgency`]): losing a node shrinks capacity,
+/// so the graphs closest to a miss are re-placed against the reduced
+/// cluster immediately instead of waiting for the next straggler to
+/// fire.  On a deadline-free workload the urgency order degrades to
+/// recency over the incomplete graphs (see [`DeadlineAware`]).
+#[derive(Clone, Copy, Debug)]
+pub struct FailureAware {
+    k: usize,
+    threshold: f64,
+}
+
+impl FailureAware {
+    pub fn new(k: usize, threshold: f64) -> Self {
+        Self { k, threshold }
+    }
+}
+
+impl PreemptionPolicy for FailureAware {
+    /// `F{k}@{θ}` — the failure-recovery twin of `L{k}@{θ}`.
+    fn label(&self) -> String {
+        format!("F{}@{}", self.k, self.threshold)
+    }
+
+    fn on_finish(&mut self, obs: &FinishObservation) -> Decision {
+        if obs.is_straggler(self.threshold) {
+            Decision::Reschedule(Scope::last_k(self.k))
+        } else {
+            Decision::Hold
+        }
+    }
+
+    fn on_failure(&mut self, _obs: &FailureObservation) -> Decision {
+        Decision::Reschedule(Scope::deadline_urgent(self.k))
     }
 }
 
@@ -277,6 +325,14 @@ impl PreemptionPolicy for Cooldown {
 
     fn on_graph_complete(&mut self, graph: usize, stretch: f64) {
         self.inner.on_graph_complete(graph, stretch);
+    }
+
+    fn on_failure(&mut self, obs: &FailureObservation) -> Decision {
+        // failures bypass the cooldown gate: a crash-forced recovery is
+        // not straggler thrash, and the inner controller's extra scope
+        // answers a capacity loss the hysteresis was never meant to
+        // dampen
+        self.inner.on_failure(obs)
     }
 }
 

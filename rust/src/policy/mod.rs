@@ -47,7 +47,9 @@
 
 pub mod controllers;
 
-pub use controllers::{AdaptiveK, Budgeted, Cooldown, DeadlineAware, FixedLastK, NoPreemption};
+pub use controllers::{
+    AdaptiveK, Budgeted, Cooldown, DeadlineAware, FailureAware, FixedLastK, NoPreemption,
+};
 
 use crate::graph::Gid;
 
@@ -73,6 +75,27 @@ impl FinishObservation {
     pub fn is_straggler(&self, threshold: f64) -> bool {
         self.lateness > threshold * self.est
     }
+}
+
+/// What the coordinator observed when a node crashed — delivered
+/// **after** the forced failure replan already reverted the crashed
+/// node's orphaned work, so a controller decides only how much *extra*
+/// scope to add on top of the forced one
+/// ([`PreemptionPolicy::on_failure`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailureObservation {
+    /// the node that crashed
+    pub node: usize,
+    /// simulation time of the crash
+    pub time: f64,
+    /// planned-but-undispatched tasks the forced failure replan
+    /// reverted off the crashed node (0 when the node held no pending
+    /// work and the forced pass was skipped)
+    pub n_orphaned: usize,
+    /// whether a running attempt was killed (its partial work wasted)
+    pub killed: bool,
+    /// graphs arrived so far — upper bound of any Last-K window
+    pub arrived: usize,
 }
 
 /// How the coordinator picks *which* graphs a
@@ -167,9 +190,22 @@ pub trait PreemptionPolicy {
     fn on_finish(&mut self, obs: &FinishObservation) -> Decision;
 
     /// Feedback: a straggler replan this policy fired reverted
-    /// `n_reverted` tasks at simulated time `time`.
+    /// `n_reverted` tasks at simulated time `time`.  Also called for the
+    /// crash-forced failure replan (the controller did not fire it, but
+    /// its reverts are real preemption work — [`Budgeted`] charges them
+    /// against the bucket, overdrawing if necessary).
     fn on_replan(&mut self, time: f64, n_reverted: usize) {
         let _ = (time, n_reverted);
+    }
+
+    /// Decide on one observed node crash, **after** the forced failure
+    /// replan already recovered the orphaned work.  A
+    /// [`Decision::Reschedule`] adds extra scope (e.g. endangered
+    /// neighbor graphs) on top of the forced reverts; the default holds
+    /// — crash recovery itself never depends on the controller.
+    fn on_failure(&mut self, obs: &FailureObservation) -> Decision {
+        let _ = obs;
+        Decision::Hold
     }
 
     /// Feedback: graph `graph` completed with observed stretch `stretch`
@@ -216,6 +252,12 @@ pub enum PolicySpec {
     /// `k` most deadline-endangered incomplete graphs instead of the
     /// `k` most recent.
     DeadlineAware { k: usize, threshold: f64 },
+    /// Failure-aware recovery: straggler behavior of `FixedLastK`, plus
+    /// on every node crash it reverts the `k` most deadline-endangered
+    /// incomplete graphs *in addition to* the crash-forced scope, so
+    /// work endangered by the capacity loss moves off the critical path
+    /// immediately instead of waiting for the next straggler.
+    FailureAware { k: usize, threshold: f64 },
 }
 
 impl PolicySpec {
@@ -243,6 +285,9 @@ impl PolicySpec {
             }
             PolicySpec::DeadlineAware { k, threshold } => {
                 Box::new(DeadlineAware::new(*k, *threshold))
+            }
+            PolicySpec::FailureAware { k, threshold } => {
+                Box::new(FailureAware::new(*k, *threshold))
             }
         }
     }
@@ -313,6 +358,10 @@ mod tests {
                 k: 3,
                 threshold: 0.25,
             },
+            PolicySpec::FailureAware {
+                k: 3,
+                threshold: 0.25,
+            },
         ];
         let labels: Vec<String> = specs.iter().map(|s| s.label()).collect();
         assert_eq!(labels[0], "none");
@@ -321,6 +370,7 @@ mod tests {
         assert_eq!(labels[3], "B3@0.25r1b4");
         assert_eq!(labels[4], "L2@0.1+cd5");
         assert_eq!(labels[5], "D3@0.25");
+        assert_eq!(labels[6], "F3@0.25");
         for (spec, label) in specs.iter().zip(&labels) {
             assert_eq!(&spec.make().label(), label, "{spec:?}");
         }

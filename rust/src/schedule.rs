@@ -61,6 +61,12 @@ pub struct Timelines {
     /// steady-state arrivals allocate nothing).
     journal: Vec<(usize, Gid, f64)>,
     txn_active: bool,
+    /// Per-node earliest-availability floor (crash recovery instants,
+    /// [`crate::sim::faults`]): while raised, no placement on the node
+    /// may start earlier.  The fault-free value 0.0 is the identity —
+    /// no placement starts before time zero — so zero-fault runs are
+    /// bit-identical to a build without the floor.
+    avail_floor: Vec<f64>,
 }
 
 impl Timelines {
@@ -71,6 +77,7 @@ impl Timelines {
             gids: vec![Vec::new(); n_nodes],
             journal: Vec::new(),
             txn_active: false,
+            avail_floor: vec![0.0; n_nodes],
         }
     }
 
@@ -297,6 +304,8 @@ impl Timelines {
     /// monotone too and `partition_point` applies.  The gap scan reads
     /// only the two f64 columns — the SoA layout keeps it cache-dense.
     pub fn earliest_start(&self, v: usize, ready: f64, dur: f64) -> f64 {
+        let floor = self.avail_floor[v];
+        let ready = if floor > ready { floor } else { ready };
         let starts = &self.starts[v];
         let finishes = &self.finishes[v];
         let from = finishes.partition_point(|&f| f <= ready);
@@ -312,8 +321,27 @@ impl Timelines {
 
     /// Tail-append start (non-insertion variant): max(ready, last finish).
     pub fn append_start(&self, v: usize, ready: f64) -> f64 {
+        let floor = self.avail_floor[v];
+        let ready = if floor > ready { floor } else { ready };
         let tail = self.finishes[v].last().copied().unwrap_or(0.0);
         ready.max(tail)
+    }
+
+    /// Raise node `v`'s availability floor to `t` (a crash recovery
+    /// instant): until cleared, no new placement on `v` starts earlier.
+    pub fn set_avail_floor(&mut self, v: usize, t: f64) {
+        self.avail_floor[v] = t;
+    }
+
+    /// Drop node `v`'s availability floor back to the fault-free
+    /// identity (time zero).
+    pub fn clear_avail_floor(&mut self, v: usize) {
+        self.avail_floor[v] = 0.0;
+    }
+
+    /// Node `v`'s current availability floor (0.0 when unfloored).
+    pub fn avail_floor(&self, v: usize) -> f64 {
+        self.avail_floor[v]
     }
 
     /// Total busy time on node `v`.

@@ -16,7 +16,7 @@
 //! `dts simulate` cell **bit-exactly** — the decision stream is
 //! byte-identical to the trace's `events` array (both sides serialize
 //! through [`crate::trace::sim_event_json`]), and the epoch summary
-//! carries the same 15-metric block to the bit.  This holds because the
+//! carries the same 18-metric block to the bit.  This holds because the
 //! server regenerates the identical instance
 //! (`dataset.instance_scenario(n_graphs, seed, load, …)`) and builds
 //! the identical coordinator (`noise_seed = seed ^ 0xA11CE`, scheduler
@@ -41,7 +41,7 @@
 //! ## Drain and crash semantics
 //!
 //! EOF on stdin and `{"op":"shutdown"}` drain gracefully: the pending
-//! epoch is flushed (decisions + 15-metric summary), a final snapshot
+//! epoch is flushed (decisions + 18-metric summary), a final snapshot
 //! is journaled, telemetry exports, and a `bye` line closes the
 //! session.  `{"op":"quit"}` is the *crash simulation*: exit
 //! immediately, no drain, no extra snapshot — restore then resumes from
@@ -63,7 +63,7 @@
 pub mod protocol;
 pub mod snapshot;
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpListener;
 
 use crate::coordinator::{DynamicProblem, Variant};
@@ -118,6 +118,12 @@ pub struct ServeConfig {
     pub jobs: usize,
     pub load: f64,
     pub scenario: Scenario,
+    /// Fault injection (CLI `--mtbf/--mttr/--fault-seed`, or a
+    /// mid-session `{"op":"inject"}`).  Part of the restore contract:
+    /// the snapshot config block embeds it whenever enabled, so
+    /// `--restore` refuses a journal whose fault model differs from the
+    /// CLI-resolved one.
+    pub faults: crate::sim::FaultConfig,
 }
 
 impl ServeConfig {
@@ -133,6 +139,7 @@ impl ServeConfig {
             },
             record_frozen: false,
             full_refresh: false,
+            faults: self.faults,
         }
     }
 
@@ -382,6 +389,27 @@ impl ServeServer {
         out.push(error_line(self.lines_handled, rej));
     }
 
+    /// Reject a line the I/O loop refused to buffer (longer than
+    /// `--max-line-bytes`).  Counted and numbered exactly like any other
+    /// handled request so that error-line numbering and the
+    /// `requests - errors` fingerprint stay consistent: one oversized
+    /// line yields exactly one `{"kind":"error","code":"range"}` and
+    /// leaves the journal state untouched.
+    pub fn reject_oversized(&mut self, n_bytes: usize, limit: usize, out: &mut Vec<String>) {
+        let span = Span::start(Hist::ServeRequestNs);
+        self.lines_handled += 1;
+        self.requests += 1;
+        telemetry::counter_inc(Counter::ServeRequests);
+        self.reject(
+            &Reject::new(
+                "range",
+                format!("request line of {n_bytes} bytes exceeds --max-line-bytes {limit}"),
+            ),
+            out,
+        );
+        span.finish();
+    }
+
     fn apply(&mut self, req: Request, out: &mut Vec<String>) -> Flow {
         match req {
             Request::Arrive { graph } => {
@@ -436,6 +464,34 @@ impl ServeServer {
                         ])
                         .to_string(),
                     );
+                }
+                Flow::Continue
+            }
+            Request::Inject { mtbf, mttr, seed } => {
+                let model = crate::sim::FaultModel::Crash { mtbf, mttr };
+                match model.validate() {
+                    Err(e) => self.reject(&Reject::new("range", e), out),
+                    Ok(()) => {
+                        // Applies to every epoch run after this line;
+                        // already-completed epochs are untouched (the
+                        // journal records which graphs ran, not under
+                        // which fault model — the config block carries
+                        // the *current* model for the restore check).
+                        self.cfg.faults = crate::sim::FaultConfig {
+                            model,
+                            seed: seed.unwrap_or(crate::sim::faults::DEFAULT_FAULT_SEED),
+                            node_base: 0,
+                        };
+                        out.push(
+                            json::obj(vec![
+                                ("kind", json::s("ack")),
+                                ("op", json::s("inject")),
+                                ("model", json::s(&model.label())),
+                                ("seed", json::num(self.cfg.faults.seed as f64)),
+                            ])
+                            .to_string(),
+                        );
+                    }
                 }
                 Flow::Continue
             }
@@ -541,7 +597,7 @@ impl ServeServer {
     }
 
     /// Close the pending batch and run it as one epoch, streaming the
-    /// decision lines and the 15-metric summary into `out`.
+    /// decision lines and the 18-metric summary into `out`.
     fn run_epoch(&mut self, out: &mut Vec<String>) {
         if self.pending.is_empty() {
             out.push(
@@ -761,6 +817,15 @@ fn remap_entry(e: &SimLogEntry, orig: &[usize]) -> SimLogEntry {
             lateness,
         },
         k @ SimLogKind::Replan { .. } => k,
+        // node ids are global (the epoch runs on the full network), so
+        // fault events only need the graph-id remap on Kill
+        k @ SimLogKind::NodeDown { .. } => k,
+        k @ SimLogKind::NodeUp { .. } => k,
+        SimLogKind::Kill { gid, node, wasted } => SimLogKind::Kill {
+            gid: rg(gid),
+            node,
+            wasted,
+        },
     };
     SimLogEntry { time: e.time, kind }
 }
@@ -769,7 +834,12 @@ fn remap_entry(e: &SimLogEntry, orig: &[usize]) -> SimLogEntry {
 
 /// Daemon options that live outside the resumable state: where the
 /// journal and telemetry export go, and the optional TCP listener.
-#[derive(Clone, Debug, Default)]
+/// Default NDJSON request-line cap: 1 MiB.  Covers any realistic trace
+/// document while bounding the buffer a hostile (or merely broken)
+/// client can make the daemon hold.
+pub const DEFAULT_MAX_LINE_BYTES: usize = 1 << 20;
+
+#[derive(Clone, Debug)]
 pub struct ServeOptions {
     pub snapshot_path: Option<String>,
     /// journal after every N handled request lines (0 = only on
@@ -777,12 +847,41 @@ pub struct ServeOptions {
     pub snapshot_every: u64,
     pub telemetry_path: Option<String>,
     pub listen: Option<String>,
+    /// longest accepted request line in bytes (`--max-line-bytes`);
+    /// longer lines are dropped with one `code:"range"` error line
+    pub max_line_bytes: usize,
 }
 
-/// Serialize the journal, write it, then count the write.
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            snapshot_path: None,
+            snapshot_every: 0,
+            telemetry_path: None,
+            listen: None,
+            max_line_bytes: DEFAULT_MAX_LINE_BYTES,
+        }
+    }
+}
+
+/// Write `contents` to `path` atomically: temp file in the same
+/// directory, fsync, rename.  A reader (or a restore after a hard kill
+/// mid-write) sees either the previous journal or the new one in full —
+/// never a truncated or interleaved document.
+fn write_atomic(path: &str, contents: &str) -> std::io::Result<()> {
+    let tmp = format!("{path}.tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(contents.as_bytes())?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+}
+
+/// Serialize the journal, write it atomically, then count the write.
 fn write_snapshot(server: &mut ServeServer, path: &str) -> bool {
     let doc = server.snapshot_json().to_string();
-    match std::fs::write(path, doc + "\n") {
+    match write_atomic(path, &(doc + "\n")) {
         Ok(()) => {
             server.note_snapshot_written();
             true
@@ -794,20 +893,87 @@ fn write_snapshot(server: &mut ServeServer, path: &str) -> bool {
     }
 }
 
+/// One bounded line read off the session input.
+enum LineRead {
+    Line(String),
+    /// the line ran past the cap; it was drained and dropped —
+    /// `.0` is its full byte length (without the terminator)
+    Oversized(usize),
+    Eof,
+}
+
+/// Read one `\n`-terminated line of at most `limit` content bytes.
+/// Never buffers more than `limit + 1` bytes of an oversized line: the
+/// rest is drained chunk-by-chunk through the `BufRead` window so a
+/// gigabyte line costs a bounded allocation.  Invalid UTF-8 is an
+/// `InvalidData` I/O error, exactly as `BufRead::lines` reported it.
+fn read_bounded_line<R: BufRead>(reader: &mut R, limit: usize) -> std::io::Result<LineRead> {
+    let mut buf = Vec::new();
+    let n = reader
+        .by_ref()
+        .take(limit as u64 + 1)
+        .read_until(b'\n', &mut buf)?;
+    if n == 0 {
+        return Ok(LineRead::Eof);
+    }
+    if buf.last() == Some(&b'\n') {
+        buf.pop();
+        if buf.last() == Some(&b'\r') {
+            buf.pop();
+        }
+    }
+    if buf.len() > limit {
+        let mut dropped = buf.len();
+        loop {
+            let chunk = reader.fill_buf()?;
+            if chunk.is_empty() {
+                break;
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(p) => {
+                    dropped += p;
+                    reader.consume(p + 1);
+                    break;
+                }
+                None => {
+                    let len = chunk.len();
+                    dropped += len;
+                    reader.consume(len);
+                }
+            }
+        }
+        return Ok(LineRead::Oversized(dropped));
+    }
+    let s = String::from_utf8(buf).map_err(|e| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, e.utf8_error().to_string())
+    })?;
+    Ok(LineRead::Line(s))
+}
+
 /// Drive one line-delimited session (stdin, or one TCP connection):
 /// responses stream out per request, the journal writes on its cadence.
-fn pump<R: BufRead, W: Write>(
+/// Public so the ingest property suite can drive the bounded-read I/O
+/// loop directly over an in-memory reader.
+pub fn pump<R: BufRead, W: Write>(
     server: &mut ServeServer,
-    reader: R,
+    mut reader: R,
     w: &mut W,
     opts: &ServeOptions,
 ) -> std::io::Result<SessionEnd> {
+    let limit = opts.max_line_bytes.max(1);
     let mut out = Vec::new();
-    for line in reader.lines() {
-        let line = line?;
+    loop {
+        let read = read_bounded_line(&mut reader, limit)?;
         out.clear();
         let before = server.lines_handled();
-        let flow = server.handle_line(&line, &mut out);
+        let flow = match read {
+            LineRead::Eof => return Ok(SessionEnd::Eof),
+            LineRead::Oversized(n) => {
+                server.reject_oversized(n, limit, &mut out);
+                Flow::Continue
+            }
+            LineRead::Line(line) => server.handle_line(&line, &mut out),
+        };
         for l in &out {
             writeln!(w, "{l}")?;
         }
@@ -828,7 +994,6 @@ fn pump<R: BufRead, W: Write>(
             Flow::Shutdown => return Ok(SessionEnd::Shutdown),
         }
     }
-    Ok(SessionEnd::Eof)
 }
 
 /// Graceful-exit tail: drain, final journal write, telemetry export.
@@ -960,6 +1125,7 @@ mod tests {
             jobs: 1,
             load: DEFAULT_LOAD,
             scenario: Scenario::default(),
+            faults: crate::sim::FaultConfig::NONE,
         }
     }
 
@@ -987,7 +1153,7 @@ mod tests {
         let v = Value::from_str(summaries[0]).unwrap();
         assert_eq!(v.get("epoch").and_then(|x| x.as_usize()), Some(0));
         let m = v.get("metrics").unwrap().as_object().unwrap();
-        assert_eq!(m.len(), 15, "the 15-metric block");
+        assert_eq!(m.len(), 18, "the 18-metric block");
         assert_eq!(s.epochs().len(), 1);
         assert!(s.pending().is_empty());
     }
@@ -1049,6 +1215,75 @@ mod tests {
         assert!(out.last().unwrap().contains("\"kind\":\"bye\""));
         // events of the partial epoch report the client's graph id
         assert!(out.iter().any(|l| l.contains("\"graph\":2")));
+    }
+
+    #[test]
+    fn inject_arms_faults_for_later_epochs() {
+        let mut s = ServeServer::new(cfg(1));
+        assert!(!s.config().faults.enabled());
+        let mut out = Vec::new();
+        s.handle_line(
+            "{\"op\":\"inject\",\"mtbf\":50,\"mttr\":5,\"seed\":9}",
+            &mut out,
+        );
+        assert_eq!(out.len(), 1);
+        assert!(out[0].contains("\"kind\":\"ack\""), "{out:?}");
+        assert!(out[0].contains("crash(50,5)"), "{out:?}");
+        assert!(s.config().faults.enabled());
+        assert_eq!(s.config().faults.seed, 9);
+        assert_eq!(
+            s.config().faults.model,
+            crate::sim::FaultModel::Crash { mtbf: 50.0, mttr: 5.0 }
+        );
+        // invalid parameters are a range reject, state untouched
+        let fp = s.state_fingerprint();
+        let before = s.config().faults;
+        let mut eout = Vec::new();
+        s.handle_line("{\"op\":\"inject\",\"mtbf\":0,\"mttr\":5}", &mut eout);
+        assert_eq!(eout.len(), 1);
+        assert!(eout[0].contains("\"code\":\"range\""), "{eout:?}");
+        assert_eq!(s.state_fingerprint(), fp);
+        assert_eq!(s.config().faults, before);
+    }
+
+    #[test]
+    fn bounded_reader_caps_lines_and_recovers() {
+        use std::io::BufReader;
+        let limit = 8;
+        // exactly at the cap passes, one byte over is dropped whole,
+        // and the next line is still read intact
+        let input = b"12345678\n123456789\nok\n";
+        let mut r = BufReader::with_capacity(4, &input[..]);
+        match read_bounded_line(&mut r, limit).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, "12345678"),
+            _ => panic!("exact-limit line must pass"),
+        }
+        match read_bounded_line(&mut r, limit).unwrap() {
+            LineRead::Oversized(n) => assert_eq!(n, 9),
+            _ => panic!("limit+1 line must be oversized"),
+        }
+        match read_bounded_line(&mut r, limit).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, "ok"),
+            _ => panic!("stream must recover after an oversized line"),
+        }
+        assert!(matches!(
+            read_bounded_line(&mut r, limit).unwrap(),
+            LineRead::Eof
+        ));
+    }
+
+    #[test]
+    fn oversized_reject_is_one_range_error() {
+        let mut s = ServeServer::new(cfg(1));
+        let mut out = Vec::new();
+        s.handle_line("{\"op\":\"arrive\",\"graph\":0}", &mut out);
+        let fp = s.state_fingerprint();
+        out.clear();
+        s.reject_oversized(2048, 1024, &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].contains("\"kind\":\"error\""));
+        assert!(out[0].contains("\"code\":\"range\""));
+        assert_eq!(s.state_fingerprint(), fp);
     }
 
     #[test]

@@ -36,6 +36,16 @@ pub enum Request {
     Snapshot,
     /// One-line JSON snapshot of the telemetry registry + server state.
     Stats,
+    /// Arm a crash/restart fault model for every epoch run after this
+    /// line (`mtbf`/`mttr` in simulated seconds; optional `seed`
+    /// defaults to [`crate::sim::DEFAULT_FAULT_SEED`]).  Parameter
+    /// *validity* (positive, finite) is checked server-side against
+    /// [`crate::sim::FaultModel::validate`] → `code:"range"`.
+    Inject {
+        mtbf: f64,
+        mttr: f64,
+        seed: Option<u64>,
+    },
     /// Hard stop *without* drain — the crash-simulation half of the
     /// snapshot/restore workflow.
     Quit,
@@ -98,12 +108,44 @@ pub fn parse_request(line: &str) -> Result<Request, Reject> {
             })
         }
         "run" => Ok(Request::Run),
+        "inject" => {
+            let mtbf = float_field(&v, "inject", "mtbf")?;
+            let mttr = float_field(&v, "inject", "mttr")?;
+            let seed = match v.get("seed") {
+                None => None,
+                Some(s) => Some(seed_value(s)?),
+            };
+            Ok(Request::Inject { mtbf, mttr, seed })
+        }
         "snapshot" => Ok(Request::Snapshot),
         "stats" => Ok(Request::Stats),
         "quit" => Ok(Request::Quit),
         "shutdown" => Ok(Request::Shutdown),
         other => Err(Reject::new("op", format!("unknown op {other:?}"))),
     }
+}
+
+/// A required numeric field (shape check only — range/validity checks
+/// are the server's, which owns the fault model).
+fn float_field(v: &Value, op: &str, name: &str) -> Result<f64, Reject> {
+    v.get(name)
+        .ok_or_else(|| Reject::new("field", format!("{op}: missing \"{name}\"")))?
+        .as_f64()
+        .ok_or_else(|| Reject::new("field", format!("{op}: \"{name}\" must be a number")))
+}
+
+/// A seed must be a non-negative integer-valued JSON number.
+fn seed_value(v: &Value) -> Result<u64, Reject> {
+    let x = v
+        .as_f64()
+        .ok_or_else(|| Reject::new("field", "\"seed\" must be a number"))?;
+    if !x.is_finite() || x.fract() != 0.0 || x < 0.0 || x >= u64::MAX as f64 {
+        return Err(Reject::new(
+            "field",
+            format!("\"seed\" must be a non-negative integer, got {x}"),
+        ));
+    }
+    Ok(x as u64)
 }
 
 /// A graph id must be a non-negative integer-valued JSON number (no
@@ -162,6 +204,22 @@ mod tests {
             Request::Snapshot
         );
         assert_eq!(parse_request(r#"{"op":"stats"}"#).unwrap(), Request::Stats);
+        assert_eq!(
+            parse_request(r#"{"op":"inject","mtbf":50,"mttr":5}"#).unwrap(),
+            Request::Inject {
+                mtbf: 50.0,
+                mttr: 5.0,
+                seed: None
+            }
+        );
+        assert_eq!(
+            parse_request(r#"{"op":"inject","mtbf":50,"mttr":5,"seed":7}"#).unwrap(),
+            Request::Inject {
+                mtbf: 50.0,
+                mttr: 5.0,
+                seed: Some(7)
+            }
+        );
         assert_eq!(parse_request(r#"{"op":"quit"}"#).unwrap(), Request::Quit);
         assert_eq!(
             parse_request(r#"{"op":"shutdown"}"#).unwrap(),
@@ -197,6 +255,11 @@ mod tests {
             (r#"{"op":"arrive","graph":1.5}"#, "field"),
             (r#"{"op":"arrive","graph":-1}"#, "field"),
             (r#"{"op":"arrive","graph":1e300}"#, "field"),
+            (r#"{"op":"inject"}"#, "field"),
+            (r#"{"op":"inject","mtbf":50}"#, "field"),
+            (r#"{"op":"inject","mtbf":"50","mttr":5}"#, "field"),
+            (r#"{"op":"inject","mtbf":50,"mttr":5,"seed":-1}"#, "field"),
+            (r#"{"op":"inject","mtbf":50,"mttr":5,"seed":1.5}"#, "field"),
             (r#"{"format":17}"#, "shape"),
         ] {
             let rej = parse_request(line).unwrap_err();

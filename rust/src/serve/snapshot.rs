@@ -53,7 +53,7 @@ pub fn controller_json(c: &Controller) -> Value {
 /// or the coordinator construction is present; restore requires the
 /// stored block to equal the CLI-resolved one field-for-field.
 pub fn config_json(cfg: &ServeConfig) -> Value {
-    json::obj(vec![
+    let mut fields = vec![
         ("dataset", json::s(cfg.dataset.name())),
         ("graphs", json::num(cfg.n_graphs as f64)),
         ("seed", json::num(cfg.seed as f64)),
@@ -64,7 +64,16 @@ pub fn config_json(cfg: &ServeConfig) -> Value {
         ("jobs", json::num(cfg.jobs as f64)),
         ("load", json::num(cfg.load)),
         ("scenario", json::s(&cfg.scenario.label())),
-    ])
+    ];
+    // Only fault sessions carry fault fields, so zero-fault snapshots
+    // stay byte-identical to the pre-fault format (old journals restore
+    // unchanged).  The model label encodes every parameter distinctly
+    // (`crash(50,5)`), mirroring the controller-label convention above.
+    if cfg.faults.enabled() {
+        fields.push(("fault_model", json::s(&cfg.faults.model.label())));
+        fields.push(("fault_seed", json::num(cfg.faults.seed as f64)));
+    }
+    json::obj(fields)
 }
 
 /// The restorable state parsed out of a snapshot document.
@@ -158,6 +167,7 @@ mod tests {
             jobs: 1,
             load: DEFAULT_LOAD,
             scenario: Scenario::default(),
+            faults: crate::sim::FaultConfig::NONE,
         }
     }
 
@@ -191,6 +201,38 @@ mod tests {
             threshold: 0.25,
         });
         assert!(parse(&doc, &c).unwrap_err().contains("mismatch"));
+        // a fault session refuses a fault-free journal (and vice versa):
+        // the decision stream depends on the fault model
+        let mut f = cfg();
+        f.faults.model = crate::sim::FaultModel::Crash {
+            mtbf: 50.0,
+            mttr: 5.0,
+        };
+        assert!(parse(&doc, &f).unwrap_err().contains("mismatch"));
+    }
+
+    #[test]
+    fn fault_config_round_trips_and_gates_fields() {
+        let plain = cfg();
+        let plain_doc = config_json(&plain).to_string();
+        assert!(!plain_doc.contains("fault_model"), "{plain_doc}");
+        let mut f = cfg();
+        f.faults.model = crate::sim::FaultModel::Crash {
+            mtbf: 50.0,
+            mttr: 5.0,
+        };
+        f.faults.seed = 9;
+        let fdoc = config_json(&f).to_string();
+        assert!(fdoc.contains("\"fault_model\":\"crash(50,5)\""), "{fdoc}");
+        assert!(fdoc.contains("\"fault_seed\":9"), "{fdoc}");
+        // differing fault seeds are a mismatch too
+        let mut g = f.clone();
+        g.faults.seed = 10;
+        assert_ne!(config_json(&f), config_json(&g));
+        assert_eq!(config_json(&f), {
+            let h = f.clone();
+            config_json(&h)
+        });
     }
 
     #[test]

@@ -100,11 +100,14 @@ use crate::coordinator::{CompositeWorkspace, DynamicProblem, Policy};
 use crate::dense::{DenseIds, DenseMap, DenseSet};
 use crate::graph::Gid;
 use crate::metrics::{ideal_response, MetricRow, PreemptionCost};
-use crate::policy::{Decision, FinishObservation, PreemptionPolicy, ScopeOrder};
+use crate::policy::{
+    Decision, FailureObservation, FinishObservation, PreemptionPolicy, ScopeOrder,
+};
 use crate::robustness::StableNoise;
 use crate::schedule::{Assignment, Schedule};
 use crate::schedulers::Scheduler;
 use crate::sim::events::{EventQueue, SimEvent, SimLogEntry, SimLogKind};
+use crate::sim::faults::{FaultConfig, Faults};
 use crate::telemetry;
 
 /// How the coordinator reacts to observed lateness.
@@ -150,6 +153,12 @@ pub struct SimConfig {
     /// default: the incremental refresh is bit-identical and
     /// output-sensitive.
     pub full_refresh: bool,
+    /// Fault injection ([`FaultConfig::NONE`] by default).  With the
+    /// model off the simulator enqueues no fault events and touches no
+    /// fault state, so every schedule, log, replan record, metric and
+    /// trace byte is identical to a faultless build (the zero-fault
+    /// bit-identity pin of `rust/tests/faults.rs`).
+    pub faults: FaultConfig,
 }
 
 /// One rescheduling pass of a simulated run.
@@ -158,6 +167,12 @@ pub struct ReplanRecord {
     pub time: f64,
     /// true = straggler-triggered, false = arrival-time policy replan
     pub straggler: bool,
+    /// true = failure-triggered (a node crash forced the revert of its
+    /// orphaned work); failure replans are also `straggler: true` — they
+    /// are reactive, not arrival-driven — so every existing
+    /// straggler-side accounting covers them, and this flag carves the
+    /// forced subset out
+    pub failure: bool,
     /// previously scheduled tasks reverted by this pass
     pub n_reverted: usize,
     /// composite size handed to the base heuristic
@@ -227,16 +242,41 @@ pub struct SimResult {
     /// feature; always 0 otherwise).  The memory-layout observability
     /// counter: `allocs` columns in BENCH_hotpath.json come from here.
     pub replan_allocs: u64,
+    /// Partial work lost to crash kills, in simulated seconds (a killed
+    /// attempt's progress from its realized start to the crash instant).
+    pub wasted_work_s: f64,
+    /// Running attempts killed by crashes (one task killed twice counts
+    /// twice here, once in `n_reexecuted`).
+    pub n_killed: usize,
+    /// Tasks that were killed at least once and later re-executed to
+    /// completion.  Conservation: with the run complete this equals the
+    /// number of distinct killed tasks.
+    pub n_reexecuted: usize,
+    /// Total simulated downtime across completed crash windows.
+    pub recovery_total_s: f64,
+    /// Crash windows that completed (the node came back).
+    pub n_recoveries: usize,
+    /// Whether a fault model was active ([`FaultConfig::enabled`]) —
+    /// lets exporters gate fault fields so default traces stay
+    /// byte-identical.
+    pub faults_enabled: bool,
 }
 
 impl SimResult {
     pub fn metrics(&self, prob: &DynamicProblem) -> MetricRow {
-        MetricRow::compute(
+        let mut row = MetricRow::compute(
             &self.schedule,
             &prob.graphs,
             &prob.network,
             self.sched_runtime_s,
-        )
+        );
+        // fault accounting cannot be recovered from the realized
+        // schedule (killed attempts leave no trace there) — threaded
+        // from the run like runtime_s; all-zero when faults are off
+        row.wasted_work_s = self.wasted_work_s;
+        row.n_reexecuted = self.n_reexecuted as f64;
+        row.mean_recovery_latency = self.mean_recovery_latency();
+        row
     }
 
     pub fn n_replans(&self) -> usize {
@@ -245,6 +285,21 @@ impl SimResult {
 
     pub fn n_straggler_replans(&self) -> usize {
         self.replans.iter().filter(|r| r.straggler).count()
+    }
+
+    /// Failure-triggered (crash-forced) replans only.
+    pub fn n_failure_replans(&self) -> usize {
+        self.replans.iter().filter(|r| r.failure).count()
+    }
+
+    /// Mean simulated downtime per completed crash window (0.0 when no
+    /// node ever recovered — faultless runs included).
+    pub fn mean_recovery_latency(&self) -> f64 {
+        if self.n_recoveries == 0 {
+            0.0
+        } else {
+            self.recovery_total_s / self.n_recoveries as f64
+        }
     }
 
     pub fn n_reverted_total(&self) -> usize {
@@ -356,6 +411,38 @@ struct Sim<'a> {
     /// resolved refresh mode: [`SimConfig::full_refresh`] or the
     /// `DTS_FULL_REFRESH` env var
     full_refresh: bool,
+    /// fault injector (inert when the model is [`FaultConfig::NONE`]);
+    /// crash/recovery instants are a pure function of
+    /// `(fault_seed, node)` — policy-, dispatch-order- and
+    /// thread-count-independent
+    faults: Faults,
+    /// per node: currently inside a crash window
+    node_down: Vec<bool>,
+    /// per node: recovery instant of the current crash window while
+    /// down, else 0.0 — the belief floor every re-derivation targeting
+    /// the node applies (guarded, so the zero-fault path is untouched)
+    fault_floor: Vec<f64>,
+    /// per node: index of the next crash window to draw
+    fault_k: Vec<usize>,
+    /// per task (dense): execution attempt, bumped when a crash kills
+    /// the running attempt so the in-flight `TaskFinish` dies on pop
+    attempt: Vec<u32>,
+    /// per task (dense): killed at least once (re-execution accounting)
+    was_killed: Vec<bool>,
+    /// tasks completed so far — crash windows stop re-arming once the
+    /// workload drains
+    n_done: usize,
+    /// a crash reshaped the dispatched truth since the last refresh:
+    /// the next refresh runs the full oracle (a killed slot sits inside
+    /// the dispatched prefix, which the incremental seeds never touch;
+    /// crashes are rare, so the occasional full pass is cheap)
+    fault_dirty: bool,
+    // --- fault accounting (see the SimResult fields of the same name) ---
+    wasted_s: f64,
+    n_killed: usize,
+    n_reexecuted: usize,
+    recovery_total_s: f64,
+    n_recoveries: usize,
     /// tasks that started or finished since the last belief refresh —
     /// together with the currently running set, the only dispatched
     /// entries whose observed truth can have diverged from the belief
@@ -423,20 +510,40 @@ enum RevertSel {
     /// The `k` most deadline-endangered incomplete graphs, ranked by
     /// belief slack ([`ScopeOrder::DeadlineUrgency`]).
     Urgent(usize),
+    /// The forced scope of a failure replan: every graph with
+    /// planned-but-undispatched work on the crashed node (the killed
+    /// attempt is pending again when this is evaluated, so its graph is
+    /// captured by the same walk).  Ascending graph index; never
+    /// capped.
+    Node(usize),
 }
 
 impl<'a> Sim<'a> {
     fn new(prob: &'a DynamicProblem, cfg: SimConfig) -> Self {
         let n = prob.network.n_nodes();
+        let faults = Faults::new(cfg.faults);
         // §Perf: pre-reserve the event heap from the instance — the
         // up-front arrivals, one in-flight finish per running task, one
         // live start decision per idle node (deduplicated; see
         // `pending_start`), plus headroom for replan-invalidated starts
-        // — so the steady-state loop never grows the allocation.
-        let mut queue =
-            EventQueue::with_capacity(prob.total_tasks() * 2 + prob.graphs.len());
+        // — so the steady-state loop never grows the allocation.  Crash
+        // runs add at most one armed down/up pair per node (re-execution
+        // starts may still grow the heap there; only the zero-fault
+        // reservation is pinned).
+        let fault_cap = if faults.crashes() { 2 * n } else { 0 };
+        let mut queue = EventQueue::with_capacity(
+            prob.total_tasks() * 2 + prob.graphs.len() + fault_cap,
+        );
         for (i, (arrival, _)) in prob.graphs.iter().enumerate() {
             queue.push(*arrival, SimEvent::GraphArrival { idx: i });
+        }
+        if faults.crashes() {
+            // arm window 0 of every node; subsequent windows are armed
+            // by each NodeUp, keeping ≤ 2 fault events per node queued
+            for v in 0..n {
+                let (down, _) = faults.window(v, 0).expect("Crash model draws windows");
+                queue.push(down, SimEvent::NodeDown { node: v });
+            }
         }
         let ids = prob.dense_ids();
         let nt = ids.len();
@@ -466,6 +573,19 @@ impl<'a> Sim<'a> {
             replan_allocs: 0,
             events_peak: 0,
             full_refresh: cfg.full_refresh || full_refresh_forced(),
+            faults,
+            node_down: vec![false; n],
+            fault_floor: vec![0.0; n],
+            fault_k: vec![0; n],
+            attempt: vec![0; nt],
+            was_killed: vec![false; nt],
+            n_done: 0,
+            fault_dirty: false,
+            wasted_s: 0.0,
+            n_killed: 0,
+            n_reexecuted: 0,
+            recovery_total_s: 0.0,
+            n_recoveries: 0,
             dirty_dispatched: Vec::new(),
             refresh_order: vec![Vec::new(); n],
             refresh_next: vec![0; n],
@@ -562,6 +682,9 @@ impl<'a> Sim<'a> {
             if self.node_running[v].is_some() {
                 continue;
             }
+            if self.node_down[v] {
+                continue; // crashed: nothing dispatches until NodeUp
+            }
             let c = self.cursor[v];
             if c >= self.plan.timelines().n_slots(v) {
                 continue;
@@ -619,7 +742,11 @@ impl<'a> Sim<'a> {
     /// Dispatches between the incremental dirty-cone refresh (default)
     /// and the retained full-plan oracle — the two are bit-identical.
     fn refresh_belief(&mut self, now: f64, revert: &[Gid]) -> usize {
-        if self.full_refresh {
+        // a crash since the last refresh voids the incremental seeds'
+        // staleness argument (the killed slot sat inside the dispatched
+        // prefix): run the full oracle once, then resume incrementally
+        let fault_dirty = std::mem::take(&mut self.fault_dirty);
+        if self.full_refresh || fault_dirty {
             self.refresh_belief_full(now, revert)
         } else {
             self.refresh_belief_incremental(now, revert)
@@ -714,6 +841,12 @@ impl<'a> Sim<'a> {
                     let gid = self.refresh_order[v][self.refresh_next[v]];
                     let (arrival, g) = &self.prob.graphs[gid.graph as usize];
                     let mut start = arrival.max(now).max(self.node_tail[v]);
+                    // crashed-node belief floor: nothing runs before the
+                    // recovery instant (guarded — 0.0 while up, so the
+                    // zero-fault path stays bit-identical)
+                    if self.fault_floor[v] > start {
+                        start = self.fault_floor[v];
+                    }
                     for &(p, data) in g.predecessors(gid.task as usize) {
                         let pgid = Gid::new(gid.graph as usize, p);
                         match self.plan.get(pgid) {
@@ -843,7 +976,13 @@ impl<'a> Sim<'a> {
         self.fix.clear();
         let mut fix = std::mem::take(&mut self.fix);
         for &gid in &cand {
-            debug_assert!(self.dispatched(gid));
+            if !self.dispatched(gid) {
+                // a crash killed this attempt since it was recorded; the
+                // slot rejoins the pending set through the forced
+                // failure replan's full refresh (fault runs only —
+                // without faults every candidate is still dispatched)
+                continue;
+            }
             let truth = self.truth_of(gid, now);
             let pa = self
                 .plan
@@ -1036,6 +1175,10 @@ impl<'a> Sim<'a> {
             let (arrival, g) = &self.prob.graphs[gid.graph as usize];
             // same accumulation order as the oracle, for bit-exactness
             let mut start = arrival.max(now).max(self.node_tail[v]);
+            // crashed-node belief floor, exactly as in the oracle
+            if self.fault_floor[v] > start {
+                start = self.fault_floor[v];
+            }
             for &(p, data) in g.predecessors(gid.task as usize) {
                 let pgid = Gid::new(gid.graph as usize, p);
                 let pa = self
@@ -1222,9 +1365,17 @@ impl ReactiveCoordinator {
                         continue; // invalidated by a replan or newer decision
                     }
                     debug_assert!(sim.node_running[node].is_none());
+                    debug_assert!(!sim.node_down[node], "dispatch onto a crashed node");
                     let g = &prob.graphs[gid.graph as usize].1;
                     let est = prob.network.exec_time(g.cost(gid.task as usize), node);
-                    let rdur = est * sim.noise.factor(gid);
+                    let mut rdur = est * sim.noise.factor(gid);
+                    if sim.faults.enabled() {
+                        // Degrade stretches the realized duration of a
+                        // task *starting* inside a slowdown window (the
+                        // multiply is gated, not the 1.0 factor, so the
+                        // zero-fault event math never runs fault code)
+                        rdur *= sim.faults.degrade_factor(node, t);
+                    }
                     sim.realized.assign(
                         gid,
                         Assignment {
@@ -1239,15 +1390,23 @@ impl ReactiveCoordinator {
                     sim.node_free[node] = t + rdur;
                     sim.cursor[node] += 1;
                     sim.dirty_dispatched.push(gid);
-                    sim.queue.push(t + rdur, SimEvent::TaskFinish { gid });
+                    let attempt = sim.attempt[sim.ids.ix(gid)];
+                    sim.queue.push(t + rdur, SimEvent::TaskFinish { gid, attempt });
                     sim.log.push(SimLogEntry {
                         time: t,
                         kind: SimLogKind::Start { gid, node },
                     });
                 }
-                SimEvent::TaskFinish { gid } => {
+                SimEvent::TaskFinish { gid, attempt } => {
+                    if attempt != sim.attempt[sim.ids.ix(gid)] {
+                        continue; // the attempt was killed by a crash
+                    }
                     let a = *sim.realized.get(gid).unwrap();
                     sim.completed[sim.ids.ix(gid)] = true;
+                    sim.n_done += 1;
+                    if sim.was_killed[sim.ids.ix(gid)] {
+                        sim.n_reexecuted += 1; // a killed task made it through
+                    }
                     debug_assert_eq!(sim.node_running[a.node], Some(gid));
                     sim.node_running[a.node] = None;
                     sim.dirty_dispatched.push(gid);
@@ -1308,6 +1467,7 @@ impl ReactiveCoordinator {
                                 None,
                                 true,
                                 scope.max_reverted,
+                                false,
                             );
                             if let Some(n_reverted) = ran {
                                 if let Some(p) = self.preemption.as_mut() {
@@ -1330,6 +1490,154 @@ impl ReactiveCoordinator {
                                 }
                             }
                         }
+                    }
+                    sim.dispatch_all(t);
+                }
+                SimEvent::NodeDown { node } => {
+                    // drained workload: remaining armed windows are
+                    // inert no-ops (no log, no state — NodeUp stops
+                    // re-arming, so the queue empties)
+                    if sim.n_done == prob.total_tasks() {
+                        continue;
+                    }
+                    debug_assert!(!sim.node_down[node], "crash windows overlap");
+                    let k = sim.fault_k[node];
+                    let (down, up) =
+                        sim.faults.window(node, k).expect("crash event without window");
+                    debug_assert_eq!(down.to_bits(), t.to_bits());
+                    sim.node_down[node] = true;
+                    sim.fault_floor[node] = up;
+                    // EFT mask: the heuristic can keep placing on the
+                    // node, but never before the recovery instant
+                    sim.plan.timelines_mut().set_avail_floor(node, up);
+                    // the node frees at recovery, whatever it was doing
+                    // (a running attempt's phantom finish is void — the
+                    // kill below voids the attempt itself)
+                    sim.node_free[node] = up;
+                    let mut wasted = 0.0;
+                    let mut killed = false;
+                    if let Some(gid) = sim.node_running[node].take() {
+                        let a = *sim.realized.get(gid).unwrap();
+                        wasted = t - a.start;
+                        killed = true;
+                        let ix = sim.ids.ix(gid);
+                        sim.attempt[ix] += 1; // in-flight finish dies on pop
+                        sim.was_killed[ix] = true;
+                        sim.realized.unassign(gid);
+                        // the killed slot is pending again; it was the
+                        // last dispatched slot (one task runs at a
+                        // time), so shrinking the prefix by one restores
+                        // the cursor invariant
+                        sim.cursor[node] -= 1;
+                        sim.wasted_s += wasted;
+                        sim.n_killed += 1;
+                        sim.log.push(SimLogEntry {
+                            time: t,
+                            kind: SimLogKind::Kill { gid, node, wasted },
+                        });
+                        telemetry::counter_inc(telemetry::Counter::TaskKills);
+                    }
+                    sim.node_epoch[node] += 1; // queued start decisions die
+                    sim.pending_start[node] = None;
+                    sim.fault_dirty = true; // next refresh = full oracle
+                    sim.log.push(SimLogEntry {
+                        time: t,
+                        kind: SimLogKind::NodeDown { node, wasted },
+                    });
+                    telemetry::counter_inc(telemetry::Counter::NodeFailures);
+                    sim.queue.push(up, SimEvent::NodeUp { node });
+                    // forced failure replan: revert the orphaned scope,
+                    // uncapped (skipped when the node held no planned
+                    // undispatched work — then there is nothing to move)
+                    let ran = self.replan_scoped(
+                        &mut sim,
+                        t,
+                        RevertSel::Node(node),
+                        None,
+                        true,
+                        usize::MAX,
+                        true,
+                    );
+                    let n_orphaned = ran.unwrap_or(0);
+                    if let Some(n_reverted) = ran {
+                        if let Some(p) = self.preemption.as_mut() {
+                            // Budgeted charges forced reverts against
+                            // its bucket (documented overdraw)
+                            p.on_replan(t, n_reverted);
+                        }
+                    }
+                    // the controller may extend the recovery with extra
+                    // scope of its own (FailureAware reverts endangered
+                    // neighbors; the default holds)
+                    let decision = self.preemption.as_mut().map(|p| {
+                        p.on_failure(&FailureObservation {
+                            node,
+                            time: t,
+                            n_orphaned,
+                            killed,
+                            arrived: sim.arrived,
+                        })
+                    });
+                    if let Some(Decision::Reschedule(scope)) = decision {
+                        let sel = match scope.order {
+                            ScopeOrder::Recency => {
+                                let lo = sim.arrived - scope.last_k.min(sim.arrived);
+                                RevertSel::Range(lo..sim.arrived)
+                            }
+                            ScopeOrder::DeadlineUrgency => {
+                                RevertSel::Urgent(scope.last_k)
+                            }
+                        };
+                        let ran = self.replan_scoped(
+                            &mut sim,
+                            t,
+                            sel,
+                            None,
+                            true,
+                            scope.max_reverted,
+                            true,
+                        );
+                        if let Some(n_reverted) = ran {
+                            if let Some(p) = self.preemption.as_mut() {
+                                p.on_replan(t, n_reverted);
+                            }
+                        }
+                    }
+                    sim.dispatch_all(t);
+                }
+                SimEvent::NodeUp { node } => {
+                    // a NodeUp is only ever armed by a processed
+                    // NodeDown, so the node is genuinely down — even if
+                    // the workload drained mid-window, recovery
+                    // accounting completes the pair
+                    debug_assert!(sim.node_down[node], "recovery without a crash");
+                    let k = sim.fault_k[node];
+                    let (down, up) =
+                        sim.faults.window(node, k).expect("recovery event without window");
+                    debug_assert_eq!(up.to_bits(), t.to_bits());
+                    sim.fault_k[node] = k + 1;
+                    sim.node_down[node] = false;
+                    sim.fault_floor[node] = 0.0;
+                    sim.plan.timelines_mut().clear_avail_floor(node);
+                    let downtime = t - down;
+                    sim.recovery_total_s += downtime;
+                    sim.n_recoveries += 1;
+                    sim.log.push(SimLogEntry {
+                        time: t,
+                        kind: SimLogKind::NodeUp { node, downtime },
+                    });
+                    telemetry::counter_inc(telemetry::Counter::NodeRecoveries);
+                    telemetry::hist_record(
+                        telemetry::Hist::RecoveryNs,
+                        (downtime * 1e9) as u64,
+                    );
+                    // re-arm the next crash window while work remains
+                    if sim.n_done < prob.total_tasks() {
+                        let (next_down, _) = sim
+                            .faults
+                            .window(node, k + 1)
+                            .expect("Crash model draws windows");
+                        sim.queue.push(next_down, SimEvent::NodeDown { node });
                     }
                     sim.dispatch_all(t);
                 }
@@ -1367,6 +1675,12 @@ impl ReactiveCoordinator {
             bookkeep_wall_s: sim.bookkeep_wall_s,
             events_peak: sim.events_peak,
             replan_allocs: sim.replan_allocs,
+            wasted_work_s: sim.wasted_s,
+            n_killed: sim.n_killed,
+            n_reexecuted: sim.n_reexecuted,
+            recovery_total_s: sim.recovery_total_s,
+            n_recoveries: sim.n_recoveries,
+            faults_enabled: sim.faults.enabled(),
         }
     }
 
@@ -1380,7 +1694,7 @@ impl ReactiveCoordinator {
         new_graph: Option<usize>,
         straggler: bool,
     ) -> Option<usize> {
-        self.replan_scoped(sim, now, sel, new_graph, straggler, usize::MAX)
+        self.replan_scoped(sim, now, sel, new_graph, straggler, usize::MAX, false)
     }
 
     /// One rescheduling pass at time `now`: revert the still-pending
@@ -1405,6 +1719,7 @@ impl ReactiveCoordinator {
         new_graph: Option<usize>,
         straggler: bool,
         max_reverted: usize,
+        failure: bool,
     ) -> Option<usize> {
         let wall0 = Instant::now();
         let allocs0 = crate::alloc_count::alloc_count();
@@ -1431,6 +1746,24 @@ impl ReactiveCoordinator {
                 // lands at the tail where the cap keeps it
                 sim.select_urgent(k);
                 for &(_, j) in &sim.urgency {
+                    push_graph(sim, &mut pending, j);
+                }
+            }
+            RevertSel::Node(v) => {
+                // every pending slot on the crashed node names an
+                // orphaned graph (the walk starts at the cursor: the
+                // dispatched prefix stays frozen, crash or not).  Small
+                // per-failure allocation — crashes are rare events, the
+                // zero-alloc steady-state claim covers the fault-free
+                // path only.
+                let mut graphs: Vec<usize> = sim.plan.timelines().slot_gids(v)
+                    [sim.cursor[v]..]
+                    .iter()
+                    .map(|g| g.graph as usize)
+                    .collect();
+                graphs.sort_unstable();
+                graphs.dedup();
+                for j in graphs {
                     push_graph(sim, &mut pending, j);
                 }
             }
@@ -1529,6 +1862,9 @@ impl ReactiveCoordinator {
         if straggler {
             telemetry::counter_inc(telemetry::Counter::StragglerReplans);
         }
+        if failure {
+            telemetry::counter_inc(telemetry::Counter::FailureReplans);
+        }
         telemetry::hist_record(telemetry::Hist::ReplanWallNs, (wall_s * 1e9) as u64);
         telemetry::hist_record(telemetry::Hist::BookkeepWallNs, (bookkeep_s * 1e9) as u64);
         telemetry::hist_record(telemetry::Hist::ConeSize, n_refreshed as u64);
@@ -1549,6 +1885,7 @@ impl ReactiveCoordinator {
         sim.replans.push(ReplanRecord {
             time: now,
             straggler,
+            failure,
             n_reverted,
             n_pending,
             n_refreshed,
@@ -1610,6 +1947,7 @@ mod tests {
                         reaction,
                         record_frozen: false,
                         full_refresh: false,
+                        faults: crate::sim::FaultConfig::NONE,
                     };
                     let mut rc =
                         ReactiveCoordinator::new(Policy::NonPreemptive, kind.make(0), cfg);
@@ -1642,6 +1980,7 @@ mod tests {
                 reaction: Reaction::None,
                 record_frozen: false,
                 full_refresh: false,
+                faults: crate::sim::FaultConfig::NONE,
             };
             let mut rc = ReactiveCoordinator::new(policy, SchedulerKind::Heft.make(0), cfg);
             let got = rc.run(&prob);
@@ -1665,6 +2004,7 @@ mod tests {
                 },
                 record_frozen: false,
                 full_refresh: false,
+                faults: crate::sim::FaultConfig::NONE,
             };
             let mut rc = ReactiveCoordinator::new(policy, SchedulerKind::Heft.make(0), cfg);
             let res = rc.run(&prob);
@@ -1695,6 +2035,7 @@ mod tests {
                 reaction,
                 record_frozen: false,
                 full_refresh: false,
+                faults: crate::sim::FaultConfig::NONE,
             };
             let mut rc =
                 ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
@@ -1721,6 +2062,7 @@ mod tests {
             },
             record_frozen: false,
             full_refresh: false,
+            faults: crate::sim::FaultConfig::NONE,
         };
         let mut rc =
             ReactiveCoordinator::new(Policy::NonPreemptive, SchedulerKind::Heft.make(0), cfg);
@@ -1748,6 +2090,7 @@ mod tests {
             },
             record_frozen: true,
             full_refresh: false,
+            faults: crate::sim::FaultConfig::NONE,
         };
         let mut rc =
             ReactiveCoordinator::new(Policy::Preemptive, SchedulerKind::Cpop.make(0), cfg);
@@ -1774,6 +2117,7 @@ mod tests {
             },
             record_frozen: false,
             full_refresh: false,
+            faults: crate::sim::FaultConfig::NONE,
         };
         let run = || {
             let mut rc =
@@ -1805,6 +2149,7 @@ mod tests {
                 },
                 record_frozen: false,
                 full_refresh: full,
+                faults: crate::sim::FaultConfig::NONE,
             };
             let mut rc =
                 ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
@@ -1849,6 +2194,7 @@ mod tests {
                 reaction,
                 record_frozen: false,
                 full_refresh: false,
+                faults: crate::sim::FaultConfig::NONE,
             };
             let mut rc =
                 ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
@@ -1873,6 +2219,7 @@ mod tests {
             },
             record_frozen: false,
             full_refresh: false,
+            faults: crate::sim::FaultConfig::NONE,
         };
         let rc = ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(0), cfg);
         assert_eq!(rc.label(), "5P-HEFT σ0.30 L3@0.25");
@@ -1996,6 +2343,7 @@ mod tests {
             reaction: Reaction::None,
             record_frozen: true,
             full_refresh: false,
+            faults: crate::sim::FaultConfig::NONE,
         };
         let spec = PolicySpec::DeadlineAware {
             k: 4,
@@ -2030,6 +2378,7 @@ mod tests {
             reaction: Reaction::None,
             record_frozen: true,
             full_refresh: false,
+            faults: crate::sim::FaultConfig::NONE,
         };
         let spec = PolicySpec::Budgeted {
             k: 3,

@@ -22,23 +22,38 @@ use crate::graph::Gid;
 /// One simulator event.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum SimEvent {
-    /// A task's realized execution completed.
-    TaskFinish { gid: Gid },
+    /// A task's realized execution completed.  `attempt` stamps which
+    /// execution attempt scheduled this finish: a crash that kills the
+    /// running attempt bumps the task's attempt counter, so the killed
+    /// attempt's already-queued finish pops as stale and is dropped
+    /// (fault runs only — without faults every task has one attempt).
+    TaskFinish { gid: Gid, attempt: u32 },
     /// Graph `idx` of the dynamic problem arrives.
     GraphArrival { idx: usize },
     /// Start `gid` on `node` — valid only while `epoch` matches the
     /// node's current dispatch epoch (replans and newer dispatch
     /// decisions invalidate older ones by bumping the epoch).
     TaskStart { gid: Gid, node: usize, epoch: u64 },
+    /// `node` crashes ([`crate::sim::faults::FaultModel::Crash`] only;
+    /// never enqueued when faults are off — the zero-fault bit-identity
+    /// guarantee rides on the push history being untouched).
+    NodeDown { node: usize },
+    /// `node` recovers from the crash window that downed it.
+    NodeUp { node: usize },
 }
 
 impl SimEvent {
-    /// Same-timestamp rank: Finish < Arrival < Start (see module doc).
+    /// Same-timestamp rank: Finish < Arrival < Start < Down < Up (see
+    /// module doc).  A task finishing exactly at a crash instant counts
+    /// as finished, and a crash window of zero length downs then
+    /// restores the node consistently.
     fn rank(&self) -> u8 {
         match self {
             SimEvent::TaskFinish { .. } => 0,
             SimEvent::GraphArrival { .. } => 1,
             SimEvent::TaskStart { .. } => 2,
+            SimEvent::NodeDown { .. } => 3,
+            SimEvent::NodeUp { .. } => 4,
         }
     }
 }
@@ -150,12 +165,24 @@ pub enum SimLogKind {
     /// (negative = finished early).
     Finish { gid: Gid, node: usize, lateness: f64 },
     /// A rescheduling pass ran: `straggler` distinguishes reactive
-    /// (lateness-triggered) replans from arrival-time policy replans.
+    /// (lateness-triggered) replans from arrival-time policy replans
+    /// (failure-triggered replans log as straggler replans too — they
+    /// are reactive, not arrival-driven — and are counted separately in
+    /// [`crate::sim::ReplanRecord::failure`]).
     Replan {
         straggler: bool,
         n_reverted: usize,
         n_pending: usize,
     },
+    /// `node` crashed; the task it was running (if any) was killed and
+    /// `wasted` seconds of partial work were lost (fault runs only).
+    NodeDown { node: usize, wasted: f64 },
+    /// `node` recovered after `downtime` simulated seconds.
+    NodeUp { node: usize, downtime: f64 },
+    /// `gid`'s running attempt on `node` was killed by a crash after
+    /// `wasted` seconds of partial execution; the task returns to the
+    /// pending set and is re-executed later (fault runs only).
+    Kill { gid: Gid, node: usize, wasted: f64 },
 }
 
 /// One timestamped entry of the realized-event trace.
@@ -185,7 +212,7 @@ mod tests {
         let mut q = EventQueue::new();
         q.push(5.0, SimEvent::TaskStart { gid: g, node: 0, epoch: 1 });
         q.push(5.0, SimEvent::GraphArrival { idx: 1 });
-        q.push(5.0, SimEvent::TaskFinish { gid: g });
+        q.push(5.0, SimEvent::TaskFinish { gid: g, attempt: 0 });
         let kinds: Vec<u8> = std::iter::from_fn(|| q.pop())
             .map(|(_, e)| e.rank())
             .collect();

@@ -1,0 +1,326 @@
+//! Deterministic fault injection for the reactive runtime.
+//!
+//! A [`FaultModel`] describes how nodes fail during a simulated run:
+//!
+//! * [`FaultModel::Crash`] — nodes alternate between healthy phases of
+//!   mean length `mtbf` and down phases of mean length `mttr`.  At the
+//!   start of a down phase the running task is **killed** (its partial
+//!   work is wasted and counted), the node's pending belief slots are
+//!   orphaned, and a failure-triggered replan recovers them; the node
+//!   re-admits with an empty backlog when the phase ends.
+//! * [`FaultModel::Degrade`] — nodes stay up but alternate healthy and
+//!   degraded phases (both mean length `span`); a task *starting* inside
+//!   a degraded phase runs `factor`× longer than its noise-perturbed
+//!   duration.
+//! * [`FaultModel::None`] — the default: nodes are immortal and every
+//!   byte of the simulation is identical to a build without this module
+//!   (the zero-fault bit-identity pin in `rust/tests/faults.rs`).
+//!
+//! Phase boundaries are a **pure function of `(fault_seed, node, k)`**
+//! in the [`crate::robustness::StableNoise`] style: each phase length is
+//! the model mean times a truncated-Gaussian jitter factor drawn from a
+//! counter-seeded stream, so the fault pattern is independent of the
+//! policy under test, the dispatch order, and `--jobs` — the
+//! apples-to-apples requirement for comparing how far beyond the forced
+//! scope each controller preempts.  `node` is the **global** node id:
+//! federation shards own contiguous global node ranges and carry their
+//! offset in [`FaultConfig::node_base`], so sharding cannot change which
+//! instants a node fails at.
+
+use crate::prng::Xoshiro256pp;
+use crate::robustness::{NOISE_HI, NOISE_LO};
+use crate::stats::TruncatedGaussian;
+
+/// Relative jitter (std of the truncated Gaussian factor) applied to
+/// every phase length.
+const PHASE_JITTER_STD: f64 = 0.25;
+
+/// How nodes fail during a run.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum FaultModel {
+    /// Immortal nodes (the default — bit-identical to a fault-free build).
+    #[default]
+    None,
+    /// Crash/restart cycles: healthy phases of mean `mtbf`, down phases
+    /// of mean `mttr` (both > 0, finite).
+    Crash { mtbf: f64, mttr: f64 },
+    /// Degradation cycles: healthy and degraded phases of mean `span`;
+    /// tasks starting in a degraded phase run `factor`× longer.
+    Degrade { factor: f64, span: f64 },
+}
+
+impl FaultModel {
+    /// Validate the model parameters (CLI strict-validation hook).
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            FaultModel::None => Ok(()),
+            FaultModel::Crash { mtbf, mttr } => {
+                if !(mtbf.is_finite() && mtbf > 0.0) {
+                    Err(format!("mtbf must be a positive finite number, got {mtbf}"))
+                } else if !(mttr.is_finite() && mttr > 0.0) {
+                    Err(format!("mttr must be a positive finite number, got {mttr}"))
+                } else {
+                    Ok(())
+                }
+            }
+            FaultModel::Degrade { factor, span } => {
+                if !(factor.is_finite() && factor > 0.0) {
+                    Err(format!("degrade factor must be positive and finite, got {factor}"))
+                } else if !(span.is_finite() && span > 0.0) {
+                    Err(format!("degrade span must be positive and finite, got {span}"))
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    /// Human label for traces and sweep rows (`crash(m,r)`, `degrade(f,s)`,
+    /// `none`).
+    pub fn label(&self) -> String {
+        match *self {
+            FaultModel::None => "none".to_string(),
+            FaultModel::Crash { mtbf, mttr } => format!("crash({mtbf},{mttr})"),
+            FaultModel::Degrade { factor, span } => format!("degrade({factor},{span})"),
+        }
+    }
+}
+
+/// Default seed of the fault phase-jitter stream, shared by the CLI
+/// (`--fault-seed` unset) and `dts serve`'s `{"op":"inject"}` (no
+/// `"seed"` field) so a restored session resolves the same fault
+/// pattern the original session ran under.
+pub const DEFAULT_FAULT_SEED: u64 = 0xFA17;
+
+/// The full fault knob carried on [`crate::sim::SimConfig`].
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct FaultConfig {
+    pub model: FaultModel,
+    /// Seed of the phase-jitter stream (independent of the noise seed).
+    pub seed: u64,
+    /// Global id of this coordinator's node 0 (federation shards pass
+    /// their partition offset; monolithic runs pass 0).
+    pub node_base: usize,
+}
+
+impl FaultConfig {
+    /// The disabled configuration (what [`Default`] also yields).
+    pub const NONE: FaultConfig = FaultConfig {
+        model: FaultModel::None,
+        seed: 0,
+        node_base: 0,
+    };
+
+    /// Whether any fault model is active.
+    pub fn enabled(&self) -> bool {
+        self.model != FaultModel::None
+    }
+}
+
+/// Pure fault-instant oracle over a [`FaultConfig`].
+///
+/// All queries are functions of `(seed, global node, phase index)` only —
+/// no mutable state, so any caller (simulator, federation admission,
+/// tests) sees the same fault pattern regardless of query order.
+#[derive(Clone, Copy, Debug)]
+pub struct Faults {
+    cfg: FaultConfig,
+}
+
+impl Faults {
+    pub fn new(cfg: FaultConfig) -> Self {
+        cfg.model.validate().expect("invalid fault model");
+        Self { cfg }
+    }
+
+    /// Whether any fault model is active.
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    /// Whether the model kills tasks (Crash) as opposed to only
+    /// stretching them (Degrade) or nothing (None).
+    pub fn crashes(&self) -> bool {
+        matches!(self.cfg.model, FaultModel::Crash { .. })
+    }
+
+    /// The degrade stretch factor of the model (1.0 unless Degrade).
+    pub fn stretch(&self) -> f64 {
+        match self.cfg.model {
+            FaultModel::Degrade { factor, .. } => factor,
+            _ => 1.0,
+        }
+    }
+
+    /// Mean lengths (healthy, faulty) of the model's phase cycle.
+    fn phase_means(&self) -> Option<(f64, f64)> {
+        match self.cfg.model {
+            FaultModel::None => None,
+            FaultModel::Crash { mtbf, mttr } => Some((mtbf, mttr)),
+            FaultModel::Degrade { span, .. } => Some((span, span)),
+        }
+    }
+
+    /// StableNoise-style jitter factor for phase `k` of `node` — a pure
+    /// function of `(seed, node_base + node, k)`.
+    fn jitter(&self, node: usize, k: u64) -> f64 {
+        let global = (self.cfg.node_base + node) as u64;
+        let packed = (global << 32) ^ k;
+        let mix = packed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ self.cfg.seed.rotate_left(17);
+        let mut rng = Xoshiro256pp::seed_from_u64(mix);
+        TruncatedGaussian::new(1.0, PHASE_JITTER_STD, NOISE_LO, NOISE_HI).sample(&mut rng)
+    }
+
+    /// The `k`-th (0-based) fault window `[down, up)` of `node`, or
+    /// `None` when no model is active.  O(k) prefix-sum of jittered
+    /// phase lengths; `k` is small (faults per node per run).
+    pub fn window(&self, node: usize, k: u64) -> Option<(f64, f64)> {
+        let (healthy, faulty) = self.phase_means()?;
+        let mut t = 0.0;
+        for j in 0..=k {
+            let up_len = healthy * self.jitter(node, 2 * j);
+            let down_len = faulty * self.jitter(node, 2 * j + 1);
+            if j == k {
+                return Some((t + up_len, t + up_len + down_len));
+            }
+            t += up_len + down_len;
+        }
+        unreachable!()
+    }
+
+    /// Realized-duration multiplier for a task starting on `node` at
+    /// time `t` — `factor` inside a Degrade window, 1.0 otherwise.
+    pub fn degrade_factor(&self, node: usize, t: f64) -> f64 {
+        let FaultModel::Degrade { factor, .. } = self.cfg.model else {
+            return 1.0;
+        };
+        let mut k = 0u64;
+        while let Some((down, up)) = self.window(node, k) {
+            if t < down {
+                return 1.0;
+            }
+            if t < up {
+                return factor;
+            }
+            k += 1;
+        }
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_model_is_inert() {
+        let f = Faults::new(FaultConfig::NONE);
+        assert!(!f.enabled());
+        assert!(!f.crashes());
+        assert_eq!(f.window(0, 0), None);
+        assert_eq!(f.degrade_factor(3, 100.0), 1.0);
+        assert_eq!(f.stretch(), 1.0);
+    }
+
+    #[test]
+    fn crash_windows_are_ordered_and_positive() {
+        let f = Faults::new(FaultConfig {
+            model: FaultModel::Crash { mtbf: 50.0, mttr: 5.0 },
+            seed: 7,
+            node_base: 0,
+        });
+        for node in 0..4 {
+            let mut prev_up = 0.0;
+            for k in 0..8 {
+                let (down, up) = f.window(node, k).unwrap();
+                assert!(down > prev_up, "window {k} of node {node} out of order");
+                assert!(up > down);
+                // jitter is bounded: phase lengths within [lo, hi] × mean
+                assert!(down - prev_up >= 50.0 * NOISE_LO - 1e-9);
+                assert!(down - prev_up <= 50.0 * NOISE_HI + 1e-9);
+                assert!(up - down >= 5.0 * NOISE_LO - 1e-9);
+                assert!(up - down <= 5.0 * NOISE_HI + 1e-9);
+                prev_up = up;
+            }
+        }
+    }
+
+    #[test]
+    fn windows_are_pure_and_seeded() {
+        let cfg = FaultConfig {
+            model: FaultModel::Crash { mtbf: 30.0, mttr: 3.0 },
+            seed: 42,
+            node_base: 0,
+        };
+        let a = Faults::new(cfg);
+        let b = Faults::new(cfg);
+        // query order cannot matter
+        let fwd: Vec<_> = (0..6).map(|k| a.window(1, k).unwrap()).collect();
+        let rev: Vec<_> = (0..6).rev().map(|k| b.window(1, k).unwrap()).collect();
+        for (x, y) in fwd.iter().zip(rev.iter().rev()) {
+            assert_eq!(x, y);
+        }
+        // distinct nodes and seeds decorrelate
+        assert_ne!(a.window(0, 0), a.window(1, 0));
+        let other = Faults::new(FaultConfig { seed: 43, ..cfg });
+        assert_ne!(a.window(0, 0), other.window(0, 0));
+    }
+
+    #[test]
+    fn node_base_shifts_identity_not_offsets() {
+        // a shard whose node 0 is global node 5 must see exactly the
+        // windows the monolithic run gives node 5
+        let cfg = FaultConfig {
+            model: FaultModel::Crash { mtbf: 20.0, mttr: 2.0 },
+            seed: 9,
+            node_base: 0,
+        };
+        let mono = Faults::new(cfg);
+        let shard = Faults::new(FaultConfig { node_base: 5, ..cfg });
+        for k in 0..5 {
+            assert_eq!(shard.window(0, k), mono.window(5, k));
+            assert_eq!(shard.window(2, k), mono.window(7, k));
+        }
+    }
+
+    #[test]
+    fn degrade_factor_matches_windows() {
+        let f = Faults::new(FaultConfig {
+            model: FaultModel::Degrade { factor: 2.5, span: 10.0 },
+            seed: 3,
+            node_base: 0,
+        });
+        assert_eq!(f.stretch(), 2.5);
+        for node in 0..3 {
+            let (down, up) = f.window(node, 0).unwrap();
+            assert_eq!(f.degrade_factor(node, down - 1e-6), 1.0);
+            assert_eq!(f.degrade_factor(node, down), 2.5);
+            assert_eq!(f.degrade_factor(node, 0.5 * (down + up)), 2.5);
+            assert_eq!(f.degrade_factor(node, up), 1.0);
+            let (d1, u1) = f.window(node, 1).unwrap();
+            assert_eq!(f.degrade_factor(node, d1 + 1e-9), 2.5);
+            assert_eq!(f.degrade_factor(node, u1 + 1e-6), 1.0);
+        }
+    }
+
+    #[test]
+    fn validation_rejects_garbage() {
+        assert!(FaultModel::Crash { mtbf: 0.0, mttr: 1.0 }.validate().is_err());
+        assert!(FaultModel::Crash { mtbf: 1.0, mttr: f64::NAN }.validate().is_err());
+        assert!(FaultModel::Crash { mtbf: f64::INFINITY, mttr: 1.0 }.validate().is_err());
+        assert!(FaultModel::Degrade { factor: -1.0, span: 1.0 }.validate().is_err());
+        assert!(FaultModel::Degrade { factor: 2.0, span: 0.0 }.validate().is_err());
+        assert!(FaultModel::Crash { mtbf: 10.0, mttr: 1.0 }.validate().is_ok());
+        assert!(FaultModel::None.validate().is_ok());
+    }
+
+    #[test]
+    fn labels_are_distinct() {
+        assert_eq!(FaultModel::None.label(), "none");
+        assert_eq!(FaultModel::Crash { mtbf: 10.0, mttr: 1.0 }.label(), "crash(10,1)");
+        assert_eq!(
+            FaultModel::Degrade { factor: 2.0, span: 5.0 }.label(),
+            "degrade(2,5)"
+        );
+    }
+}

@@ -22,9 +22,11 @@
 
 pub mod coordinator;
 pub mod events;
+pub mod faults;
 
 pub use coordinator::{Reaction, ReactiveCoordinator, ReplanRecord, SimConfig, SimResult};
 pub use events::{SimLogEntry, SimLogKind};
+pub use faults::{FaultConfig, FaultModel, Faults, DEFAULT_FAULT_SEED};
 
 use crate::graph::{Gid, TaskGraph};
 use crate::network::Network;

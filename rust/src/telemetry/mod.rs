@@ -81,11 +81,20 @@ pub enum Counter {
     ServeArrivals,
     /// snapshot files written by the serve journal
     ServeSnapshots,
+    /// node crashes injected by the fault model ([`crate::sim::faults`])
+    NodeFailures,
+    /// running attempts killed by a crash (≤ one per failure)
+    TaskKills,
+    /// node recoveries (NodeUp events processed)
+    NodeRecoveries,
+    /// failure-triggered replans (forced orphan recovery + controller
+    /// extra-scope passes)
+    FailureReplans,
 }
 
 impl Counter {
     /// Every counter, in canonical key order.
-    pub const ALL: [Counter; 18] = [
+    pub const ALL: [Counter; 22] = [
         Counter::Replans,
         Counter::StragglerReplans,
         Counter::SeedRevert,
@@ -104,6 +113,10 @@ impl Counter {
         Counter::ServeErrors,
         Counter::ServeArrivals,
         Counter::ServeSnapshots,
+        Counter::NodeFailures,
+        Counter::TaskKills,
+        Counter::NodeRecoveries,
+        Counter::FailureReplans,
     ];
 
     /// Stable export key.
@@ -127,6 +140,10 @@ impl Counter {
             Counter::ServeErrors => "serve_errors",
             Counter::ServeArrivals => "serve_arrivals",
             Counter::ServeSnapshots => "serve_snapshots",
+            Counter::NodeFailures => "node_failures",
+            Counter::TaskKills => "task_kills",
+            Counter::NodeRecoveries => "node_recoveries",
+            Counter::FailureReplans => "failure_replans",
         }
     }
 }
@@ -149,11 +166,14 @@ pub enum Hist {
     EventQueueDepth,
     /// per-request decision latency in `dts serve` (ns, wall)
     ServeRequestNs,
+    /// node downtime per recovery in **simulated** nanoseconds (a
+    /// deterministic work count, not a wall reading)
+    RecoveryNs,
 }
 
 impl Hist {
     /// Every histogram, in canonical key order.
-    pub const ALL: [Hist; 7] = [
+    pub const ALL: [Hist; 8] = [
         Hist::ReplanWallNs,
         Hist::RefreshWallNs,
         Hist::HeuristicWallNs,
@@ -161,6 +181,7 @@ impl Hist {
         Hist::ConeSize,
         Hist::EventQueueDepth,
         Hist::ServeRequestNs,
+        Hist::RecoveryNs,
     ];
 
     /// Stable export key.
@@ -173,6 +194,7 @@ impl Hist {
             Hist::ConeSize => "cone_size",
             Hist::EventQueueDepth => "event_queue_depth",
             Hist::ServeRequestNs => "serve_request_ns",
+            Hist::RecoveryNs => "recovery_ns",
         }
     }
 

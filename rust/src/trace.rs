@@ -121,6 +121,26 @@ pub fn sim_event_json(e: &SimLogEntry) -> Value {
             fields.push(("reverted", json::num(n_reverted as f64)));
             fields.push(("pending", json::num(n_pending as f64)));
         }
+        // the three fault kinds are logged only on fault-injected runs
+        // ([`crate::sim::faults`]), so default traces never carry them —
+        // the zero-fault byte-identity pin
+        SimLogKind::NodeDown { node, wasted } => {
+            fields.push(("kind", json::s("node_down")));
+            fields.push(("node", json::num(node as f64)));
+            fields.push(("wasted", json::num(wasted)));
+        }
+        SimLogKind::NodeUp { node, downtime } => {
+            fields.push(("kind", json::s("node_up")));
+            fields.push(("node", json::num(node as f64)));
+            fields.push(("downtime", json::num(downtime)));
+        }
+        SimLogKind::Kill { gid, node, wasted } => {
+            fields.push(("kind", json::s("kill")));
+            fields.push(("graph", json::num(gid.graph as f64)));
+            fields.push(("task", json::num(gid.task as f64)));
+            fields.push(("node", json::num(node as f64)));
+            fields.push(("wasted", json::num(wasted)));
+        }
     }
     json::obj(fields)
 }
@@ -130,7 +150,7 @@ pub fn sim_event_json(e: &SimLogEntry) -> Value {
 /// schedule.
 pub fn sim_to_json(problem: &DynamicProblem, result: &SimResult) -> Value {
     let events = result.log.iter().map(sim_event_json).collect();
-    json::obj(vec![
+    let mut fields = vec![
         ("format", json::s("dts-sim-trace-v1")),
         ("n_nodes", json::num(problem.network.n_nodes() as f64)),
         ("graphs", graphs_json(problem)),
@@ -146,7 +166,20 @@ pub fn sim_to_json(problem: &DynamicProblem, result: &SimResult) -> Value {
         ("replan_wall_s", json::num(result.replan_wall_s)),
         ("refresh_wall_s", json::num(result.refresh_wall_s)),
         ("bookkeep_wall_s", json::num(result.bookkeep_wall_s)),
-    ])
+    ];
+    // fault summary only on fault-injected runs: a zero-fault trace is
+    // byte-identical to one produced before faults existed
+    if result.faults_enabled {
+        fields.push(("n_failure_replans", json::num(result.n_failure_replans() as f64)));
+        fields.push(("n_killed", json::num(result.n_killed as f64)));
+        fields.push(("n_reexecuted", json::num(result.n_reexecuted as f64)));
+        fields.push(("wasted_work_s", json::num(result.wasted_work_s)));
+        fields.push((
+            "mean_recovery_latency",
+            json::num(result.mean_recovery_latency()),
+        ));
+    }
+    json::obj(fields)
 }
 
 /// A parsed realized-run trace (realized schedule + event/replan counts;
@@ -387,6 +420,7 @@ mod tests {
             },
             record_frozen: false,
             full_refresh: false,
+            faults: crate::sim::FaultConfig::NONE,
         };
         let mut rc =
             ReactiveCoordinator::new(Policy::LastK(3), SchedulerKind::Heft.make(0), cfg);

@@ -1,0 +1,482 @@
+//! Integration pins for the **fault-injection subsystem**
+//! ([`dts::sim::faults`]):
+//!
+//! * the **zero-fault bit-identity** standing invariant — with
+//!   [`FaultModel::None`] no fault event ever appears, every fault
+//!   metric is exactly zero, and schedules/logs are bit-identical
+//!   across fault seeds, shard counts and worker counts (the fault
+//!   plumbing is inert unless armed);
+//! * **fault-draw purity** — crash/recovery instants are a pure
+//!   function of `(fault_seed, node_base + node, k)`: independent of
+//!   query order, of the `Faults` instance, of the scheduling policy
+//!   and of the dispatch order (every realized `node_down`/`node_up`
+//!   instant equals the oracle window bitwise);
+//! * **conservation + no double execution under crashes** — the run
+//!   completes every task exactly once (`n_assigned == total_tasks`,
+//!   one `Finish` per task), each killed attempt re-executes
+//!   (`starts == kills + 1` per task), wasted-work/recovery accounting
+//!   reconciles with the event log, and the realized schedule replays
+//!   cleanly;
+//! * **Degrade** stretches realized durations without killing anything;
+//! * the **federated path** under crashes: jobs-deterministic, merge
+//!   conserves every task, fault accounting survives the merge.
+
+use std::collections::BTreeMap;
+
+use dts::coordinator::Policy;
+use dts::federation::FederatedCoordinator;
+use dts::graph::Gid;
+use dts::metrics::Metric;
+use dts::schedule::Schedule;
+use dts::schedulers::SchedulerKind;
+use dts::sim::{
+    replay, FaultConfig, FaultModel, Faults, Reaction, ReactiveCoordinator, SimConfig,
+    SimLogEntry, SimLogKind, SimResult,
+};
+use dts::workloads::Dataset;
+
+fn sig(s: &Schedule) -> Vec<(Gid, usize, u64, u64)> {
+    let mut v: Vec<(Gid, usize, u64, u64)> = s
+        .iter()
+        .map(|(g, a)| (*g, a.node, a.start.to_bits(), a.finish.to_bits()))
+        .collect();
+    v.sort();
+    v
+}
+
+fn makespan(s: &Schedule) -> f64 {
+    s.iter().map(|(_, a)| a.finish).fold(0.0, f64::max)
+}
+
+fn cfg_with(seed: u64, faults: FaultConfig) -> SimConfig {
+    SimConfig {
+        noise_std: 0.3,
+        noise_seed: seed ^ 0xA11CE,
+        reaction: Reaction::LastK {
+            k: 3,
+            threshold: 0.25,
+        },
+        record_frozen: false,
+        full_refresh: false,
+        faults,
+    }
+}
+
+/// A crash model scaled to the instance: windows sized off the
+/// faultless makespan so several down/up cycles land inside the
+/// horizon regardless of the dataset's time units.
+fn scaled_crash(prob_makespan: f64, seed: u64) -> FaultConfig {
+    FaultConfig {
+        model: FaultModel::Crash {
+            mtbf: prob_makespan / 8.0,
+            mttr: prob_makespan / 40.0,
+        },
+        seed,
+        node_base: 0,
+    }
+}
+
+/// Every realized `NodeDown`/`NodeUp` instant must equal the pure
+/// oracle window bitwise, in per-node window order — this is the
+/// dispatch-order/policy independence pin: whatever the coordinator
+/// did between crashes, the crash pattern itself never moved.
+fn assert_instants_match_oracle(log: &[SimLogEntry], faults: &Faults, ctx: &str) {
+    let mut next_k: BTreeMap<usize, u64> = BTreeMap::new();
+    for e in log {
+        match e.kind {
+            SimLogKind::NodeDown { node, .. } => {
+                let k = *next_k.entry(node).or_insert(0);
+                let (down, _) = faults.window(node, k).expect("oracle window");
+                assert_eq!(
+                    e.time.to_bits(),
+                    down.to_bits(),
+                    "{ctx}: node {node} window {k} down instant moved"
+                );
+            }
+            SimLogKind::NodeUp { node, downtime } => {
+                let k = next_k.entry(node).or_insert(0);
+                let (down, up) = faults.window(node, *k).expect("oracle window");
+                assert_eq!(
+                    e.time.to_bits(),
+                    up.to_bits(),
+                    "{ctx}: node {node} window {k} up instant moved"
+                );
+                assert_eq!(downtime.to_bits(), (up - down).to_bits(), "{ctx}");
+                *k += 1;
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Per-gid conservation over the realized log: every task finishes
+/// exactly once, and a task killed `m` times started `m + 1` times —
+/// no double execution, no lost re-execution.
+fn assert_conservation(res: &SimResult, ctx: &str) {
+    let mut starts: BTreeMap<Gid, usize> = BTreeMap::new();
+    let mut finishes: BTreeMap<Gid, usize> = BTreeMap::new();
+    let mut kills: BTreeMap<Gid, usize> = BTreeMap::new();
+    let mut wasted_sum = 0.0;
+    let mut n_kill_events = 0usize;
+    for e in &res.log {
+        match e.kind {
+            SimLogKind::Start { gid, .. } => *starts.entry(gid).or_insert(0) += 1,
+            SimLogKind::Finish { gid, .. } => *finishes.entry(gid).or_insert(0) += 1,
+            SimLogKind::Kill { gid, wasted, .. } => {
+                *kills.entry(gid).or_insert(0) += 1;
+                wasted_sum += wasted;
+                n_kill_events += 1;
+            }
+            _ => {}
+        }
+    }
+    for (gid, n) in &finishes {
+        assert_eq!(*n, 1, "{ctx}: {gid:?} finished {n} times");
+        let s = starts.get(gid).copied().unwrap_or(0);
+        let k = kills.get(gid).copied().unwrap_or(0);
+        assert_eq!(s, k + 1, "{ctx}: {gid:?} started {s}× for {k} kills");
+    }
+    for gid in kills.keys() {
+        assert!(finishes.contains_key(gid), "{ctx}: killed {gid:?} never re-ran");
+    }
+    assert_eq!(res.n_killed, n_kill_events, "{ctx}: n_killed");
+    assert_eq!(res.n_reexecuted, kills.len(), "{ctx}: n_reexecuted");
+    assert!(res.n_killed >= res.n_reexecuted, "{ctx}");
+    // accumulated in event order on both sides → bitwise-equal sums
+    assert_eq!(
+        res.wasted_work_s.to_bits(),
+        wasted_sum.to_bits(),
+        "{ctx}: wasted_work_s does not reconcile with Kill events"
+    );
+    let n_up = res
+        .log
+        .iter()
+        .filter(|e| matches!(e.kind, SimLogKind::NodeUp { .. }))
+        .count();
+    assert_eq!(res.n_recoveries, n_up, "{ctx}: n_recoveries");
+}
+
+fn has_fault_events(log: &[SimLogEntry]) -> bool {
+    log.iter().any(|e| {
+        matches!(
+            e.kind,
+            SimLogKind::NodeDown { .. } | SimLogKind::NodeUp { .. } | SimLogKind::Kill { .. }
+        )
+    })
+}
+
+/// ACCEPTANCE GRID: with `FaultModel::None` the fault machinery is
+/// bit-inert — on all four datasets, monolithic and 4-shard, at worker
+/// counts 1 and 2, under two different fault *seeds* (the seed must
+/// not matter when the model is off): identical schedules and logs,
+/// no fault events, all fault metrics exactly zero.
+#[test]
+fn zero_fault_grid_is_bit_identical() {
+    for (di, dataset) in Dataset::ALL.iter().enumerate() {
+        let seed = 900 + 17 * di as u64;
+        let prob = dataset.instance(6, seed);
+        let ctx = dataset.name();
+
+        let none_a = FaultConfig::NONE;
+        let none_b = FaultConfig {
+            model: FaultModel::None,
+            seed: 0xDEAD_BEEF, // must be irrelevant with the model off
+            node_base: 3,
+        };
+        let mono = |f: FaultConfig| {
+            ReactiveCoordinator::new(
+                Policy::LastK(5),
+                SchedulerKind::Heft.make(seed ^ 0x5EED),
+                cfg_with(seed, f),
+            )
+            .run(&prob)
+        };
+        let a = mono(none_a);
+        let b = mono(none_b);
+        assert_eq!(sig(&a.schedule), sig(&b.schedule), "{ctx}: fault seed leaked");
+        assert_eq!(a.log, b.log, "{ctx}: fault seed leaked into the log");
+
+        assert!(!a.faults_enabled, "{ctx}");
+        assert!(!has_fault_events(&a.log), "{ctx}: fault event without a model");
+        assert_eq!(a.n_killed, 0, "{ctx}");
+        assert_eq!(a.n_reexecuted, 0, "{ctx}");
+        assert_eq!(a.n_recoveries, 0, "{ctx}");
+        assert_eq!(a.n_failure_replans(), 0, "{ctx}");
+        assert_eq!(a.wasted_work_s.to_bits(), 0.0f64.to_bits(), "{ctx}");
+        assert_eq!(a.mean_recovery_latency().to_bits(), 0.0f64.to_bits(), "{ctx}");
+        let row = a.metrics(&prob);
+        assert_eq!(row.wasted_work_s.to_bits(), 0.0f64.to_bits(), "{ctx}");
+        assert_eq!(row.n_reexecuted.to_bits(), 0.0f64.to_bits(), "{ctx}");
+        assert_eq!(row.mean_recovery_latency.to_bits(), 0.0f64.to_bits(), "{ctx}");
+
+        // federated: same inertness, and jobs-bit-identical
+        let fed = |f: FaultConfig, jobs: usize| {
+            FederatedCoordinator::new(
+                Policy::LastK(5),
+                SchedulerKind::Heft,
+                seed ^ 0x5EED,
+                cfg_with(seed, f),
+                4,
+            )
+            .with_jobs(jobs)
+            .run(&prob)
+        };
+        let f1 = fed(none_a, 1);
+        let f2 = fed(none_b, 2);
+        assert_eq!(sig(&f1.schedule), sig(&f2.schedule), "{ctx}: federated");
+        assert_eq!(f1.log, f2.log, "{ctx}: federated log");
+        assert!(!has_fault_events(&f1.log), "{ctx}: federated fault event");
+        assert_eq!(f1.n_killed(), 0, "{ctx}");
+        assert_eq!(f1.n_reexecuted(), 0, "{ctx}");
+        assert_eq!(f1.n_failure_replans(), 0, "{ctx}");
+        assert_eq!(f1.wasted_work_s().to_bits(), 0.0f64.to_bits(), "{ctx}");
+        assert_eq!(f1.mean_recovery_latency().to_bits(), 0.0f64.to_bits(), "{ctx}");
+    }
+    // the three fault axes joined the metric vocabulary
+    assert_eq!(Metric::ALL.len(), 18);
+}
+
+/// Fault draws are a pure function of `(seed, node_base + node, k)`:
+/// the same window regardless of query order or instance, and a shard
+/// whose `node_base` is `b` sees exactly the global windows of node
+/// `b + v` — the federated shard-identity contract.
+#[test]
+fn fault_draws_are_pure_and_shard_shifted() {
+    let crash = |seed, node_base| {
+        Faults::new(FaultConfig {
+            model: FaultModel::Crash {
+                mtbf: 50.0,
+                mttr: 5.0,
+            },
+            seed,
+            node_base,
+        })
+    };
+    let a = crash(7, 0);
+    // forward order
+    let fwd: Vec<_> = (0..6u64).map(|k| a.window(2, k).unwrap()).collect();
+    // a fresh instance queried backwards sees the same windows bitwise
+    let b = crash(7, 0);
+    for k in (0..6u64).rev() {
+        let (d, u) = b.window(2, k).unwrap();
+        assert_eq!(d.to_bits(), fwd[k as usize].0.to_bits(), "window {k} down");
+        assert_eq!(u.to_bits(), fwd[k as usize].1.to_bits(), "window {k} up");
+    }
+    // node_base shift: shard-local node v ≡ global node base + v
+    let shard = crash(7, 5);
+    for v in 0..3usize {
+        for k in 0..4u64 {
+            assert_eq!(shard.window(v, k), a.window(5 + v, k), "base shift v={v} k={k}");
+        }
+    }
+    // a different seed is a different pattern
+    let c = crash(8, 0);
+    assert_ne!(c.window(2, 0), a.window(2, 0));
+    // the model gates everything
+    let none = Faults::new(FaultConfig::NONE);
+    assert_eq!(none.window(0, 0), None);
+    assert!(!none.enabled());
+}
+
+/// CONSERVATION UNDER CRASHES, all four datasets: the run completes
+/// every task exactly once, killed attempts re-execute, accounting
+/// reconciles with the log, crash instants match the pure oracle, the
+/// realized schedule replays cleanly, and the whole thing is
+/// deterministic (two runs are bit-identical).
+#[test]
+fn crash_runs_conserve_and_never_double_execute() {
+    let mut total_downs = 0usize;
+    let mut total_kills = 0usize;
+    for (di, dataset) in Dataset::ALL.iter().enumerate() {
+        let seed = 40 + di as u64;
+        let prob = dataset.instance(6, seed);
+        let ctx = dataset.name();
+
+        // scale the crash cycle off the faultless makespan
+        let base = ReactiveCoordinator::new(
+            Policy::LastK(5),
+            SchedulerKind::Heft.make(seed ^ 0x5EED),
+            cfg_with(seed, FaultConfig::NONE),
+        )
+        .run(&prob);
+        let fcfg = scaled_crash(makespan(&base.schedule), seed ^ 0xFA17);
+
+        let run = || {
+            ReactiveCoordinator::new(
+                Policy::LastK(5),
+                SchedulerKind::Heft.make(seed ^ 0x5EED),
+                cfg_with(seed, fcfg),
+            )
+            .run(&prob)
+        };
+        let res = run();
+        assert!(res.faults_enabled, "{ctx}");
+        assert_eq!(
+            res.schedule.n_assigned(),
+            prob.total_tasks(),
+            "{ctx}: crash run lost tasks"
+        );
+        let rep = replay(&res.schedule, &prob.graphs, &prob.network);
+        assert!(rep.errors.is_empty(), "{ctx}: {:?}", rep.errors);
+        assert_conservation(&res, ctx);
+        assert_instants_match_oracle(&res.log, &Faults::new(fcfg), ctx);
+
+        let downs = res
+            .log
+            .iter()
+            .filter(|e| matches!(e.kind, SimLogKind::NodeDown { .. }))
+            .count();
+        assert!(downs > 0, "{ctx}: no crash fired inside the horizon");
+        total_downs += downs;
+        total_kills += res.n_killed;
+        if res.n_killed > 0 {
+            // a killed running task forces at least one failure replan
+            assert!(res.n_failure_replans() > 0, "{ctx}: kill without replan");
+            assert!(res.wasted_work_s > 0.0, "{ctx}");
+        }
+        if res.n_recoveries > 0 {
+            assert!(res.mean_recovery_latency() > 0.0, "{ctx}");
+        }
+        // metric plumbing carries the run's numbers bitwise
+        let row = res.metrics(&prob);
+        assert_eq!(row.wasted_work_s.to_bits(), res.wasted_work_s.to_bits(), "{ctx}");
+        assert_eq!(row.n_reexecuted, res.n_reexecuted as f64, "{ctx}");
+        assert_eq!(
+            row.mean_recovery_latency.to_bits(),
+            res.mean_recovery_latency().to_bits(),
+            "{ctx}"
+        );
+
+        // determinism: the exact same run, bit for bit
+        let again = run();
+        assert_eq!(sig(&res.schedule), sig(&again.schedule), "{ctx}: nondeterministic");
+        assert_eq!(res.log, again.log, "{ctx}: nondeterministic log");
+        assert_eq!(res.wasted_work_s.to_bits(), again.wasted_work_s.to_bits(), "{ctx}");
+    }
+    assert!(total_downs >= Dataset::ALL.len(), "crash grid never crashed");
+    assert!(total_kills > 0, "no run ever killed a task — grid too tame");
+}
+
+/// Crash instants are policy- and scheduler-independent: two runs with
+/// different preemption policies and base heuristics observe, per
+/// node, prefixes of the *same* pure window sequence.
+#[test]
+fn fault_pattern_is_policy_independent() {
+    let dataset = Dataset::Synthetic;
+    let seed = 77;
+    let prob = dataset.instance(6, seed);
+    let base = ReactiveCoordinator::new(
+        Policy::LastK(5),
+        SchedulerKind::Heft.make(seed),
+        cfg_with(seed, FaultConfig::NONE),
+    )
+    .run(&prob);
+    let fcfg = scaled_crash(makespan(&base.schedule), 0xFA17);
+    let oracle = Faults::new(fcfg);
+
+    for (policy, kind) in [
+        (Policy::LastK(5), SchedulerKind::Heft),
+        (Policy::NonPreemptive, SchedulerKind::Heft),
+        (Policy::Preemptive, SchedulerKind::Heft),
+    ] {
+        let res = ReactiveCoordinator::new(policy, kind.make(seed), cfg_with(seed, fcfg))
+            .run(&prob);
+        let ctx = format!("{} {}", policy.label(), kind.name());
+        // every observed instant is the oracle's — the schedule around
+        // the crashes differs by policy, the crashes themselves do not
+        assert_instants_match_oracle(&res.log, &oracle, &ctx);
+        assert_eq!(res.schedule.n_assigned(), prob.total_tasks(), "{ctx}");
+    }
+}
+
+/// Degrade stretches realized durations without killing anything: the
+/// run completes, replays cleanly, logs no fault events (degrade is a
+/// duration effect, not a crash), counts zero kills/wasted work — and
+/// actually changes the realized schedule somewhere on the grid.
+#[test]
+fn degrade_stretches_without_killing() {
+    let mut any_changed = false;
+    for (di, dataset) in Dataset::ALL.iter().enumerate() {
+        let seed = 60 + di as u64;
+        let prob = dataset.instance(6, seed);
+        let ctx = dataset.name();
+
+        let base = ReactiveCoordinator::new(
+            Policy::LastK(5),
+            SchedulerKind::Heft.make(seed ^ 0x5EED),
+            cfg_with(seed, FaultConfig::NONE),
+        )
+        .run(&prob);
+        let fcfg = FaultConfig {
+            model: FaultModel::Degrade {
+                factor: 2.0,
+                span: makespan(&base.schedule) / 6.0,
+            },
+            seed: seed ^ 0xFA17,
+            node_base: 0,
+        };
+        let res = ReactiveCoordinator::new(
+            Policy::LastK(5),
+            SchedulerKind::Heft.make(seed ^ 0x5EED),
+            cfg_with(seed, fcfg),
+        )
+        .run(&prob);
+
+        assert!(res.faults_enabled, "{ctx}");
+        assert_eq!(res.schedule.n_assigned(), prob.total_tasks(), "{ctx}");
+        let rep = replay(&res.schedule, &prob.graphs, &prob.network);
+        assert!(rep.errors.is_empty(), "{ctx}: {:?}", rep.errors);
+        assert!(!has_fault_events(&res.log), "{ctx}: degrade logged a crash");
+        assert_eq!(res.n_killed, 0, "{ctx}");
+        assert_eq!(res.n_reexecuted, 0, "{ctx}");
+        assert_eq!(res.wasted_work_s.to_bits(), 0.0f64.to_bits(), "{ctx}");
+        assert_eq!(res.n_failure_replans(), 0, "{ctx}");
+        if sig(&res.schedule) != sig(&base.schedule) {
+            any_changed = true;
+        }
+    }
+    assert!(any_changed, "Degrade(2.0) never moved a single realized time");
+}
+
+/// The federated path under crashes: bit-identical at any worker
+/// count, conserves every task through the merge, fault accounting
+/// survives aggregation, and the merged schedule replays cleanly.
+#[test]
+fn federated_crash_runs_are_jobs_deterministic_and_conserve() {
+    for dataset in [Dataset::Synthetic, Dataset::RiotBench] {
+        let seed = 88;
+        let prob = dataset.instance(12, seed);
+        let ctx = dataset.name();
+        let base = ReactiveCoordinator::new(
+            Policy::LastK(5),
+            SchedulerKind::Heft.make(seed),
+            cfg_with(seed, FaultConfig::NONE),
+        )
+        .run(&prob);
+        let fcfg = scaled_crash(makespan(&base.schedule), 0xFA17);
+        let run = |jobs: usize| {
+            FederatedCoordinator::new(
+                Policy::LastK(5),
+                SchedulerKind::Heft,
+                seed,
+                cfg_with(seed, fcfg),
+                4,
+            )
+            .with_jobs(jobs)
+            .run(&prob)
+        };
+        let f1 = run(1);
+        let f2 = run(2);
+        assert_eq!(sig(&f1.schedule), sig(&f2.schedule), "{ctx}: jobs changed faults");
+        assert_eq!(f1.log, f2.log, "{ctx}: jobs changed the fault log");
+        assert_eq!(f1.n_killed(), f2.n_killed(), "{ctx}");
+        assert_eq!(f1.wasted_work_s().to_bits(), f2.wasted_work_s().to_bits(), "{ctx}");
+
+        assert_eq!(f1.schedule.n_assigned(), prob.total_tasks(), "{ctx}: merge lost tasks");
+        let rep = replay(&f1.schedule, &prob.graphs, &prob.network);
+        assert!(rep.errors.is_empty(), "{ctx}: {:?}", rep.errors);
+        assert!(f1.n_killed() >= f1.n_reexecuted(), "{ctx}");
+        assert!(f1.wasted_work_s() >= 0.0, "{ctx}");
+        assert!(f1.mean_recovery_latency() >= 0.0, "{ctx}");
+    }
+}

@@ -41,11 +41,12 @@ fn reactive_cfg(seed: u64, record_frozen: bool) -> SimConfig {
         },
         record_frozen,
         full_refresh: false,
+        faults: dts::sim::FaultConfig::NONE,
     }
 }
 
 /// DIFFERENTIAL ORACLE: one shard ≡ the monolithic coordinator, bit for
-/// bit — schedule, realized-event log, and all 15 metric axes — on all
+/// bit — schedule, realized-event log, and all 18 metric axes — on all
 /// four datasets across the extended heuristic set.
 #[test]
 fn one_shard_is_bit_identical_to_monolithic() {

@@ -70,6 +70,7 @@ fn fixed_lastk_matches_reaction_path_on_all_datasets() {
             reaction: Reaction::LastK { k, threshold },
             record_frozen: false,
             full_refresh: false,
+            faults: dts::sim::FaultConfig::NONE,
         };
         let want = run_reaction(&prob, cfg);
         let got = run_spec(&prob, cfg, &PolicySpec::FixedLastK { k, threshold });
@@ -121,6 +122,7 @@ fn policy_sweep_reproduces_sim_sweep_lastk_cells() {
             reaction: Reaction::LastK { k, threshold },
         }],
         shards: 1,
+        faults: dts::sim::FaultConfig::NONE,
     };
     let pol_cfg = PolicySweepConfig {
         dataset: Dataset::Synthetic,
@@ -134,6 +136,7 @@ fn policy_sweep_reproduces_sim_sweep_lastk_cells() {
             noise_std: noise,
             spec: PolicySpec::FixedLastK { k, threshold },
         }],
+        faults: dts::sim::FaultConfig::NONE,
     };
     let a = run_sim_sweep(&sim_cfg);
     let b = run_policy_sweep_parallel(&pol_cfg, 1);
@@ -202,6 +205,7 @@ fn policy_sweep_is_deterministic_across_jobs_1_2_8() {
         variant: dts::coordinator::Variant::parse("5P-HEFT").unwrap(),
         scenario: Scenario::default(),
         scenarios,
+        faults: dts::sim::FaultConfig::NONE,
     };
     let serial = run_policy_sweep_parallel(&cfg, 1);
     let cell_sig = |c: &dts::experiments::PolicyCell| {
@@ -258,6 +262,7 @@ fn budgeted_never_exceeds_token_budget() {
                     reaction: Reaction::None,
                     record_frozen: false,
                     full_refresh: false,
+                    faults: dts::sim::FaultConfig::NONE,
                 };
                 let res = run_spec(
                     &prob,
@@ -310,6 +315,7 @@ fn tight_budget_reverts_less_than_uncapped() {
         reaction: Reaction::None,
         record_frozen: false,
         full_refresh: false,
+        faults: dts::sim::FaultConfig::NONE,
     };
     let (k, threshold) = (5, 0.05);
     let uncapped = run_spec(&prob, cfg, &PolicySpec::FixedLastK { k, threshold });
@@ -345,6 +351,7 @@ fn cooldown_zero_is_transparent_and_infinite_fires_once() {
         reaction: Reaction::None,
         record_frozen: false,
         full_refresh: false,
+        faults: dts::sim::FaultConfig::NONE,
     };
     let inner = PolicySpec::FixedLastK {
         k: 4,
@@ -386,6 +393,7 @@ fn adaptive_k_is_valid_on_all_datasets() {
             reaction: Reaction::None,
             record_frozen: true,
             full_refresh: false,
+            faults: dts::sim::FaultConfig::NONE,
         };
         let res = run_spec(
             &prob,

@@ -61,6 +61,7 @@ fn run_mode(
         reaction: Reaction::None,
         record_frozen: true,
         full_refresh,
+        faults: dts::sim::FaultConfig::NONE,
     };
     let mut rc = match ctl {
         Ctl::Reaction(r) => {

@@ -126,6 +126,7 @@ fn default_knobs_sim_sweep_is_bit_stable() {
         scenario: Scenario::default(),
         scenarios,
         shards: 1,
+        faults: dts::sim::FaultConfig::NONE,
     };
     let serial = run_sim_sweep_parallel(&cfg, 1);
     let par = run_sim_sweep_parallel(&cfg, 4);
@@ -251,6 +252,7 @@ fn deadline_aware_policy_sweep_is_deterministic() {
                 },
             },
         ],
+        faults: dts::sim::FaultConfig::NONE,
     };
     let serial = run_policy_sweep_parallel(&cfg, 1);
     assert_eq!(serial.labels[2], "σ0.40/D3@0.15");

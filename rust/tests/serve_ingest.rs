@@ -56,6 +56,7 @@ fn cfg() -> ServeConfig {
         jobs: 1,
         load: DEFAULT_LOAD,
         scenario: Scenario::default(),
+        faults: dts::sim::FaultConfig::NONE,
     }
 }
 
@@ -227,4 +228,139 @@ fn whitespace_lines_are_ignored_entirely() {
     }
     assert!(out.is_empty());
     assert_eq!(server.lines_handled(), 0);
+}
+
+/// Drive the bounded-read I/O loop ([`dts::serve::pump`]) over an
+/// in-memory session with a small `--max-line-bytes`: an oversized
+/// request line yields **exactly one** `{"kind":"error","code":"range"}`
+/// record, the line is fully drained (the session recovers and keeps
+/// parsing), and server state is untouched.
+#[test]
+fn oversized_lines_yield_one_range_error_and_session_recovers() {
+    use dts::serve::{pump, ServeOptions, SessionEnd};
+    use std::io::BufReader;
+
+    let limit = 64usize;
+    let opts = ServeOptions {
+        max_line_bytes: limit,
+        ..ServeOptions::default()
+    };
+    let big = format!(
+        "{{\"op\":\"arrive\",\"graph\":1,\"pad\":\"{}\"}}",
+        "x".repeat(limit * 5)
+    );
+    assert!(big.len() > limit);
+    let input = format!(
+        "{{\"op\":\"arrive\",\"graph\":0}}\n{big}\n{{\"op\":\"arrive\",\"graph\":1}}\n"
+    );
+
+    let mut server = ServeServer::new(cfg());
+    let mut raw = Vec::new();
+    // a tiny buffer forces the multi-chunk drain path of the reader
+    let end = pump(
+        &mut server,
+        BufReader::with_capacity(8, input.as_bytes()),
+        &mut raw,
+        &opts,
+    )
+    .unwrap();
+    assert_eq!(end, SessionEnd::Eof);
+
+    let out: Vec<String> = String::from_utf8(raw)
+        .unwrap()
+        .lines()
+        .map(str::to_string)
+        .collect();
+    // ack, one range error, ack — the oversized line never splits into
+    // several errors and never swallows the next request
+    assert_eq!(out.len(), 3, "{out:?}");
+    let err = Value::from_str(&out[1]).unwrap();
+    assert_eq!(err.get("kind").and_then(|k| k.as_str()), Some("error"));
+    assert_eq!(err.get("code").and_then(|c| c.as_str()), Some("range"));
+    assert_eq!(err.get("line").and_then(|l| l.as_usize()), Some(2));
+    assert!(!out[0].contains("\"error\""), "{}", out[0]);
+    assert!(!out[2].contains("\"error\""), "{}", out[2]);
+    // both valid arrivals were admitted around the oversized line
+    assert_eq!(server.lines_handled(), 3);
+}
+
+/// An oversized-only session leaves the state fingerprint untouched —
+/// the drop is accounted as one request + one error, never as state.
+#[test]
+fn oversized_line_leaves_state_fingerprint_untouched() {
+    use dts::serve::{pump, ServeOptions};
+    use std::io::BufReader;
+
+    let opts = ServeOptions {
+        max_line_bytes: 16,
+        ..ServeOptions::default()
+    };
+    let mut server = ServeServer::new(cfg());
+    let mut out = Vec::new();
+    server.handle_line("{\"op\":\"arrive\",\"graph\":0}", &mut out);
+    let fingerprint = server.state_fingerprint();
+
+    let input = format!("{}\n", "y".repeat(400));
+    let mut raw = Vec::new();
+    pump(
+        &mut server,
+        BufReader::with_capacity(8, input.as_bytes()),
+        &mut raw,
+        &opts,
+    )
+    .unwrap();
+    assert_eq!(server.state_fingerprint(), fingerprint);
+    let text = String::from_utf8(raw).unwrap();
+    assert_eq!(text.lines().count(), 1, "{text:?}");
+    assert!(text.contains("\"code\":\"range\""), "{text:?}");
+}
+
+/// A session with oversized lines interspersed produces the identical
+/// decision stream as the clean session — the epoch output is a pure
+/// function of the accepted requests.
+#[test]
+fn interleaved_oversized_lines_do_not_perturb_the_epoch() {
+    use dts::serve::{pump, ServeOptions};
+    use std::io::BufReader;
+
+    let opts = ServeOptions {
+        max_line_bytes: 48,
+        ..ServeOptions::default()
+    };
+    let valid: Vec<String> = (0..GRAPHS)
+        .map(|g| format!("{{\"op\":\"arrive\",\"graph\":{g}}}"))
+        .chain(std::iter::once("{\"op\":\"run\"}".to_string()))
+        .collect();
+
+    let run_session = |input: &str| {
+        let mut server = ServeServer::new(cfg());
+        let mut raw = Vec::new();
+        pump(
+            &mut server,
+            BufReader::with_capacity(8, input.as_bytes()),
+            &mut raw,
+            &opts,
+        )
+        .unwrap();
+        let lines: Vec<String> = String::from_utf8(raw)
+            .unwrap()
+            .lines()
+            .filter(|l| !l.contains("\"kind\":\"error\""))
+            .map(str::to_string)
+            .collect();
+        (lines, server.epochs().to_vec())
+    };
+
+    let clean_input = valid.join("\n") + "\n";
+    let dirty_input = valid
+        .iter()
+        .flat_map(|l| [format!("z{}", "z".repeat(100)), l.clone()])
+        .collect::<Vec<_>>()
+        .join("\n")
+        + "\n";
+
+    let (clean, clean_epochs) = run_session(&clean_input);
+    let (dirty, dirty_epochs) = run_session(&dirty_input);
+    assert_eq!(clean, dirty);
+    assert_eq!(clean_epochs, dirty_epochs);
 }

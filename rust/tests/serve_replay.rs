@@ -6,7 +6,7 @@
 //!
 //! * the decision stream equals the offline event log line-for-line
 //!   (both sides serialize through [`dts::trace::sim_event_json`]);
-//! * the epoch summary's 15-metric block equals the offline
+//! * the epoch summary's 18-metric block equals the offline
 //!   [`metric_row_json`] to the bit;
 //! * replan counts and revert totals agree.
 //!
@@ -42,6 +42,7 @@ fn serve_cfg(dataset: Dataset, shards: usize, jobs: usize) -> ServeConfig {
         jobs,
         load: DEFAULT_LOAD,
         scenario: Scenario::default(),
+        faults: dts::sim::FaultConfig::NONE,
     }
 }
 
@@ -55,11 +56,12 @@ fn sim_cfg() -> SimConfig {
         },
         record_frozen: false,
         full_refresh: false,
+        faults: dts::sim::FaultConfig::NONE,
     }
 }
 
 /// The offline cell: event lines (serialized exactly as the trace
-/// exporter does) + the 15-metric block as a parsed JSON value.
+/// exporter does) + the 18-metric block as a parsed JSON value.
 fn offline(dataset: Dataset, shards: usize, jobs: usize) -> (Vec<String>, Value, usize) {
     let prob = dataset.instance_scenario(GRAPHS, SEED, DEFAULT_LOAD, None, &Scenario::default());
     let variant = Variant::parse("5P-HEFT").unwrap();
@@ -141,7 +143,7 @@ fn assert_replay(dataset: Dataset, shards: usize, jobs: usize) {
     assert_eq!(
         summary.get("metrics").unwrap(),
         &metrics,
-        "{} S{shards} j{jobs}: 15-metric block",
+        "{} S{shards} j{jobs}: 18-metric block",
         dataset.name()
     );
     assert_eq!(

@@ -43,6 +43,7 @@ fn cfg(dataset: Dataset, controller: Controller, shards: usize) -> ServeConfig {
         jobs: if shards > 1 { 2 } else { 1 },
         load: DEFAULT_LOAD,
         scenario: Scenario::default(),
+        faults: dts::sim::FaultConfig::NONE,
     }
 }
 
@@ -178,10 +179,78 @@ fn snapshot_roundtrips_through_ndjson_text() {
     assert_eq!(restored.lines_handled(), server.lines_handled());
 }
 
+/// A corrupted journal — truncated at any byte, or with a flipped bit —
+/// is refused with a structured error, never a panic, and never
+/// restores a session from a strict prefix of the document.  (This is
+/// the in-memory half of the `--restore` exit-2 contract; the atomic
+/// temp+fsync+rename journal write exists precisely so production never
+/// sees a torn document, but restore must still survive one.)
+#[test]
+fn corrupted_journals_are_refused_never_panic() {
+    let base = cfg(Dataset::Synthetic, controllers()[0].clone(), 1);
+    telemetry::reset();
+    let mut server = ServeServer::new(base.clone());
+    let mut out = Vec::new();
+    for r in &script()[..4] {
+        server.handle_line(r, &mut out);
+    }
+    let text = server.snapshot_json().to_string();
+    let bytes = text.as_bytes();
+
+    let try_restore = |raw: &[u8]| -> Result<(), String> {
+        let s = std::str::from_utf8(raw).map_err(|e| e.to_string())?;
+        let doc = dts::json::Value::from_str(s).map_err(|e| e.to_string())?;
+        ServeServer::restore(base.clone(), &doc).map(|_| ())
+    };
+
+    // every strict prefix is refused (a truncated journal can never
+    // parse as the full document)
+    for i in (0..bytes.len()).step_by(7).chain([0, bytes.len() - 1]) {
+        assert!(
+            try_restore(&bytes[..i]).is_err(),
+            "truncation at byte {i} restored a session"
+        );
+    }
+    // the intact document restores
+    assert!(try_restore(bytes).is_ok());
+
+    // single-bit flips: parse/restore must never panic; flips are
+    // either refused or land in a value field (epoch list, counter)
+    // that still forms a well-formed document — count the refusals to
+    // make sure the sweep actually hits structure, not just values
+    let mut refused = 0usize;
+    for i in (0..bytes.len()).step_by(3) {
+        for bit in [0u8, 4] {
+            let mut flipped = bytes.to_vec();
+            flipped[i] ^= 1 << bit;
+            if try_restore(&flipped).is_err() {
+                refused += 1;
+            }
+        }
+    }
+    assert!(refused > 0, "no bit flip was ever refused");
+
+    // garbage documents of every JSON shape are structured errors
+    for garbage in [
+        "{}",
+        "[]",
+        "42",
+        "\"journal\"",
+        "{\"format\":\"dts-serve-snapshot-v2\"}",
+        "{\"format\":\"dts-serve-snapshot-v1\"}",
+    ] {
+        let doc = dts::json::Value::from_str(garbage).unwrap();
+        assert!(
+            ServeServer::restore(base.clone(), &doc).is_err(),
+            "garbage journal {garbage:?} restored"
+        );
+    }
+}
+
 #[test]
 fn one_shard_federated_controller_matches_monolithic() {
     // the with_controller oracle: S1 + PolicySpec ≡ monolithic
-    // with_policy, bit for bit (events and the 15-metric block)
+    // with_policy, bit for bit (events and the 18-metric block)
     let prob = Dataset::Synthetic.instance_scenario(
         GRAPHS,
         SEED,
@@ -200,6 +269,7 @@ fn one_shard_federated_controller_matches_monolithic() {
         reaction: Reaction::None,
         record_frozen: false,
         full_refresh: false,
+        faults: dts::sim::FaultConfig::NONE,
     };
     let fed = FederatedCoordinator::new(variant.policy, variant.kind, SEED ^ 0x5EED, sim_cfg, 1)
         .with_controller(spec.clone());

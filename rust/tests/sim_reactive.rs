@@ -10,7 +10,13 @@
 //!   where realized durations must equal the estimates exactly;
 //! * the **frozen-prefix invariant** — a task that started executing
 //!   before a replan (arrival-time or straggler-triggered Last-K) keeps
-//!   its node and start time in the final realized schedule.
+//!   its node and start time in the final realized schedule;
+//! * the same properties **under fault injection** — Crash and Degrade
+//!   models across the controller families, including graph-granular
+//!   revert accounting for failure-forced replans and the fault-aware
+//!   frozen-prefix invariant: a dispatched task keeps its placement
+//!   unless a crash killed that very attempt (the only event allowed to
+//!   move started work).
 
 use dts::coordinator::Policy;
 use dts::policy::PolicySpec;
@@ -77,6 +83,7 @@ fn prop_reactive_validity_grid() {
                         reaction,
                         record_frozen: true,
                         full_refresh: false,
+                        faults: dts::sim::FaultConfig::NONE,
                     };
                     let mut rc = ReactiveCoordinator::new(
                         policy,
@@ -118,6 +125,7 @@ fn prop_reactive_validity_other_heuristics() {
                 },
                 record_frozen: true,
                 full_refresh: false,
+                faults: dts::sim::FaultConfig::NONE,
             };
             let mut rc = ReactiveCoordinator::new(Policy::LastK(2), kind.make(seed), cfg);
             let res = rc.run(&prob);
@@ -150,6 +158,7 @@ fn prop_deadline_aware_validity_grid() {
             reaction: Reaction::None,
             record_frozen: true,
             full_refresh: false,
+            faults: dts::sim::FaultConfig::NONE,
         };
         let spec = PolicySpec::DeadlineAware {
             k: 3,
@@ -176,6 +185,169 @@ fn prop_deadline_aware_validity_grid() {
     }
 }
 
+/// PROPERTY GRID UNDER FAULTS: {Crash, Degrade} × controller families
+/// × all four datasets.  Each cell asserts completeness, operational
+/// §II validity of the realized schedule, graph-granular revert
+/// accounting (every straggler-side replan — failure-forced ones
+/// included — re-places exactly what it reverted), causality of
+/// re-execution (a killed attempt has a strictly later realized
+/// start), and the fault-aware frozen-prefix invariant: a frozen
+/// (dispatched) task keeps its node and start in the final schedule
+/// unless a crash killed that very attempt at or after the snapshot.
+#[test]
+fn prop_fault_validity_grid() {
+    use dts::sim::{FaultConfig, FaultModel, SimLogKind};
+
+    let scen = Scenario {
+        weights: WeightModel::HeavyTail { alpha: 1.5 },
+        deadlines: DeadlineModel::CritPathSlack { slack: 1.5 },
+        arrivals: ArrivalModel::Bursty { burst: 3 },
+    };
+    let specs = [
+        PolicySpec::FixedLastK {
+            k: 3,
+            threshold: 0.25,
+        },
+        PolicySpec::DeadlineAware {
+            k: 3,
+            threshold: 0.25,
+        },
+        PolicySpec::Budgeted {
+            k: 3,
+            threshold: 0.25,
+            rate: 2.0,
+            burst: 8.0,
+        },
+        PolicySpec::FailureAware {
+            k: 3,
+            threshold: 0.25,
+        },
+    ];
+    for (di, dataset) in Dataset::ALL.iter().enumerate() {
+        for (si, spec) in specs.iter().enumerate() {
+            let seed = 9000 + 41 * di as u64 + 11 * si as u64;
+            // DeadlineAware conditions on deadlines; give every cell
+            // the deadline scenario so all controllers see one grid
+            let prob = dataset.instance_scenario(8, seed, DEFAULT_LOAD, None, &scen);
+            let run = |faults: FaultConfig| {
+                let cfg = SimConfig {
+                    noise_std: 0.35,
+                    noise_seed: seed ^ 0xBEEF,
+                    reaction: Reaction::None,
+                    record_frozen: true,
+                    full_refresh: false,
+                    faults,
+                };
+                ReactiveCoordinator::with_policy(
+                    Policy::LastK(3),
+                    SchedulerKind::Heft.make(seed),
+                    cfg,
+                    spec.make(),
+                )
+                .run(&prob)
+            };
+            // scale fault cycles off the faultless horizon so several
+            // windows land inside it on every dataset's time units
+            let base = run(FaultConfig::NONE);
+            let horizon = base
+                .schedule
+                .iter()
+                .map(|(_, a)| a.finish)
+                .fold(0.0, f64::max);
+            let models = [
+                FaultModel::Crash {
+                    mtbf: horizon / 8.0,
+                    mttr: horizon / 40.0,
+                },
+                FaultModel::Degrade {
+                    factor: 2.0,
+                    span: horizon / 6.0,
+                },
+            ];
+            for model in models {
+                let res = run(FaultConfig {
+                    model,
+                    seed: seed ^ 0xFA17,
+                    node_base: 0,
+                });
+                let ctx = format!("{} {} {:?}", dataset.name(), spec.label(), model);
+
+                // completeness + operational validity
+                assert_eq!(
+                    res.schedule.n_assigned(),
+                    prob.total_tasks(),
+                    "{ctx}: incomplete realized schedule"
+                );
+                let rep = replay(&res.schedule, &prob.graphs, &prob.network);
+                assert!(
+                    rep.errors.is_empty(),
+                    "{ctx}: {:?}",
+                    &rep.errors[..rep.errors.len().min(3)]
+                );
+
+                // kill causality: every killed attempt re-starts
+                // strictly later, and kills force a failure replan
+                let mut kills: Vec<(f64, dts::graph::Gid)> = Vec::new();
+                for e in &res.log {
+                    if let SimLogKind::Kill { gid, .. } = e.kind {
+                        kills.push((e.time, gid));
+                    }
+                }
+                for &(t_kill, gid) in &kills {
+                    let restarted = res.log.iter().any(|e| {
+                        e.time >= t_kill
+                            && matches!(e.kind, SimLogKind::Start { gid: g, .. } if g == gid)
+                    });
+                    assert!(restarted, "{ctx}: {gid:?} killed at {t_kill} never re-ran");
+                }
+                if !kills.is_empty() {
+                    assert!(res.n_failure_replans() > 0, "{ctx}: kills without replans");
+                }
+                if matches!(model, FaultModel::Degrade { .. }) {
+                    assert!(kills.is_empty(), "{ctx}: degrade killed a task");
+                    assert_eq!(res.n_failure_replans(), 0, "{ctx}");
+                }
+
+                // graph-granular revert accounting, failure replans
+                // included (they are straggler-side: reactive)
+                for rec in &res.replans {
+                    if rec.straggler {
+                        assert_eq!(
+                            rec.n_pending, rec.n_reverted,
+                            "{ctx} at {}: straggler-side replan re-placed extra work",
+                            rec.time
+                        );
+                        assert!(rec.n_reverted > 0, "{ctx}: empty replan recorded");
+                    } else {
+                        assert!(rec.n_pending >= rec.n_reverted, "{ctx}");
+                        assert!(!rec.failure, "{ctx}: arrival replan marked failure");
+                    }
+                }
+
+                // fault-aware frozen prefix: a frozen placement may
+                // only change if that attempt was killed at or after
+                // the snapshot instant
+                for rec in &res.replans {
+                    for &(gid, node, start) in &rec.frozen {
+                        let a = res.schedule.get(gid).unwrap();
+                        let unmoved =
+                            (a.node, a.start.to_bits()) == (node, start.to_bits());
+                        let killed_later = kills
+                            .iter()
+                            .any(|&(t, g)| g == gid && t >= rec.time);
+                        assert!(
+                            unmoved || killed_later,
+                            "{ctx}: replan at {} moved started task {gid:?} \
+                             without a kill",
+                            rec.time
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Straggler reverts never touch a dispatched task: the number of
 /// realized (started) placements is monotone over the event log, and
 /// reverted counts in replan records are consistent with the composite
@@ -192,6 +364,7 @@ fn prop_replan_accounting_is_consistent() {
         },
         record_frozen: true,
         full_refresh: false,
+        faults: dts::sim::FaultConfig::NONE,
     };
     let mut rc = ReactiveCoordinator::new(Policy::LastK(5), SchedulerKind::Heft.make(1), cfg);
     let res = rc.run(&prob);

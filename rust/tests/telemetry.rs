@@ -5,7 +5,7 @@
 //! * **Bit-transparency grid** — all four datasets × the controller
 //!   families {`L3@0.25`, `A3-20`, `D3@0.25`} monolithic, plus the
 //!   federated runtime at shards {1, 4}: realized schedules, event
-//!   logs, replan records, replan-path allocation counts and all 15
+//!   logs, replan records, replan-path allocation counts and all 18
 //!   [`Metric::ALL`] axes (at a pinned runtime argument — wall clock is
 //!   the one axis that varies by nature) are byte-identical with
 //!   telemetry enabled vs disabled.
@@ -75,6 +75,7 @@ fn run_mono(prob: &DynamicProblem, seed: u64, noise_std: f64, ctl: &Ctl) -> SimR
         reaction: Reaction::None,
         record_frozen: false,
         full_refresh: false,
+        faults: dts::sim::FaultConfig::NONE,
     };
     let mut rc = match ctl {
         Ctl::Reaction(r) => {
@@ -101,6 +102,7 @@ fn run_fed(prob: &DynamicProblem, seed: u64, noise_std: f64, shards: usize) -> F
         },
         record_frozen: false,
         full_refresh: false,
+        faults: dts::sim::FaultConfig::NONE,
     };
     FederatedCoordinator::new(Policy::LastK(5), SchedulerKind::Heft, seed ^ 0x5EED, cfg, shards)
         .run(prob)
@@ -115,7 +117,7 @@ fn sig(s: &dts::schedule::Schedule) -> Vec<(Gid, usize, u64, u64)> {
     v
 }
 
-/// All 15 metric axes at a pinned runtime argument, as raw bits.
+/// All 18 metric axes at a pinned runtime argument, as raw bits.
 fn metric_bits(s: &dts::schedule::Schedule, prob: &DynamicProblem) -> Vec<u64> {
     let row = MetricRow::compute(s, &prob.graphs, &prob.network, 0.0);
     Metric::ALL.iter().map(|m| row.get(*m).to_bits()).collect()
@@ -135,7 +137,7 @@ fn replan_sig(r: &dts::sim::ReplanRecord) -> (u64, bool, usize, usize, usize) {
 /// THE GRID, monolithic half: 4 datasets × 3 controller families, each
 /// run twice — telemetry enabled (recording verified non-empty) vs
 /// disabled (registry verified untouched) — with schedules, logs,
-/// replan records, allocation counts and all 15 metric axes
+/// replan records, allocation counts and all 18 metric axes
 /// byte-identical.
 #[test]
 fn telemetry_on_off_bit_identity_monolithic_grid() {
@@ -339,6 +341,7 @@ fn per_shard_merge_is_deterministic() {
                 },
                 record_frozen: false,
                 full_refresh: false,
+                faults: dts::sim::FaultConfig::NONE,
             },
             3,
         )
